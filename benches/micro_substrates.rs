@@ -1,0 +1,101 @@
+//! Microbenchmarks for the L3 substrates on the ETS hot path: the selection
+//! solver (ILP / tree B&B), agglomerative clustering, the radix KV cache,
+//! and REBASE allocation. These are the per-step costs the coordinator adds
+//! on top of model execution — §Perf in EXPERIMENTS.md tracks them.
+
+use ets::cluster::agglomerative;
+use ets::ilp::select::{solve_tree, Candidate, SelectionProblem};
+use ets::kvcache::RadixCache;
+use ets::metrics::Table;
+use ets::search::sampling::rebase_allocate;
+use ets::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+fn bench<F: FnMut()>(iters: usize, mut f: F) -> Duration {
+    // warmup
+    f();
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed() / iters as u32
+}
+
+fn selection_problem(rng: &mut Rng, n_leaves: usize, depth: usize) -> SelectionProblem {
+    // chain-ish shared tree with n_leaves fresh leaves
+    let mut parents: Vec<Option<usize>> = vec![None];
+    for d in 1..depth {
+        parents.push(Some(d - 1));
+    }
+    let mut candidates = vec![];
+    let n_clusters = (n_leaves / 3).max(1);
+    for i in 0..n_leaves {
+        parents.push(Some(rng.index(depth)));
+        candidates.push(Candidate {
+            weight: 1.0 + rng.index(8) as f64,
+            leaf_node: parents.len() - 1,
+            cluster: i % n_clusters,
+        });
+    }
+    SelectionProblem {
+        candidates,
+        node_weight: (0..parents.len()).map(|_| 20.0 + rng.index(60) as f64).collect(),
+        parents,
+        num_clusters: n_clusters,
+        lambda_b: 1.5,
+        lambda_d: 1.0,
+    }
+}
+
+fn main() {
+    let mut table = Table::new(
+        "Microbenchmarks — per-step coordinator costs",
+        &["op", "size", "time"],
+    );
+    let mut rng = Rng::new(7);
+
+    for &n in &[16usize, 64, 256] {
+        let p = selection_problem(&mut rng, n, 10);
+        let d = bench(5, || {
+            std::hint::black_box(solve_tree(&p, Duration::from_millis(10)));
+        });
+        table.row(vec!["ets-select (tree B&B)".into(), format!("{n} leaves"), format!("{d:?}")]);
+    }
+
+    for &n in &[16usize, 64, 256] {
+        let embs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..32).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let d = bench(5, || {
+            std::hint::black_box(agglomerative(&embs, 0.3));
+        });
+        table.row(vec!["clustering (UPGMA)".into(), format!("{n} vecs"), format!("{d:?}")]);
+    }
+
+    {
+        let seqs: Vec<Vec<u32>> = (0..256)
+            .map(|i| {
+                let mut s: Vec<u32> = (0..120).map(|t| (t % 97) as u32).collect();
+                s.extend((0..80).map(|t| ((i * 31 + t) % 211) as u32));
+                s
+            })
+            .collect();
+        let d = bench(10, || {
+            let mut c = RadixCache::new(1 << 22);
+            for s in &seqs {
+                std::hint::black_box(c.insert(s));
+            }
+        });
+        table.row(vec!["radix insert".into(), "256 × 200 tok".into(), format!("{d:?}")]);
+    }
+
+    for &n in &[64usize, 256] {
+        let rewards: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let d = bench(200, || {
+            std::hint::black_box(rebase_allocate(&rewards, n, 0.2));
+        });
+        table.row(vec!["rebase allocation".into(), format!("{n} cands"), format!("{d:?}")]);
+    }
+
+    table.emit();
+}

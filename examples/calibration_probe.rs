@@ -1,0 +1,67 @@
+//! Developer probe: accuracy / KV orderings across policies and widths.
+//! Used while calibrating the synthetic workload against the paper's shape.
+//!
+//! Run: `cargo run --release --example calibration_probe [-- --problems 60]`
+
+use ets::eval::{evaluate, EvalConfig, PolicySpec};
+use ets::util::argparse::Spec;
+use ets::workload::{WorkloadSpec, LLEMMA_34B_SIM, SYNTH_GSM8K, SYNTH_MATH500};
+
+fn main() {
+    let args = Spec::new(&["problems", "widths"])
+        .parse(std::env::args())
+        .unwrap();
+    let n = args.get_usize("problems", 60).unwrap();
+    let widths = args.get_usize_list("widths", &[16, 64, 256]).unwrap();
+
+    for (ds, dsname) in [(&SYNTH_MATH500, "MATH"), (&SYNTH_GSM8K, "GSM")] {
+        println!("=== {dsname} (llemma-34b-sim, {n} problems) ===");
+        println!(
+            "{:<22} {:>5} {:>7} {:>12} {:>9} {:>10}",
+            "policy", "width", "acc%", "kv-tokens", "kv-red", "tokens"
+        );
+        for &w in &widths {
+            let mut rebase_kv = 0.0;
+            for pol in [
+                PolicySpec::Beam { keep: 4 },
+                PolicySpec::BeamSqrt,
+                PolicySpec::Dvts { subtrees: 4 },
+                PolicySpec::DvtsSqrt,
+                PolicySpec::Rebase,
+                PolicySpec::Ets { lambda_b: 1.0, lambda_d: 1.0 },
+                PolicySpec::Ets { lambda_b: 1.5, lambda_d: 1.0 },
+                PolicySpec::Ets { lambda_b: 2.0, lambda_d: 1.0 },
+                PolicySpec::EtsKv { lambda_b: 0.75 },
+                PolicySpec::EtsKv { lambda_b: 1.25 },
+            ] {
+                let cfg = EvalConfig {
+                    spec: WorkloadSpec::new(ds, &LLEMMA_34B_SIM),
+                    policy: pol.clone(),
+                    width: w,
+                    n_problems: n,
+                    seed: 20260710,
+                    max_steps: ds.n_steps + 6,
+                };
+                let r = evaluate(&cfg);
+                if pol == PolicySpec::Rebase {
+                    rebase_kv = r.mean_kv_tokens;
+                }
+                let red = if rebase_kv > 0.0 && r.mean_kv_tokens > 0.0 {
+                    rebase_kv / r.mean_kv_tokens
+                } else {
+                    0.0
+                };
+                println!(
+                    "{:<22} {:>5} {:>7.1} {:>12.0} {:>8.2}x {:>10.0}",
+                    r.policy,
+                    w,
+                    100.0 * r.accuracy(),
+                    r.mean_kv_tokens,
+                    red,
+                    r.mean_new_tokens
+                );
+            }
+            println!();
+        }
+    }
+}

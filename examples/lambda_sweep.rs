@@ -1,0 +1,53 @@
+//! λ_b / λ_d sweep: trace the full accuracy-vs-KV trade-off surface of the
+//! ETS cost model on one dataset — the knob a deployment would tune.
+//!
+//!     cargo run --release --example lambda_sweep [-- --width 64 --problems 60]
+
+use ets::eval::{evaluate, EvalConfig, PolicySpec};
+use ets::metrics::{pct, ratio, Table};
+use ets::util::argparse::Spec;
+use ets::workload::{WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
+
+fn main() {
+    let args = Spec::new(&["width", "problems"]).parse(std::env::args()).unwrap();
+    let width = args.get_usize("width", 64).unwrap();
+    let n_problems = args.get_usize("problems", 60).unwrap();
+    let spec = WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM);
+    let mk = |policy| EvalConfig {
+        spec: spec.clone(),
+        policy,
+        width,
+        n_problems,
+        seed: 20260710,
+        max_steps: SYNTH_MATH500.n_steps + 6,
+    };
+    let rebase = evaluate(&mk(PolicySpec::Rebase));
+    let mut table = Table::new(
+        &format!("λ sweep — synth-math500, width {width} ({n_problems} problems)"),
+        &["policy", "λb", "λd", "acc%", "KV red."],
+    );
+    table.row(vec![
+        "rebase".into(),
+        "-".into(),
+        "-".into(),
+        pct(rebase.accuracy()),
+        "1.00x".into(),
+    ]);
+    for &ld in &[0.0, 0.5, 1.0] {
+        for &lb in &[0.5, 0.75, 1.0, 1.25, 1.5, 2.0] {
+            let r = evaluate(&mk(if ld == 0.0 {
+                PolicySpec::EtsKv { lambda_b: lb }
+            } else {
+                PolicySpec::Ets { lambda_b: lb, lambda_d: ld }
+            }));
+            table.row(vec![
+                if ld == 0.0 { "ets-kv".into() } else { "ets".into() },
+                format!("{lb}"),
+                format!("{ld}"),
+                pct(r.accuracy()),
+                ratio(rebase.mean_kv_tokens, r.mean_kv_tokens),
+            ]);
+        }
+    }
+    table.emit();
+}

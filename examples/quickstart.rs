@@ -1,0 +1,65 @@
+//! Quickstart: run ETS on a handful of synthetic MATH-like problems and
+//! compare against REBASE — accuracy, KV footprint, and the ILP-pruning
+//! telemetry, in under a minute on a laptop.
+//!
+//!     cargo run --release --example quickstart
+
+use ets::embed::HashEmbedder;
+use ets::lm::SynthLm;
+use ets::reward::OraclePrm;
+use ets::search::{run_search, EtsPolicy, RebasePolicy, SearchParams};
+use ets::workload::{ProblemSet, WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
+
+fn main() {
+    let spec = WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM);
+    let problems = ProblemSet::generate(&spec, 12, 42);
+    let params = SearchParams { width: 64, max_steps: SYNTH_MATH500.n_steps + 4 };
+
+    println!("width = {}, dataset = {}, model = {}\n", params.width, spec.dataset.name, spec.model.name);
+    println!(
+        "{:<6} {:>8} {:>8} | {:>8} {:>8} {:>7} | per-problem (REBASE vs ETS λb=1.5)",
+        "prob", "reb-kv", "reb-ok", "ets-kv", "ets-ok", "pruned"
+    );
+
+    let (mut reb_correct, mut ets_correct) = (0, 0);
+    let (mut reb_kv, mut ets_kv) = (0u64, 0u64);
+    for p in &problems.problems {
+        let truth = p.answer;
+
+        let mut lm = SynthLm::new(p.clone(), p.id);
+        let mut prm = OraclePrm::for_profile(&spec.model, p.id ^ 0xBEEF);
+        let mut rebase = RebasePolicy::default();
+        let r = run_search(&mut lm, &mut prm, &mut rebase, &params);
+        let r_ok = r.answer == Some(truth);
+
+        let mut lm = SynthLm::new(p.clone(), p.id);
+        let mut prm = OraclePrm::for_profile(&spec.model, p.id ^ 0xBEEF);
+        let mut ets = EtsPolicy::new(1.5, 1.0, HashEmbedder::default());
+        let e = run_search(&mut lm, &mut prm, &mut ets, &params);
+        let e_ok = e.answer == Some(truth);
+
+        println!(
+            "{:<6} {:>8} {:>8} | {:>8} {:>8} {:>7}",
+            p.id,
+            r.total_kv_tokens(),
+            r_ok,
+            e.total_kv_tokens(),
+            e_ok,
+            ets.pruned_total
+        );
+        reb_correct += r_ok as usize;
+        ets_correct += e_ok as usize;
+        reb_kv += r.total_kv_tokens();
+        ets_kv += e.total_kv_tokens();
+    }
+    println!(
+        "\nREBASE: {}/{} correct, ΣKV {}\nETS:    {}/{} correct, ΣKV {}  (reduction {:.2}x)",
+        reb_correct,
+        problems.problems.len(),
+        reb_kv,
+        ets_correct,
+        problems.problems.len(),
+        ets_kv,
+        reb_kv as f64 / ets_kv as f64
+    );
+}

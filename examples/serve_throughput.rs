@@ -1,0 +1,82 @@
+//! End-to-end serving driver (the repository's E2E validation): serve
+//! batched search requests against the REAL AOT-compiled transformer via
+//! PJRT — prefill, batched lock-step decode through the Pallas attention
+//! kernel, PRM scoring, and the ETS cost model with the PJRT embedder —
+//! reporting latency and throughput for REBASE vs ETS.
+//!
+//! Python never runs here; the artifacts in `artifacts/` are the only model
+//! input. Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//!     make artifacts && cargo run --release --example serve_throughput
+
+use ets::engine::pjrt_lm::{PjrtEmbedder, PjrtLm, PjrtLmConfig, PjrtPrm};
+use ets::search::{run_search, EtsPolicy, RebasePolicy, SearchParams};
+use ets::util::rng::Rng;
+use ets::util::stats;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ets::runtime::default_artifacts_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let arts = Rc::new(ets::runtime::Artifacts::open(dir)?);
+    println!(
+        "platform={} model: d={} L={} H={} S={} V={}",
+        arts.runtime.platform_name(),
+        arts.dims.d_model,
+        arts.dims.n_layers,
+        arts.dims.n_heads,
+        arts.dims.max_seq,
+        arts.dims.vocab
+    );
+
+    let n_requests = 6;
+    let width = 8;
+    for (label, use_ets) in [("REBASE", false), ("ETS(λb=1.5,λd=1)", true)] {
+        let mut latencies = vec![];
+        let (mut kv_sum, mut tok_sum, mut decode_calls, mut radix_unique) =
+            (0u64, 0u64, 0u64, 0u64);
+        let t0 = std::time::Instant::now();
+        for req in 0..n_requests {
+            let mut rng = Rng::new(5000 + req);
+            let prompt: Vec<u32> = (0..12).map(|_| 2 + rng.below(200) as u32).collect();
+            let mut lm =
+                PjrtLm::new(arts.clone(), prompt.clone(), req, PjrtLmConfig::default());
+            let mut prm = PjrtPrm::new(arts.clone(), prompt);
+            let params = SearchParams { width, max_steps: 6 };
+            let t = std::time::Instant::now();
+            let out = if use_ets {
+                let mut pol = EtsPolicy::new(1.5, 1.0, PjrtEmbedder::new(arts.clone()));
+                run_search(&mut lm, &mut prm, &mut pol, &params)
+            } else {
+                let mut pol = RebasePolicy::default();
+                run_search(&mut lm, &mut prm, &mut pol, &params)
+            };
+            latencies.push(t.elapsed().as_secs_f64());
+            kv_sum += out.total_kv_tokens();
+            tok_sum += out.total_new_tokens();
+            decode_calls += lm.decode_calls;
+            radix_unique += lm.radix.live_tokens() as u64;
+            assert!(out.answer.is_some(), "request {req} produced no answer");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "\n{label}: {} requests, width {width}",
+            n_requests
+        );
+        println!(
+            "  latency p50 {:.2}s  p95 {:.2}s | throughput {:.2} req/s, {:.0} tok/s",
+            stats::median(&latencies),
+            stats::percentile(&latencies, 95.0),
+            n_requests as f64 / wall,
+            tok_sum as f64 / wall
+        );
+        println!(
+            "  ΣKV {} tokens | decode batches {} | radix-unique {} tokens",
+            kv_sum, decode_calls, radix_unique
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,2 @@
+"""Build-time-only package: JAX model (L2) + Pallas kernels (L1) + AOT
+lowering. Never imported at serving time — rust loads the HLO artifacts."""

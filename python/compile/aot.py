@@ -1,0 +1,249 @@
+"""AOT pipeline: lower the L2 JAX functions (with L1 Pallas kernels inside)
+to HLO *text* artifacts the rust runtime loads via PJRT.
+
+Interchange is HLO text, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import tree_attention
+
+LM_CFG = model.LmConfig()
+EMBED_CFG = model.EmbedConfig()
+
+# Batch variants compiled for the serving engine. One executable per shape
+# (PJRT requires static shapes); the engine picks the best fit and pads.
+LM_BATCHES = (1, 4)
+PRM_BATCH = 4
+EMBED_BATCH = 8
+# tree_attn standalone kernel artifact (L1 bench target from rust)
+TREE_G, TREE_SP, TREE_SS = 8, 64, 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked model weights MUST round-trip through
+    # the text form (the default elides big literals as `constant({...})`,
+    # which the rust-side parser would reject or silently zero).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_entry(fn, example_args):
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def build_artifacts():
+    """Yield (name, hlo_text, io-spec) for every artifact."""
+    params = model.init_lm_params(LM_CFG)
+    eparams = model.init_embed_params(EMBED_CFG)
+    cfg = LM_CFG
+    i32 = jnp.int32
+    f32 = jnp.float32
+    S = cfg.max_seq
+    L, H, D, V = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.vocab
+    spec = jax.ShapeDtypeStruct
+
+    for b in LM_BATCHES:
+        prefill = functools.partial(model.lm_prefill, params, cfg)
+        yield (
+            f"lm_prefill_b{b}",
+            lower_entry(prefill, (spec((b, S), i32), spec((b,), i32))),
+            {
+                "inputs": [
+                    {"name": "tokens", "shape": [b, S], "dtype": "i32"},
+                    {"name": "length", "shape": [b], "dtype": "i32"},
+                ],
+                "outputs": [
+                    {"name": "logits", "shape": [b, V], "dtype": "f32"},
+                    {"name": "k", "shape": [b, L, H, S, D], "dtype": "f32"},
+                    {"name": "v", "shape": [b, L, H, S, D], "dtype": "f32"},
+                ],
+            },
+        )
+        decode = functools.partial(model.lm_decode, params, cfg)
+        kv = spec((b, L, H, S, D), f32)
+        yield (
+            f"lm_decode_b{b}",
+            lower_entry(decode, (spec((b,), i32), spec((b,), i32), kv, kv)),
+            {
+                "inputs": [
+                    {"name": "token", "shape": [b], "dtype": "i32"},
+                    {"name": "pos", "shape": [b], "dtype": "i32"},
+                    {"name": "k", "shape": [b, L, H, S, D], "dtype": "f32"},
+                    {"name": "v", "shape": [b, L, H, S, D], "dtype": "f32"},
+                ],
+                "outputs": [
+                    {"name": "logits", "shape": [b, V], "dtype": "f32"},
+                    {"name": "k", "shape": [b, L, H, S, D], "dtype": "f32"},
+                    {"name": "v", "shape": [b, L, H, S, D], "dtype": "f32"},
+                ],
+            },
+        )
+
+    prm = functools.partial(model.prm_score, params, cfg)
+    yield (
+        f"prm_score_b{PRM_BATCH}",
+        lower_entry(prm, (spec((PRM_BATCH, S), i32), spec((PRM_BATCH,), i32))),
+        {
+            "inputs": [
+                {"name": "tokens", "shape": [PRM_BATCH, S], "dtype": "i32"},
+                {"name": "length", "shape": [PRM_BATCH], "dtype": "i32"},
+            ],
+            "outputs": [{"name": "score", "shape": [PRM_BATCH], "dtype": "f32"}],
+        },
+    )
+
+    emb = functools.partial(model.embed_sentence, eparams, EMBED_CFG)
+    SE, DE = EMBED_CFG.max_seq, EMBED_CFG.out_dim
+    yield (
+        f"embed_b{EMBED_BATCH}",
+        lower_entry(emb, (spec((EMBED_BATCH, SE), i32), spec((EMBED_BATCH,), i32))),
+        {
+            "inputs": [
+                {"name": "tokens", "shape": [EMBED_BATCH, SE], "dtype": "i32"},
+                {"name": "length", "shape": [EMBED_BATCH], "dtype": "i32"},
+            ],
+            "outputs": [{"name": "emb", "shape": [EMBED_BATCH, DE], "dtype": "f32"}],
+        },
+    )
+
+    g, sp, ss = TREE_G, TREE_SP, TREE_SS
+    tree_fn = lambda q, kp, vp, ks, vs, pl_, sl: tree_attention(
+        q, kp, vp, ks, vs, pl_, sl
+    )
+    yield (
+        "tree_attn",
+        lower_entry(
+            tree_fn,
+            (
+                spec((g, H, D), f32),
+                spec((H, sp, D), f32),
+                spec((H, sp, D), f32),
+                spec((g, H, ss, D), f32),
+                spec((g, H, ss, D), f32),
+                spec((1,), i32),
+                spec((g,), i32),
+            ),
+        ),
+        {
+            "inputs": [
+                {"name": "q", "shape": [g, H, D], "dtype": "f32"},
+                {"name": "k_prefix", "shape": [H, sp, D], "dtype": "f32"},
+                {"name": "v_prefix", "shape": [H, sp, D], "dtype": "f32"},
+                {"name": "k_suffix", "shape": [g, H, ss, D], "dtype": "f32"},
+                {"name": "v_suffix", "shape": [g, H, ss, D], "dtype": "f32"},
+                {"name": "prefix_len", "shape": [1], "dtype": "i32"},
+                {"name": "suffix_len", "shape": [g], "dtype": "i32"},
+            ],
+            "outputs": [{"name": "o", "shape": [g, H, D], "dtype": "f32"}],
+        },
+    )
+
+
+def build_golden():
+    """Deterministic test vectors the rust integration tests replay against
+    the compiled artifacts (proving text round-trip preserved the weights)."""
+    import numpy as np
+
+    params = model.init_lm_params(LM_CFG)
+    eparams = model.init_embed_params(EMBED_CFG)
+    cfg = LM_CFG
+    S = cfg.max_seq
+
+    # prefill(b=1) on tokens 1..16, then one decode step of token 9 at pos 16
+    tokens = np.zeros((1, S), dtype=np.int32)
+    tokens[0, :16] = (np.arange(16) % cfg.vocab) + 1
+    length = np.array([16], dtype=np.int32)
+    logits_p, k, v = model.lm_prefill(params, cfg, jnp.asarray(tokens), jnp.asarray(length))
+    tok = np.array([9], dtype=np.int32)
+    pos = np.array([16], dtype=np.int32)
+    logits_d, _, _ = model.lm_decode(
+        params, cfg, jnp.asarray(tok), jnp.asarray(pos), k, v
+    )
+
+    # PRM on the same prompt (batch 4: rows 1.. are zero-padded length 1)
+    ptoks = np.zeros((PRM_BATCH, S), dtype=np.int32)
+    ptoks[0, :16] = tokens[0, :16]
+    plens = np.ones((PRM_BATCH,), dtype=np.int32)
+    plens[0] = 16
+    scores = model.prm_score(params, cfg, jnp.asarray(ptoks), jnp.asarray(plens))
+
+    # embedder on two short "sentences"
+    etoks = np.zeros((EMBED_BATCH, EMBED_CFG.max_seq), dtype=np.int32)
+    etoks[0, :5] = [3, 1, 4, 1, 5]
+    etoks[1, :3] = [2, 7, 1]
+    elens = np.ones((EMBED_BATCH,), dtype=np.int32)
+    elens[0], elens[1] = 5, 3
+    embs = model.embed_sentence(eparams, EMBED_CFG, jnp.asarray(etoks), jnp.asarray(elens))
+
+    def head(x, n=8):
+        return [float(f) for f in np.asarray(x).reshape(-1)[:n]]
+
+    return {
+        "prefill_tokens16": [int(t) for t in tokens[0, :16]],
+        "prefill_logits_head": head(logits_p),
+        "decode_token": 9,
+        "decode_pos": 16,
+        "decode_logits_head": head(logits_d),
+        "prm_scores": head(scores, PRM_BATCH),
+        "embed_head": head(embs[0], 8),
+        "embed_norm_row1": float(np.linalg.norm(np.asarray(embs[1]))),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    meta = {
+        "model": {
+            "vocab": LM_CFG.vocab,
+            "d_model": LM_CFG.d_model,
+            "n_layers": LM_CFG.n_layers,
+            "n_heads": LM_CFG.n_heads,
+            "head_dim": LM_CFG.head_dim,
+            "d_ff": LM_CFG.d_ff,
+            "max_seq": LM_CFG.max_seq,
+        },
+        "embed": {"max_seq": EMBED_CFG.max_seq, "out_dim": EMBED_CFG.out_dim},
+        "lm_batches": list(LM_BATCHES),
+        "prm_batch": PRM_BATCH,
+        "embed_batch": EMBED_BATCH,
+        "tree_attn": {"g": TREE_G, "sp": TREE_SP, "ss": TREE_SS},
+        "artifacts": {},
+    }
+    for name, hlo, io in build_artifacts():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        meta["artifacts"][name] = io
+        print(f"wrote {path} ({len(hlo) / 1e6:.2f} MB)")
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {args.out_dir}/meta.json")
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+        json.dump(build_golden(), f, indent=1)
+    print(f"wrote {args.out_dir}/golden.json")
+
+
+if __name__ == "__main__":
+    main()

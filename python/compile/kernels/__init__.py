@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT HLO).
+
+All kernels run with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, so interpret mode lowers them to plain HLO while keeping
+the BlockSpec structure that defines the TPU HBM->VMEM schedule (see
+DESIGN.md section "Hardware adaptation").
+"""
+
+from .tree_attention import decode_attention, tree_attention
+from .matmul import matmul
+
+__all__ = ["decode_attention", "tree_attention", "matmul"]

@@ -1,0 +1,68 @@
+"""Tiled Pallas matmul used by the transformer FFN / projection layers.
+
+Classic (M, N, K)-tiled schedule: grid = (M/bm, N/bn, K/bk), f32 accumulator
+tile resident in VMEM across the K axis (the revisiting dimension), A/B tiles
+streamed per grid step. Tile defaults are MXU-shaped (multiples of 128 lanes);
+interpret mode lowers the same schedule to plain HLO for the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_idx == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_block(dim, target):
+    """Largest divisor of ``dim`` that is <= target (keeps tiles aligned)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def matmul(a, b, *, bm=64, bn=128, bk=128):
+    """``a[M, K] @ b[K, N] -> [M, N]`` with f32 accumulation in VMEM scratch.
+
+    Block sizes clamp to divisors of the problem shape so any (M, N, K)
+    works; defaults target an MXU-friendly 64x128x128 tiling.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+    kernel = functools.partial(_matmul_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written with
+plain ``jax.numpy`` ops only. pytest (``python/tests/``) sweeps shapes and
+dtypes with hypothesis and asserts the Pallas outputs match these to tight
+tolerances.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, length):
+    """Single-step decode attention over a padded KV cache.
+
+    q: [B, H, D]        query for the newest token
+    k: [B, H, S, D]     padded key cache
+    v: [B, H, S, D]     padded value cache
+    length: [B] int32   number of valid cache positions per sequence
+    returns: [B, H, D]
+    """
+    b, h, s, d = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    pos = jnp.arange(s)[None, None, :]
+    mask = pos < length[:, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bhsd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def tree_attention_ref(q, k_prefix, v_prefix, k_suffix, v_suffix, prefix_len, suffix_len):
+    """Shared-prefix ("tree") decode attention.
+
+    G branch queries attend over one *shared* prefix KV segment plus their
+    own per-branch suffix KV segment — the KV-sharing pattern ETS promotes.
+
+    q:        [G, H, D]
+    k_prefix: [H, SP, D]   shared by all branches
+    v_prefix: [H, SP, D]
+    k_suffix: [G, H, SS, D] per-branch
+    v_suffix: [G, H, SS, D]
+    prefix_len: scalar int32 (valid prefix positions)
+    suffix_len: [G] int32    (valid suffix positions per branch)
+    returns:  [G, H, D]
+    """
+    g, h, d = q.shape
+    sp = k_prefix.shape[1]
+    ss = k_suffix.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    qf = q.astype(jnp.float32)
+
+    lp = jnp.einsum("ghd,hsd->ghs", qf, k_prefix.astype(jnp.float32)) * scale
+    p_mask = jnp.arange(sp)[None, None, :] < prefix_len
+    lp = jnp.where(p_mask, lp, NEG_INF)
+
+    ls = jnp.einsum("ghd,ghsd->ghs", qf, k_suffix.astype(jnp.float32)) * scale
+    s_mask = jnp.arange(ss)[None, None, :] < suffix_len[:, None, None]
+    ls = jnp.where(s_mask, ls, NEG_INF)
+
+    logits = jnp.concatenate([lp, ls], axis=-1)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    vp = jnp.broadcast_to(v_prefix[None].astype(jnp.float32), (g, h, sp, d))
+    vall = jnp.concatenate([vp, v_suffix.astype(jnp.float32)], axis=2)
+    out = jnp.einsum("ghs,ghsd->ghd", p, vall)
+    return out.astype(q.dtype)
+
+
+def matmul_ref(a, b):
+    """a @ b with f32 accumulation. a: [M, K], b: [K, N] -> [M, N]."""
+    return jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32)
+    ).astype(a.dtype)

@@ -1,0 +1,148 @@
+"""Pallas attention kernels: padded decode attention and shared-prefix
+("tree") attention — the compute hot-spot of PRM-guided tree search.
+
+Hardware adaptation (paper -> TPU, see DESIGN.md):
+
+* The GPU serving stacks the paper builds on (SGLang radix attention, DeFT)
+  batch *threadblock loads* of the shared prefix KV. On TPU the analogue is
+  the BlockSpec HBM->VMEM schedule: the prefix KV block's ``index_map``
+  ignores the branch grid axis, so the same VMEM block is reused for every
+  branch instead of being re-fetched per trajectory.
+* q.k^T / p.v products map onto the MXU; accumulation is f32 regardless of
+  input dtype (bf16-ready).
+* The two KV segments (shared prefix, per-branch suffix) are fused with an
+  online-softmax rescale, flash-attention style, so full logits are never
+  materialized in HBM.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers the same schedule to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Padded decode attention: one program per (batch, head).
+# ---------------------------------------------------------------------------
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, s, d):
+    """Attention of one query vector over one padded KV segment."""
+    q = q_ref[0, 0, :].astype(jnp.float32)  # [D]
+    k = k_ref[0, 0, :, :].astype(jnp.float32)  # [S, D]
+    v = v_ref[0, 0, :, :].astype(jnp.float32)  # [S, D]
+    length = len_ref[pl.program_id(0)]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    logits = (k @ q) * scale  # [S]  (MXU matvec)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (s,), 0) < length
+    logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits)
+    p = jnp.exp(logits - m)
+    acc = p @ v  # [D]
+    o_ref[0, 0, :] = (acc / jnp.sum(p)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, length):
+    """Single-token decode attention over a padded KV cache.
+
+    q: [B, H, D]; k, v: [B, H, S, D]; length: [B] int32 -> [B, H, D].
+    Grid (B, H); each program holds one [S, D] KV tile in VMEM.
+    """
+    b, h, d = q.shape
+    s = k.shape[2]
+    kernel = functools.partial(_decode_attn_kernel, s=s, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i, j: (0,)),  # lengths: tiny, whole
+            pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,
+    )(length, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix tree attention: grid (G, H); the prefix KV BlockSpec's
+# index_map ignores the branch axis -> one VMEM fetch serves all branches.
+# ---------------------------------------------------------------------------
+
+
+def _tree_attn_kernel(
+    plen_ref, slen_ref, q_ref, kp_ref, vp_ref, ks_ref, vs_ref, o_ref, *, sp, ss, d
+):
+    g = pl.program_id(0)
+    q = q_ref[0, 0, :].astype(jnp.float32)  # [D]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+
+    # Segment 1: shared prefix (same VMEM block for every branch g).
+    kp = kp_ref[0, :, :].astype(jnp.float32)  # [SP, D]
+    vp = vp_ref[0, :, :].astype(jnp.float32)
+    lp = (kp @ q) * scale
+    pmask = jax.lax.broadcasted_iota(jnp.int32, (sp,), 0) < plen_ref[0]
+    lp = jnp.where(pmask, lp, NEG_INF)
+    m1 = jnp.max(lp)
+    p1 = jnp.exp(lp - m1)
+    l1 = jnp.sum(p1)
+    acc1 = p1 @ vp  # [D]
+
+    # Segment 2: per-branch suffix.
+    ks = ks_ref[0, 0, :, :].astype(jnp.float32)  # [SS, D]
+    vs = vs_ref[0, 0, :, :].astype(jnp.float32)
+    ls = (ks @ q) * scale
+    smask = jax.lax.broadcasted_iota(jnp.int32, (ss,), 0) < slen_ref[g]
+    ls = jnp.where(smask, ls, NEG_INF)
+    m2 = jnp.max(ls)
+    p2 = jnp.exp(ls - m2)
+    l2 = jnp.sum(p2)
+    acc2 = p2 @ vs
+
+    # Online-softmax combine (flash-style rescale of the two segments).
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    denom = a1 * l1 + a2 * l2
+    out = (a1 * acc1 + a2 * acc2) / denom
+    o_ref[0, 0, :] = out.astype(o_ref.dtype)
+
+
+def tree_attention(q, k_prefix, v_prefix, k_suffix, v_suffix, prefix_len, suffix_len):
+    """Shared-prefix decode attention for G branches of one search tree.
+
+    q: [G, H, D]; k_prefix/v_prefix: [H, SP, D] (shared);
+    k_suffix/v_suffix: [G, H, SS, D]; prefix_len: [1] int32;
+    suffix_len: [G] int32 -> [G, H, D].
+    """
+    g, h, d = q.shape
+    sp = k_prefix.shape[1]
+    ss = k_suffix.shape[2]
+    kernel = functools.partial(_tree_attn_kernel, sp=sp, ss=ss, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid=(g, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((g,), lambda i, j: (0,)),
+            pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+            # prefix KV: index_map ignores the branch axis i — the block is
+            # fetched once per head and reused across branches (the KV-sharing
+            # the paper's cost model maximizes).
+            pl.BlockSpec((1, sp, d), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, sp, d), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, 1, ss, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, ss, d), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, h, d), q.dtype),
+        interpret=True,
+    )(prefix_len, suffix_len, q, k_prefix, v_prefix, k_suffix, v_suffix)

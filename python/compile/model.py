@@ -1,0 +1,260 @@
+"""Layer-2: the JAX transformer lowered to the AOT artifacts.
+
+A small GPT-style decoder (the "LM"), a PRM scorer head over the same
+encoder trunk, and a separate sentence embedder — the three networks the
+paper's serving stack needs (generator, process reward model, math-sentence
+embedder). All weights are deterministic functions of a seed and are baked
+into the HLO as constants, so the rust runtime only ever feeds tokens /
+positions / KV caches.
+
+The decode step's attention runs through the Layer-1 Pallas kernel
+(`kernels.decode_attention`), and all FFN matmuls run through the Pallas
+tiled matmul, so the L1 schedule is on the decode hot path of the lowered
+module. Prefill uses plain jnp causal attention (one-shot, not the hot loop).
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import decode_attention, matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class LmConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 512
+    max_seq: int = 96
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedConfig:
+    vocab: int = 256
+    d_model: int = 64
+    n_heads: int = 2
+    head_dim: int = 32
+    d_ff: int = 128
+    max_seq: int = 16
+    out_dim: int = 64
+    seed: int = 7
+
+
+def _init(key, shape, scale=0.02):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def init_lm_params(cfg: LmConfig):
+    """Deterministic LM weights: embedding, per-layer attention+FFN, head."""
+    key = jax.random.PRNGKey(cfg.seed)
+    ks = jax.random.split(key, 4 + 8 * cfg.n_layers)
+    p = {
+        "tok_emb": _init(ks[0], (cfg.vocab, cfg.d_model)),
+        "pos_emb": _init(ks[1], (cfg.max_seq, cfg.d_model)),
+        "w_out": _init(ks[2], (cfg.d_model, cfg.vocab)),
+        "prm_head": _init(ks[3], (cfg.d_model, 1)),
+        "layers": [],
+    }
+    dm, dh = cfg.d_model, cfg.n_heads * cfg.head_dim
+    for layer in range(cfg.n_layers):
+        base = 4 + 8 * layer
+        p["layers"].append(
+            {
+                "wq": _init(ks[base + 0], (dm, dh)),
+                "wk": _init(ks[base + 1], (dm, dh)),
+                "wv": _init(ks[base + 2], (dm, dh)),
+                "wo": _init(ks[base + 3], (dh, dm)),
+                "w1": _init(ks[base + 4], (dm, cfg.d_ff)),
+                "b1": jnp.zeros((cfg.d_ff,), jnp.float32),
+                "w2": _init(ks[base + 5], (cfg.d_ff, dm)),
+                "b2": jnp.zeros((dm,), jnp.float32),
+                "ln1": jnp.ones((dm,), jnp.float32),
+                "ln2": jnp.ones((dm,), jnp.float32),
+            }
+        )
+    return p
+
+
+def _layernorm(x, g):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return g * (x - mu) * jax.lax.rsqrt(var + 1e-5)
+
+
+def _ffn(x2d, layer):
+    """Position-wise FFN through the Pallas tiled matmul (L1)."""
+    h = matmul(x2d, layer["w1"]) + layer["b1"]
+    h = jax.nn.gelu(h)
+    return matmul(h, layer["w2"]) + layer["b2"]
+
+
+def _split_heads(x, n_heads, head_dim):
+    # [..., n_heads * head_dim] -> [..., n_heads, head_dim]
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full causal attention over a padded prompt; emits the KV cache and
+# the next-token logits at position length-1.
+# ---------------------------------------------------------------------------
+
+
+def lm_prefill(params, cfg: LmConfig, tokens, length):
+    """tokens: [B, S] int32, length: [B] int32 ->
+    (logits [B, V], k [B, L, H, S, D], v [B, L, H, S, D])."""
+    b, s = tokens.shape
+    h, d = cfg.n_heads, cfg.head_dim
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :s, :]
+    pos = jnp.arange(s)
+    causal = pos[None, :, None] >= pos[None, None, :]  # [1, Sq, Sk]
+    valid = pos[None, None, :] < length[:, None, None]  # [B, 1, Sk]
+    mask = jnp.logical_and(causal, valid)  # [B, Sq, Sk]
+    ks, vs = [], []
+    for layer in params["layers"]:
+        xa = _layernorm(x, layer["ln1"])
+        q = _split_heads(xa @ layer["wq"], h, d)  # [B, S, H, D]
+        k = _split_heads(xa @ layer["wk"], h, d)
+        v = _split_heads(xa @ layer["wv"], h, d)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(d)
+        logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+        x = x + attn.reshape(b, s, h * d) @ layer["wo"]
+        xf = _layernorm(x, layer["ln2"])
+        x = x + _ffn(xf.reshape(b * s, -1), layer).reshape(b, s, -1)
+        ks.append(k.transpose(0, 2, 1, 3))  # [B, H, S, D]
+        vs.append(v.transpose(0, 2, 1, 3))
+    k_cache = jnp.stack(ks, axis=1)  # [B, L, H, S, D]
+    v_cache = jnp.stack(vs, axis=1)
+    last = jnp.clip(length - 1, 0, s - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0, :]
+    logits_out = x_last @ params["w_out"]
+    return logits_out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token per sequence; Pallas decode attention over the padded KV.
+# ---------------------------------------------------------------------------
+
+
+def lm_decode(params, cfg: LmConfig, token, pos, k_cache, v_cache):
+    """token, pos: [B] int32; k_cache/v_cache: [B, L, H, S, D] ->
+    (logits [B, V], k', v')."""
+    b = token.shape[0]
+    h, d = cfg.n_heads, cfg.head_dim
+    x = params["tok_emb"][token] + params["pos_emb"][pos]  # [B, dm]
+    new_ks, new_vs = [], []
+    for li, layer in enumerate(params["layers"]):
+        xa = _layernorm(x, layer["ln1"])
+        q = _split_heads(xa @ layer["wq"], h, d)  # [B, H, D]
+        k_new = _split_heads(xa @ layer["wk"], h, d)
+        v_new = _split_heads(xa @ layer["wv"], h, d)
+        k_l = k_cache[:, li]  # [B, H, S, D]
+        v_l = v_cache[:, li]
+        upd = jax.vmap(
+            lambda cache, nv, p: jax.lax.dynamic_update_slice(
+                cache, nv[:, None, :], (0, p, 0)
+            )
+        )
+        k_l = upd(k_l, k_new, pos)
+        v_l = upd(v_l, v_new, pos)
+        new_ks.append(k_l)
+        new_vs.append(v_l)
+        attn = decode_attention(q, k_l, v_l, pos + 1)  # L1 Pallas kernel
+        x = x + attn.reshape(b, h * d) @ layer["wo"]
+        xf = _layernorm(x, layer["ln2"])
+        x = x + _ffn(xf, layer)
+    logits = x @ params["w_out"]
+    k_out = jnp.stack(new_ks, axis=1)
+    v_out = jnp.stack(new_vs, axis=1)
+    return logits, k_out, v_out
+
+
+# ---------------------------------------------------------------------------
+# PRM scorer: encoder trunk (prefill weights) + sigmoid head on mean-pooled
+# hidden state. Returns a process reward in [0, 1] per sequence.
+# ---------------------------------------------------------------------------
+
+
+def prm_score(params, cfg: LmConfig, tokens, length):
+    """tokens: [B, S] int32, length: [B] int32 -> score [B] f32."""
+    b, s = tokens.shape
+    h, d = cfg.n_heads, cfg.head_dim
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :s, :]
+    pos = jnp.arange(s)
+    valid = pos[None, None, :] < length[:, None, None]
+    causal = pos[None, :, None] >= pos[None, None, :]
+    mask = jnp.logical_and(causal, valid)
+    for layer in params["layers"]:
+        xa = _layernorm(x, layer["ln1"])
+        q = _split_heads(xa @ layer["wq"], h, d)
+        k = _split_heads(xa @ layer["wk"], h, d)
+        v = _split_heads(xa @ layer["wv"], h, d)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(d)
+        logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+        x = x + attn.reshape(b, s, h * d) @ layer["wo"]
+        xf = _layernorm(x, layer["ln2"])
+        x = x + _ffn(xf.reshape(b * s, -1), layer).reshape(b, s, -1)
+    pool_mask = (pos[None, :] < length[:, None]).astype(jnp.float32)
+    pooled = (x * pool_mask[:, :, None]).sum(axis=1) / jnp.maximum(
+        pool_mask.sum(axis=1, keepdims=True), 1.0
+    )
+    return jax.nn.sigmoid((pooled @ params["prm_head"])[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# Sentence embedder: 1-layer bidirectional encoder, mean-pool, L2-normalize.
+# ---------------------------------------------------------------------------
+
+
+def init_embed_params(cfg: EmbedConfig):
+    key = jax.random.PRNGKey(cfg.seed)
+    ks = jax.random.split(key, 10)
+    dm, dh = cfg.d_model, cfg.n_heads * cfg.head_dim
+    return {
+        "tok_emb": _init(ks[0], (cfg.vocab, dm)),
+        "pos_emb": _init(ks[1], (cfg.max_seq, dm)),
+        "wq": _init(ks[2], (dm, dh)),
+        "wk": _init(ks[3], (dm, dh)),
+        "wv": _init(ks[4], (dm, dh)),
+        "wo": _init(ks[5], (dh, dm)),
+        "w1": _init(ks[6], (dm, cfg.d_ff)),
+        "w2": _init(ks[7], (cfg.d_ff, dm)),
+        "w_out": _init(ks[8], (dm, cfg.out_dim)),
+        "ln1": jnp.ones((dm,), jnp.float32),
+        "ln2": jnp.ones((dm,), jnp.float32),
+    }
+
+
+def embed_sentence(params, cfg: EmbedConfig, tokens, length):
+    """tokens: [B, S] int32, length: [B] int32 -> unit embeddings [B, E]."""
+    b, s = tokens.shape
+    h, d = cfg.n_heads, cfg.head_dim
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :s, :]
+    pos = jnp.arange(s)
+    valid = (pos[None, :] < length[:, None]).astype(jnp.float32)  # [B, S]
+    mask = valid[:, None, :] * valid[:, :, None]  # bidirectional
+    xa = _layernorm(x, params["ln1"])
+    q = _split_heads(xa @ params["wq"], h, d)
+    k = _split_heads(xa @ params["wk"], h, d)
+    v = _split_heads(xa @ params["wv"], h, d)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(d)
+    logits = jnp.where(mask[:, None, :, :] > 0, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    attn = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    x = x + attn.reshape(b, s, h * d) @ params["wo"]
+    xf = _layernorm(x, params["ln2"])
+    x = x + jax.nn.gelu(xf @ params["w1"]) @ params["w2"]
+    pooled = (x * valid[:, :, None]).sum(axis=1) / jnp.maximum(
+        valid.sum(axis=1, keepdims=True), 1.0
+    )
+    e = pooled @ params["w_out"]
+    return e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-6)

@@ -1,0 +1,80 @@
+"""L1/L2 performance analysis (build-time; DESIGN.md §8, EXPERIMENTS.md §Perf).
+
+Pallas interpret mode gives no TPU wallclock, so L1 is assessed structurally:
+VMEM working set per grid step from the BlockSpecs (target: fits the ~16 MiB
+VMEM with double-buffering headroom) and the MXU utilization character of
+each inner op. L2 is assessed from the lowered HLO: op mix, fusion count,
+and the absence of recomputation (dynamic-update-slice in-place KV writes).
+
+Run:  cd python && python -m compile.perf_report
+"""
+
+import collections
+import os
+import re
+
+from . import aot
+
+F32 = 4
+
+
+def mib(nbytes):
+    return nbytes / (1 << 20)
+
+
+def l1_report():
+    cfg = aot.LM_CFG
+    H, D, S = cfg.n_heads, cfg.head_dim, cfg.max_seq
+    G, SP, SS = aot.TREE_G, aot.TREE_SP, aot.TREE_SS
+    print("== L1 Pallas kernels: VMEM working set per grid step ==")
+    # decode attention: per (b, h) program: q[D] + k[S,D] + v[S,D] + out[D]
+    dec = (D + 2 * S * D + D) * F32
+    print(f"decode_attention  grid=(B,H)    {mib(dec):8.4f} MiB  "
+          f"(q[{D}] + k/v[{S},{D}] + o[{D}])")
+    # tree attention: q[D] + kp[SP,D] + vp[SP,D] + ks[SS,D] + vs[SS,D] + o[D]
+    tre = (D + 2 * SP * D + 2 * SS * D + D) * F32
+    print(f"tree_attention    grid=(G,H)    {mib(tre):8.4f} MiB  "
+          f"(prefix[{SP},{D}] shared across {G} branches; suffix[{SS},{D}])")
+    hbm_saved = (G - 1) * 2 * SP * D * F32
+    print(f"  prefix reuse: index_map ignores branch axis -> "
+          f"{mib(hbm_saved):.4f} MiB HBM traffic avoided per head vs per-branch fetch")
+    # matmul: tiles bm x bk + bk x bn + acc bm x bn
+    bm, bn, bk = 64, 128, 128
+    mm = (bm * bk + bk * bn + bm * bn) * F32
+    print(f"matmul            grid=(M/{bm},N/{bn},K/{bk}) {mib(mm):8.4f} MiB  "
+          f"(a-tile + b-tile + f32 acc)")
+    print(f"  all well under 16 MiB VMEM -> double-buffering headroom ~{16/mib(mm):.0f}x")
+    # MXU character
+    print("MXU: q.k^T / p.v are matvecs per program (VPU-bound at D=32 tiles);")
+    print("     matmul inner op is a 64x128x128 f32-accumulate dot -> MXU-shaped.")
+    print("     At the paper's scale (D=128 heads, S in the thousands) the same")
+    print("     BlockSpecs tile to 128-lane MXU operands; roofline is then the")
+    print("     HBM stream of the unique (radix-shared) KV - the quantity ETS minimizes.")
+
+
+def l2_report():
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    print("\n== L2 lowered HLO op mix (per artifact) ==")
+    for name in sorted(os.listdir(art_dir)):
+        if not name.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(art_dir, name)).read()
+        ops = collections.Counter(
+            m.group(1)
+            for m in re.finditer(r"=\s+\S+\s+([a-z-]+)\(", text)
+        )
+        fused = ops.get("fusion", 0)
+        dus = ops.get("dynamic-update-slice", 0)
+        dots = ops.get("dot", 0)
+        whiles = ops.get("while", 0)
+        total = sum(ops.values())
+        print(f"{name:<26} ops={total:<5} dot={dots:<3} fusion={fused:<3} "
+              f"dynamic-update-slice={dus:<2} while={whiles}")
+    print("notes: decode KV update lowers to dynamic-update-slice (in-place,")
+    print("no recompute); interpret-mode pallas grids lower to while loops;")
+    print("XLA fuses elementwise/LN chains around the dots at compile time.")
+
+
+if __name__ == "__main__":
+    l1_report()
+    l2_report()

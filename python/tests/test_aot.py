@@ -1,0 +1,64 @@
+"""AOT pipeline invariants: HLO text must be loadable interchange —
+full constants (no elision), parseable header, correct entry shapes."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_hlo_text_has_no_elided_constants():
+    # A function closing over a big constant must dump it fully: the rust
+    # loader would otherwise silently zero the weights.
+    big = jnp.arange(4096.0)
+    text = aot.lower_entry(lambda x: (x * big,), (jax.ShapeDtypeStruct((4096,), jnp.float32),))
+    assert "{...}" not in text
+    assert "f32[4096]" in text
+
+
+def test_hlo_text_is_module_with_tuple_root():
+    text = aot.lower_entry(
+        lambda x: (x + 1.0,), (jax.ShapeDtypeStruct((2, 2), jnp.float32),)
+    )
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+    # return_tuple=True → root is a tuple
+    assert "(f32[2,2]" in text
+
+
+def test_build_artifacts_covers_all_declared_entries():
+    names = []
+    gen = aot.build_artifacts()
+    # don't lower everything (slow) — just verify the generator yields the
+    # first artifact with consistent io spec
+    name, hlo, io = next(gen)
+    names.append(name)
+    assert name == f"lm_prefill_b{aot.LM_BATCHES[0]}"
+    assert "{...}" not in hlo
+    b = aot.LM_BATCHES[0]
+    assert io["inputs"][0]["shape"] == [b, aot.LM_CFG.max_seq]
+    assert io["outputs"][0]["shape"] == [b, aot.LM_CFG.vocab]
+
+
+def test_golden_vectors_are_stable():
+    g1 = aot.build_golden()
+    g2 = aot.build_golden()
+    assert g1 == g2
+    assert len(g1["prefill_logits_head"]) == 8
+    assert all(isinstance(x, float) for x in g1["decode_logits_head"])
+    assert 0.0 < min(g1["prm_scores"]) and max(g1["prm_scores"]) < 1.0
+    assert abs(g1["embed_norm_row1"] - 1.0) < 1e-3
+
+
+def test_lm_config_matches_compiled_meta_assumptions():
+    cfg = aot.LM_CFG
+    # decode KV shape must match what rust reconstructs from meta.json
+    params = model.init_lm_params(cfg)
+    tok = jnp.zeros((1,), jnp.int32)
+    pos = jnp.zeros((1,), jnp.int32)
+    kv = jnp.zeros(
+        (1, cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim), jnp.float32
+    )
+    logits, k, v = model.lm_decode(params, cfg, tok, pos, kv, kv)
+    assert logits.shape == (1, cfg.vocab)
+    assert k.shape == kv.shape and v.shape == kv.shape

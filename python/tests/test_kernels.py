@@ -1,0 +1,199 @@
+"""L1 kernel correctness: Pallas (interpret mode) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode_attention, matmul, tree_attention
+from compile.kernels.ref import (
+    decode_attention_ref,
+    matmul_ref,
+    tree_attention_ref,
+)
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+F32 = np.float32
+BF16 = jnp.bfloat16
+
+
+def rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(F32)
+    return jnp.asarray(x).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == F32 else dict(rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 5),
+    h=st.integers(1, 3),
+    s=st.integers(1, 24),
+    d=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**16),
+    dtype=st.sampled_from([F32, BF16]),
+)
+def test_decode_attention_matches_ref(b, h, s, d, seed, dtype):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (b, h, d), dtype)
+    k = rand(rng, (b, h, s, d), dtype)
+    v = rand(rng, (b, h, s, d), dtype)
+    length = jnp.asarray(rng.integers(1, s + 1, size=b).astype(np.int32))
+    out = decode_attention(q, k, v, length)
+    ref = decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=F32), np.asarray(ref, dtype=F32), **tol(dtype)
+    )
+
+
+def test_decode_attention_length_one_uses_single_position():
+    # With length=1 the output must equal v[:, :, 0, :] exactly.
+    b, h, s, d = 2, 2, 8, 4
+    rng = np.random.default_rng(0)
+    q = rand(rng, (b, h, d), F32)
+    k = rand(rng, (b, h, s, d), F32)
+    v = rand(rng, (b, h, s, d), F32)
+    length = jnp.asarray(np.ones(b, dtype=np.int32))
+    out = decode_attention(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[:, :, 0, :]), rtol=1e-6)
+
+
+def test_decode_attention_ignores_padding_garbage():
+    # Values beyond `length` must not affect the result.
+    b, h, s, d = 1, 1, 10, 8
+    rng = np.random.default_rng(1)
+    q = rand(rng, (b, h, d), F32)
+    k = np.asarray(rand(rng, (b, h, s, d), F32)).copy()
+    v = np.asarray(rand(rng, (b, h, s, d), F32)).copy()
+    length = jnp.asarray(np.array([4], dtype=np.int32))
+    out1 = decode_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), length)
+    k[:, :, 4:, :] = 1e4
+    v[:, :, 4:, :] = -1e4
+    out2 = decode_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), length)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# tree attention
+# ---------------------------------------------------------------------------
+
+
+@given(
+    g=st.integers(1, 5),
+    h=st.integers(1, 3),
+    sp=st.integers(1, 16),
+    ss=st.integers(1, 8),
+    d=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**16),
+    dtype=st.sampled_from([F32, BF16]),
+)
+def test_tree_attention_matches_ref(g, h, sp, ss, d, seed, dtype):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (g, h, d), dtype)
+    kp = rand(rng, (h, sp, d), dtype)
+    vp = rand(rng, (h, sp, d), dtype)
+    ks = rand(rng, (g, h, ss, d), dtype)
+    vs = rand(rng, (g, h, ss, d), dtype)
+    plen = jnp.asarray(rng.integers(1, sp + 1, size=1).astype(np.int32))
+    slen = jnp.asarray(rng.integers(1, ss + 1, size=g).astype(np.int32))
+    out = tree_attention(q, kp, vp, ks, vs, plen, slen)
+    ref = tree_attention_ref(q, kp, vp, ks, vs, plen, slen)
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=F32), np.asarray(ref, dtype=F32), **tol(dtype)
+    )
+
+
+def test_tree_attention_equals_flat_attention():
+    # Concatenating prefix+suffix into one flat KV must give the same result
+    # as the two-segment tree kernel (the online-softmax combine is exact).
+    g, h, sp, ss, d = 3, 2, 8, 4, 8
+    rng = np.random.default_rng(2)
+    q = rand(rng, (g, h, d), F32)
+    kp = rand(rng, (h, sp, d), F32)
+    vp = rand(rng, (h, sp, d), F32)
+    ks = rand(rng, (g, h, ss, d), F32)
+    vs = rand(rng, (g, h, ss, d), F32)
+    plen = jnp.asarray(np.array([sp], dtype=np.int32))
+    slen = jnp.asarray(np.full(g, ss, dtype=np.int32))
+    out = tree_attention(q, kp, vp, ks, vs, plen, slen)
+    # flat equivalent via decode_attention per branch
+    k_flat = jnp.concatenate(
+        [jnp.broadcast_to(kp[None], (g, h, sp, d)), ks], axis=2
+    )
+    v_flat = jnp.concatenate(
+        [jnp.broadcast_to(vp[None], (g, h, sp, d)), vs], axis=2
+    )
+    length = jnp.asarray(np.full(g, sp + ss, dtype=np.int32))
+    ref = decode_attention_ref(q, k_flat, v_flat, length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_tree_attention_suffix_masking():
+    # Garbage in masked suffix positions must not leak.
+    g, h, sp, ss, d = 2, 1, 4, 6, 4
+    rng = np.random.default_rng(3)
+    q = rand(rng, (g, h, d), F32)
+    kp = rand(rng, (h, sp, d), F32)
+    vp = rand(rng, (h, sp, d), F32)
+    ks = np.asarray(rand(rng, (g, h, ss, d), F32)).copy()
+    vs = np.asarray(rand(rng, (g, h, ss, d), F32)).copy()
+    plen = jnp.asarray(np.array([4], dtype=np.int32))
+    slen = jnp.asarray(np.array([2, 3], dtype=np.int32))
+    out1 = tree_attention(q, kp, vp, jnp.asarray(ks), jnp.asarray(vs), plen, slen)
+    ks[0, :, 2:, :] = 77.0
+    vs[1, :, 3:, :] = -55.0
+    out2 = tree_attention(q, kp, vp, jnp.asarray(ks), jnp.asarray(vs), plen, slen)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.sampled_from([1, 3, 8, 64]),
+    k=st.sampled_from([4, 32, 128]),
+    n=st.sampled_from([5, 16, 128, 256]),
+    seed=st.integers(0, 2**16),
+    dtype=st.sampled_from([F32, BF16]),
+)
+def test_matmul_matches_ref(m, k, n, seed, dtype):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, (m, k), dtype)
+    b = rand(rng, (k, n), dtype)
+    out = matmul(a, b)
+    ref = matmul_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=F32),
+        np.asarray(ref, dtype=F32),
+        rtol=1e-4 if dtype == F32 else 5e-2,
+        atol=1e-4 if dtype == F32 else 5e-2,
+    )
+
+
+def test_matmul_identity():
+    a = jnp.eye(16, dtype=F32)
+    b = jnp.asarray(np.random.default_rng(4).standard_normal((16, 8)).astype(F32))
+    np.testing.assert_allclose(np.asarray(matmul(a, b)), np.asarray(b), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (7, 13, 11), (64, 128, 256)])
+def test_matmul_odd_shapes(m, k, n):
+    rng = np.random.default_rng(5)
+    a = rand(rng, (m, k), F32)
+    b = rand(rng, (k, n), F32)
+    np.testing.assert_allclose(
+        np.asarray(matmul(a, b)), np.asarray(matmul_ref(a, b)), rtol=1e-4, atol=1e-4
+    )

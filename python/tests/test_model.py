@@ -1,0 +1,106 @@
+"""L2 model checks: shapes, masking semantics, prefill/decode consistency."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+
+CFG = model.LmConfig(max_seq=24)  # small seq for fast tests
+ECFG = model.EmbedConfig()
+PARAMS = model.init_lm_params(CFG)
+EPARAMS = model.init_embed_params(ECFG)
+
+
+def _prompt(b, lens, vocab=CFG.vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = np.zeros((b, CFG.max_seq), dtype=np.int32)
+    for i, l in enumerate(lens):
+        toks[i, :l] = rng.integers(1, vocab, size=l)
+    return jnp.asarray(toks), jnp.asarray(np.array(lens, dtype=np.int32))
+
+
+def test_prefill_shapes():
+    toks, lens = _prompt(2, [5, 9])
+    logits, k, v = model.lm_prefill(PARAMS, CFG, toks, lens)
+    assert logits.shape == (2, CFG.vocab)
+    assert k.shape == (2, CFG.n_layers, CFG.n_heads, CFG.max_seq, CFG.head_dim)
+    assert v.shape == k.shape
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_prefill_padding_invariance():
+    # Tokens beyond `length` must not change the logits.
+    toks, lens = _prompt(1, [6])
+    l1, _, _ = model.lm_prefill(PARAMS, CFG, toks, lens)
+    toks2 = np.asarray(toks).copy()
+    toks2[0, 6:] = 99 % CFG.vocab
+    l2, _, _ = model.lm_prefill(PARAMS, CFG, jnp.asarray(toks2), lens)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_prefill_extension():
+    # prefill(tokens[:n]) + decode(tokens[n]) must equal prefill(tokens[:n+1]).
+    n = 7
+    toks, lens = _prompt(1, [n + 1], seed=3)
+    toks_n = np.asarray(toks).copy()
+    toks_n[0, n:] = 0
+    _, k, v = model.lm_prefill(
+        PARAMS, CFG, jnp.asarray(toks_n), jnp.asarray(np.array([n], np.int32))
+    )
+    tok_next = jnp.asarray(np.asarray(toks)[0, n : n + 1].astype(np.int32))
+    pos = jnp.asarray(np.array([n], dtype=np.int32))
+    logits_d, _, _ = model.lm_decode(PARAMS, CFG, tok_next, pos, k, v)
+    logits_p, _, _ = model.lm_prefill(PARAMS, CFG, toks, lens)
+    np.testing.assert_allclose(
+        np.asarray(logits_d), np.asarray(logits_p), rtol=5e-4, atol=5e-4
+    )
+
+
+def test_decode_updates_cache_at_pos():
+    toks, lens = _prompt(1, [4], seed=5)
+    _, k, v = model.lm_prefill(PARAMS, CFG, toks, lens)
+    tok = jnp.asarray(np.array([7], np.int32))
+    pos = jnp.asarray(np.array([4], np.int32))
+    _, k2, v2 = model.lm_decode(PARAMS, CFG, tok, pos, k, v)
+    k_np, k2_np = np.asarray(k), np.asarray(k2)
+    # position 4 changed, positions 0..3 unchanged
+    assert not np.allclose(k_np[:, :, :, 4], k2_np[:, :, :, 4])
+    np.testing.assert_allclose(k_np[:, :, :, :4], k2_np[:, :, :, :4])
+    v_np, v2_np = np.asarray(v), np.asarray(v2)
+    np.testing.assert_allclose(v_np[:, :, :, :4], v2_np[:, :, :, :4])
+
+
+def test_prm_score_in_unit_interval_and_length_sensitive():
+    toks, lens = _prompt(2, [4, 12], seed=7)
+    s = np.asarray(model.prm_score(PARAMS, CFG, toks, lens))
+    assert s.shape == (2,)
+    assert np.all((s > 0) & (s < 1))
+    # different prompts give different scores (no degenerate constant head)
+    toks2, _ = _prompt(2, [4, 12], seed=8)
+    s2 = np.asarray(model.prm_score(PARAMS, CFG, toks2, lens))
+    assert not np.allclose(s, s2)
+
+
+def test_embedder_unit_norm_and_discrimination():
+    rng = np.random.default_rng(11)
+    toks = np.zeros((3, ECFG.max_seq), dtype=np.int32)
+    toks[0, :6] = rng.integers(1, ECFG.vocab, 6)
+    toks[1, :6] = toks[0, :6]  # identical sentence
+    toks[2, :6] = rng.integers(1, ECFG.vocab, 6)  # different sentence
+    lens = jnp.asarray(np.array([6, 6, 6], np.int32))
+    e = np.asarray(model.embed_sentence(EPARAMS, ECFG, jnp.asarray(toks), lens))
+    norms = np.linalg.norm(e, axis=1)
+    np.testing.assert_allclose(norms, 1.0, rtol=1e-5)
+    sim_same = float(e[0] @ e[1])
+    sim_diff = float(e[0] @ e[2])
+    assert sim_same > 0.999
+    assert sim_diff < sim_same
+
+
+def test_weights_are_deterministic_across_processes():
+    # init twice -> identical (seeded); different seed -> different
+    p1 = model.init_lm_params(CFG)
+    p2 = model.init_lm_params(CFG)
+    np.testing.assert_array_equal(np.asarray(p1["tok_emb"]), np.asarray(p2["tok_emb"]))
+    p3 = model.init_lm_params(model.LmConfig(max_seq=24, seed=1))
+    assert not np.allclose(np.asarray(p1["tok_emb"]), np.asarray(p3["tok_emb"]))

@@ -1,0 +1,187 @@
+//! Hierarchical agglomerative clustering (average linkage, cosine distance).
+//!
+//! In-repo replacement for `scipy.cluster.hierarchy`: ETS embeds the latest
+//! step of each candidate trajectory and clusters the embeddings with a fixed
+//! distance threshold; cluster ids feed the coverage term of the cost model
+//! (paper §4.2). Average linkage over cosine distance `1 − cos(a, b)`,
+//! threshold cut, exactly as the paper configures scipy.
+
+use crate::util::stats::cosine;
+
+/// Assignment of each input vector to a cluster id `0..num_clusters`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Clustering {
+    pub assignment: Vec<usize>,
+    pub num_clusters: usize,
+}
+
+/// Cluster `embeddings` with average-linkage agglomerative clustering,
+/// merging while the closest pair of clusters is below `distance_threshold`
+/// (cosine distance).
+///
+/// O(n³) naive implementation — candidate sets are ≤ a few hundred vectors,
+/// where this is sub-millisecond. (See `benches/micro_cluster.rs`.)
+pub fn agglomerative(embeddings: &[Vec<f32>], distance_threshold: f64) -> Clustering {
+    let n = embeddings.len();
+    if n == 0 {
+        return Clustering { assignment: vec![], num_clusters: 0 };
+    }
+    // Pairwise cosine distances.
+    let mut dist = vec![vec![0.0f64; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = 1.0 - cosine(&embeddings[i], &embeddings[j]);
+            dist[i][j] = d;
+            dist[j][i] = d;
+        }
+    }
+    // UPGMA via Lance–Williams updates: maintain the cluster-level distance
+    // matrix and update rows on merge —
+    //   d(a∪b, k) = (n_a d(a,k) + n_b d(b,k)) / (n_a + n_b)
+    // O(n²) per merge, O(n³) total (sub-ms for the ≤ few hundred candidates
+    // ETS clusters per step; see benches/micro_cluster.rs).
+    let mut clusters: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+    let mut alive: Vec<bool> = vec![true; n];
+    let mut n_alive = n;
+    while n_alive > 1 {
+        let mut best = (f64::INFINITY, 0usize, 0usize);
+        for a in 0..n {
+            if !alive[a] {
+                continue;
+            }
+            for b in (a + 1)..n {
+                if alive[b] && dist[a][b] < best.0 {
+                    best = (dist[a][b], a, b);
+                }
+            }
+        }
+        if best.0 >= distance_threshold {
+            break;
+        }
+        let (_, a, b) = best;
+        let (na, nb) = (clusters[a].len() as f64, clusters[b].len() as f64);
+        for k in 0..n {
+            if alive[k] && k != a && k != b {
+                let d = (na * dist[a][k] + nb * dist[b][k]) / (na + nb);
+                dist[a][k] = d;
+                dist[k][a] = d;
+            }
+        }
+        let merged = std::mem::take(&mut clusters[b]);
+        clusters[a].extend(merged);
+        alive[b] = false;
+        n_alive -= 1;
+    }
+    let mut assignment = vec![0usize; n];
+    let mut num_clusters = 0;
+    for (slot, members) in clusters.iter().enumerate() {
+        if alive[slot] {
+            for &m in members {
+                assignment[m] = num_clusters;
+            }
+            num_clusters += 1;
+        }
+    }
+    Clustering { assignment, num_clusters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    fn unit(angle: f64) -> Vec<f32> {
+        vec![angle.cos() as f32, angle.sin() as f32]
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(agglomerative(&[], 0.5).num_clusters, 0);
+        let c = agglomerative(&[vec![1.0, 0.0]], 0.5);
+        assert_eq!(c.num_clusters, 1);
+        assert_eq!(c.assignment, vec![0]);
+    }
+
+    #[test]
+    fn two_tight_groups_split() {
+        // Group A near angle 0, group B near angle pi/2.
+        let pts = vec![unit(0.0), unit(0.05), unit(1.5), unit(1.55)];
+        let c = agglomerative(&pts, 0.3);
+        assert_eq!(c.num_clusters, 2);
+        assert_eq!(c.assignment[0], c.assignment[1]);
+        assert_eq!(c.assignment[2], c.assignment[3]);
+        assert_ne!(c.assignment[0], c.assignment[2]);
+    }
+
+    #[test]
+    fn threshold_zero_keeps_all_separate() {
+        let pts = vec![unit(0.0), unit(0.5), unit(1.0)];
+        let c = agglomerative(&pts, 0.0);
+        assert_eq!(c.num_clusters, 3);
+    }
+
+    #[test]
+    fn huge_threshold_merges_all() {
+        let pts = vec![unit(0.0), unit(0.7), unit(1.4), unit(2.0)];
+        let c = agglomerative(&pts, 10.0);
+        assert_eq!(c.num_clusters, 1);
+    }
+
+    #[test]
+    fn identical_points_always_merge() {
+        let pts = vec![vec![0.3, 0.7], vec![0.3, 0.7], vec![-0.5, 0.2]];
+        let c = agglomerative(&pts, 1e-6);
+        assert_eq!(c.assignment[0], c.assignment[1]);
+        assert_ne!(c.assignment[0], c.assignment[2]);
+    }
+
+    #[test]
+    fn prop_assignment_is_valid_partition() {
+        property(60, |rng: &mut Rng| {
+            let n = rng.index(20);
+            let d = 2 + rng.index(6);
+            let pts: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let c = agglomerative(&pts, rng.f64());
+            crate::prop_check!(c.assignment.len() == n);
+            if n > 0 {
+                crate::prop_check!(c.num_clusters >= 1 && c.num_clusters <= n);
+                for &a in &c.assignment {
+                    crate::prop_check!(a < c.num_clusters, "cid {a}");
+                }
+                // every cluster id used
+                for cid in 0..c.num_clusters {
+                    crate::prop_check!(
+                        c.assignment.iter().any(|&a| a == cid),
+                        "unused cluster {cid}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_monotone_in_threshold() {
+        // A larger threshold can only produce fewer-or-equal clusters.
+        property(40, |rng: &mut Rng| {
+            let n = 2 + rng.index(12);
+            let pts: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..3).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let t1 = rng.f64() * 0.8;
+            let t2 = t1 + rng.f64() * 0.8;
+            let c1 = agglomerative(&pts, t1);
+            let c2 = agglomerative(&pts, t2);
+            crate::prop_check!(
+                c2.num_clusters <= c1.num_clusters,
+                "t1={t1} k={} t2={t2} k={}",
+                c1.num_clusters,
+                c2.num_clusters
+            );
+            Ok(())
+        });
+    }
+}

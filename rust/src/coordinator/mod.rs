@@ -1,0 +1,123 @@
+//! L3 coordinator: request routing and the multi-threaded eval/serve loops.
+//!
+//! Tokio is unavailable in the offline build environment, so the coordinator
+//! is built on `std::thread` scoped workers + mpsc channels: a work queue of
+//! problems, N workers running searches, and an aggregator folding results —
+//! the same leader/worker shape a vLLM-style router uses, at simulator scale.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// Parallel map over `items` with `workers` threads, preserving order.
+///
+/// Workers pull indices from a shared queue (work stealing by index), so
+/// uneven per-item costs (hard problems search longer) balance out.
+pub fn par_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    // index queue
+    let queue: Mutex<std::vec::IntoIter<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>().into_iter());
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let queue = &queue;
+            let f = &f;
+            scope.spawn(move || loop {
+                let item = queue.lock().unwrap().next();
+                match item {
+                    Some((i, t)) => {
+                        let r = f(i, t);
+                        if tx.send((i, r)).is_err() {
+                            return;
+                        }
+                    }
+                    None => return,
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.expect("worker died before finishing")).collect()
+    })
+}
+
+/// A request to the serving coordinator.
+#[derive(Clone, Debug)]
+pub struct SearchRequest {
+    pub request_id: u64,
+    pub problem_id: u64,
+}
+
+/// Aggregated coordinator statistics.
+#[derive(Clone, Debug, Default)]
+pub struct CoordinatorStats {
+    pub completed: u64,
+    pub correct: u64,
+    pub total_kv_tokens: u64,
+    pub total_new_tokens: u64,
+    pub total_model_calls: u64,
+    pub wall_seconds: f64,
+}
+
+impl CoordinatorStats {
+    pub fn throughput_problems_per_sec(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.completed as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order_and_results() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = par_map(items.clone(), 8, |_, x| x * x);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i as u64) * (i as u64));
+        }
+    }
+
+    #[test]
+    fn par_map_single_worker_fallback() {
+        let out = par_map(vec![1, 2, 3], 1, |i, x| i + x);
+        assert_eq!(out, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let out: Vec<u32> = par_map(Vec::<u32>::new(), 4, |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn par_map_uneven_work_balances() {
+        // items with wildly different costs still all complete
+        let items: Vec<u64> = (0..32).collect();
+        let out = par_map(items, 4, |_, x| {
+            let mut acc = 0u64;
+            for i in 0..(x * 1000) {
+                acc = acc.wrapping_add(i);
+            }
+            (x, acc).0
+        });
+        assert_eq!(out.len(), 32);
+    }
+}

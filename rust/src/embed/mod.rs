@@ -1,0 +1,152 @@
+//! Step embedders for the semantic-coverage term (paper §4.2).
+//!
+//! * [`HashEmbedder`] — simulation path: the embedding of a step is a unit
+//!   vector determined by its semantic group, plus a small paraphrase-variant
+//!   perturbation. Paraphrases of the same idea land close (cosine ≈ 1),
+//!   different approaches land far — the property the paper's BERT math
+//!   embedder provides and clustering consumes.
+//! * [`crate::engine::pjrt_lm::PjrtEmbedder`] — the tiny encoder executed via
+//!   the AOT artifacts over surface token ids (real-compute path).
+
+use crate::tree::{NodeId, SearchTree};
+use crate::util::rng::Rng;
+
+/// Embeds the *latest step* of trajectories (what ETS clusters).
+pub trait Embedder {
+    fn embed(&mut self, tree: &SearchTree, nodes: &[NodeId]) -> Vec<Vec<f32>>;
+    fn dim(&self) -> usize;
+}
+
+/// Deterministic group-hash embedder.
+pub struct HashEmbedder {
+    pub dim: usize,
+    /// Scale of the paraphrase jitter relative to the group direction.
+    pub jitter: f32,
+}
+
+impl Default for HashEmbedder {
+    fn default() -> Self {
+        Self { dim: 32, jitter: 0.15 }
+    }
+}
+
+impl HashEmbedder {
+    fn unit_from_seed(&self, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        let mut v: Vec<f32> = (0..self.dim).map(|_| r.normal() as f32).collect();
+        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+        v
+    }
+}
+
+impl Embedder for HashEmbedder {
+    fn embed(&mut self, tree: &SearchTree, nodes: &[NodeId]) -> Vec<Vec<f32>> {
+        nodes
+            .iter()
+            .map(|&id| {
+                let step = &tree.get(id).step;
+                let base = self.unit_from_seed(step.path_id.wrapping_mul(0xD134_2543_DE82_EF95) ^ 0xE7);
+                let noise =
+                    self.unit_from_seed(step.paraphrase.wrapping_mul(0xA24B_AED4_963E_E407) ^ 0x51);
+                let mut v: Vec<f32> = base
+                    .iter()
+                    .zip(&noise)
+                    .map(|(b, n)| b + self.jitter * n)
+                    .collect();
+                let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+                for x in v.iter_mut() {
+                    *x /= norm;
+                }
+                v
+            })
+            .collect()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::agglomerative;
+    use crate::tree::StepInfo;
+    use crate::util::stats::cosine;
+
+    fn tree_with_steps(steps: &[(u64, u64)]) -> (SearchTree, Vec<NodeId>) {
+        let mut t = SearchTree::new();
+        let root = t.init_root(1);
+        let ids = steps
+            .iter()
+            .map(|&(sem, paraphrase)| {
+                let path_id = crate::workload::extend_path_id(0, sem);
+                t.add_child(
+                    root,
+                    StepInfo { tokens: 1, sem, paraphrase, path_id, ..Default::default() },
+                    0.0,
+                )
+            })
+            .collect();
+        (t, ids)
+    }
+
+    #[test]
+    fn same_group_different_context_is_not_redundant() {
+        // identical surface step under different parents -> far embeddings
+        let mut t = SearchTree::new();
+        let root = t.init_root(1);
+        let p1 = crate::workload::extend_path_id(0, 1);
+        let p2 = crate::workload::extend_path_id(0, 2);
+        let a = t.add_child(root, StepInfo { tokens: 1, sem: 7, paraphrase: 3,
+            path_id: crate::workload::extend_path_id(p1, 7), ..Default::default() }, 0.0);
+        let b = t.add_child(root, StepInfo { tokens: 1, sem: 7, paraphrase: 3,
+            path_id: crate::workload::extend_path_id(p2, 7), ..Default::default() }, 0.0);
+        let mut e = HashEmbedder::default();
+        let v = e.embed(&t, &[a, b]);
+        assert!(cosine(&v[0], &v[1]) < 0.5);
+    }
+
+    #[test]
+    fn paraphrases_close_groups_far() {
+        let (t, ids) = tree_with_steps(&[(1, 10), (1, 20), (2, 10), (3, 99)]);
+        let mut e = HashEmbedder::default();
+        let v = e.embed(&t, &ids);
+        let same = cosine(&v[0], &v[1]);
+        let diff = cosine(&v[0], &v[2]);
+        assert!(same > 0.9, "paraphrase cosine {same}");
+        assert!(diff < 0.5, "cross-group cosine {diff}");
+    }
+
+    #[test]
+    fn embeddings_are_unit_norm_and_deterministic() {
+        let (t, ids) = tree_with_steps(&[(5, 1), (5, 1)]);
+        let mut e = HashEmbedder::default();
+        let v = e.embed(&t, &ids);
+        assert_eq!(v[0], v[1]);
+        let n = v[0].iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn clustering_recovers_semantic_groups() {
+        // 3 groups × 4 paraphrases — agglomerative clustering at the ETS
+        // threshold must recover exactly the groups.
+        let steps: Vec<(u64, u64)> =
+            (0..3).flat_map(|g| (0..4).map(move |p| (g, g * 100 + p))).collect();
+        let (t, ids) = tree_with_steps(&steps);
+        let mut e = HashEmbedder::default();
+        let v = e.embed(&t, &ids);
+        let c = agglomerative(&v, 0.3);
+        assert_eq!(c.num_clusters, 3, "assignment {:?}", c.assignment);
+        for g in 0..3 {
+            let cid = c.assignment[g * 4];
+            for p in 0..4 {
+                assert_eq!(c.assignment[g * 4 + p], cid);
+            }
+        }
+    }
+}

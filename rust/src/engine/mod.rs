@@ -1,0 +1,8 @@
+//! Serving engine: the H100 roofline performance model (Fig. 2 / Table 2
+//! substitution) and the PJRT-backed providers that run the real AOT
+//! transformer on the request path.
+
+pub mod perfmodel;
+pub mod pjrt_lm;
+
+pub use perfmodel::{Hardware, LatencyEstimate, PerfModel, H100_NVL};

@@ -1,0 +1,203 @@
+//! Memory-bandwidth-bound serving performance model (H100-class roofline).
+//!
+//! The paper's Fig. 2 point: search runtime tracks *bytes moved* (weights +
+//! unique KV), not FLOPs or model calls, because generative decoding is
+//! memory-bandwidth-bound. This model replays a [`SearchOutcome`]'s per-step
+//! records through a roofline of a serving node and reports estimated
+//! latency — the substitution for the paper's 2×H100-NVL testbed.
+//!
+//! Per decode iteration of one search step (batch = live continuations):
+//!   * weight bytes are read once (amortized over the whole batch),
+//!   * the step's *unique* KV bytes are read once when the server exploits
+//!     radix/tree sharing (`shared_kv = true`, the SGLang setting), else the
+//!     per-sequence duplicated KV is read,
+//!   * compute time = 2 · params · batch / peak_flops (never dominant here),
+//!   * if the KV working set exceeds free HBM, the batch fragments into
+//!     waves, each re-reading the weights — the second Fig. 2 effect.
+
+use crate::search::SearchOutcome;
+use crate::workload::ModelProfile;
+
+/// Serving hardware description.
+#[derive(Clone, Debug)]
+pub struct Hardware {
+    pub name: &'static str,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// HBM capacity, bytes.
+    pub mem_cap: f64,
+    /// Peak dense compute, FLOP/s (bf16).
+    pub peak_flops: f64,
+}
+
+/// NVIDIA H100 NVL (the paper's testbed GPU).
+pub const H100_NVL: Hardware = Hardware {
+    name: "h100-nvl",
+    mem_bw: 3.35e12,
+    mem_cap: 94.0e9,
+    peak_flops: 1.6e15,
+};
+
+/// Performance-model configuration for one serving setup.
+#[derive(Clone, Debug)]
+pub struct PerfModel {
+    pub hw: Hardware,
+    /// Does the serving stack exploit radix/tree KV sharing (SGLang)?
+    pub shared_kv: bool,
+    /// Problems co-scheduled on the node (the paper's "parallel threads").
+    pub threads: usize,
+}
+
+/// Latency estimate for one problem's search.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyEstimate {
+    pub seconds: f64,
+    /// Total bytes moved (weights + KV reads).
+    pub bytes_moved: f64,
+    /// Number of batch fragmentation waves beyond 1 across all steps.
+    pub extra_waves: u64,
+}
+
+impl PerfModel {
+    pub fn new(hw: Hardware, shared_kv: bool, threads: usize) -> Self {
+        Self { hw, shared_kv, threads: threads.max(1) }
+    }
+
+    /// Estimate the wall-clock of one problem's search on this setup.
+    ///
+    /// `outcome` carries per-step batch sizes and KV footprints; `model` the
+    /// weight/KV byte costs. Co-scheduled threads multiply the KV working
+    /// set and amortize weight reads (they decode in lockstep batches).
+    pub fn latency(&self, outcome: &SearchOutcome, model: &ModelProfile) -> LatencyEstimate {
+        let mut total_s = 0.0;
+        let mut bytes = 0.0;
+        let mut extra_waves = 0u64;
+        let threads = self.threads as f64;
+        for step in &outcome.steps {
+            if step.model_calls == 0 {
+                continue;
+            }
+            let batch = step.model_calls as f64;
+            // average decode iterations to emit this step's tokens
+            let iters = (step.new_tokens as f64 / batch).max(1.0);
+            // KV working set for this step (per problem), bytes
+            let kv_unique = step.live_kv_tokens as f64 * model.kv_bytes_per_token as f64;
+            let kv_dup = step.unshared_kv_tokens as f64 * model.kv_bytes_per_token as f64;
+            let kv_read = if self.shared_kv { kv_unique } else { kv_dup };
+            // resident set on the node: co-scheduled problems each hold
+            // their (allocated = duplicated unless shared) KV
+            let resident = threads * (if self.shared_kv { kv_unique } else { kv_dup });
+            let free = (self.hw.mem_cap - model.weight_bytes as f64).max(1.0);
+            let waves = (resident / free).ceil().max(1.0);
+            extra_waves += (waves as u64).saturating_sub(1) * step.new_tokens as u64
+                / step.model_calls.max(1) as u64;
+            // per decode iteration: weights once per wave (amortized over
+            // all co-scheduled sequences), KV of *this* problem read once
+            let weight_read = model.weight_bytes as f64 * waves / threads;
+            let bytes_per_iter = weight_read + kv_read;
+            let mem_s = bytes_per_iter / self.hw.mem_bw;
+            // compute: 2 * params * batch tokens (params ≈ weight_bytes / 2
+            // for bf16)
+            let flops = model.weight_bytes as f64 * batch;
+            let comp_s = flops / self.hw.peak_flops;
+            total_s += iters * mem_s.max(comp_s);
+            bytes += iters * bytes_per_iter;
+        }
+        LatencyEstimate { seconds: total_s, bytes_moved: bytes, extra_waves }
+    }
+
+    /// Aggregate throughput (problems/s) for a set of per-problem outcomes
+    /// co-scheduled `threads` at a time.
+    pub fn throughput(&self, outcomes: &[SearchOutcome], model: &ModelProfile) -> f64 {
+        if outcomes.is_empty() {
+            return 0.0;
+        }
+        let total_s: f64 =
+            outcomes.iter().map(|o| self.latency(o, model).seconds).sum();
+        // threads problems progress concurrently; each problem's latency is
+        // computed under the shared-node contention model above
+        outcomes.len() as f64 / (total_s / self.threads as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::{StepMetrics, SearchOutcome};
+    use crate::workload::LLEMMA_34B_SIM;
+
+    fn outcome(steps: Vec<StepMetrics>) -> SearchOutcome {
+        SearchOutcome {
+            answer: None,
+            completions: vec![],
+            steps,
+            tree: crate::tree::SearchTree::new(),
+            completed_leaves: vec![],
+        }
+    }
+
+    fn step(model_calls: usize, new_tokens: usize, live: usize, unshared: usize) -> StepMetrics {
+        StepMetrics {
+            live_kv_tokens: live,
+            unshared_kv_tokens: unshared,
+            new_tokens,
+            model_calls,
+            frontier: model_calls,
+            prm_calls: model_calls,
+        }
+    }
+
+    #[test]
+    fn shared_kv_is_faster_when_sharing_exists() {
+        let o = outcome(vec![step(64, 64 * 50, 10_000, 80_000)]);
+        let shared = PerfModel::new(H100_NVL, true, 8).latency(&o, &LLEMMA_34B_SIM);
+        let dup = PerfModel::new(H100_NVL, false, 8).latency(&o, &LLEMMA_34B_SIM);
+        assert!(shared.seconds < dup.seconds, "{shared:?} vs {dup:?}");
+    }
+
+    #[test]
+    fn more_kv_means_more_latency() {
+        let small = outcome(vec![step(64, 64 * 50, 10_000, 10_000)]);
+        let big = outcome(vec![step(64, 64 * 50, 200_000, 200_000)]);
+        let pm = PerfModel::new(H100_NVL, true, 8);
+        assert!(
+            pm.latency(&big, &LLEMMA_34B_SIM).seconds
+                > pm.latency(&small, &LLEMMA_34B_SIM).seconds
+        );
+    }
+
+    #[test]
+    fn fragmentation_kicks_in_at_capacity() {
+        // enormous duplicated KV with many threads → waves > 1
+        let o = outcome(vec![step(256, 256 * 50, 500_000, 3_000_000)]);
+        let pm = PerfModel::new(H100_NVL, false, 32);
+        let est = pm.latency(&o, &LLEMMA_34B_SIM);
+        assert!(est.extra_waves > 0, "{est:?}");
+        let pm_shared = PerfModel::new(H100_NVL, true, 32);
+        let est_s = pm_shared.latency(&o, &LLEMMA_34B_SIM);
+        assert!(est_s.seconds < est.seconds);
+    }
+
+    #[test]
+    fn same_flops_different_kv_different_runtime() {
+        // The Fig. 2 claim: equal model calls + tokens, different KV →
+        // different runtime.
+        let a = outcome(vec![step(64, 64 * 50, 30_000, 60_000)]);
+        let b = outcome(vec![step(64, 64 * 50, 150_000, 300_000)]);
+        let pm = PerfModel::new(H100_NVL, true, 8);
+        let (ta, tb) = (
+            pm.latency(&a, &LLEMMA_34B_SIM).seconds,
+            pm.latency(&b, &LLEMMA_34B_SIM).seconds,
+        );
+        assert!(tb > ta * 1.5, "{ta} vs {tb}");
+    }
+
+    #[test]
+    fn throughput_scales_with_threads() {
+        let o = outcome(vec![step(64, 64 * 50, 30_000, 60_000)]);
+        let outs = vec![o.clone(), o.clone(), o];
+        let t1 = PerfModel::new(H100_NVL, true, 1).throughput(&outs, &LLEMMA_34B_SIM);
+        let t8 = PerfModel::new(H100_NVL, true, 8).throughput(&outs, &LLEMMA_34B_SIM);
+        assert!(t8 > t1, "t8 {t8} t1 {t1}");
+    }
+}

@@ -1,0 +1,358 @@
+//! PJRT-backed providers: the real (tiny) transformer LM, PRM head, and
+//! sentence embedder running through the AOT artifacts — Python never runs
+//! here. These power the end-to-end serving example and the wall-clock
+//! throughput measurements.
+//!
+//! Serving shape: one prefill per expansion prefix, then batched lock-step
+//! decode (batch = the compiled `lm_decode_b{B}` variant) sampling with
+//! temperature 1.0 until the step separator token or the per-step cap. KV
+//! states are host-resident `[L, H, S, D]` buffers handed to PJRT per call;
+//! a per-node cache avoids re-prefilling shared prefixes (the radix-sharing
+//! benefit, at step granularity).
+
+use crate::kvcache::RadixCache;
+use crate::lm::StepGenerator;
+use crate::reward::RewardModel;
+use crate::embed::Embedder;
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Artifacts};
+use crate::tree::{NodeId, SearchTree, StepInfo};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Step separator token id (ends a reasoning step).
+pub const SEP_TOKEN: u32 = 1;
+
+/// KV state of one sequence: `[L, H, S, D]` flattened, plus valid length.
+#[derive(Clone)]
+struct KvState {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    len: usize,
+}
+
+/// Configuration for the PJRT LM.
+#[derive(Clone, Debug)]
+pub struct PjrtLmConfig {
+    /// Max new tokens per reasoning step.
+    pub max_step_tokens: usize,
+    /// Steps until a trajectory terminates.
+    pub max_depth: usize,
+    /// Sampling temperature.
+    pub temperature: f64,
+    /// Decode batch variant to use (must be one of meta's `lm_batches`).
+    pub batch: usize,
+}
+
+impl Default for PjrtLmConfig {
+    fn default() -> Self {
+        Self { max_step_tokens: 10, max_depth: 3, temperature: 1.0, batch: 4 }
+    }
+}
+
+/// The AOT transformer as a [`StepGenerator`].
+pub struct PjrtLm {
+    arts: Rc<Artifacts>,
+    pub cfg: PjrtLmConfig,
+    prompt: Vec<u32>,
+    rng: Rng,
+    /// leaf node -> its sequence KV (populated as children are expanded).
+    node_kv: HashMap<NodeId, KvState>,
+    /// (parent, paraphrase tag) -> child KV, claimed when the child becomes
+    /// a leaf that gets expanded.
+    pending: HashMap<(NodeId, u64), KvState>,
+    /// Radix accounting of unique cached tokens (SGLang-style bookkeeping).
+    pub radix: RadixCache,
+    /// Telemetry.
+    pub decode_calls: u64,
+    pub prefill_calls: u64,
+}
+
+impl PjrtLm {
+    /// `prompt` token ids (without padding); `seed` drives sampling.
+    pub fn new(arts: Rc<Artifacts>, prompt: Vec<u32>, seed: u64, cfg: PjrtLmConfig) -> Self {
+        assert!(
+            arts.dims.lm_batches.contains(&cfg.batch),
+            "no lm_decode_b{} artifact",
+            cfg.batch
+        );
+        Self {
+            arts,
+            cfg,
+            prompt,
+            rng: Rng::new(seed),
+            node_kv: HashMap::new(),
+            pending: HashMap::new(),
+            radix: RadixCache::new(1 << 22),
+            decode_calls: 0,
+            prefill_calls: 0,
+        }
+    }
+
+    fn kv_elems(&self) -> usize {
+        let d = &self.arts.dims;
+        d.n_layers * d.n_heads * d.max_seq * d.head_dim
+    }
+
+    /// Full token sequence for a node (prompt + steps along the path).
+    fn sequence(&self, tree: &SearchTree, node: NodeId) -> Vec<u32> {
+        let mut seq = self.prompt.clone();
+        for n in tree.path(node) {
+            seq.extend_from_slice(&tree.get(n).step.token_ids);
+        }
+        seq
+    }
+
+    /// Get (or compute by prefill) the KV state for a leaf.
+    fn leaf_kv(&mut self, tree: &SearchTree, leaf: NodeId) -> Result<KvState> {
+        if let Some(kv) = self.node_kv.get(&leaf) {
+            return Ok(kv.clone());
+        }
+        // claim from pending if this leaf was produced by us
+        if let Some(parent) = tree.get(leaf).parent {
+            let key = (parent, tree.get(leaf).step.paraphrase);
+            if let Some(kv) = self.pending.remove(&key) {
+                self.node_kv.insert(leaf, kv.clone());
+                return Ok(kv);
+            }
+        }
+        // prefill the full sequence
+        let d = self.arts.dims.clone();
+        let seq = self.sequence(tree, leaf);
+        assert!(seq.len() <= d.max_seq, "sequence overflows max_seq");
+        let mut tokens = vec![0i32; d.max_seq];
+        for (i, &t) in seq.iter().enumerate() {
+            tokens[i] = t as i32;
+        }
+        let exe = self.arts.executable("lm_prefill_b1")?;
+        let out = exe.run(&[
+            lit_i32(&tokens, &[1, d.max_seq as i64])?,
+            lit_i32(&[seq.len() as i32], &[1])?,
+        ])?;
+        self.prefill_calls += 1;
+        let kv = KvState {
+            k: to_vec_f32(&out[1])?,
+            v: to_vec_f32(&out[2])?,
+            len: seq.len(),
+        };
+        self.node_kv.insert(leaf, kv.clone());
+        Ok(kv)
+    }
+
+    /// Sample from logits with temperature.
+    fn sample(&mut self, logits: &[f32]) -> u32 {
+        let t = self.cfg.temperature.max(1e-3);
+        let weights: Vec<f64> = {
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+            logits.iter().map(|&l| ((l as f64 - m) / t).exp()).collect()
+        };
+        // never emit padding token 0; SEP stays samplable
+        let mut w = weights;
+        w[0] = 0.0;
+        self.rng.weighted(&w) as u32
+    }
+}
+
+impl StepGenerator for PjrtLm {
+    fn expand(&mut self, tree: &SearchTree, leaf: NodeId, n: usize) -> Vec<StepInfo> {
+        let d = self.arts.dims.clone();
+        let b = self.cfg.batch;
+        let base_kv = self.leaf_kv(tree, leaf).expect("prefill failed");
+        let depth = tree.depth(leaf);
+        let is_last = depth + 1 >= self.cfg.max_depth;
+        let kvn = self.kv_elems();
+        let mut out = Vec::with_capacity(n);
+        let decode = self.arts.executable(&format!("lm_decode_b{b}")).expect("decode exe");
+
+        for chunk_start in (0..n).step_by(b) {
+            let chunk = (n - chunk_start).min(b);
+            // replicate the leaf KV into b slots
+            let mut k = Vec::with_capacity(b * kvn);
+            let mut v = Vec::with_capacity(b * kvn);
+            for _ in 0..b {
+                k.extend_from_slice(&base_kv.k);
+                v.extend_from_slice(&base_kv.v);
+            }
+            let mut lens = vec![base_kv.len; b];
+            let mut seqs: Vec<Vec<u32>> = vec![vec![]; b];
+            let mut done = vec![false; b];
+            // lanes beyond `chunk` are padding lanes: run but discard
+            // lock-step decode
+            let mut last_tokens = vec![SEP_TOKEN as i32; b];
+            for _ in 0..self.cfg.max_step_tokens {
+                if done.iter().take(chunk).all(|&x| x) {
+                    break;
+                }
+                if lens.iter().any(|&l| l >= d.max_seq) {
+                    break;
+                }
+                let pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+                let outb = decode
+                    .run(&[
+                        lit_i32(&last_tokens, &[b as i64]).unwrap(),
+                        lit_i32(&pos, &[b as i64]).unwrap(),
+                        lit_f32(&k, &[b as i64, d.n_layers as i64, d.n_heads as i64, d.max_seq as i64, d.head_dim as i64])
+                            .unwrap(),
+                        lit_f32(&v, &[b as i64, d.n_layers as i64, d.n_heads as i64, d.max_seq as i64, d.head_dim as i64])
+                            .unwrap(),
+                    ])
+                    .expect("decode failed");
+                self.decode_calls += 1;
+                let logits = to_vec_f32(&outb[0]).unwrap();
+                k = to_vec_f32(&outb[1]).unwrap();
+                v = to_vec_f32(&outb[2]).unwrap();
+                for lane in 0..b {
+                    if done[lane] {
+                        continue;
+                    }
+                    let tok = self.sample(&logits[lane * d.vocab..(lane + 1) * d.vocab]);
+                    lens[lane] += 1;
+                    last_tokens[lane] = tok as i32;
+                    if tok == SEP_TOKEN {
+                        done[lane] = true;
+                    } else {
+                        seqs[lane].push(tok);
+                    }
+                }
+            }
+            // build StepInfos + stash child KV
+            for lane in 0..chunk {
+                let toks = seqs[lane].clone();
+                let paraphrase = self.rng.next_u64();
+                let sem = toks.iter().fold(0u64, |h, &t| {
+                    h.wrapping_mul(131).wrapping_add(t as u64)
+                });
+                let answer = if is_last {
+                    Some(*toks.last().unwrap_or(&0) as i64)
+                } else {
+                    None
+                };
+                // per-lane KV slice
+                let kv = KvState {
+                    k: k[lane * kvn..(lane + 1) * kvn].to_vec(),
+                    v: v[lane * kvn..(lane + 1) * kvn].to_vec(),
+                    len: lens[lane],
+                };
+                self.pending.insert((leaf, paraphrase), kv);
+                // radix accounting of the full sequence
+                let mut full = self.sequence(tree, leaf);
+                full.extend_from_slice(&toks);
+                self.radix.insert(&full);
+                out.push(StepInfo {
+                    tokens: toks.len().max(1),
+                    sem,
+                    paraphrase,
+                    token_ids: toks,
+                    terminal: is_last,
+                    answer,
+                    path_id: sem ^ (leaf as u64) << 32,
+                    alive: false, // unknown for a real LM
+                });
+            }
+        }
+        out
+    }
+
+    fn prompt_tokens(&self) -> usize {
+        self.prompt.len()
+    }
+}
+
+/// The AOT PRM head as a [`RewardModel`].
+pub struct PjrtPrm {
+    arts: Rc<Artifacts>,
+    prompt: Vec<u32>,
+    pub calls: u64,
+}
+
+impl PjrtPrm {
+    pub fn new(arts: Rc<Artifacts>, prompt: Vec<u32>) -> Self {
+        Self { arts, prompt, calls: 0 }
+    }
+}
+
+impl RewardModel for PjrtPrm {
+    fn score(&mut self, tree: &SearchTree, nodes: &[NodeId]) -> Vec<f64> {
+        let d = self.arts.dims.clone();
+        let b = d.prm_batch;
+        let exe = self.arts.executable(&format!("prm_score_b{b}")).expect("prm exe");
+        let mut scores = Vec::with_capacity(nodes.len());
+        for chunk in nodes.chunks(b) {
+            let mut tokens = vec![0i32; b * d.max_seq];
+            let mut lens = vec![1i32; b];
+            for (lane, &node) in chunk.iter().enumerate() {
+                let mut seq = self.prompt.clone();
+                for n in tree.path(node) {
+                    seq.extend_from_slice(&tree.get(n).step.token_ids);
+                }
+                seq.truncate(d.max_seq);
+                for (i, &t) in seq.iter().enumerate() {
+                    tokens[lane * d.max_seq + i] = t as i32;
+                }
+                lens[lane] = seq.len().max(1) as i32;
+            }
+            let out = exe
+                .run(&[
+                    lit_i32(&tokens, &[b as i64, d.max_seq as i64]).unwrap(),
+                    lit_i32(&lens, &[b as i64]).unwrap(),
+                ])
+                .expect("prm failed");
+            self.calls += 1;
+            let s = to_vec_f32(&out[0]).unwrap();
+            for lane in 0..chunk.len() {
+                scores.push(s[lane] as f64);
+            }
+        }
+        scores
+    }
+}
+
+/// The AOT sentence encoder as an [`Embedder`].
+pub struct PjrtEmbedder {
+    arts: Rc<Artifacts>,
+    pub calls: u64,
+}
+
+impl PjrtEmbedder {
+    pub fn new(arts: Rc<Artifacts>) -> Self {
+        Self { arts, calls: 0 }
+    }
+}
+
+impl Embedder for PjrtEmbedder {
+    fn embed(&mut self, tree: &SearchTree, nodes: &[NodeId]) -> Vec<Vec<f32>> {
+        let d = self.arts.dims.clone();
+        let (b, se, de) = (d.embed_batch, d.embed_max_seq, d.embed_out_dim);
+        let exe = self.arts.executable(&format!("embed_b{b}")).expect("embed exe");
+        let mut out = Vec::with_capacity(nodes.len());
+        for chunk in nodes.chunks(b) {
+            let mut tokens = vec![0i32; b * se];
+            let mut lens = vec![1i32; b];
+            for (lane, &node) in chunk.iter().enumerate() {
+                let ids = &tree.get(node).step.token_ids;
+                let l = ids.len().min(se);
+                for i in 0..l {
+                    tokens[lane * se + i] = ids[i] as i32;
+                }
+                lens[lane] = l.max(1) as i32;
+            }
+            let res = exe
+                .run(&[
+                    lit_i32(&tokens, &[b as i64, se as i64]).unwrap(),
+                    lit_i32(&lens, &[b as i64]).unwrap(),
+                ])
+                .expect("embed failed");
+            self.calls += 1;
+            let e = to_vec_f32(&res[0]).unwrap();
+            for lane in 0..chunk.len() {
+                out.push(e[lane * de..(lane + 1) * de].to_vec());
+            }
+        }
+        out
+    }
+
+    fn dim(&self) -> usize {
+        self.arts.dims.embed_out_dim
+    }
+}

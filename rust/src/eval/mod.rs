@@ -1,0 +1,264 @@
+//! Evaluation harness: run a policy over a problem set and report the
+//! paper's metrics (accuracy, total KV, FLOPs proxy, model calls).
+//!
+//! Used by the CLI (`ets eval`), the examples, and every bench that
+//! regenerates a paper table/figure.
+
+use crate::embed::HashEmbedder;
+use crate::lm::SynthLm;
+use crate::reward::OraclePrm;
+use crate::search::policy::{BeamPolicy, DvtsPolicy, EtsPolicy, RebasePolicy, SearchPolicy};
+use crate::search::{run_search, SearchParams};
+use crate::workload::{ProblemSet, WorkloadSpec};
+
+/// Which search policy to instantiate (fresh per problem — policies carry
+/// per-tree state like DVTS subtree maps).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicySpec {
+    /// Beam search retaining `keep` trajectories per step.
+    Beam { keep: usize },
+    /// Beam search retaining sqrt(width).
+    BeamSqrt,
+    /// DVTS with `subtrees` independent subtrees (1 retained per subtree).
+    Dvts { subtrees: usize },
+    /// DVTS with sqrt(width) subtrees.
+    DvtsSqrt,
+    /// REBASE balanced sampling (T_R = 0.2).
+    Rebase,
+    /// ETS with the KV-budget and coverage terms (λ_d = 1 per the paper).
+    Ets { lambda_b: f64, lambda_d: f64 },
+    /// ETS-KV ablation (coverage term disabled).
+    EtsKv { lambda_b: f64 },
+}
+
+impl PolicySpec {
+    pub fn name(&self, width: usize) -> String {
+        match self {
+            PolicySpec::Beam { keep } => format!("beam-{keep}"),
+            PolicySpec::BeamSqrt => format!("beam-sqrt({})", isqrt(width)),
+            PolicySpec::Dvts { subtrees } => format!("dvts-{subtrees}"),
+            PolicySpec::DvtsSqrt => format!("dvts-sqrt({})", isqrt(width)),
+            PolicySpec::Rebase => "rebase".into(),
+            PolicySpec::Ets { lambda_b, lambda_d } => {
+                format!("ets(λb={lambda_b},λd={lambda_d})")
+            }
+            PolicySpec::EtsKv { lambda_b } => format!("ets-kv(λb={lambda_b})"),
+        }
+    }
+
+    /// Parse "beam-4", "beam-sqrt", "dvts-4", "dvts-sqrt", "rebase",
+    /// "ets", "ets:1.5", "ets-kv:1.0".
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if let Some(rest) = s.strip_prefix("ets-kv") {
+            let lb = rest.strip_prefix(':').map(|x| x.parse::<f64>()).transpose()
+                .map_err(|e| format!("{s}: {e}"))?;
+            return Ok(PolicySpec::EtsKv { lambda_b: lb.unwrap_or(1.0) });
+        }
+        if let Some(rest) = s.strip_prefix("ets") {
+            let lb = rest.strip_prefix(':').map(|x| x.parse::<f64>()).transpose()
+                .map_err(|e| format!("{s}: {e}"))?;
+            return Ok(PolicySpec::Ets { lambda_b: lb.unwrap_or(1.5), lambda_d: 1.0 });
+        }
+        match s {
+            "rebase" => Ok(PolicySpec::Rebase),
+            "beam-sqrt" => Ok(PolicySpec::BeamSqrt),
+            "dvts-sqrt" => Ok(PolicySpec::DvtsSqrt),
+            _ => {
+                if let Some(k) = s.strip_prefix("beam-") {
+                    Ok(PolicySpec::Beam { keep: k.parse().map_err(|e| format!("{s}: {e}"))? })
+                } else if let Some(k) = s.strip_prefix("dvts-") {
+                    Ok(PolicySpec::Dvts {
+                        subtrees: k.parse().map_err(|e| format!("{s}: {e}"))?,
+                    })
+                } else {
+                    Err(format!("unknown policy '{s}'"))
+                }
+            }
+        }
+    }
+}
+
+pub fn isqrt(n: usize) -> usize {
+    (n as f64).sqrt().round() as usize
+}
+
+/// Aggregated evaluation metrics over a problem set.
+#[derive(Clone, Debug, Default)]
+pub struct EvalReport {
+    pub policy: String,
+    pub dataset: String,
+    pub model: String,
+    pub width: usize,
+    pub n_problems: usize,
+    pub n_correct: usize,
+    /// Mean per-problem Σ-over-steps live KV tokens (paper's KV size metric).
+    pub mean_kv_tokens: f64,
+    /// Mean per-problem Σ KV without sharing.
+    pub mean_unshared_kv_tokens: f64,
+    /// Mean per-problem peak live KV tokens.
+    pub mean_peak_kv_tokens: f64,
+    /// Mean per-problem generated tokens (FLOPs proxy).
+    pub mean_new_tokens: f64,
+    /// Mean per-problem model calls.
+    pub mean_model_calls: f64,
+    /// Per-problem outcomes for downstream analysis (correct, kv, tokens).
+    pub per_problem: Vec<(bool, u64, u64)>,
+}
+
+impl EvalReport {
+    pub fn accuracy(&self) -> f64 {
+        if self.n_problems == 0 {
+            0.0
+        } else {
+            self.n_correct as f64 / self.n_problems as f64
+        }
+    }
+}
+
+/// Evaluation configuration.
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    pub spec: WorkloadSpec,
+    pub policy: PolicySpec,
+    pub width: usize,
+    pub n_problems: usize,
+    pub seed: u64,
+    pub max_steps: usize,
+}
+
+fn make_policy(spec: &PolicySpec, width: usize) -> Box<dyn SearchPolicy> {
+    match spec {
+        PolicySpec::Beam { keep } => Box::new(BeamPolicy { keep: *keep }),
+        PolicySpec::BeamSqrt => Box::new(BeamPolicy { keep: isqrt(width) }),
+        PolicySpec::Dvts { subtrees } => Box::new(DvtsPolicy::new(*subtrees)),
+        PolicySpec::DvtsSqrt => Box::new(DvtsPolicy::new(isqrt(width))),
+        PolicySpec::Rebase => Box::new(RebasePolicy::default()),
+        PolicySpec::Ets { lambda_b, lambda_d } => {
+            Box::new(EtsPolicy::new(*lambda_b, *lambda_d, HashEmbedder::default()))
+        }
+        PolicySpec::EtsKv { lambda_b } => {
+            Box::new(EtsPolicy::new(*lambda_b, 0.0, HashEmbedder::default()))
+        }
+    }
+}
+
+impl SearchPolicy for Box<dyn SearchPolicy> {
+    fn allocate(
+        &mut self,
+        tree: &crate::tree::SearchTree,
+        candidates: &[crate::tree::NodeId],
+        width: usize,
+    ) -> crate::search::Allocation {
+        (**self).allocate(tree, candidates, width)
+    }
+
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn on_root_children(&mut self, children: &[crate::tree::NodeId]) {
+        (**self).on_root_children(children)
+    }
+}
+
+/// Run the evaluation in parallel over `workers` threads (problems are
+/// independent; per-problem determinism is seed-derived, so the report is
+/// identical regardless of worker count).
+pub fn evaluate_with_workers(cfg: &EvalConfig, workers: usize) -> EvalReport {
+    let problems = ProblemSet::generate(&cfg.spec, cfg.n_problems, cfg.seed);
+    let mut report = EvalReport {
+        policy: cfg.policy.name(cfg.width),
+        dataset: cfg.spec.dataset.name.to_string(),
+        model: cfg.spec.model.name.to_string(),
+        width: cfg.width,
+        n_problems: cfg.n_problems,
+        ..Default::default()
+    };
+    let params = SearchParams { width: cfg.width, max_steps: cfg.max_steps };
+    let results = crate::coordinator::par_map(problems.problems, workers, |_, p| {
+        let truth = p.answer;
+        let id = p.id;
+        let mut lm = SynthLm::new(p, cfg.seed ^ id);
+        let mut prm = OraclePrm::for_profile(&cfg.spec.model, cfg.seed ^ 0xBEEF ^ id);
+        let mut policy = make_policy(&cfg.policy, cfg.width);
+        let out = run_search(&mut lm, &mut prm, &mut policy, &params);
+        let correct = out.answer == Some(truth);
+        (
+            correct,
+            out.total_kv_tokens(),
+            out.total_unshared_kv_tokens(),
+            out.peak_kv_tokens(),
+            out.total_new_tokens(),
+            out.total_model_calls(),
+        )
+    });
+    let (mut kv, mut unshared, mut peak, mut toks, mut calls) =
+        (0u64, 0u64, 0u64, 0u64, 0u64);
+    for (correct, okv, ouns, opeak, otoks, ocalls) in results {
+        if correct {
+            report.n_correct += 1;
+        }
+        kv += okv;
+        unshared += ouns;
+        peak += opeak;
+        toks += otoks;
+        calls += ocalls;
+        report.per_problem.push((correct, okv, otoks));
+    }
+    let n = cfg.n_problems.max(1) as f64;
+    report.mean_kv_tokens = kv as f64 / n;
+    report.mean_unshared_kv_tokens = unshared as f64 / n;
+    report.mean_peak_kv_tokens = peak as f64 / n;
+    report.mean_new_tokens = toks as f64 / n;
+    report.mean_model_calls = calls as f64 / n;
+    report
+}
+
+/// Run the evaluation using all available cores.
+pub fn evaluate(cfg: &EvalConfig) -> EvalReport {
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    evaluate_with_workers(cfg, workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{LLEMMA_34B_SIM, SYNTH_MATH500};
+
+    #[test]
+    fn policy_spec_parsing() {
+        assert_eq!(PolicySpec::parse("rebase").unwrap(), PolicySpec::Rebase);
+        assert_eq!(PolicySpec::parse("beam-4").unwrap(), PolicySpec::Beam { keep: 4 });
+        assert_eq!(PolicySpec::parse("dvts-sqrt").unwrap(), PolicySpec::DvtsSqrt);
+        assert_eq!(
+            PolicySpec::parse("ets:1.5").unwrap(),
+            PolicySpec::Ets { lambda_b: 1.5, lambda_d: 1.0 }
+        );
+        assert_eq!(
+            PolicySpec::parse("ets-kv:0.75").unwrap(),
+            PolicySpec::EtsKv { lambda_b: 0.75 }
+        );
+        assert!(PolicySpec::parse("nope").is_err());
+    }
+
+    #[test]
+    fn evaluate_reports_consistent_counts() {
+        let cfg = EvalConfig {
+            spec: WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM),
+            policy: PolicySpec::Rebase,
+            width: 8,
+            n_problems: 6,
+            seed: 42,
+            max_steps: 16,
+        };
+        let r = evaluate(&cfg);
+        assert_eq!(r.per_problem.len(), 6);
+        assert!(r.n_correct <= 6);
+        assert!(r.mean_kv_tokens > 0.0);
+        assert!(r.mean_model_calls > 0.0);
+        // deterministic
+        let r2 = evaluate(&cfg);
+        assert_eq!(r.n_correct, r2.n_correct);
+        assert_eq!(r.mean_kv_tokens, r2.mean_kv_tokens);
+    }
+}

@@ -1,0 +1,245 @@
+//! 0/1 integer linear programming by branch-and-bound with LP bounds.
+//!
+//! Generic exact solver over the [`super::simplex`] LP engine — the in-repo
+//! replacement for the paper's PuLP + CBC. Variables may be declared binary
+//! or continuous-[0,1]; branching is on the most fractional binary variable,
+//! depth-first with best-bound pruning.
+
+use super::simplex::{solve, Lp, LpOutcome};
+
+/// A 0/1 ILP: the embedded LP plus which variables are integral.
+#[derive(Clone, Debug)]
+pub struct Ilp {
+    pub lp: Lp,
+    /// `true` → variable must be 0 or 1 at the optimum.
+    pub binary: Vec<bool>,
+}
+
+/// Result of an ILP solve.
+#[derive(Clone, Debug, PartialEq)]
+pub enum IlpOutcome {
+    Optimal { objective: f64, x: Vec<f64> },
+    Infeasible,
+}
+
+impl Ilp {
+    /// All variables binary.
+    pub fn all_binary(mut lp: Lp) -> Self {
+        let n = lp.num_vars();
+        for u in lp.ub.iter_mut() {
+            *u = u.min(1.0);
+        }
+        Self { lp, binary: vec![true; n] }
+    }
+}
+
+const INT_EPS: f64 = 1e-6;
+
+struct Node {
+    /// (var, value) fixings along this branch.
+    fixings: Vec<(usize, f64)>,
+    /// LP bound inherited from the parent (for pruning before re-solve).
+    bound: f64,
+}
+
+/// Solve the ILP exactly. `time_limit` bounds wall time; on hitting it the
+/// best incumbent found so far is returned (with `objective` still exact for
+/// that incumbent). Returns `Infeasible` when no integral point exists.
+pub fn solve_ilp(ilp: &Ilp, time_limit: std::time::Duration) -> IlpOutcome {
+    let start = std::time::Instant::now();
+    let n = ilp.lp.num_vars();
+    let mut best_obj = f64::NEG_INFINITY;
+    let mut best_x: Option<Vec<f64>> = None;
+
+    let mut stack = vec![Node { fixings: vec![], bound: f64::INFINITY }];
+    while let Some(node) = stack.pop() {
+        if node.bound <= best_obj + 1e-9 {
+            continue; // parent bound already dominated
+        }
+        if start.elapsed() > time_limit && best_x.is_some() {
+            break;
+        }
+        // Build the LP with this node's fixings applied as bounds.
+        let mut lp = ilp.lp.clone();
+        let mut lo = vec![0.0f64; n];
+        for &(var, val) in &node.fixings {
+            if val >= 0.5 {
+                lo[var] = 1.0; // x_var >= 1
+                lp.geq(unit_row(n, var), 1.0);
+            } else {
+                lp.ub[var] = 0.0;
+            }
+        }
+        let (obj, x) = match solve(&lp) {
+            LpOutcome::Optimal { objective, x } => (objective, x),
+            LpOutcome::Infeasible => continue,
+            LpOutcome::Unbounded => {
+                // Binary + bounded-vars problems can't be unbounded unless a
+                // continuous var has infinite ub; treat as model error.
+                panic!("ILP relaxation unbounded: add upper bounds");
+            }
+        };
+        if obj <= best_obj + 1e-9 {
+            continue;
+        }
+        // Most fractional binary variable.
+        let mut branch_var = None;
+        let mut best_frac = INT_EPS;
+        for j in 0..n {
+            if ilp.binary[j] {
+                let f = (x[j] - x[j].round()).abs();
+                if f > best_frac {
+                    best_frac = f;
+                    branch_var = Some(j);
+                }
+            }
+        }
+        match branch_var {
+            None => {
+                // Integral: new incumbent.
+                if obj > best_obj {
+                    best_obj = obj;
+                    let mut xr = x;
+                    for (j, v) in xr.iter_mut().enumerate() {
+                        if ilp.binary[j] {
+                            *v = v.round();
+                        }
+                    }
+                    let _ = lo;
+                    best_x = Some(xr);
+                }
+            }
+            Some(j) => {
+                // Branch: explore x_j = 1 first (reward-greedy for our use).
+                let mut f1 = node.fixings.clone();
+                f1.push((j, 0.0));
+                stack.push(Node { fixings: f1, bound: obj });
+                let mut f2 = node.fixings;
+                f2.push((j, 1.0));
+                stack.push(Node { fixings: f2, bound: obj });
+            }
+        }
+    }
+    match best_x {
+        Some(x) => IlpOutcome::Optimal { objective: best_obj, x },
+        None => IlpOutcome::Infeasible,
+    }
+}
+
+fn unit_row(n: usize, j: usize) -> Vec<f64> {
+    let mut r = vec![0.0; n];
+    r[j] = 1.0;
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    const LIMIT: Duration = Duration::from_secs(10);
+
+    fn optimal(out: IlpOutcome) -> (f64, Vec<f64>) {
+        match out {
+            IlpOutcome::Optimal { objective, x } => (objective, x),
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn knapsack() {
+        // max 10a + 6b + 4c s.t. a + b + c <= 2 (binary) → a + b = 16
+        let mut lp = Lp::new(3);
+        lp.c = vec![10.0, 6.0, 4.0];
+        lp.leq(vec![1.0, 1.0, 1.0], 2.0);
+        let (z, x) = optimal(solve_ilp(&Ilp::all_binary(lp), LIMIT));
+        assert!((z - 16.0).abs() < 1e-6);
+        assert_eq!(x, vec![1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn fractional_lp_integral_ilp() {
+        // LP relaxation fractional: max x+y s.t. 2x+2y <= 3 → LP 1.5, ILP 1.
+        let mut lp = Lp::new(2);
+        lp.c = vec![1.0, 1.0];
+        lp.leq(vec![2.0, 2.0], 3.0);
+        let (z, x) = optimal(solve_ilp(&Ilp::all_binary(lp), LIMIT));
+        assert!((z - 1.0).abs() < 1e-6, "z = {z} x = {x:?}");
+    }
+
+    #[test]
+    fn infeasible() {
+        let mut lp = Lp::new(2);
+        lp.c = vec![1.0, 1.0];
+        lp.geq(vec![1.0, 1.0], 3.0); // needs sum >= 3 with two binaries
+        assert_eq!(solve_ilp(&Ilp::all_binary(lp), LIMIT), IlpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn equality_via_pair() {
+        // exactly one of three: max 3a+2b+c, a+b+c == 1
+        let mut lp = Lp::new(3);
+        lp.c = vec![3.0, 2.0, 1.0];
+        lp.leq(vec![1.0, 1.0, 1.0], 1.0);
+        lp.geq(vec![1.0, 1.0, 1.0], 1.0);
+        let (z, x) = optimal(solve_ilp(&Ilp::all_binary(lp), LIMIT));
+        assert!((z - 3.0).abs() < 1e-6);
+        assert_eq!(x, vec![1.0, 0.0, 0.0]);
+    }
+
+    /// Exhaustive reference: enumerate all 2^n binary points.
+    fn brute_force(lp: &Lp) -> Option<(f64, Vec<f64>)> {
+        let n = lp.num_vars();
+        let mut best: Option<(f64, Vec<f64>)> = None;
+        for mask in 0..(1u32 << n) {
+            let x: Vec<f64> =
+                (0..n).map(|j| if mask >> j & 1 == 1 { 1.0 } else { 0.0 }).collect();
+            if x.iter().zip(&lp.ub).any(|(xi, ubi)| xi > ubi) {
+                continue;
+            }
+            let feasible = lp
+                .a
+                .iter()
+                .zip(&lp.b)
+                .all(|(row, &b)| row.iter().zip(&x).map(|(a, v)| a * v).sum::<f64>() <= b + 1e-9);
+            if !feasible {
+                continue;
+            }
+            let z: f64 = lp.c.iter().zip(&x).map(|(c, v)| c * v).sum();
+            if best.as_ref().map(|(bz, _)| z > *bz).unwrap_or(true) {
+                best = Some((z, x));
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        property(60, |rng: &mut Rng| {
+            let n = 3 + rng.index(6); // 3..8 vars
+            let m = 1 + rng.index(4); // 1..4 constraints
+            let mut lp = Lp::new(n);
+            lp.c = (0..n).map(|_| rng.normal_ms(0.0, 2.0)).collect();
+            for _ in 0..m {
+                let row: Vec<f64> = (0..n).map(|_| rng.range_i64(-2, 3) as f64).collect();
+                let rhs = rng.range_i64(0, n as i64) as f64;
+                lp.leq(row, rhs);
+            }
+            let expect = brute_force(&lp);
+            let got = solve_ilp(&Ilp::all_binary(lp), LIMIT);
+            match (expect, got) {
+                (None, IlpOutcome::Infeasible) => Ok(()),
+                (Some((bz, _)), IlpOutcome::Optimal { objective, .. }) => {
+                    crate::prop_check!(
+                        (bz - objective).abs() < 1e-6,
+                        "brute {bz} vs bnb {objective}"
+                    );
+                    Ok(())
+                }
+                (e, g) => Err(format!("mismatch: brute {e:?} vs bnb {g:?}")),
+            }
+        });
+    }
+}

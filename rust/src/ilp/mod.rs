@@ -1,0 +1,10 @@
+//! Integer linear programming substrate (in-repo replacement for PuLP+CBC).
+//!
+//! * [`simplex`] — dense two-phase primal simplex LP solver.
+//! * [`bnb`] — generic exact 0/1 branch-and-bound over LP relaxations.
+//! * [`select`] — the ETS trajectory-selection problem (paper Eq. 2/4) with a
+//!   paper-faithful ILP formulation and an exact tree-DP fast path.
+
+pub mod bnb;
+pub mod select;
+pub mod simplex;

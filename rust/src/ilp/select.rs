@@ -1,0 +1,816 @@
+//! The ETS trajectory-selection problem (paper Eq. 2 / Eq. 4) and its solvers.
+//!
+//! At each search step we must choose a subset `S` of candidate leaves
+//! maximizing
+//!
+//! ```text
+//!   Σ_{i∈S} W_i / Σ_{i∈A} W_i   −   λ_b · |V_S|/|V_A|   +   λ_d · |C_S|/|C_A|
+//! ```
+//!
+//! subject to `|S| ≥ 1`, where `V_S` is the set of tree nodes on the paths of
+//! the selected leaves (the KV-cache footprint) and `C_S` the set of semantic
+//! clusters covered.
+//!
+//! Three solvers, all exact, cross-checked against each other in tests:
+//!
+//! * [`solve_brute`] — exhaustive, for n ≤ ~20 (testing oracle).
+//! * [`solve_ilp`] — the paper-faithful formulation (binary `x_i` per leaf,
+//!   continuous node indicators `y_v` and cluster indicators `z_c`, per-edge
+//!   constraints) solved by the in-repo branch-and-bound over simplex.
+//! * [`solve_tree`] — production fast path: branch-and-bound over leaves with
+//!   an upper bound from a dynamic program on the tree (exact because node
+//!   costs decompose along tree edges; the cluster bonus is over-counted in
+//!   the bound, making it a valid UB, and is exact in every incumbent).
+
+use super::bnb::{solve_ilp as bnb_solve, Ilp, IlpOutcome};
+use super::simplex::Lp;
+use std::collections::HashSet;
+use std::time::Duration;
+
+/// One candidate leaf trajectory at the current search step.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// REBASE weight `W_i` (unnormalized; Eq. 1).
+    pub weight: f64,
+    /// Tree node holding this leaf's newest step KV.
+    pub leaf_node: usize,
+    /// Semantic cluster id in `0..num_clusters`.
+    pub cluster: usize,
+}
+
+/// The selection problem over the subtree spanned by the candidates.
+///
+/// Nodes are densely numbered `0..num_nodes`; `parents[v]` is `None` for the
+/// root(s). Every node must lie on some candidate's path (callers build the
+/// spanned subtree — `|V_A| = num_nodes`).
+#[derive(Clone, Debug)]
+pub struct SelectionProblem {
+    pub candidates: Vec<Candidate>,
+    pub parents: Vec<Option<usize>>,
+    /// Per-node retention cost weight. Uniform weights give the paper's
+    /// exact `|V_S|/|V_A|` term (Eq. 2); the serving engine uses KV *token*
+    /// counts per node, which measures the same quantity in bytes and
+    /// avoids quantization cliffs when all steps cost the same.
+    pub node_weight: Vec<f64>,
+    pub num_clusters: usize,
+    pub lambda_b: f64,
+    pub lambda_d: f64,
+}
+
+/// Result: chosen candidate indices (non-empty) and the objective value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Selection {
+    pub chosen: Vec<usize>,
+    pub objective: f64,
+}
+
+impl SelectionProblem {
+    pub fn num_nodes(&self) -> usize {
+        self.parents.len()
+    }
+
+    /// Uniform node costs (paper Eq. 2 exactly).
+    pub fn uniform_node_weight(n: usize) -> Vec<f64> {
+        vec![1.0; n]
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.candidates.iter().map(|c| c.weight).sum()
+    }
+
+    fn total_node_weight(&self) -> f64 {
+        self.node_weight.iter().sum()
+    }
+
+    /// Path from a leaf node to the root (inclusive).
+    fn path(&self, mut v: usize) -> Vec<usize> {
+        let mut p = vec![v];
+        while let Some(u) = self.parents[v] {
+            p.push(u);
+            v = u;
+        }
+        p
+    }
+
+    /// Exact objective of a subset (empty subset → -inf, it's infeasible).
+    pub fn objective(&self, subset: &[usize]) -> f64 {
+        if subset.is_empty() {
+            return f64::NEG_INFINITY;
+        }
+        let wsum = self.total_weight();
+        let vsum = self.total_node_weight();
+        let mut nodes: HashSet<usize> = HashSet::new();
+        let mut clusters: HashSet<usize> = HashSet::new();
+        let mut reward = 0.0;
+        for &i in subset {
+            let c = &self.candidates[i];
+            reward += c.weight;
+            clusters.insert(c.cluster);
+            for v in self.path(c.leaf_node) {
+                nodes.insert(v);
+            }
+        }
+        let node_cost: f64 = nodes.iter().map(|&v| self.node_weight[v]).sum();
+        reward / wsum - self.lambda_b * node_cost / vsum
+            + self.lambda_d * clusters.len() as f64 / self.num_clusters.max(1) as f64
+    }
+
+    /// Sanity-check the instance (used by tests and debug builds).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.candidates.is_empty() {
+            return Err("no candidates".into());
+        }
+        if self.node_weight.len() != self.parents.len() {
+            return Err("node_weight length mismatch".into());
+        }
+        if self.node_weight.iter().any(|&w| !(w > 0.0)) {
+            return Err("non-positive node weight".into());
+        }
+        for c in &self.candidates {
+            if c.leaf_node >= self.num_nodes() {
+                return Err(format!("leaf_node {} out of range", c.leaf_node));
+            }
+            if c.cluster >= self.num_clusters {
+                return Err(format!("cluster {} out of range", c.cluster));
+            }
+            if !(c.weight > 0.0) {
+                return Err(format!("non-positive weight {}", c.weight));
+            }
+        }
+        // acyclicity: path() must terminate
+        for c in &self.candidates {
+            let p = self.path(c.leaf_node);
+            if p.len() > self.num_nodes() {
+                return Err("cycle in parents".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Exhaustive testing oracle (n ≤ 25 or panics).
+pub fn solve_brute(p: &SelectionProblem) -> Selection {
+    let n = p.candidates.len();
+    assert!(n <= 25, "brute force capped at 25 candidates");
+    let mut best = Selection { chosen: vec![], objective: f64::NEG_INFINITY };
+    for mask in 1u32..(1 << n) {
+        let subset: Vec<usize> = (0..n).filter(|i| mask >> i & 1 == 1).collect();
+        let obj = p.objective(&subset);
+        if obj > best.objective + 1e-12 {
+            best = Selection { chosen: subset, objective: obj };
+        }
+    }
+    best
+}
+
+/// Paper-faithful ILP formulation solved with the generic B&B.
+///
+/// Variables: `x_i` (binary, per leaf), `y_v` (continuous [0,1], per node),
+/// `z_c` (continuous [0,1], per cluster). Constraints per tree edge
+/// `y_child ≤ y_parent`, per leaf `x_i ≤ y_{leaf_node(i)}`, per cluster
+/// `z_c ≤ Σ_{i∈c} x_i`, and `Σ x_i ≥ 1`. With binary `x`, optimal `y`/`z`
+/// equal the node/cluster indicators, so the LP objective matches Eq. 4.
+pub fn solve_ilp(p: &SelectionProblem, limit: Duration) -> Selection {
+    let n = p.candidates.len();
+    let nv = p.num_nodes();
+    let nc = p.num_clusters;
+    let total = n + nv + nc;
+    let wsum = p.total_weight();
+
+    let mut lp = Lp::new(total);
+    for (i, c) in p.candidates.iter().enumerate() {
+        lp.c[i] = c.weight / wsum;
+    }
+    let vsum: f64 = p.node_weight.iter().sum();
+    for v in 0..nv {
+        lp.c[n + v] = -p.lambda_b * p.node_weight[v] / vsum;
+    }
+    for c in 0..nc {
+        lp.c[n + nv + c] = p.lambda_d / nc.max(1) as f64;
+    }
+    lp.ub = vec![1.0; total];
+
+    // x_i <= y_leaf
+    for (i, c) in p.candidates.iter().enumerate() {
+        let mut row = vec![0.0; total];
+        row[i] = 1.0;
+        row[n + c.leaf_node] = -1.0;
+        lp.leq(row, 0.0);
+    }
+    // y_child <= y_parent per edge
+    for (v, parent) in p.parents.iter().enumerate() {
+        if let Some(u) = parent {
+            let mut row = vec![0.0; total];
+            row[n + v] = 1.0;
+            row[n + u] = -1.0;
+            lp.leq(row, 0.0);
+        }
+    }
+    // z_c <= sum x_i in cluster c
+    for cid in 0..nc {
+        let mut row = vec![0.0; total];
+        row[n + nv + cid] = 1.0;
+        for (i, c) in p.candidates.iter().enumerate() {
+            if c.cluster == cid {
+                row[i] = -1.0;
+            }
+        }
+        lp.leq(row, 0.0);
+    }
+    // at least one leaf
+    let mut row = vec![0.0; total];
+    for r in row.iter_mut().take(n) {
+        *r = 1.0;
+    }
+    lp.geq(row, 1.0);
+
+    let mut binary = vec![false; total];
+    for b in binary.iter_mut().take(n) {
+        *b = true;
+    }
+    match bnb_solve(&Ilp { lp, binary }, limit) {
+        IlpOutcome::Optimal { x, .. } => {
+            let chosen: Vec<usize> = (0..n).filter(|&i| x[i] > 0.5).collect();
+            let objective = p.objective(&chosen);
+            Selection { chosen, objective }
+        }
+        IlpOutcome::Infeasible => unreachable!("Σx≥1 with n≥1 is always feasible"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Production fast path: branch & bound over leaves with a tree-DP bound.
+// ---------------------------------------------------------------------------
+
+struct TreeCtx {
+    /// children[v] = internal child nodes of v.
+    children: Vec<Vec<usize>>,
+    /// candidate leaves attached to node v (leaf_node == v).
+    leaves_at: Vec<Vec<usize>>,
+    roots: Vec<usize>,
+    /// topological order, children before parents.
+    topo: Vec<usize>,
+}
+
+fn build_ctx(p: &SelectionProblem) -> TreeCtx {
+    let nv = p.num_nodes();
+    let mut children = vec![Vec::new(); nv];
+    let mut roots = vec![];
+    for (v, parent) in p.parents.iter().enumerate() {
+        match parent {
+            Some(u) => children[*u].push(v),
+            None => roots.push(v),
+        }
+    }
+    let mut leaves_at = vec![Vec::new(); nv];
+    for (i, c) in p.candidates.iter().enumerate() {
+        leaves_at[c.leaf_node].push(i);
+    }
+    // iterative post-order
+    let mut topo = Vec::with_capacity(nv);
+    let mut stack: Vec<(usize, bool)> = roots.iter().map(|&r| (r, false)).collect();
+    while let Some((v, expanded)) = stack.pop() {
+        if expanded {
+            topo.push(v);
+        } else {
+            stack.push((v, true));
+            for &c in &children[v] {
+                stack.push((c, false));
+            }
+        }
+    }
+    TreeCtx { children, leaves_at, roots, topo }
+}
+
+/// State during B&B: per-candidate fixing (0 = excluded, 1 = forced, 2 = free).
+const FIX_OUT: u8 = 0;
+const FIX_IN: u8 = 1;
+const FREE: u8 = 2;
+
+struct TreeSolver<'a> {
+    p: &'a SelectionProblem,
+    ctx: TreeCtx,
+    /// λ_b-scaled retention cost per node.
+    node_cost: Vec<f64>,
+    cluster_bonus: f64,
+    wsum: f64,
+    best: Selection,
+    deadline: std::time::Instant,
+    nodes_explored: usize,
+    /// Sticky abort: set on deadline/cap, stops the whole recursion.
+    expired: bool,
+    node_cap: usize,
+    /// Absolute optimality-gap tolerance (objective is O(1)-scaled; 1e-4
+    /// trades exactness for a large cut in proven-optimal search time).
+    gap_tol: f64,
+}
+
+impl<'a> TreeSolver<'a> {
+    /// Fused DP: one tree pass computes BOTH bounds —
+    /// `ub_leaf` (per-leaf cluster bonus, over-counted ⇒ valid UB, exact for
+    /// λ_d = 0) and `ub_plain + λ_d·coverable` (global coverage credit) —
+    /// plus the greedy incumbent selection. Returns
+    /// (min of the two bounds, dp-selected free leaves).
+    fn dp_fused(&self, fix: &[u8]) -> (f64, Vec<usize>) {
+        let p = self.p;
+        let nv = p.num_nodes();
+        let mut paid = vec![false; nv];
+        let mut covered = vec![false; p.num_clusters.max(1)];
+        let mut base = 0.0;
+        for (i, c) in p.candidates.iter().enumerate() {
+            if fix[i] == FIX_IN {
+                base += c.weight / self.wsum;
+                if !covered[c.cluster] {
+                    covered[c.cluster] = true;
+                    base += self.cluster_bonus;
+                }
+                let mut v = c.leaf_node;
+                loop {
+                    if !paid[v] {
+                        paid[v] = true;
+                        base -= self.node_cost[v];
+                    }
+                    match p.parents[v] {
+                        Some(u) => v = u,
+                        None => break,
+                    }
+                }
+            }
+        }
+        // coverable clusters for the global-credit bound
+        let mut coverable_bonus = 0.0;
+        if self.cluster_bonus > 0.0 {
+            let mut seen = vec![false; p.num_clusters.max(1)];
+            for (i, c) in p.candidates.iter().enumerate() {
+                if fix[i] == FREE && !covered[c.cluster] && !seen[c.cluster] {
+                    seen[c.cluster] = true;
+                    coverable_bonus += self.cluster_bonus;
+                }
+            }
+        }
+        let mut gain_b = vec![0.0f64; nv]; // with per-leaf bonus
+        let mut gain_p = vec![0.0f64; nv]; // plain
+        for &v in &self.ctx.topo {
+            let (mut gb, mut gp) = (0.0, 0.0);
+            for &i in &self.ctx.leaves_at[v] {
+                if fix[i] == FREE {
+                    let c = &p.candidates[i];
+                    let w = c.weight / self.wsum;
+                    let bonus =
+                        if covered[c.cluster] { 0.0 } else { self.cluster_bonus };
+                    if w + bonus > 0.0 {
+                        gb += w + bonus;
+                    }
+                    if w > 0.0 {
+                        gp += w;
+                    }
+                }
+            }
+            for &ch in &self.ctx.children[v] {
+                if gain_b[ch] > 0.0 {
+                    gb += gain_b[ch];
+                }
+                if gain_p[ch] > 0.0 {
+                    gp += gain_p[ch];
+                }
+            }
+            if !paid[v] {
+                gb -= self.node_cost[v];
+                gp -= self.node_cost[v];
+            }
+            gain_b[v] = gb;
+            gain_p[v] = gp;
+        }
+        let (mut ub_leaf, mut ub_plain) = (base, base);
+        for &r in &self.ctx.roots {
+            ub_leaf += gain_b[r].max(0.0);
+            ub_plain += gain_p[r].max(0.0);
+        }
+        let ub = if self.cluster_bonus > 0.0 {
+            ub_leaf.min(ub_plain + coverable_bonus)
+        } else {
+            ub_leaf
+        };
+        // Reconstruct the bonus-DP's selected free leaves.
+        let mut sel = vec![];
+        let mut stack: Vec<usize> = self
+            .ctx
+            .roots
+            .iter()
+            .copied()
+            .filter(|&r| gain_b[r] > 0.0 || paid[r])
+            .collect();
+        while let Some(v) = stack.pop() {
+            for &i in &self.ctx.leaves_at[v] {
+                if fix[i] == FREE {
+                    let c = &p.candidates[i];
+                    let bonus =
+                        if covered[c.cluster] { 0.0 } else { self.cluster_bonus };
+                    if c.weight / self.wsum + bonus > 0.0 {
+                        sel.push(i);
+                    }
+                }
+            }
+            for &ch in &self.ctx.children[v] {
+                if gain_b[ch] > 0.0 {
+                    stack.push(ch);
+                }
+            }
+        }
+        (ub, sel)
+    }
+
+    /// (kept for cross-checking in tests) single-bound DP.
+    #[allow(dead_code)]
+    fn dp(&self, fix: &[u8], with_bonus: bool) -> (f64, Vec<usize>) {
+        let p = self.p;
+        let nv = p.num_nodes();
+        // paid[v]: node already paid for by a forced-in leaf's path.
+        let mut paid = vec![false; nv];
+        let mut covered = vec![false; p.num_clusters.max(1)];
+        let mut base = 0.0;
+        for (i, c) in p.candidates.iter().enumerate() {
+            if fix[i] == FIX_IN {
+                base += c.weight / self.wsum;
+                if !covered[c.cluster] {
+                    covered[c.cluster] = true;
+                    base += self.cluster_bonus;
+                }
+                let mut v = c.leaf_node;
+                loop {
+                    if !paid[v] {
+                        paid[v] = true;
+                        base -= self.node_cost[v];
+                    }
+                    match p.parents[v] {
+                        Some(u) => v = u,
+                        None => break,
+                    }
+                }
+            }
+        }
+        // DP over tree: gain[v] = best extra objective from free leaves in
+        // v's subtree, given v's path to the root is paid.
+        let mut gain = vec![0.0f64; nv];
+        // track which free leaves the DP keeps: keep[v] bool gates subtree
+        let mut keep_subtree = vec![false; nv];
+        for &v in &self.ctx.topo {
+            let mut g = 0.0;
+            for &i in &self.ctx.leaves_at[v] {
+                if fix[i] == FREE {
+                    let c = &p.candidates[i];
+                    let bonus = if with_bonus && !covered[c.cluster] {
+                        self.cluster_bonus
+                    } else {
+                        0.0
+                    };
+                    let val = c.weight / self.wsum + bonus;
+                    if val > 0.0 {
+                        g += val;
+                    }
+                }
+            }
+            for &ch in &self.ctx.children[v] {
+                if gain[ch] > 0.0 {
+                    // child subtree worth keeping
+                    g += gain[ch];
+                }
+            }
+            if !paid[v] {
+                g -= self.node_cost[v];
+            }
+            gain[v] = g;
+        }
+        let mut ub = base;
+        for &r in &self.ctx.roots {
+            if gain[r] > 0.0 {
+                ub += gain[r];
+                keep_subtree[r] = true;
+            } else if paid[r] {
+                // forced path through this root: subtree decisions below may
+                // still be positive locally; gain[r] already accounts paid.
+                if gain[r] > 0.0 {
+                    keep_subtree[r] = true;
+                }
+                ub += gain[r].max(0.0);
+            }
+        }
+        // Reconstruct the DP's selected free leaves (pre-order walk keeping
+        // positive-gain subtrees).
+        let mut sel = vec![];
+        let mut stack: Vec<usize> =
+            self.ctx.roots.iter().copied().filter(|&r| gain[r] > 0.0 || paid[r]).collect();
+        while let Some(v) = stack.pop() {
+            // Inside a kept subtree, keep each free leaf with positive value
+            // and each child subtree with positive gain.
+            for &i in &self.ctx.leaves_at[v] {
+                if fix[i] == FREE {
+                    let c = &p.candidates[i];
+                    let bonus = if with_bonus && !covered[c.cluster] {
+                        self.cluster_bonus
+                    } else {
+                        0.0
+                    };
+                    if c.weight / self.wsum + bonus > 0.0 {
+                        sel.push(i);
+                    }
+                }
+            }
+            for &ch in &self.ctx.children[v] {
+                if gain[ch] > 0.0 {
+                    stack.push(ch);
+                }
+            }
+        }
+        (ub, sel)
+    }
+
+    /// Evaluate a concrete completion and update the incumbent.
+    fn try_incumbent(&mut self, fix: &[u8], dp_sel: &[usize]) {
+        let mut subset: Vec<usize> = (0..fix.len()).filter(|&i| fix[i] == FIX_IN).collect();
+        subset.extend_from_slice(dp_sel);
+        if subset.is_empty() {
+            // |S| >= 1: fall back to the single best candidate.
+            let best_single = (0..self.p.candidates.len())
+                .filter(|&i| fix[i] != FIX_OUT)
+                .max_by(|&a, &b| {
+                    self.p.candidates[a]
+                        .weight
+                        .partial_cmp(&self.p.candidates[b].weight)
+                        .unwrap()
+                });
+            match best_single {
+                Some(i) => subset.push(i),
+                None => return,
+            }
+        }
+        subset.sort_unstable();
+        subset.dedup();
+        let obj = self.p.objective(&subset);
+        if obj > self.best.objective + 1e-12 {
+            self.best = Selection { chosen: subset, objective: obj };
+        }
+    }
+
+    fn search(&mut self, fix: &mut Vec<u8>, order: &[usize], depth: usize) {
+        if self.expired {
+            return;
+        }
+        self.nodes_explored += 1;
+        if self.nodes_explored >= self.node_cap
+            || (self.nodes_explored % 64 == 0 && std::time::Instant::now() > self.deadline)
+        {
+            // Budget exhausted: abort the whole search, keep the incumbent
+            // (always a feasible selection — solve_tree seeds one up front).
+            self.expired = true;
+            return;
+        }
+        let (ub, dp_sel) = self.dp_fused(fix);
+        self.try_incumbent(fix, &dp_sel);
+        if ub <= self.best.objective + self.gap_tol {
+            return; // pruned: bound can't beat incumbent (within tolerance)
+        }
+        // Next free variable in branching order.
+        let Some(&var) = order[depth..].iter().find(|&&i| fix[i] == FREE) else {
+            return; // fully fixed; incumbent already evaluated
+        };
+        // Branch var = 1 first (reward-greedy).
+        fix[var] = FIX_IN;
+        self.search(fix, order, depth + 1);
+        fix[var] = FIX_OUT;
+        self.search(fix, order, depth + 1);
+        fix[var] = FREE;
+    }
+}
+
+/// Exact production solver: B&B over leaves with tree-DP bounds.
+///
+/// When `lambda_d == 0` the DP bound is exact and the root call returns
+/// immediately. With the coverage term the bound over-counts shared-cluster
+/// bonuses, so a few levels of branching resolve the ties. `limit` bounds
+/// wall time; the incumbent (always a feasible selection) is returned on
+/// expiry.
+pub fn solve_tree(p: &SelectionProblem, limit: Duration) -> Selection {
+    debug_assert!(p.validate().is_ok(), "{:?}", p.validate());
+    let ctx = build_ctx(p);
+    let wsum = p.total_weight();
+    let vsum = p.total_node_weight();
+    let node_cost: Vec<f64> =
+        p.node_weight.iter().map(|w| p.lambda_b * w / vsum).collect();
+    let cluster_bonus = p.lambda_d / p.num_clusters.max(1) as f64;
+    let mut order: Vec<usize> = (0..p.candidates.len()).collect();
+    order.sort_by(|&a, &b| {
+        p.candidates[b].weight.partial_cmp(&p.candidates[a].weight).unwrap()
+    });
+    let mut solver = TreeSolver {
+        p,
+        ctx,
+        node_cost,
+        cluster_bonus,
+        wsum,
+        best: Selection { chosen: vec![], objective: f64::NEG_INFINITY },
+        deadline: std::time::Instant::now() + limit,
+        nodes_explored: 0,
+        expired: false,
+        node_cap: 500_000,
+        gap_tol: 1e-4,
+    };
+    let mut fix = vec![FREE; p.candidates.len()];
+    solver.search(&mut fix, &order, 0);
+    debug_assert!(!solver.best.chosen.is_empty());
+    solver.best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    const LIMIT: Duration = Duration::from_secs(20);
+
+    /// Random selection instance over a random tree.
+    pub(crate) fn random_problem(rng: &mut Rng, max_leaves: usize) -> SelectionProblem {
+        let n_internal = 1 + rng.index(8);
+        let mut parents: Vec<Option<usize>> = vec![None];
+        for v in 1..n_internal {
+            parents.push(Some(rng.index(v)));
+        }
+        let n_leaves = 1 + rng.index(max_leaves);
+        let num_clusters = 1 + rng.index(n_leaves);
+        let mut candidates = vec![];
+        for _ in 0..n_leaves {
+            // each candidate gets its own fresh leaf node under a random
+            // existing node (mirrors "newly sampled continuation")
+            let attach = rng.index(parents.len());
+            parents.push(Some(attach));
+            candidates.push(Candidate {
+                weight: 1.0 + rng.index(10) as f64,
+                leaf_node: parents.len() - 1,
+                cluster: rng.index(num_clusters),
+            });
+        }
+        let node_weight: Vec<f64> = if rng.chance(0.5) {
+            SelectionProblem::uniform_node_weight(parents.len())
+        } else {
+            (0..parents.len()).map(|_| 1.0 + rng.index(60) as f64).collect()
+        };
+        SelectionProblem {
+            candidates,
+            parents,
+            node_weight,
+            num_clusters,
+            lambda_b: rng.f64() * 2.0,
+            lambda_d: if rng.chance(0.3) { 0.0 } else { rng.f64() * 1.5 },
+        }
+    }
+
+    #[test]
+    fn single_candidate_always_selected() {
+        let p = SelectionProblem {
+            candidates: vec![Candidate { weight: 1.0, leaf_node: 1, cluster: 0 }],
+            parents: vec![None, Some(0)],
+            node_weight: vec![1.0, 1.0],
+            num_clusters: 1,
+            lambda_b: 5.0, // even with a huge budget penalty
+            lambda_d: 1.0,
+        };
+        let s = solve_tree(&p, LIMIT);
+        assert_eq!(s.chosen, vec![0]);
+        let s2 = solve_ilp(&p, LIMIT);
+        assert_eq!(s2.chosen, vec![0]);
+    }
+
+    #[test]
+    fn kv_penalty_prefers_shared_paths() {
+        // Two pairs of leaves: (0,1) share a deep path; (2) hangs off its own
+        // long divergent path. Equal weights, no diversity term: with a high
+        // enough λ_b the divergent leaf is pruned.
+        // nodes: 0 root; 1 shared; 2,3 leaves under 1; 4,5,6 chain; 7 leaf.
+        let parents = vec![None, Some(0), Some(1), Some(1), Some(0), Some(4), Some(5), Some(6)];
+        let mk = |leaf_node, cluster| Candidate { weight: 1.0, leaf_node, cluster };
+        let p = SelectionProblem {
+            candidates: vec![mk(2, 0), mk(3, 1), mk(7, 2)],
+            node_weight: SelectionProblem::uniform_node_weight(parents.len()),
+            parents,
+            num_clusters: 3,
+            lambda_b: 1.5,
+            lambda_d: 0.0,
+        };
+        let s = solve_tree(&p, LIMIT);
+        assert_eq!(s.chosen, vec![0, 1], "divergent leaf should be pruned: {s:?}");
+    }
+
+    #[test]
+    fn diversity_term_rescues_divergent_cluster() {
+        // Same tree as above, but leaf 7 is the only member of its cluster
+        // and λ_d is large: it must now be retained.
+        let parents = vec![None, Some(0), Some(1), Some(1), Some(0), Some(4), Some(5), Some(6)];
+        let mk = |leaf_node, cluster| Candidate { weight: 1.0, leaf_node, cluster };
+        let p = SelectionProblem {
+            candidates: vec![mk(2, 0), mk(3, 0), mk(7, 1)],
+            node_weight: SelectionProblem::uniform_node_weight(parents.len()),
+            parents,
+            num_clusters: 2,
+            lambda_b: 1.5,
+            lambda_d: 3.0,
+        };
+        let s = solve_tree(&p, LIMIT);
+        assert!(s.chosen.contains(&2), "diverse leaf must be kept: {s:?}");
+    }
+
+    #[test]
+    fn redundant_cluster_members_pruned_first() {
+        // Three leaves in one cluster + one in another, all same weight,
+        // each on its own branch. Budget pressure should prune within the
+        // big cluster, never the singleton cluster.
+        let parents = vec![
+            None,
+            Some(0),
+            Some(0),
+            Some(0),
+            Some(0), // 4 branch nodes
+            Some(1),
+            Some(2),
+            Some(3),
+            Some(4), // 4 leaves
+        ];
+        let mk = |leaf_node, cluster| Candidate { weight: 1.0, leaf_node, cluster };
+        let p = SelectionProblem {
+            candidates: vec![mk(5, 0), mk(6, 0), mk(7, 0), mk(8, 1)],
+            node_weight: SelectionProblem::uniform_node_weight(parents.len()),
+            parents,
+            num_clusters: 2,
+            lambda_b: 1.2,
+            lambda_d: 1.0,
+        };
+        let s = solve_tree(&p, LIMIT);
+        assert!(s.chosen.contains(&3), "singleton cluster leaf kept: {s:?}");
+    }
+
+    #[test]
+    fn tree_matches_brute_force() {
+        property(120, |rng: &mut Rng| {
+            let p = random_problem(rng, 10);
+            let brute = solve_brute(&p);
+            let tree = solve_tree(&p, LIMIT);
+            crate::prop_check!(
+                (brute.objective - tree.objective).abs() < 1e-9,
+                "brute {:?} vs tree {:?} on {p:?}",
+                brute,
+                tree
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ilp_matches_brute_force() {
+        property(40, |rng: &mut Rng| {
+            let p = random_problem(rng, 7);
+            let brute = solve_brute(&p);
+            let ilp = solve_ilp(&p, LIMIT);
+            crate::prop_check!(
+                (brute.objective - ilp.objective).abs() < 1e-6,
+                "brute {:?} vs ilp {:?} on {p:?}",
+                brute,
+                ilp
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn objective_matches_manual_computation() {
+        // 2 leaves sharing the root, different clusters.
+        let p = SelectionProblem {
+            candidates: vec![
+                Candidate { weight: 3.0, leaf_node: 1, cluster: 0 },
+                Candidate { weight: 1.0, leaf_node: 2, cluster: 1 },
+            ],
+            parents: vec![None, Some(0), Some(0)],
+            node_weight: vec![1.0, 1.0, 1.0],
+            num_clusters: 2,
+            lambda_b: 1.0,
+            lambda_d: 1.0,
+        };
+        // S = {0}: reward 3/4, nodes {0,1} → 2/3, clusters 1/2
+        let expect = 0.75 - 2.0 / 3.0 + 0.5;
+        assert!((p.objective(&[0]) - expect).abs() < 1e-12);
+        // S = {0,1}: reward 1, nodes 3/3, clusters 2/2 → 1 - 1 + 1 = 1
+        assert!((p.objective(&[0, 1]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_catches_bad_instances() {
+        let p = SelectionProblem {
+            candidates: vec![Candidate { weight: 1.0, leaf_node: 5, cluster: 0 }],
+            parents: vec![None],
+            node_weight: vec![1.0],
+            num_clusters: 1,
+            lambda_b: 1.0,
+            lambda_d: 0.0,
+        };
+        assert!(p.validate().is_err());
+    }
+}

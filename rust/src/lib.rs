@@ -1,0 +1,32 @@
+//! # ETS: Efficient Tree Search for Inference-Time Scaling
+//!
+//! A three-layer reproduction of *"ETS: Efficient Tree Search for
+//! Inference-Time Scaling"* (Hooper et al., 2025):
+//!
+//! * **L3 (this crate)** — the serving coordinator: request routing, dynamic
+//!   batching, PRM-guided tree search (beam / DVTS / REBASE / **ETS**), a
+//!   radix-tree KV-cache manager, an ILP cost-model solver, and agglomerative
+//!   clustering for the semantic-coverage term.
+//! * **L2 (python/compile/model.py, build time)** — a JAX transformer
+//!   (prefill, KV-cached decode, PRM head, embedder), AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/, build time)** — Pallas kernels for the
+//!   attention hot-spot (shared-prefix tree attention), interpret mode.
+//!
+//! Python never runs on the request path: `runtime` loads the compiled
+//! artifacts via PJRT and executes them from rust.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod embed;
+pub mod engine;
+pub mod eval;
+pub mod ilp;
+pub mod kvcache;
+pub mod lm;
+pub mod metrics;
+pub mod reward;
+pub mod search;
+pub mod tree;
+pub mod util;
+pub mod runtime;
+pub mod workload;

@@ -1,0 +1,181 @@
+//! Step generators ("the LM"): given a frontier leaf, sample `n` candidate
+//! continuations.
+//!
+//! Two implementations:
+//! * [`SynthLm`] — the calibrated synthetic generator over the workload's
+//!   latent fate space (accuracy experiments; no model in the loop).
+//! * [`crate::engine::pjrt_lm::PjrtLm`] — the real tiny transformer executed
+//!   through the AOT artifacts via PJRT (throughput / end-to-end proof).
+
+use crate::tree::{NodeId, SearchTree, StepInfo};
+use crate::util::rng::Rng;
+use crate::workload::{extend_path_id, Problem};
+
+/// Samples step continuations for frontier leaves.
+pub trait StepGenerator {
+    /// Sample `n` continuations of the trajectory ending at `leaf`.
+    fn expand(&mut self, tree: &SearchTree, leaf: NodeId, n: usize) -> Vec<StepInfo>;
+
+    /// Tokens in the problem prompt (root node size).
+    fn prompt_tokens(&self) -> usize;
+}
+
+/// Synthetic LM over one [`Problem`]'s latent solution space.
+///
+/// Sampling model per continuation:
+/// 1. pick a semantic group from the dataset's `n_groups` under a
+///    *concentrated* proposal distribution (P(rank r) ∝ ζ^r over a
+///    deterministic per-context preference order): an LM sampled k times at
+///    the same state mostly re-proposes its top one or two approaches, so
+///    extra samples from one node are largely redundant — the premise of
+///    the paper's coverage term;
+/// 2. pick a paraphrase variant id (surface form);
+/// 3. the step's on-track fate is the problem's deterministic function of
+///    (parent path, group) — redundant same-group steps share their fate;
+/// 4. after `n_steps` on-track steps the trajectory terminates with the true
+///    answer; a doomed trajectory terminates at the same depth with a wrong
+///    answer (deterministic per path).
+pub struct SynthLm {
+    pub problem: Problem,
+    /// Proposal concentration: P(rank r) ∝ zeta^r. Lower = more peaked.
+    pub zeta: f64,
+    rng: Rng,
+}
+
+impl SynthLm {
+    pub fn new(problem: Problem, seed: u64) -> Self {
+        let rng = Rng::new(seed ^ problem.seed);
+        Self { problem, zeta: 0.6, rng }
+    }
+
+    /// Sample a semantic group for a node: deterministic per-context
+    /// preference order, geometric rank distribution.
+    fn sample_group(&mut self, parent_path_id: u64, n_groups: usize) -> u64 {
+        // preference permutation seeded by the context
+        let mut perm: Vec<u64> = (0..n_groups as u64).collect();
+        let mut prng = Rng::new(self.problem.seed ^ parent_path_id.wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        prng.shuffle(&mut perm);
+        // geometric rank, truncated
+        let mut rank = 0usize;
+        while rank + 1 < n_groups && self.rng.f64() < self.zeta {
+            rank += 1;
+        }
+        perm[rank]
+    }
+}
+
+impl StepGenerator for SynthLm {
+    fn expand(&mut self, tree: &SearchTree, leaf: NodeId, n: usize) -> Vec<StepInfo> {
+        let parent = tree.get(leaf);
+        debug_assert!(!parent.step.terminal, "expanding a terminal node");
+        let parent_path_id = parent.step.path_id;
+        let parent_alive = parent.step.alive;
+        let n_groups = self.problem.spec.dataset.n_groups;
+        let n_steps = self.problem.spec.dataset.n_steps;
+        let depth = tree.depth(leaf); // completed steps so far
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let group = self.sample_group(parent_path_id, n_groups);
+            let paraphrase = self.rng.next_u64() & 0xFFFF;
+            let path_id = extend_path_id(parent_path_id, group);
+            let alive = parent_alive && self.problem.group_on_track(parent_path_id, group);
+            let is_last = depth + 1 >= n_steps;
+            let answer = if is_last {
+                Some(if alive {
+                    self.problem.answer
+                } else {
+                    self.problem.wrong_answer(path_id)
+                })
+            } else {
+                None
+            };
+            out.push(StepInfo {
+                tokens: self.problem.step_tokens(path_id ^ paraphrase),
+                sem: group,
+                paraphrase,
+                token_ids: vec![],
+                terminal: is_last,
+                answer,
+                path_id,
+                alive,
+            });
+        }
+        out
+    }
+
+    fn prompt_tokens(&self) -> usize {
+        self.problem.spec.dataset.prompt_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ProblemSet, WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
+
+    fn make() -> SynthLm {
+        let spec = WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM);
+        let p = ProblemSet::generate(&spec, 1, 9).problems.remove(0);
+        SynthLm::new(p, 1)
+    }
+
+    #[test]
+    fn expands_n_children_with_consistent_latents() {
+        let mut lm = make();
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(lm.prompt_tokens());
+        let steps = lm.expand(&tree, root, 32);
+        assert_eq!(steps.len(), 32);
+        // same group from the same parent → same fate and same path id
+        for a in &steps {
+            for b in &steps {
+                if a.sem == b.sem {
+                    assert_eq!(a.alive, b.alive, "same group, different fate");
+                    assert_eq!(a.path_id, b.path_id);
+                }
+            }
+            assert!(!a.terminal, "first of 8 steps can't be terminal");
+        }
+    }
+
+    #[test]
+    fn doomed_parent_stays_doomed() {
+        let mut lm = make();
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(lm.prompt_tokens());
+        // manufacture a doomed child
+        let doomed = tree.add_child(
+            root,
+            StepInfo { tokens: 5, alive: false, path_id: 77, ..Default::default() },
+            0.1,
+        );
+        for s in lm.expand(&tree, doomed, 16) {
+            assert!(!s.alive);
+        }
+    }
+
+    #[test]
+    fn terminal_at_n_steps_with_correct_answer_iff_alive() {
+        let mut lm = make();
+        let n_steps = lm.problem.spec.dataset.n_steps;
+        let truth = lm.problem.answer;
+        let mut tree = SearchTree::new();
+        let mut cur = tree.init_root(lm.prompt_tokens());
+        // walk a chain of depth n_steps - 1
+        for _ in 0..n_steps - 1 {
+            let s = lm.expand(&tree, cur, 1).remove(0);
+            assert!(!s.terminal);
+            cur = tree.add_child(cur, s, 0.5);
+        }
+        let finals = lm.expand(&tree, cur, 20);
+        for s in finals {
+            assert!(s.terminal);
+            let ans = s.answer.unwrap();
+            if s.alive {
+                assert_eq!(ans, truth);
+            } else {
+                assert_ne!(ans, truth);
+            }
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! `ets` — launcher CLI for the Efficient Tree Search serving framework.
+//!
+//! Subcommands:
+//!   eval   run a search policy over a synthetic problem set (accuracy/KV)
+//!   serve  end-to-end PJRT serving demo (real AOT transformer on CPU)
+//!   info   show compiled artifact + workload configuration
+//!
+//! Global options can also come from a TOML config (`--config path`), with
+//! CLI flags taking precedence.
+
+use anyhow::{anyhow, bail, Result};
+use ets::eval::{evaluate_with_workers, EvalConfig, PolicySpec};
+use ets::util::argparse::{Args, Spec};
+use ets::util::json::Json;
+use ets::util::toml::Doc;
+use ets::workload::{dataset_by_name, model_by_name, WorkloadSpec};
+
+const USAGE: &str = "\
+ets — Efficient Tree Search for Inference-Time Scaling (reproduction)
+
+USAGE:
+  ets eval  [--dataset D] [--model M] [--policy P] [--width N]
+            [--problems K] [--seed S] [--workers W] [--json FILE]
+  ets serve [--requests K] [--width N] [--policy P] [--lambda-b X]
+            [--artifacts DIR]
+  ets info  [--artifacts DIR]
+
+POLICIES: rebase | beam-<k> | beam-sqrt | dvts-<k> | dvts-sqrt |
+          ets[:<lambda_b>] | ets-kv[:<lambda_b>]
+DATASETS: synth-math500 | synth-gsm8k
+MODELS:   llemma-34b-sim | mistral-7b-sim";
+
+fn main() {
+    let spec = Spec::new(&[
+        "dataset", "model", "policy", "width", "problems", "seed", "workers",
+        "json", "config", "requests", "lambda-b", "artifacts",
+    ]);
+    let args = match spec.parse(std::env::args()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand() {
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<Doc> {
+    match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            Doc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))
+        }
+        None => Ok(Doc::parse("").unwrap()),
+    }
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg_doc = load_config(args)?;
+    let dataset_name =
+        args.get_or("dataset", &cfg_doc.str_or("eval.dataset", "synth-math500")).to_string();
+    let model_name =
+        args.get_or("model", &cfg_doc.str_or("eval.model", "llemma-34b-sim")).to_string();
+    let policy_name = args.get_or("policy", &cfg_doc.str_or("eval.policy", "ets")).to_string();
+    let dataset = dataset_by_name(&dataset_name)
+        .ok_or_else(|| anyhow!("unknown dataset {dataset_name}"))?;
+    let model =
+        model_by_name(&model_name).ok_or_else(|| anyhow!("unknown model {model_name}"))?;
+    let policy = PolicySpec::parse(&policy_name).map_err(|e| anyhow!(e))?;
+    let cfg = EvalConfig {
+        spec: WorkloadSpec::new(dataset, model),
+        policy,
+        width: args.get_usize("width", cfg_doc.usize_or("eval.width", 64)).map_err(|e| anyhow!(e))?,
+        n_problems: args
+            .get_usize("problems", cfg_doc.usize_or("eval.problems", 100))
+            .map_err(|e| anyhow!(e))?,
+        seed: args.get_u64("seed", 20260710).map_err(|e| anyhow!(e))?,
+        max_steps: dataset.n_steps + 6,
+    };
+    let workers = args.get_usize("workers", 0).map_err(|e| anyhow!(e))?;
+    let workers = if workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        workers
+    };
+    let t = std::time::Instant::now();
+    let r = evaluate_with_workers(&cfg, workers);
+    println!(
+        "{:<20} {:<16} width={:<4} acc={:.1}%  kv={:.0}  unshared={:.0}  tokens={:.0}  calls={:.0}  [{:?}]",
+        r.policy,
+        r.dataset,
+        r.width,
+        100.0 * r.accuracy(),
+        r.mean_kv_tokens,
+        r.mean_unshared_kv_tokens,
+        r.mean_new_tokens,
+        r.mean_model_calls,
+        t.elapsed()
+    );
+    if let Some(path) = args.get("json") {
+        let j = Json::obj(vec![
+            ("policy", Json::str(&r.policy)),
+            ("dataset", Json::str(&r.dataset)),
+            ("model", Json::str(&r.model)),
+            ("width", Json::num(r.width as f64)),
+            ("n_problems", Json::num(r.n_problems as f64)),
+            ("accuracy", Json::num(r.accuracy())),
+            ("mean_kv_tokens", Json::num(r.mean_kv_tokens)),
+            ("mean_unshared_kv_tokens", Json::num(r.mean_unshared_kv_tokens)),
+            ("mean_new_tokens", Json::num(r.mean_new_tokens)),
+            ("mean_model_calls", Json::num(r.mean_model_calls)),
+        ]);
+        std::fs::write(path, j.to_string_compact())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use ets::embed::Embedder;
+    use ets::engine::pjrt_lm::{PjrtEmbedder, PjrtLm, PjrtLmConfig, PjrtPrm};
+    use ets::search::{run_search, EtsPolicy, RebasePolicy, SearchParams, SearchPolicy};
+    use std::rc::Rc;
+
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let requests = args.get_usize("requests", 4).map_err(|e| anyhow!(e))?;
+    let width = args.get_usize("width", 8).map_err(|e| anyhow!(e))?;
+    let policy_name = args.get_or("policy", "ets").to_string();
+    let lambda_b = args.get_f64("lambda-b", 1.5).map_err(|e| anyhow!(e))?;
+    let arts = Rc::new(ets::runtime::Artifacts::open(dir)?);
+    println!(
+        "serving on PJRT/{} — model d={} L={} H={} S={} V={}",
+        arts.runtime.platform_name(),
+        arts.dims.d_model,
+        arts.dims.n_layers,
+        arts.dims.n_heads,
+        arts.dims.max_seq,
+        arts.dims.embed_out_dim
+    );
+    let mut total_tokens = 0u64;
+    let mut total_kv = 0u64;
+    let mut correct_like = 0usize;
+    let t0 = std::time::Instant::now();
+    for req in 0..requests {
+        let mut rng = ets::util::rng::Rng::new(1000 + req as u64);
+        let prompt: Vec<u32> =
+            (0..12).map(|_| 2 + rng.below(200) as u32).collect();
+        let mut lm = PjrtLm::new(
+            arts.clone(),
+            prompt.clone(),
+            req as u64,
+            PjrtLmConfig::default(),
+        );
+        let mut prm = PjrtPrm::new(arts.clone(), prompt);
+        let params = SearchParams { width, max_steps: 8 };
+        let outcome = if policy_name.starts_with("ets") {
+            let mut pol = EtsPolicy::new(lambda_b, 1.0, PjrtEmbedder::new(arts.clone()));
+            run_search(&mut lm, &mut prm, &mut pol, &params)
+        } else {
+            let mut pol = RebasePolicy::default();
+            let _: String = SearchPolicy::name(&pol);
+            run_search(&mut lm, &mut prm, &mut pol, &params)
+        };
+        total_tokens += outcome.total_new_tokens();
+        total_kv += outcome.total_kv_tokens();
+        if outcome.answer.is_some() {
+            correct_like += 1;
+        }
+        println!(
+            "req {req}: answer={:?} completions={} kvΣ={} tokens={} prefills={} decodes={} radix_unique={}",
+            outcome.answer,
+            outcome.completions.len(),
+            outcome.total_kv_tokens(),
+            outcome.total_new_tokens(),
+            lm.prefill_calls,
+            lm.decode_calls,
+            lm.radix.live_tokens(),
+        );
+        let _ = Embedder::dim(&mut PjrtEmbedder::new(arts.clone()));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {requests} requests in {dt:.2}s — {:.2} req/s, {:.1} tok/s, Σkv {total_kv}, answered {correct_like}/{requests}",
+        requests as f64 / dt,
+        total_tokens as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    if !std::path::Path::new(&dir).join("meta.json").exists() {
+        bail!("no artifacts at {dir}; run `make artifacts`");
+    }
+    let arts = ets::runtime::Artifacts::open(dir)?;
+    let d = &arts.dims;
+    println!("platform: {}", arts.runtime.platform_name());
+    println!(
+        "lm: vocab={} d_model={} layers={} heads={} head_dim={} max_seq={} batches={:?}",
+        d.vocab, d.d_model, d.n_layers, d.n_heads, d.head_dim, d.max_seq, d.lm_batches
+    );
+    println!("prm batch: {}  embed: batch={} seq={} dim={}", d.prm_batch, d.embed_batch, d.embed_max_seq, d.embed_out_dim);
+    println!("datasets: synth-math500, synth-gsm8k  models: llemma-34b-sim, mistral-7b-sim");
+    Ok(())
+}

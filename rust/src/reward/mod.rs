@@ -1,0 +1,198 @@
+//! Process reward models.
+//!
+//! * [`OraclePrm`] — noisy observation of the workload latent, used by the
+//!   accuracy experiments. The PRM sees whether a partial trajectory is still
+//!   on a correct path only through logit-space noise, which reproduces the
+//!   imperfect-verifier dynamics that make search width / diversity matter.
+//! * [`crate::engine::pjrt_lm::PjrtPrm`] — the trained-head scorer executed
+//!   via the AOT artifacts (throughput path).
+
+use crate::tree::{NodeId, SearchTree};
+use crate::util::rng::Rng;
+
+/// Scores partial trajectories (the paper uses the final per-step PRM score
+/// as the step reward).
+pub trait RewardModel {
+    /// Score the trajectories ending at `nodes`; values in [0, 1].
+    fn score(&mut self, tree: &SearchTree, nodes: &[NodeId]) -> Vec<f64>;
+}
+
+/// Noisy oracle: `sigmoid(margin * (alive ? 1 : -1) + path_bias + noise)`.
+///
+/// Two noise components, both *deterministic per node path* (hash-seeded),
+/// so re-scoring the same trajectory gives the same reward — like a real
+/// PRM, and required for reproducibility across policies:
+///
+/// * `noise` — fresh per-step observation noise;
+/// * `path_bias` — an AR(1) process along the trajectory
+///   (`bias = ρ·parent_bias + σ_b·η(path)`): *persistently deceptive* (or
+///   persistently under-rated) reasoning paths. This is what makes pure
+///   exploitation (beam search) commit to wrong trajectories and gives
+///   diverse search its accuracy edge — the dynamic the paper's Figure 3
+///   turns on.
+pub struct OraclePrm {
+    /// Mean separation between alive and doomed scores (logit space).
+    pub margin: f64,
+    /// Std of the fresh logit-space noise.
+    pub noise: f64,
+    /// Std of the per-step bias innovation.
+    pub bias_sigma: f64,
+    /// AR(1) decay of the inherited bias.
+    pub bias_rho: f64,
+    /// Steps until the PRM reaches full discrimination. Real PRMs can barely
+    /// judge a trajectory's promise from its first steps; the margin ramps
+    /// as `(depth / ramp)^0.7` up to 1. This is what makes beam search's
+    /// early hard pruning costly and REBASE's early balance valuable.
+    pub margin_ramp: f64,
+    /// Margin multiplier for *completed* trajectories: verifying a full
+    /// solution is much easier than judging a partial one, which is what
+    /// makes weighted-majority voting robust to doomed completions.
+    pub terminal_boost: f64,
+    seed: u64,
+}
+
+impl OraclePrm {
+    pub fn new(margin: f64, noise: f64, seed: u64) -> Self {
+        Self { margin, noise, bias_sigma: 0.0, bias_rho: 0.0, margin_ramp: 1.0, terminal_boost: 2.0, seed }
+    }
+
+    /// Construct from a model profile.
+    pub fn for_profile(profile: &crate::workload::ModelProfile, seed: u64) -> Self {
+        Self {
+            margin: profile.prm_margin,
+            noise: profile.prm_noise,
+            bias_sigma: profile.prm_bias_sigma,
+            bias_rho: profile.prm_bias_rho,
+            margin_ramp: 6.0,
+            terminal_boost: 2.0,
+            seed,
+        }
+    }
+
+    /// AR(1) path bias: fold the per-ancestor innovations from the root.
+    fn path_bias(&self, tree: &SearchTree, id: NodeId) -> f64 {
+        if self.bias_sigma == 0.0 {
+            return 0.0;
+        }
+        let mut bias = 0.0;
+        for n in tree.path(id) {
+            let pid = tree.get(n).step.path_id;
+            if pid == 0 {
+                continue; // root (prompt) carries no step bias
+            }
+            let mut r = Rng::new(self.seed ^ pid.wrapping_mul(0xA076_1D64_78BD_642F));
+            bias = self.bias_rho * bias + self.bias_sigma * r.normal();
+        }
+        bias
+    }
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl RewardModel for OraclePrm {
+    fn score(&mut self, tree: &SearchTree, nodes: &[NodeId]) -> Vec<f64> {
+        nodes
+            .iter()
+            .map(|&id| {
+                let n = tree.get(id);
+                // fresh noise keyed on path AND surface form: paraphrase
+                // clones score similarly but not identically
+                let key = n.step.path_id ^ n.step.paraphrase.wrapping_mul(0x94D0_49BB_1331_11EB);
+                let mut r = Rng::new(self.seed ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let depth = tree.depth(id) as f64;
+                let ramp = (depth / self.margin_ramp).min(1.0).powf(0.7);
+                let m = if n.step.terminal {
+                    self.margin * self.terminal_boost
+                } else {
+                    self.margin * ramp
+                };
+                let logit = if n.step.alive { m } else { -m };
+                sigmoid(logit + self.path_bias(tree, id) + r.normal() * self.noise)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::StepInfo;
+
+    fn tree_with(alive: &[bool]) -> (SearchTree, Vec<NodeId>) {
+        let mut t = SearchTree::new();
+        let root = t.init_root(10);
+        let ids = alive
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                t.add_child(
+                    root,
+                    StepInfo { tokens: 5, alive: a, path_id: i as u64 + 1, ..Default::default() },
+                    0.0,
+                )
+            })
+            .collect();
+        (t, ids)
+    }
+
+    #[test]
+    fn scores_in_unit_interval_and_deterministic() {
+        let (t, ids) = tree_with(&[true, false, true, false]);
+        let mut prm = OraclePrm::new(1.0, 0.5, 42);
+        let s1 = prm.score(&t, &ids);
+        let s2 = prm.score(&t, &ids);
+        assert_eq!(s1, s2);
+        for s in &s1 {
+            assert!((0.0..=1.0).contains(s));
+        }
+    }
+
+    #[test]
+    fn alive_scores_higher_on_average() {
+        let alive: Vec<bool> = (0..400).map(|i| i % 2 == 0).collect();
+        let (t, ids) = tree_with(&alive);
+        let mut prm = OraclePrm::new(1.0, 0.5, 7);
+        let s = prm.score(&t, &ids);
+        let (mut sa, mut na, mut sd, mut nd) = (0.0, 0, 0.0, 0);
+        for (i, &a) in alive.iter().enumerate() {
+            if a {
+                sa += s[i];
+                na += 1;
+            } else {
+                sd += s[i];
+                nd += 1;
+            }
+        }
+        let (ma, md) = (sa / na as f64, sd / nd as f64);
+        assert!(ma > md + 0.2, "alive mean {ma} vs doomed mean {md}");
+    }
+
+    #[test]
+    fn zero_noise_is_perfectly_separable() {
+        let (t, ids) = tree_with(&[true, false]);
+        let mut prm = OraclePrm::new(2.0, 0.0, 1);
+        let s = prm.score(&t, &ids);
+        assert!(s[0] > 0.8 && s[1] < 0.2);
+    }
+
+    #[test]
+    fn more_noise_means_more_confusable() {
+        // With huge noise, ordering flips often: count inversions.
+        let alive: Vec<bool> = (0..300).map(|i| i % 2 == 0).collect();
+        let (t, ids) = tree_with(&alive);
+        let count_inversions = |noise: f64| {
+            let mut prm = OraclePrm::new(1.0, noise, 3);
+            let s = prm.score(&t, &ids);
+            let mut inv = 0;
+            for i in (0..300).step_by(2) {
+                if s[i] < s[i + 1] {
+                    inv += 1; // doomed outranked alive
+                }
+            }
+            inv
+        };
+        assert!(count_inversions(3.0) > count_inversions(0.3));
+    }
+}

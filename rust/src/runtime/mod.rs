@@ -1,0 +1,193 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); this module is the
+//! only place the compiled artifacts are touched at run time. Interchange is
+//! HLO *text* (not serialized HloModuleProto): jax >= 0.5 emits protos with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// A PJRT client; executables are loaded from `artifacts/`.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Name of the PJRT platform backing this runtime (e.g. "cpu").
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it into an executable.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled executable; thin wrapper so callers rarely touch raw xla types.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the elements of the result tuple.
+    ///
+    /// All our artifacts are lowered with `return_tuple=True`, so the single
+    /// output buffer is a tuple literal which we decompose here.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.decompose_tuple()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal construction / extraction helpers.
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given dims from a flat row-major slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if data.len() as i64 != expect {
+        bail!("lit_f32: {} elements for dims {dims:?}", data.len());
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given dims from a flat row-major slice.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if data.len() as i64 != expect {
+        bail!("lit_i32: {} elements for dims {dims:?}", data.len());
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Extract a literal into a Vec<f32>.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+// ---------------------------------------------------------------------------
+// Artifact set: meta.json + compiled executables.
+// ---------------------------------------------------------------------------
+
+/// Dimensions of the compiled LM (from `artifacts/meta.json`).
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub embed_max_seq: usize,
+    pub embed_out_dim: usize,
+    pub lm_batches: Vec<usize>,
+    pub prm_batch: usize,
+    pub embed_batch: usize,
+}
+
+/// Lazily-compiled set of artifacts rooted at an artifacts directory.
+pub struct Artifacts {
+    pub runtime: Runtime,
+    dir: PathBuf,
+    pub dims: ModelDims,
+    exes: std::cell::RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl Artifacts {
+    /// Read `meta.json` and prepare for on-demand compilation.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let meta = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let num = |path: &[&str]| -> Result<usize> {
+            let mut v = &meta;
+            for p in path {
+                v = v.get(p).ok_or_else(|| anyhow!("meta.json missing {path:?}"))?;
+            }
+            v.as_f64().map(|x| x as usize).ok_or_else(|| anyhow!("{path:?} not a number"))
+        };
+        let dims = ModelDims {
+            vocab: num(&["model", "vocab"])?,
+            d_model: num(&["model", "d_model"])?,
+            n_layers: num(&["model", "n_layers"])?,
+            n_heads: num(&["model", "n_heads"])?,
+            head_dim: num(&["model", "head_dim"])?,
+            max_seq: num(&["model", "max_seq"])?,
+            embed_max_seq: num(&["embed", "max_seq"])?,
+            embed_out_dim: num(&["embed", "out_dim"])?,
+            lm_batches: meta
+                .get("lm_batches")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as usize).collect())
+                .unwrap_or_default(),
+            prm_batch: num(&["prm_batch"])?,
+            embed_batch: num(&["embed_batch"])?,
+        };
+        Ok(Self {
+            runtime: Runtime::cpu()?,
+            dir,
+            dims,
+            exes: std::cell::RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch the cached) executable `name` (e.g. "lm_decode_b4").
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(exe) = self.exes.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let exe = std::rc::Rc::new(self.runtime.load_hlo_text(&path)?);
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+/// Locate the artifacts directory: `$ETS_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("ETS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lit_helpers_validate_shapes() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit_i32(&[1], &[2]).is_err());
+    }
+}

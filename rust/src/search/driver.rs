@@ -1,0 +1,288 @@
+//! The PRM-guided tree-search driver: runs one problem to completion under a
+//! policy, recording the efficiency metrics the paper's evaluation reports.
+
+use crate::reward::RewardModel;
+use crate::search::policy::SearchPolicy;
+use crate::search::voting::{weighted_majority, Completion};
+use crate::lm::StepGenerator;
+use crate::tree::{NodeId, SearchTree};
+
+/// Per-search-step efficiency record.
+#[derive(Clone, Debug, Default)]
+pub struct StepMetrics {
+    /// Live unique KV tokens during this step (radix-shared; the paper's
+    /// per-step KV cache size).
+    pub live_kv_tokens: usize,
+    /// KV tokens if every trajectory kept a private copy (no sharing).
+    pub unshared_kv_tokens: usize,
+    /// Tokens generated this step (FLOPs proxy).
+    pub new_tokens: usize,
+    /// Continuations sampled this step (model calls).
+    pub model_calls: usize,
+    /// Frontier size entering the step.
+    pub frontier: usize,
+    /// PRM scoring calls this step.
+    pub prm_calls: usize,
+}
+
+/// Outcome of one problem's search.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    /// Weighted-majority answer (None if nothing completed — shouldn't
+    /// happen within `max_steps`).
+    pub answer: Option<i64>,
+    pub completions: Vec<Completion>,
+    pub steps: Vec<StepMetrics>,
+    pub tree: SearchTree,
+    /// Leaf node of every completed trajectory (for engine replay).
+    pub completed_leaves: Vec<NodeId>,
+}
+
+impl SearchOutcome {
+    /// Σ per-step live KV — the paper's "total KV cache size" metric.
+    pub fn total_kv_tokens(&self) -> u64 {
+        self.steps.iter().map(|s| s.live_kv_tokens as u64).sum()
+    }
+
+    pub fn total_unshared_kv_tokens(&self) -> u64 {
+        self.steps.iter().map(|s| s.unshared_kv_tokens as u64).sum()
+    }
+
+    /// Total generated tokens (the FLOPs proxy used by prior work).
+    pub fn total_new_tokens(&self) -> u64 {
+        self.steps.iter().map(|s| s.new_tokens as u64).sum()
+    }
+
+    pub fn total_model_calls(&self) -> u64 {
+        self.steps.iter().map(|s| s.model_calls as u64).sum()
+    }
+
+    /// Peak live KV across steps (memory high-water mark).
+    pub fn peak_kv_tokens(&self) -> u64 {
+        self.steps.iter().map(|s| s.live_kv_tokens as u64).max().unwrap_or(0)
+    }
+}
+
+/// Search configuration for one run.
+#[derive(Clone, Debug)]
+pub struct SearchParams {
+    /// Initial width N (continuations sampled at the root).
+    pub width: usize,
+    /// Safety cap on steps (>= dataset n_steps + slack).
+    pub max_steps: usize,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        Self { width: 16, max_steps: 24 }
+    }
+}
+
+/// Run PRM-guided tree search for one problem.
+///
+/// The loop mirrors the paper's setup: sample `width` continuations at the
+/// root, then at each step let the policy allocate the remaining width over
+/// the frontier (pruning the rest), expand, score with the PRM, and retire
+/// completed trajectories (the width shrinks as trajectories finish, as in
+/// REBASE). The final answer is weighted-majority over completions.
+pub fn run_search<G: StepGenerator, R: RewardModel, P: SearchPolicy>(
+    lm: &mut G,
+    prm: &mut R,
+    policy: &mut P,
+    params: &SearchParams,
+) -> SearchOutcome {
+    let mut tree = SearchTree::new();
+    let root = tree.init_root(lm.prompt_tokens());
+    let mut metrics: Vec<StepMetrics> = Vec::new();
+    let mut completions: Vec<Completion> = Vec::new();
+    let mut completed_leaves: Vec<NodeId> = Vec::new();
+    let mut width = params.width;
+
+    // ---- root expansion ----
+    let mut frontier: Vec<NodeId> = Vec::new();
+    {
+        let steps = lm.expand(&tree, root, width);
+        let mut m = StepMetrics { frontier: 1, model_calls: steps.len(), ..Default::default() };
+        let mut new_nodes = Vec::with_capacity(steps.len());
+        for s in steps {
+            m.new_tokens += s.tokens;
+            new_nodes.push(tree.add_child(root, s, 0.0));
+        }
+        let rewards = prm.score(&tree, &new_nodes);
+        m.prm_calls = new_nodes.len();
+        for (&n, &r) in new_nodes.iter().zip(&rewards) {
+            tree.get_mut(n).reward = r;
+        }
+        policy.on_root_children(&new_nodes);
+        m.live_kv_tokens = tree.live_kv_tokens();
+        m.unshared_kv_tokens = tree.unshared_kv_tokens(&new_nodes);
+        for n in new_nodes {
+            let node = tree.get(n);
+            if node.step.terminal {
+                completions.push((node.step.answer.unwrap(), node.reward));
+                completed_leaves.push(n);
+                width = width.saturating_sub(1);
+            } else {
+                frontier.push(n);
+            }
+        }
+        metrics.push(m);
+    }
+
+    // ---- search steps ----
+    for _ in 1..params.max_steps {
+        if width == 0 || frontier.is_empty() {
+            break;
+        }
+        let alloc = policy.allocate(&tree, &frontier, width);
+        debug_assert!(!alloc.is_empty(), "policy returned empty allocation");
+        // Prune everything outside the allocated paths (completed
+        // trajectories' exclusive KV is freed here too).
+        let keep: Vec<NodeId> = alloc.iter().map(|&(c, _)| c).collect();
+        tree.retain_paths(&keep);
+
+        let mut m = StepMetrics { frontier: frontier.len(), ..Default::default() };
+        let mut new_nodes: Vec<NodeId> = Vec::new();
+        for &(leaf, n) in &alloc {
+            let steps = lm.expand(&tree, leaf, n);
+            m.model_calls += steps.len();
+            for s in steps {
+                m.new_tokens += s.tokens;
+                new_nodes.push(tree.add_child(leaf, s, 0.0));
+            }
+        }
+        let rewards = prm.score(&tree, &new_nodes);
+        m.prm_calls = new_nodes.len();
+        for (&n, &r) in new_nodes.iter().zip(&rewards) {
+            tree.get_mut(n).reward = r;
+        }
+        m.live_kv_tokens = tree.live_kv_tokens();
+        m.unshared_kv_tokens = tree.unshared_kv_tokens(&new_nodes);
+        frontier.clear();
+        for n in new_nodes {
+            let node = tree.get(n);
+            if node.step.terminal {
+                completions.push((node.step.answer.unwrap(), node.reward));
+                completed_leaves.push(n);
+                width = width.saturating_sub(1);
+            } else {
+                frontier.push(n);
+            }
+        }
+        metrics.push(m);
+    }
+
+    SearchOutcome {
+        answer: weighted_majority(&completions),
+        completions,
+        steps: metrics,
+        tree,
+        completed_leaves,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::HashEmbedder;
+    use crate::lm::SynthLm;
+    use crate::reward::OraclePrm;
+    use crate::search::policy::{BeamPolicy, EtsPolicy, RebasePolicy};
+    use crate::workload::{ProblemSet, WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
+
+    fn setup(seed: u64) -> (SynthLm, OraclePrm) {
+        let spec = WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM);
+        let p = ProblemSet::generate(&spec, 1, seed).problems.remove(0);
+        let prm = OraclePrm::for_profile(&p.spec.model.clone(), seed);
+        (SynthLm::new(p, seed), prm)
+    }
+
+    #[test]
+    fn search_completes_and_votes() {
+        let (mut lm, mut prm) = setup(11);
+        let mut pol = RebasePolicy::default();
+        let params = SearchParams { width: 16, max_steps: 16 };
+        let out = run_search(&mut lm, &mut prm, &mut pol, &params);
+        assert!(out.answer.is_some());
+        assert!(!out.completions.is_empty());
+        assert!(out.steps.len() >= lm.problem.spec.dataset.n_steps - 1);
+        assert!(out.total_kv_tokens() > 0);
+        assert!(out.total_new_tokens() > 0);
+        // every completion at roughly the right depth
+        for &leaf in &out.completed_leaves {
+            assert!(out.tree.get(leaf).step.terminal);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let (mut lm, mut prm) = setup(5);
+            let mut pol = RebasePolicy::default();
+            let params = SearchParams { width: 8, max_steps: 16 };
+            let out = run_search(&mut lm, &mut prm, &mut pol, &params);
+            (out.answer, out.total_kv_tokens(), out.total_new_tokens())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn beam_shares_more_kv_than_rebase() {
+        // Averaged over problems: beam retains few paths → more sharing →
+        // lower total KV than REBASE at the same width.
+        let mut beam_kv = 0u64;
+        let mut rebase_kv = 0u64;
+        for seed in 0..8 {
+            let params = SearchParams { width: 32, max_steps: 16 };
+            let (mut lm, mut prm) = setup(seed);
+            let mut bp = BeamPolicy { keep: 4 };
+            beam_kv += run_search(&mut lm, &mut prm, &mut bp, &params).total_kv_tokens();
+            let (mut lm, mut prm) = setup(seed);
+            let mut rp = RebasePolicy::default();
+            rebase_kv += run_search(&mut lm, &mut prm, &mut rp, &params).total_kv_tokens();
+        }
+        assert!(
+            beam_kv < rebase_kv,
+            "beam total KV {beam_kv} should be below REBASE {rebase_kv}"
+        );
+    }
+
+    #[test]
+    fn ets_reduces_kv_vs_rebase() {
+        let mut ets_kv = 0u64;
+        let mut rebase_kv = 0u64;
+        for seed in 0..8 {
+            let params = SearchParams { width: 32, max_steps: 16 };
+            let (mut lm, mut prm) = setup(seed);
+            let mut ep = EtsPolicy::new(1.5, 1.0, HashEmbedder::default());
+            ets_kv += run_search(&mut lm, &mut prm, &mut ep, &params).total_kv_tokens();
+            let (mut lm, mut prm) = setup(seed);
+            let mut rp = RebasePolicy::default();
+            rebase_kv += run_search(&mut lm, &mut prm, &mut rp, &params).total_kv_tokens();
+        }
+        assert!(
+            (ets_kv as f64) < 0.95 * rebase_kv as f64,
+            "ETS total KV {ets_kv} should undercut REBASE {rebase_kv}"
+        );
+    }
+
+    #[test]
+    fn shared_kv_never_exceeds_unshared() {
+        let (mut lm, mut prm) = setup(3);
+        let mut pol = RebasePolicy::default();
+        let params = SearchParams { width: 16, max_steps: 16 };
+        let out = run_search(&mut lm, &mut prm, &mut pol, &params);
+        for s in &out.steps {
+            assert!(s.live_kv_tokens >= 1);
+            // unshared counts only frontier paths; live includes them plus
+            // shared ancestors — live <= unshared + prompt slack is the
+            // meaningful direction once frontier is non-trivial
+            if s.frontier > 1 {
+                assert!(
+                    s.live_kv_tokens <= s.unshared_kv_tokens + 1000,
+                    "{s:?}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! PRM-guided tree search: the policies (beam / DVTS / REBASE / **ETS**),
+//! the REBASE sampling math, the driver loop, and answer aggregation.
+
+pub mod driver;
+pub mod policy;
+pub mod sampling;
+pub mod voting;
+
+pub use driver::{run_search, SearchOutcome, SearchParams, StepMetrics};
+pub use policy::{Allocation, BeamPolicy, DvtsPolicy, EtsPolicy, RebasePolicy, SearchPolicy};

@@ -1,0 +1,362 @@
+//! Search policies: how many continuations each frontier leaf receives.
+//!
+//! A policy sees only the tree topology and PRM rewards (never workload
+//! latents) and returns `(leaf, n_continuations)` allocations summing to the
+//! current width. Leaves absent from the allocation are pruned (their
+//! exclusive KV is freed).
+
+use crate::cluster::agglomerative;
+use crate::embed::Embedder;
+use crate::ilp::select::{solve_tree, Candidate, SelectionProblem};
+use crate::search::sampling::rebase_allocate;
+use crate::tree::{NodeId, SearchTree};
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Allocation decision for one search step.
+pub type Allocation = Vec<(NodeId, usize)>;
+
+pub trait SearchPolicy {
+    /// Allocate `width` continuations across `candidates` (non-terminal
+    /// frontier leaves, all live). Must return a non-empty allocation with
+    /// positive counts summing to <= width (== width unless impossible).
+    fn allocate(&mut self, tree: &SearchTree, candidates: &[NodeId], width: usize) -> Allocation;
+
+    fn name(&self) -> String;
+
+    /// DVTS-style policies need to tag root expansions with subtree ids.
+    fn on_root_children(&mut self, _children: &[NodeId]) {}
+}
+
+fn rewards_of(tree: &SearchTree, candidates: &[NodeId]) -> Vec<f64> {
+    candidates.iter().map(|&c| tree.get(c).reward).collect()
+}
+
+/// Top-k beam search: retain the `keep` best candidates, split the width
+/// evenly among them (Snell et al. '24 setup).
+pub struct BeamPolicy {
+    pub keep: usize,
+}
+
+impl SearchPolicy for BeamPolicy {
+    fn allocate(&mut self, tree: &SearchTree, candidates: &[NodeId], width: usize) -> Allocation {
+        let rewards = rewards_of(tree, candidates);
+        let mut order: Vec<usize> = (0..candidates.len()).collect();
+        order.sort_by(|&a, &b| rewards[b].partial_cmp(&rewards[a]).unwrap());
+        let keep = self.keep.max(1).min(candidates.len()).min(width.max(1));
+        let base = width / keep;
+        let extra = width % keep;
+        order
+            .into_iter()
+            .take(keep)
+            .enumerate()
+            .map(|(rank, idx)| (candidates[idx], base + usize::from(rank < extra)))
+            .filter(|&(_, n)| n > 0)
+            .collect()
+    }
+
+    fn name(&self) -> String {
+        format!("beam-{}", self.keep)
+    }
+}
+
+/// Diverse Verifier Tree Search: the root expansion is segmented into
+/// `subtrees` independent groups; within each group, beam search retains the
+/// single best candidate per step (Beeching et al. '24: #subtrees ==
+/// #trajectories retained per step).
+pub struct DvtsPolicy {
+    pub subtrees: usize,
+    /// node -> subtree id, propagated to descendants lazily.
+    assignment: HashMap<NodeId, usize>,
+}
+
+impl DvtsPolicy {
+    pub fn new(subtrees: usize) -> Self {
+        Self { subtrees: subtrees.max(1), assignment: HashMap::new() }
+    }
+
+    fn subtree_of(&mut self, tree: &SearchTree, node: NodeId) -> usize {
+        if let Some(&s) = self.assignment.get(&node) {
+            return s;
+        }
+        let parent = tree.get(node).parent.expect("unassigned root in DVTS");
+        let s = self.subtree_of(tree, parent);
+        self.assignment.insert(node, s);
+        s
+    }
+}
+
+impl SearchPolicy for DvtsPolicy {
+    fn on_root_children(&mut self, children: &[NodeId]) {
+        // Round-robin the initial continuations over subtrees.
+        for (i, &c) in children.iter().enumerate() {
+            self.assignment.insert(c, i % self.subtrees);
+        }
+    }
+
+    fn allocate(&mut self, tree: &SearchTree, candidates: &[NodeId], width: usize) -> Allocation {
+        // Group candidates by subtree; best candidate per subtree survives.
+        let mut best: HashMap<usize, (NodeId, f64)> = HashMap::new();
+        for &c in candidates {
+            let s = self.subtree_of(tree, c);
+            let r = tree.get(c).reward;
+            match best.get(&s) {
+                Some(&(_, br)) if br >= r => {}
+                _ => {
+                    best.insert(s, (c, r));
+                }
+            }
+        }
+        let mut winners: Vec<(usize, NodeId)> =
+            best.into_iter().map(|(s, (c, _))| (s, c)).collect();
+        winners.sort_unstable(); // deterministic order by subtree id
+        let k = winners.len();
+        let base = width / k;
+        let extra = width % k;
+        winners
+            .into_iter()
+            .enumerate()
+            .map(|(rank, (_, c))| (c, base + usize::from(rank < extra)))
+            .filter(|&(_, n)| n > 0)
+            .collect()
+    }
+
+    fn name(&self) -> String {
+        format!("dvts-{}", self.subtrees)
+    }
+}
+
+/// REBASE (Wu et al. '24): balanced softmax allocation over PRM rewards.
+pub struct RebasePolicy {
+    pub temp: f64,
+}
+
+impl Default for RebasePolicy {
+    fn default() -> Self {
+        Self { temp: 0.2 }
+    }
+}
+
+impl SearchPolicy for RebasePolicy {
+    fn allocate(&mut self, tree: &SearchTree, candidates: &[NodeId], width: usize) -> Allocation {
+        let rewards = rewards_of(tree, candidates);
+        let w = rebase_allocate(&rewards, width, self.temp);
+        candidates
+            .iter()
+            .zip(w)
+            .filter(|&(_, n)| n > 0)
+            .map(|(&c, n)| (c, n))
+            .collect()
+    }
+
+    fn name(&self) -> String {
+        "rebase".into()
+    }
+}
+
+/// ETS (this paper): REBASE weights, then the ILP cost model (Eq. 4) prunes
+/// candidates to promote KV sharing while the coverage term preserves
+/// semantically diverse trajectories; survivors are re-weighted (Eq. 3).
+pub struct EtsPolicy<E: Embedder> {
+    pub temp: f64,
+    pub lambda_b: f64,
+    pub lambda_d: f64,
+    /// Cosine-distance threshold for the agglomerative clustering cut.
+    pub cluster_threshold: f64,
+    pub embedder: E,
+    /// Wall-clock budget for the exact solver (incumbent returned on expiry).
+    pub solver_budget: Duration,
+    /// Telemetry: candidates pruned by the cost model so far.
+    pub pruned_total: u64,
+}
+
+impl<E: Embedder> EtsPolicy<E> {
+    pub fn new(lambda_b: f64, lambda_d: f64, embedder: E) -> Self {
+        Self {
+            temp: 0.2,
+            lambda_b,
+            lambda_d,
+            cluster_threshold: 0.3,
+            embedder,
+            solver_budget: Duration::from_millis(10),
+            pruned_total: 0,
+        }
+    }
+}
+
+impl<E: Embedder> SearchPolicy for EtsPolicy<E> {
+    fn allocate(&mut self, tree: &SearchTree, candidates: &[NodeId], width: usize) -> Allocation {
+        let rewards = rewards_of(tree, candidates);
+        // Eq. 1 weights = the "value" of retaining each trajectory.
+        let weights = rebase_allocate(&rewards, width, self.temp);
+        // Candidates that REBASE itself would drop (n < k) are excluded.
+        let active: Vec<usize> =
+            (0..candidates.len()).filter(|&i| weights[i] > 0).collect();
+        if active.len() <= 1 {
+            return active.iter().map(|&i| (candidates[i], width)).collect();
+        }
+        // Cluster the latest steps of the active candidates.
+        let nodes: Vec<NodeId> = active.iter().map(|&i| candidates[i]).collect();
+        let (clusters, num_clusters) = if self.lambda_d > 0.0 {
+            let embs = self.embedder.embed(tree, &nodes);
+            let c = agglomerative(&embs, self.cluster_threshold);
+            (c.assignment, c.num_clusters)
+        } else {
+            // ETS-KV ablation: coverage term disabled; one dummy cluster.
+            (vec![0; nodes.len()], 1)
+        };
+        // Selection problem over the spanned live subtree. Node costs are
+        // KV-token weighted (Eq. 2's |V_S|/|V_A| measured in tokens — the
+        // actual KV footprint; identical to node counts for uniform steps).
+        let (parents, leaf_idx, span_tokens) = tree.spanned_subtree(&nodes);
+        let problem = SelectionProblem {
+            candidates: nodes
+                .iter()
+                .enumerate()
+                .map(|(j, _)| Candidate {
+                    weight: weights[active[j]] as f64,
+                    leaf_node: leaf_idx[j],
+                    cluster: clusters[j],
+                })
+                .collect(),
+            parents,
+            node_weight: span_tokens.iter().map(|&t| t.max(1) as f64).collect(),
+            num_clusters,
+            lambda_b: self.lambda_b,
+            lambda_d: self.lambda_d,
+        };
+        let selection = solve_tree(&problem, self.solver_budget);
+        self.pruned_total += (nodes.len() - selection.chosen.len()) as u64;
+        // Eq. 3: re-apply REBASE over the survivors only.
+        let surv_nodes: Vec<NodeId> = selection.chosen.iter().map(|&j| nodes[j]).collect();
+        let surv_rewards: Vec<f64> =
+            selection.chosen.iter().map(|&j| rewards[active[j]]).collect();
+        let w = rebase_allocate(&surv_rewards, width, self.temp);
+        surv_nodes
+            .into_iter()
+            .zip(w)
+            .filter(|&(_, n)| n > 0)
+            .collect()
+    }
+
+    fn name(&self) -> String {
+        if self.lambda_d == 0.0 {
+            format!("ets-kv(b={})", self.lambda_b)
+        } else {
+            format!("ets(b={},d={})", self.lambda_b, self.lambda_d)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::HashEmbedder;
+    use crate::tree::StepInfo;
+
+    /// Frontier of `n` children under the root with given rewards/groups.
+    fn frontier(rewards: &[f64], groups: &[u64]) -> (SearchTree, Vec<NodeId>) {
+        let mut t = SearchTree::new();
+        let root = t.init_root(10);
+        let ids = rewards
+            .iter()
+            .zip(groups)
+            .enumerate()
+            .map(|(i, (&r, &g))| {
+                t.add_child(
+                    root,
+                    StepInfo {
+                        tokens: 5,
+                        sem: g,
+                        paraphrase: i as u64,
+                        path_id: crate::workload::extend_path_id(0, g),
+                        ..Default::default()
+                    },
+                    r,
+                )
+            })
+            .collect();
+        (t, ids)
+    }
+
+    #[test]
+    fn beam_keeps_top_k_and_splits_width() {
+        let (t, ids) = frontier(&[0.9, 0.1, 0.8, 0.5], &[0, 1, 2, 3]);
+        let mut p = BeamPolicy { keep: 2 };
+        let alloc = p.allocate(&t, &ids, 16);
+        assert_eq!(alloc.len(), 2);
+        let total: usize = alloc.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, 16);
+        let chosen: Vec<NodeId> = alloc.iter().map(|&(c, _)| c).collect();
+        assert!(chosen.contains(&ids[0]) && chosen.contains(&ids[2]));
+    }
+
+    #[test]
+    fn rebase_allocates_to_all_candidates() {
+        let (t, ids) = frontier(&[0.9, 0.1, 0.8, 0.5], &[0, 1, 2, 3]);
+        let mut p = RebasePolicy::default();
+        let alloc = p.allocate(&t, &ids, 16);
+        assert_eq!(alloc.len(), 4, "balanced sampling keeps everyone");
+        let total: usize = alloc.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, 16);
+        let n_of = |id: NodeId| alloc.iter().find(|&&(c, _)| c == id).unwrap().1;
+        assert!(n_of(ids[0]) > n_of(ids[1]));
+    }
+
+    #[test]
+    fn dvts_retains_one_per_subtree() {
+        let (t, ids) = frontier(&[0.9, 0.1, 0.8, 0.5], &[0, 1, 2, 3]);
+        let mut p = DvtsPolicy::new(2);
+        p.on_root_children(&ids);
+        // subtree 0: ids[0] (0.9), ids[2] (0.8); subtree 1: ids[1], ids[3]
+        let alloc = p.allocate(&t, &ids, 8);
+        assert_eq!(alloc.len(), 2);
+        let chosen: Vec<NodeId> = alloc.iter().map(|&(c, _)| c).collect();
+        assert!(chosen.contains(&ids[0]), "best of subtree 0");
+        assert!(chosen.contains(&ids[3]), "best of subtree 1");
+        assert_eq!(alloc.iter().map(|&(_, n)| n).sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn ets_prunes_redundant_same_cluster_leaves() {
+        // 6 candidates: four paraphrases of group 0 (redundant), one each of
+        // groups 1, 2. Similar rewards. ETS should prune within group 0 but
+        // keep groups 1 and 2 covered.
+        let (t, ids) = frontier(
+            &[0.62, 0.60, 0.61, 0.59, 0.58, 0.57],
+            &[0, 0, 0, 0, 1, 2],
+        );
+        let mut p = EtsPolicy::new(1.5, 1.0, HashEmbedder::default());
+        let alloc = p.allocate(&t, &ids, 12);
+        let chosen: Vec<NodeId> = alloc.iter().map(|&(c, _)| c).collect();
+        assert!(chosen.len() < 6, "should prune: {alloc:?}");
+        assert!(
+            chosen.contains(&ids[4]) && chosen.contains(&ids[5]),
+            "diverse groups must survive: {alloc:?}"
+        );
+        assert_eq!(alloc.iter().map(|&(_, n)| n).sum::<usize>(), 12);
+        assert!(p.pruned_total > 0);
+    }
+
+    #[test]
+    fn ets_kv_ablation_skips_embedding() {
+        let (t, ids) = frontier(&[0.62, 0.60, 0.61], &[0, 1, 2]);
+        let mut p = EtsPolicy::new(1.0, 0.0, HashEmbedder::default());
+        let alloc = p.allocate(&t, &ids, 9);
+        assert!(!alloc.is_empty());
+        assert_eq!(alloc.iter().map(|&(_, n)| n).sum::<usize>(), 9);
+        assert!(p.name().starts_with("ets-kv"));
+    }
+
+    #[test]
+    fn lambda_zero_equals_rebase() {
+        let (t, ids) = frontier(&[0.9, 0.3, 0.6, 0.2], &[0, 1, 2, 3]);
+        let mut ets = EtsPolicy::new(0.0, 0.0, HashEmbedder::default());
+        let mut reb = RebasePolicy::default();
+        let a1: std::collections::HashMap<NodeId, usize> =
+            ets.allocate(&t, &ids, 20).into_iter().collect();
+        let a2: std::collections::HashMap<NodeId, usize> =
+            reb.allocate(&t, &ids, 20).into_iter().collect();
+        assert_eq!(a1, a2, "λ=0 must reduce to REBASE");
+    }
+}

@@ -1,0 +1,141 @@
+//! REBASE balanced sampling (paper Eq. 1 / Eq. 3) and allocation rounding.
+
+use crate::util::stats::softmax;
+
+/// Raw REBASE weights: `W_i = ceil(N * softmax(R / T_R)_i)` (Eq. 1).
+pub fn rebase_weights_raw(rewards: &[f64], n: usize, temp: f64) -> Vec<usize> {
+    assert!(temp > 0.0);
+    let scaled: Vec<f64> = rewards.iter().map(|r| r / temp).collect();
+    softmax(&scaled)
+        .into_iter()
+        .map(|p| (n as f64 * p).ceil().max(1.0) as usize)
+        .collect()
+}
+
+/// REBASE allocation: Eq. 1 weights adjusted so the total equals `n`
+/// (the open-source REBASE trims the ceil overshoot).
+///
+/// * `n >= k`: every candidate keeps >= 1 (balanced sampling); the overshoot
+///   is trimmed from the most over-allocated (vs. its exact share `N*p_i`)
+///   candidates, lowest reward first on ties.
+/// * `n < k`: only the top-`n` candidates by reward get one continuation.
+pub fn rebase_allocate(rewards: &[f64], n: usize, temp: f64) -> Vec<usize> {
+    let k = rewards.len();
+    if k == 0 || n == 0 {
+        return vec![0; k];
+    }
+    // ascending-reward order (trim / drop victims first)
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| rewards[a].partial_cmp(&rewards[b]).unwrap());
+    if n < k {
+        let mut w = vec![0; k];
+        for &c in order.iter().rev().take(n) {
+            w[c] = 1;
+        }
+        return w;
+    }
+    let scaled: Vec<f64> = rewards.iter().map(|r| r / temp).collect();
+    let p = softmax(&scaled);
+    let mut w = rebase_weights_raw(rewards, n, temp);
+    let mut total: usize = w.iter().sum();
+    // Trim overshoot: victim = most over-allocated with w > 1 (exact share
+    // as the reference), scanning ascending reward so ties hit low reward.
+    while total > n {
+        let mut victim = None;
+        let mut worst = f64::NEG_INFINITY;
+        for &c in &order {
+            if w[c] > 1 {
+                let over = w[c] as f64 - n as f64 * p[c];
+                if over > worst + 1e-12 {
+                    worst = over;
+                    victim = Some(c);
+                }
+            }
+        }
+        match victim {
+            Some(c) => {
+                w[c] -= 1;
+                total -= 1;
+            }
+            None => break, // all at 1 and still > n can't happen when n >= k
+        }
+    }
+    // Top-up if ceil under-shot (can't happen, but keep the invariant).
+    while total < n {
+        let c = *order.last().unwrap();
+        w[c] += 1;
+        total += 1;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weights_favor_high_reward() {
+        let w = rebase_allocate(&[0.9, 0.5, 0.1], 16, 0.2);
+        assert_eq!(w.iter().sum::<usize>(), 16);
+        assert!(w[0] > w[1] && w[1] >= w[2], "{w:?}");
+        assert!(w[2] >= 1, "balanced sampling keeps low-reward alive: {w:?}");
+    }
+
+    #[test]
+    fn high_temp_is_nearly_uniform() {
+        let w = rebase_allocate(&[0.9, 0.5, 0.1], 30, 100.0);
+        assert_eq!(w.iter().sum::<usize>(), 30);
+        let (mn, mx) = (w.iter().min().unwrap(), w.iter().max().unwrap());
+        assert!(mx - mn <= 2, "{w:?}");
+    }
+
+    #[test]
+    fn low_temp_concentrates() {
+        let w = rebase_allocate(&[0.9, 0.5, 0.1], 30, 0.01);
+        assert!(w[0] >= 28, "{w:?}");
+    }
+
+    #[test]
+    fn budget_below_candidates_drops_lowest() {
+        let w = rebase_allocate(&[0.9, 0.8, 0.2, 0.1], 2, 0.2);
+        assert_eq!(w.iter().sum::<usize>(), 2);
+        assert_eq!(w[3], 0);
+    }
+
+    #[test]
+    fn single_candidate_gets_everything() {
+        assert_eq!(rebase_allocate(&[0.5], 7, 0.2), vec![7]);
+    }
+
+    #[test]
+    fn prop_allocation_sums_to_n_and_respects_order() {
+        property(100, |rng: &mut Rng| {
+            let k = 1 + rng.index(32);
+            let n = 1 + rng.index(256);
+            let rewards: Vec<f64> = (0..k).map(|_| rng.f64()).collect();
+            let w = rebase_allocate(&rewards, n, 0.2);
+            crate::prop_check!(w.iter().sum::<usize>() == n, "sum {w:?} != {n}");
+            // monotone: higher reward never gets strictly fewer... allocation
+            // ties can differ by 1 from trimming, so allow slack of 1.
+            for a in 0..k {
+                for b in 0..k {
+                    if rewards[a] > rewards[b] {
+                        crate::prop_check!(
+                            w[a] + 1 >= w[b],
+                            "non-monotone: r{}={} w={} vs r{}={} w={}",
+                            a,
+                            rewards[a],
+                            w[a],
+                            b,
+                            rewards[b],
+                            w[b]
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,70 @@
+//! Final answer aggregation: weighted majority voting using each completed
+//! trajectory's final PRM score as its weight (Beeching et al. '24 — the
+//! aggregation the paper adopts).
+
+use std::collections::HashMap;
+
+/// A completed trajectory's (answer, final PRM score).
+pub type Completion = (i64, f64);
+
+/// Weighted majority vote. Returns `None` when nothing completed.
+pub fn weighted_majority(completions: &[Completion]) -> Option<i64> {
+    if completions.is_empty() {
+        return None;
+    }
+    let mut mass: HashMap<i64, f64> = HashMap::new();
+    for &(ans, w) in completions {
+        *mass.entry(ans).or_insert(0.0) += w.max(0.0);
+    }
+    mass.into_iter()
+        // deterministic tie-break on the answer value
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(b.0.cmp(&a.0)))
+        .map(|(ans, _)| ans)
+}
+
+/// Unweighted majority (baseline aggregation).
+pub fn majority(completions: &[Completion]) -> Option<i64> {
+    weighted_majority(&completions.iter().map(|&(a, _)| (a, 1.0)).collect::<Vec<_>>())
+}
+
+/// Best-of-N: answer of the single highest-scoring trajectory.
+pub fn best_of_n(completions: &[Completion]) -> Option<i64> {
+    completions
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|&(ans, _)| ans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_returns_none() {
+        assert_eq!(weighted_majority(&[]), None);
+        assert_eq!(best_of_n(&[]), None);
+    }
+
+    #[test]
+    fn weight_mass_beats_count() {
+        // two votes for 1 with tiny weight, one vote for 2 with huge weight
+        let c = vec![(1, 0.1), (1, 0.1), (2, 0.9)];
+        assert_eq!(weighted_majority(&c), Some(2));
+        assert_eq!(majority(&c), Some(1));
+    }
+
+    #[test]
+    fn best_of_n_takes_argmax() {
+        let c = vec![(1, 0.3), (2, 0.8), (3, 0.5)];
+        assert_eq!(best_of_n(&c), Some(2));
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let c = vec![(5, 0.5), (9, 0.5)];
+        let a = weighted_majority(&c);
+        for _ in 0..10 {
+            assert_eq!(weighted_majority(&c), a);
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Search-tree representation shared by all search policies.
+//!
+//! A [`SearchTree`] holds the partial-trajectory tree for one problem: every
+//! node is one reasoning *step* (a span of generated tokens), children extend
+//! their parent, and the KV cache for a node's tokens is shared by all
+//! descendants. Node bookkeeping (token counts, live/pruned state) feeds both
+//! the ETS cost model (`|V_S|`, `|V_A|`) and the KV-size efficiency metric.
+
+use std::collections::HashSet;
+
+/// Node id within a [`SearchTree`].
+pub type NodeId = usize;
+
+/// Payload of one generated step, supplied by a [`crate::lm::StepGenerator`].
+#[derive(Clone, Debug, Default)]
+pub struct StepInfo {
+    /// Number of tokens this step appended (its share of KV cache).
+    pub tokens: usize,
+    /// Semantic group of the step ("approach"); drives paraphrase-aware
+    /// embeddings. PJRT LMs derive it from content hashes.
+    pub sem: u64,
+    /// Paraphrase variant within the semantic group.
+    pub paraphrase: u64,
+    /// Surface token ids (PJRT path; empty for pure simulation).
+    pub token_ids: Vec<u32>,
+    /// Whether the trajectory ending here is complete (answer emitted).
+    pub terminal: bool,
+    /// Final answer value when `terminal`.
+    pub answer: Option<i64>,
+    /// WORKLOAD LATENT — never read by search policies: trajectory-prefix
+    /// identity in the synthetic fate space.
+    pub path_id: u64,
+    /// WORKLOAD LATENT — never read by search policies: whether the prefix
+    /// is still on a correct solution path.
+    pub alive: bool,
+}
+
+/// One step of a partial trajectory.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub parent: Option<NodeId>,
+    pub children: Vec<NodeId>,
+    /// Step payload.
+    pub step: StepInfo,
+    /// PRM reward of the trajectory prefix ending at this node.
+    pub reward: f64,
+    /// True while the node is part of a live (unpruned) trajectory path.
+    pub live: bool,
+}
+
+/// Partial-trajectory tree for one search problem.
+#[derive(Clone, Debug, Default)]
+pub struct SearchTree {
+    nodes: Vec<Node>,
+    root: Option<NodeId>,
+}
+
+impl SearchTree {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create the root (the problem prompt), with `tokens` prompt tokens.
+    pub fn init_root(&mut self, tokens: usize) -> NodeId {
+        assert!(self.root.is_none(), "root already set");
+        self.nodes.push(Node {
+            parent: None,
+            children: vec![],
+            step: StepInfo { tokens, alive: true, ..Default::default() },
+            reward: 0.0,
+            live: true,
+        });
+        self.root = Some(0);
+        0
+    }
+
+    pub fn root(&self) -> NodeId {
+        self.root.expect("tree has no root")
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn get(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn get_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id]
+    }
+
+    /// Append a child step under `parent`.
+    pub fn add_child(&mut self, parent: NodeId, step: StepInfo, reward: f64) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            parent: Some(parent),
+            children: vec![],
+            step,
+            reward,
+            live: true,
+        });
+        self.nodes[parent].children.push(id);
+        id
+    }
+
+    /// Path from root to `id`, inclusive.
+    pub fn path(&self, id: NodeId) -> Vec<NodeId> {
+        let mut p = vec![id];
+        let mut cur = id;
+        while let Some(parent) = self.nodes[cur].parent {
+            p.push(parent);
+            cur = parent;
+        }
+        p.reverse();
+        p
+    }
+
+    /// Depth of `id` (root = 0).
+    pub fn depth(&self, id: NodeId) -> usize {
+        self.path(id).len() - 1
+    }
+
+    /// Total tokens along the path root..=id (the sequence length at `id`).
+    pub fn seq_len(&self, id: NodeId) -> usize {
+        self.path(id).iter().map(|&n| self.nodes[n].step.tokens).sum()
+    }
+
+    /// Mark the paths of `keep` live and prune every other previously-live
+    /// leaf path. Returns the number of nodes that transitioned live→pruned.
+    pub fn retain_paths(&mut self, keep: &[NodeId]) -> usize {
+        let mut keep_set: HashSet<NodeId> = HashSet::new();
+        for &leaf in keep {
+            for n in self.path(leaf) {
+                keep_set.insert(n);
+            }
+        }
+        let mut pruned = 0;
+        for id in 0..self.nodes.len() {
+            if self.nodes[id].live && !keep_set.contains(&id) {
+                self.nodes[id].live = false;
+                pruned += 1;
+            }
+        }
+        pruned
+    }
+
+    /// Unique live nodes (`|V|` over the live tree).
+    pub fn live_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.live).count()
+    }
+
+    /// Total tokens held in KV cache by live nodes — the paper's per-step
+    /// "KV cache size" with perfect radix sharing (each node counted once).
+    pub fn live_kv_tokens(&self) -> usize {
+        self.nodes.iter().filter(|n| n.live).map(|n| n.step.tokens).sum()
+    }
+
+    /// Total KV tokens *without* any sharing (each live leaf pays its full
+    /// path) — what a sharing-oblivious server would allocate.
+    pub fn unshared_kv_tokens(&self, leaves: &[NodeId]) -> usize {
+        leaves.iter().map(|&l| self.seq_len(l)).sum()
+    }
+
+    /// Build the ETS selection sub-problem over `candidates` (current
+    /// frontier leaves): the spanned subtree with dense renumbering.
+    ///
+    /// Returns (parents vector, leaf-node index per candidate, tokens per
+    /// spanned node).
+    pub fn spanned_subtree(
+        &self,
+        candidates: &[NodeId],
+    ) -> (Vec<Option<usize>>, Vec<usize>, Vec<usize>) {
+        // Collect spanned nodes (dedup), keep stable order by node id so the
+        // parent always precedes the child (ids are allocation-ordered).
+        let mut in_span: HashSet<NodeId> = HashSet::new();
+        for &leaf in candidates {
+            for n in self.path(leaf) {
+                in_span.insert(n);
+            }
+        }
+        let mut span: Vec<NodeId> = in_span.iter().copied().collect();
+        span.sort_unstable();
+        let index_of = |id: NodeId| span.binary_search(&id).unwrap();
+        let parents: Vec<Option<usize>> = span
+            .iter()
+            .map(|&id| {
+                self.nodes[id]
+                    .parent
+                    .filter(|p| in_span.contains(p))
+                    .map(index_of)
+            })
+            .collect();
+        let leaf_idx: Vec<usize> = candidates.iter().map(|&c| index_of(c)).collect();
+        let tokens: Vec<usize> = span.iter().map(|&id| self.nodes[id].step.tokens).collect();
+        (parents, leaf_idx, tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    fn chain(tree: &mut SearchTree, from: NodeId, steps: usize, tokens: usize) -> NodeId {
+        let mut cur = from;
+        for _ in 0..steps {
+            cur = tree.add_child(cur, StepInfo { tokens, ..Default::default() }, 0.5);
+        }
+        cur
+    }
+
+    #[test]
+    fn path_and_depth() {
+        let mut t = SearchTree::new();
+        let root = t.init_root(10);
+        let leaf = chain(&mut t, root, 3, 5);
+        assert_eq!(t.depth(leaf), 3);
+        assert_eq!(t.path(leaf).len(), 4);
+        assert_eq!(t.seq_len(leaf), 10 + 15);
+    }
+
+    #[test]
+    fn retain_paths_prunes_others() {
+        let mut t = SearchTree::new();
+        let root = t.init_root(4);
+        let a = chain(&mut t, root, 2, 3);
+        let b = chain(&mut t, root, 2, 3);
+        assert_eq!(t.live_nodes(), 5);
+        let pruned = t.retain_paths(&[a]);
+        assert_eq!(pruned, 2);
+        assert_eq!(t.live_nodes(), 3);
+        assert!(t.get(b).live == false);
+        assert_eq!(t.live_kv_tokens(), 4 + 6);
+    }
+
+    #[test]
+    fn shared_vs_unshared_kv() {
+        let mut t = SearchTree::new();
+        let root = t.init_root(100);
+        // two leaves sharing the 100-token prompt + a 10-token step
+        let mid = t.add_child(root, StepInfo { tokens: 10, ..Default::default() }, 0.5);
+        let l1 = t.add_child(mid, StepInfo { tokens: 10, ..Default::default() }, 0.5);
+        let l2 = t.add_child(mid, StepInfo { tokens: 10, ..Default::default() }, 0.5);
+        assert_eq!(t.live_kv_tokens(), 130);
+        assert_eq!(t.unshared_kv_tokens(&[l1, l2]), 2 * 120);
+    }
+
+    #[test]
+    fn spanned_subtree_renumbers_consistently() {
+        let mut t = SearchTree::new();
+        let root = t.init_root(1);
+        let a1 = t.add_child(root, StepInfo { tokens: 1, ..Default::default() }, 0.5);
+        let _dead = chain(&mut t, root, 3, 1); // not part of candidates
+        let a2 = t.add_child(a1, StepInfo { tokens: 1, ..Default::default() }, 0.5);
+        let b = t.add_child(root, StepInfo { tokens: 1, ..Default::default() }, 0.5);
+        let (parents, leaf_idx, tokens) = t.spanned_subtree(&[a2, b]);
+        assert_eq!(parents.len(), 4); // root, a1, a2, b
+        assert_eq!(tokens.len(), 4);
+        // exactly one root in the span
+        assert_eq!(parents.iter().filter(|p| p.is_none()).count(), 1);
+        // each candidate's leaf index valid and parents chain to the root
+        for &li in &leaf_idx {
+            let mut v = li;
+            let mut hops = 0;
+            while let Some(p) = parents[v] {
+                v = p;
+                hops += 1;
+                assert!(hops <= parents.len());
+            }
+        }
+    }
+
+    #[test]
+    fn prop_live_kv_never_exceeds_unshared() {
+        property(100, |rng: &mut Rng| {
+            let mut t = SearchTree::new();
+            let root = t.init_root(1 + rng.index(50));
+            let mut leaves = vec![root];
+            for _ in 0..rng.index(40) {
+                let parent = leaves[rng.index(leaves.len())];
+                let leaf = t.add_child(
+                    parent,
+                    StepInfo { tokens: 1 + rng.index(20), ..Default::default() },
+                    rng.f64(),
+                );
+                leaves.push(leaf);
+            }
+            let frontier: Vec<NodeId> = leaves
+                .iter()
+                .copied()
+                .filter(|&l| t.get(l).children.is_empty())
+                .collect();
+            let shared = t.live_kv_tokens();
+            let unshared = t.unshared_kv_tokens(&frontier);
+            crate::prop_check!(
+                shared <= unshared || frontier.is_empty(),
+                "shared {shared} > unshared {unshared}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_retain_then_live_matches_kept_union() {
+        property(100, |rng: &mut Rng| {
+            let mut t = SearchTree::new();
+            let root = t.init_root(1);
+            let mut all = vec![root];
+            for _ in 0..(1 + rng.index(30)) {
+                let parent = all[rng.index(all.len())];
+                all.push(t.add_child(parent, StepInfo { tokens: 1, ..Default::default() }, 0.5));
+            }
+            let k = 1 + rng.index(all.len());
+            let keep: Vec<NodeId> = rng.sample_indices(all.len(), k);
+            t.retain_paths(&keep);
+            let mut expect: std::collections::HashSet<NodeId> =
+                std::collections::HashSet::new();
+            for &l in &keep {
+                for n in t.path(l) {
+                    expect.insert(n);
+                }
+            }
+            crate::prop_check!(t.live_nodes() == expect.len());
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,153 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands (first positional). Typed getters parse on access and report
+//! readable errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, flags, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Binary name (argv[0]).
+    pub program: String,
+    /// Key → value for `--key value` / `--key=value`.
+    opts: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+    /// Positional arguments in order (subcommand not included).
+    pub positional: Vec<String>,
+}
+
+/// Option keys that take a value; everything else starting with `--` is a flag.
+pub struct Spec {
+    value_keys: Vec<&'static str>,
+}
+
+impl Spec {
+    pub fn new(value_keys: &[&'static str]) -> Self {
+        Self { value_keys: value_keys.to_vec() }
+    }
+
+    /// Parse a raw argv (excluding nothing; pass `std::env::args()`).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut it = argv.into_iter();
+        let program = it.next().unwrap_or_default();
+        let mut args = Args { program, ..Default::default() };
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if self.value_keys.contains(&body) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{body} expects a value"))?;
+                    args.opts.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    /// First positional (conventionally the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}={v}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}={v}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}={v}: {e}")),
+        }
+    }
+
+    /// Comma-separated list of usize, e.g. `--widths 16,64,256`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|e| format!("--{key}={v}: {e}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(s.split_whitespace().map(|t| t.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let spec = Spec::new(&["width", "dataset"]);
+        let a = spec
+            .parse(argv("search --width 64 --dataset=synth-math500 --verbose extra"))
+            .unwrap();
+        assert_eq!(a.subcommand(), Some("search"));
+        assert_eq!(a.get("width"), Some("64"));
+        assert_eq!(a.get("dataset"), Some("synth-math500"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["search", "extra"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let spec = Spec::new(&["n", "x", "widths"]);
+        let a = spec.parse(argv("--n 5 --x 1.5 --widths 16,64,256")).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_usize_list("widths", &[]).unwrap(), vec![16, 64, 256]);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let spec = Spec::new(&["width"]);
+        assert!(spec.parse(argv("--width")).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let spec = Spec::new(&["n"]);
+        let a = spec.parse(argv("--n abc")).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

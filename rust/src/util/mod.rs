@@ -1,0 +1,11 @@
+//! Shared infrastructure substrates: RNG, stats, JSON, CLI args, TOML config,
+//! and a mini property-testing harness. These replace external crates that
+//! are unreachable in the offline build environment (rand, serde, clap, toml,
+//! proptest).
+
+pub mod argparse;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod toml;

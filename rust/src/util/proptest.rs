@@ -1,0 +1,100 @@
+//! Mini property-testing harness (the `proptest` crate is unavailable).
+//!
+//! Usage:
+//! ```ignore
+//! property(256, |rng| {
+//!     let n = rng.index(20) + 1;
+//!     let xs: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+//!     let p = softmax(&xs);
+//!     check!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9, "sum {p:?}");
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Each case gets an independently seeded [`Rng`]; on failure the harness
+//! reports the failing case's seed so it can be replayed deterministically
+//! with [`replay`]. (No shrinking — cases should be generated small.)
+
+use super::rng::Rng;
+
+/// Result of one property case. `Err(msg)` fails the property.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of property `f`. Panics (test failure) on the
+/// first failing case, printing its seed.
+pub fn property<F: FnMut(&mut Rng) -> CaseResult>(cases: u64, mut f: F) {
+    // Fixed master seed keeps CI deterministic; change locally to explore.
+    let master = 0xE75_5EED_u64;
+    for case in 0..cases {
+        let seed = master.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at case {case} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F: FnMut(&mut Rng) -> CaseResult>(seed: u64, mut f: F) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replay seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assert inside a property body, returning a `CaseResult`-compatible error.
+#[macro_export]
+macro_rules! prop_check {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("check failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property(50, |rng| {
+            count += 1;
+            let x = rng.f64();
+            prop_check!((0.0..1.0).contains(&x));
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        property(50, |rng| {
+            let x = rng.f64();
+            prop_check!(x < 0.5, "x = {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut first = None;
+        replay(1234, |rng| {
+            first = Some(rng.next_u64());
+            Ok(())
+        });
+        let mut second = None;
+        replay(1234, |rng| {
+            second = Some(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,238 @@
+//! TOML-subset parser for config files (the `toml` crate is unavailable).
+//!
+//! Supported grammar — enough for launcher configs:
+//!   * `[section]` and `[section.sub]` headers
+//!   * `key = "string" | 123 | 1.5 | true | false | [1, 2, 3] | ["a", "b"]`
+//!   * `#` comments, blank lines
+//!
+//! Values land in a flat `section.key → Value` map.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+}
+
+/// Parsed document: dotted-path key → value.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = parse_value(v.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            map.insert(key, val);
+        }
+        Ok(Doc { map })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.map.get(path)
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(body) = s.strip_prefix('"') {
+        let inner = body
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let inner = body
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {s}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            split_top_level(inner).iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value: {s}"))
+}
+
+/// Split on commas that are not inside quotes (arrays of strings).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = vec![];
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# launcher config
+name = "ets-serve"
+
+[search]
+method = "ets"        # policy
+width = 256
+lambda_b = 1.5
+lambda_d = 1.0
+widths = [16, 64, 256]
+
+[engine]
+real_pjrt = false
+datasets = ["synth-math500", "synth-gsm8k"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str_or("name", ""), "ets-serve");
+        assert_eq!(d.str_or("search.method", ""), "ets");
+        assert_eq!(d.usize_or("search.width", 0), 256);
+        assert_eq!(d.f64_or("search.lambda_b", 0.0), 1.5);
+        assert!(!d.bool_or("engine.real_pjrt", true));
+        let widths = d.get("search.widths").unwrap();
+        assert_eq!(
+            widths,
+            &Value::Arr(vec![Value::Num(16.0), Value::Num(64.0), Value::Num(256.0)])
+        );
+        let ds = d.get("engine.datasets").unwrap();
+        assert_eq!(
+            ds,
+            &Value::Arr(vec![
+                Value::Str("synth-math500".into()),
+                Value::Str("synth-gsm8k".into())
+            ])
+        );
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let d = Doc::parse("").unwrap();
+        assert_eq!(d.usize_or("nope", 7), 7);
+        assert_eq!(d.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let d = Doc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(d.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_reported_with_line() {
+        let err = Doc::parse("x = ").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("novalue").is_err());
+    }
+}

@@ -1,0 +1,357 @@
+//! Synthetic math-reasoning workload (substitute for MATH500 / GSM8K).
+//!
+//! The search policies only see *reward scores, step token counts, semantic
+//! groups, and final answers*; they never read natural language. The
+//! generator therefore models exactly the statistics that drive tree search:
+//!
+//! * A problem is solved by a chain of `n_steps` correct reasoning steps.
+//! * At each expansion the LM proposes a step drawn from a small set of
+//!   **semantic groups** ("approaches"); paraphrases within a group are
+//!   surface-level variants of the same idea.
+//! * Whether a semantic group is *on-track* at a given tree node is a
+//!   **deterministic function of (problem, node path, group)** — sampling the
+//!   same group twice from the same parent yields the same fate (redundant!),
+//!   while different groups are independent draws. This is the structure that
+//!   makes semantic diversity genuinely valuable for exploration and
+//!   redundancy genuinely prunable — the dynamic ETS exploits (paper §4.2).
+//! * A trajectory that takes a wrong step is *doomed* (will emit a wrong
+//!   final answer) but keeps generating plausible steps — as in real CoT.
+//! * The oracle PRM observes the doomed/alive latent through noise
+//!   (see [`crate::reward`]).
+//!
+//! Two dataset profiles (difficulty) × two model profiles (step accuracy)
+//! reproduce the 2×2 structure of the paper's evaluation.
+
+use crate::util::rng::Rng;
+
+/// Dataset difficulty profile (synth-math500 ≈ MATH500, synth-gsm8k ≈ GSM8K).
+#[derive(Clone, Debug)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    /// Steps needed for a full solution.
+    pub n_steps: usize,
+    /// Distinct semantic approaches available at each node.
+    pub n_groups: usize,
+    /// Distinct wrong answers doomed trajectories can emit. Real wrong
+    /// numeric answers scatter widely, which keeps weighted-majority voting
+    /// from being drowned by doomed-trajectory mass.
+    pub n_wrong_answers: usize,
+    /// Per-problem difficulty mixture: (probability, p_correct lo, hi).
+    /// Difficulty = per-step probability that a fresh semantic approach is
+    /// on-track; drawn once per problem.
+    pub difficulty_mix: [(f64, f64, f64); 3],
+    /// Mean tokens per reasoning step.
+    pub step_tokens_mean: f64,
+    pub step_tokens_std: f64,
+    /// Prompt length in tokens.
+    pub prompt_tokens: usize,
+}
+
+/// Generator ("LM") capability profile.
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    /// Probability that a *fresh semantic group* at an alive node is on-track.
+    /// Per-dataset multiplier applied via [`WorkloadSpec::p_correct`].
+    pub skill: f64,
+    /// PRM observation noise (std of the fresh logit-space perturbation).
+    pub prm_noise: f64,
+    /// PRM logit margin between alive and doomed trajectories.
+    pub prm_margin: f64,
+    /// Std of the *persistent* per-path PRM bias innovation (AR(1) along the
+    /// trajectory): models systematically deceptive reasoning paths that
+    /// keep fooling the verifier — what exploitation-heavy beam search
+    /// commits to and diverse search hedges against.
+    pub prm_bias_sigma: f64,
+    /// AR(1) decay of the inherited path bias.
+    pub prm_bias_rho: f64,
+    /// Weight bytes (for the serving perf model; f16).
+    pub weight_bytes: u64,
+    /// KV bytes per token (for the serving perf model).
+    pub kv_bytes_per_token: u64,
+}
+
+pub const SYNTH_MATH500: DatasetProfile = DatasetProfile {
+    name: "synth-math500",
+    n_steps: 8,
+    n_groups: 10,
+    n_wrong_answers: 48,
+    difficulty_mix: [(0.45, 0.88, 0.99), (0.13, 0.70, 0.88), (0.42, 0.25, 0.60)],
+    step_tokens_mean: 55.0,
+    step_tokens_std: 18.0,
+    prompt_tokens: 120,
+};
+
+pub const SYNTH_GSM8K: DatasetProfile = DatasetProfile {
+    name: "synth-gsm8k",
+    n_steps: 5,
+    n_groups: 8,
+    n_wrong_answers: 24,
+    difficulty_mix: [(0.78, 0.92, 0.995), (0.10, 0.75, 0.92), (0.12, 0.30, 0.70)],
+    step_tokens_mean: 40.0,
+    step_tokens_std: 12.0,
+    prompt_tokens: 80,
+};
+
+/// Llemma-34B (Metamath) + Llemma-34B PRM analogue.
+pub const LLEMMA_34B_SIM: ModelProfile = ModelProfile {
+    name: "llemma-34b-sim",
+    skill: 1.0,
+    prm_noise: 0.45,
+    prm_margin: 1.1,
+    prm_bias_sigma: 0.55,
+    prm_bias_rho: 0.80,
+    weight_bytes: 68_000_000_000,
+    kv_bytes_per_token: 1_966_080, // 48 layers * 8 kv heads * 128 dim * 2 * 2B (GQA)
+};
+
+/// Mistral-7B-SFT (Metamath) + Math-Shepherd PRM analogue.
+pub const MISTRAL_7B_SIM: ModelProfile = ModelProfile {
+    name: "mistral-7b-sim",
+    skill: 0.93,
+    prm_noise: 0.55,
+    prm_margin: 1.0,
+    prm_bias_sigma: 0.65,
+    prm_bias_rho: 0.80,
+    weight_bytes: 14_000_000_000,
+    kv_bytes_per_token: 524_288, // 32 layers * 8 kv heads * 128 dim * 2 * 2B
+};
+
+pub fn dataset_by_name(name: &str) -> Option<&'static DatasetProfile> {
+    match name {
+        "synth-math500" => Some(&SYNTH_MATH500),
+        "synth-gsm8k" => Some(&SYNTH_GSM8K),
+        _ => None,
+    }
+}
+
+pub fn model_by_name(name: &str) -> Option<&'static ModelProfile> {
+    match name {
+        "llemma-34b-sim" => Some(&LLEMMA_34B_SIM),
+        "mistral-7b-sim" => Some(&MISTRAL_7B_SIM),
+        _ => None,
+    }
+}
+
+/// A dataset+model pairing with derived per-step solve probability.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub dataset: DatasetProfile,
+    pub model: ModelProfile,
+}
+
+impl WorkloadSpec {
+    pub fn new(dataset: &DatasetProfile, model: &ModelProfile) -> Self {
+        Self { dataset: dataset.clone(), model: model.clone() }
+    }
+
+    /// Draw a per-problem difficulty (step-level on-track probability) from
+    /// the dataset mixture, scaled by the model's skill.
+    ///
+    /// The mixture reproduces the benchmark structure: a mass of problems
+    /// the model reliably solves, a band of marginal problems where search
+    /// width/diversity decides the outcome, and a hard tail.
+    pub fn sample_difficulty(&self, rng: &mut Rng) -> f64 {
+        let mix = &self.dataset.difficulty_mix;
+        let r = rng.f64();
+        let (mut acc, mut band) = (0.0, &mix[0]);
+        for b in mix {
+            acc += b.0;
+            if r < acc {
+                band = b;
+                break;
+            }
+            band = b;
+        }
+        let p = band.1 + rng.f64() * (band.2 - band.1);
+        (p * self.model.skill).clamp(0.01, 0.995)
+    }
+}
+
+/// One synthetic problem instance.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    pub id: u64,
+    /// Root entropy: all latent step fates derive from this.
+    pub seed: u64,
+    pub spec: WorkloadSpec,
+    /// Ground-truth final answer.
+    pub answer: i64,
+    /// Per-problem difficulty: step-level on-track probability.
+    pub p_correct: f64,
+}
+
+/// A deterministic 64-bit mix (splitmix-style) for latent fate hashing.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Identity of a trajectory prefix = fold of chosen semantic groups.
+pub fn extend_path_id(parent_path_id: u64, group: u64) -> u64 {
+    mix(parent_path_id ^ mix(group.wrapping_add(0xABCD_EF01)))
+}
+
+impl Problem {
+    /// Probability that a specific on-gate approach works (given the node's
+    /// gate is open). High: when the model "sees" the continuation, most of
+    /// its proposed approaches are fine.
+    pub const P_GROUP: f64 = 0.92;
+
+    /// Node-level gate: does the state at `path_id` admit a continuation the
+    /// model can find? Fates are *correlated within a node* — if the model
+    /// is lost at a state, every sample from that state fails together, so
+    /// extra samples from one node barely help and independent trajectories
+    /// (diversity) are the real hedge. This correlation is what makes beam
+    /// search plateau with width and diverse search scale (paper Fig. 3).
+    pub fn node_gate(&self, path_id: u64) -> bool {
+        let h = mix(self.seed ^ mix(path_id ^ 0x6A7E));
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < self.p_correct
+    }
+
+    /// Is semantic `group`, taken at the node identified by `path_id`
+    /// (with an alive prefix), on-track? Deterministic: same (path, group)
+    /// → same fate; gated at the node level (see [`Self::node_gate`]).
+    pub fn group_on_track(&self, path_id: u64, group: u64) -> bool {
+        if !self.node_gate(path_id) {
+            return false;
+        }
+        let h = mix(self.seed ^ extend_path_id(path_id, group));
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < Self::P_GROUP
+    }
+
+    /// Wrong answer a doomed trajectory emits (deterministic per path).
+    pub fn wrong_answer(&self, path_id: u64) -> i64 {
+        let k = self.spec.dataset.n_wrong_answers as u64;
+        let h = mix(self.seed ^ mix(path_id ^ 0x5ADD));
+        // offset by 1..=k so it never collides with the true answer
+        self.answer + 1 + (h % k) as i64
+    }
+
+    /// Tokens for one generated step (deterministic per path).
+    pub fn step_tokens(&self, path_id: u64) -> usize {
+        let mut r = Rng::new(self.seed ^ mix(path_id ^ 0x70C5));
+        let t = r.normal_ms(self.spec.dataset.step_tokens_mean, self.spec.dataset.step_tokens_std);
+        t.max(4.0) as usize
+    }
+}
+
+/// A reproducible problem set ("dataset").
+pub struct ProblemSet {
+    pub problems: Vec<Problem>,
+}
+
+impl ProblemSet {
+    /// Generate `n` problems for a workload spec from a master seed.
+    pub fn generate(spec: &WorkloadSpec, n: usize, master_seed: u64) -> Self {
+        let mut rng = Rng::new(master_seed ^ mix(spec.dataset.name.len() as u64));
+        let problems = (0..n)
+            .map(|i| {
+                let seed = rng.next_u64();
+                let p_correct = spec.sample_difficulty(&mut rng);
+                Problem {
+                    id: i as u64,
+                    seed,
+                    spec: spec.clone(),
+                    answer: rng.range_i64(0, 999),
+                    p_correct,
+                }
+            })
+            .collect();
+        Self { problems }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM)
+    }
+
+    #[test]
+    fn problems_are_reproducible() {
+        let a = ProblemSet::generate(&spec(), 10, 1);
+        let b = ProblemSet::generate(&spec(), 10, 1);
+        for (x, y) in a.problems.iter().zip(&b.problems) {
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.answer, y.answer);
+        }
+        let c = ProblemSet::generate(&spec(), 10, 2);
+        assert_ne!(a.problems[0].seed, c.problems[0].seed);
+    }
+
+    #[test]
+    fn group_fate_is_deterministic_and_group_dependent() {
+        let p = &ProblemSet::generate(&spec(), 1, 3).problems[0];
+        let path = 12345u64;
+        for g in 0..6u64 {
+            assert_eq!(p.group_on_track(path, g), p.group_on_track(path, g));
+        }
+        // across many (path, group) draws the on-track frequency ≈
+        // p_correct * P_GROUP (gate x approach coin)
+        let mut on = 0;
+        let total = 8000;
+        for i in 0..total {
+            if p.group_on_track(mix(i), i % 6) {
+                on += 1;
+            }
+        }
+        let f = on as f64 / total as f64;
+        let target = p.p_correct * Problem::P_GROUP;
+        assert!((f - target).abs() < 0.05, "freq {f} vs target {target}");
+    }
+
+    #[test]
+    fn wrong_answers_never_equal_truth() {
+        let p = &ProblemSet::generate(&spec(), 1, 4).problems[0];
+        for i in 0..500u64 {
+            assert_ne!(p.wrong_answer(mix(i)), p.answer);
+        }
+    }
+
+    #[test]
+    fn path_ids_distinguish_group_order() {
+        let a = extend_path_id(extend_path_id(0, 1), 2);
+        let b = extend_path_id(extend_path_id(0, 2), 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn step_tokens_positive_and_deterministic() {
+        let p = &ProblemSet::generate(&spec(), 1, 5).problems[0];
+        for i in 0..100u64 {
+            let t = p.step_tokens(mix(i));
+            assert!(t >= 4);
+            assert_eq!(t, p.step_tokens(mix(i)));
+        }
+    }
+
+    #[test]
+    fn gsm_easier_than_math() {
+        let m = WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM);
+        let g = WorkloadSpec::new(&SYNTH_GSM8K, &LLEMMA_34B_SIM);
+        let mut rng = Rng::new(0);
+        let avg = |s: &WorkloadSpec, rng: &mut Rng| -> f64 {
+            (0..2000).map(|_| s.sample_difficulty(rng)).sum::<f64>() / 2000.0
+        };
+        let pm = avg(&m, &mut rng);
+        let pg = avg(&g, &mut rng);
+        assert!(pg > pm + 0.15, "gsm mean {pg} vs math mean {pm}");
+    }
+
+    #[test]
+    fn difficulty_mixture_within_bounds() {
+        let m = WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM);
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let p = m.sample_difficulty(&mut rng);
+            assert!((0.01..=0.995).contains(&p));
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Integration: the AOT artifacts load, compile, and reproduce the golden
+//! outputs recorded by python at lowering time — proving the HLO-text
+//! interchange preserves the baked weights bit-for-bit enough (f32 ~1e-5).
+//!
+//! Requires `make artifacts` (skips with a message if artifacts/ is absent,
+//! so plain `cargo test` works in a fresh checkout).
+
+use ets::runtime::{lit_f32, lit_i32, to_vec_f32, Artifacts};
+use ets::util::json::Json;
+
+fn artifacts() -> Option<(Artifacts, Json)> {
+    let dir = ets::runtime::default_artifacts_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping: run `make artifacts` first ({} missing)", dir.display());
+        return None;
+    }
+    let golden_text = std::fs::read_to_string(dir.join("golden.json")).ok()?;
+    let golden = Json::parse(&golden_text).expect("golden.json parses");
+    let arts = Artifacts::open(dir).expect("artifacts open");
+    Some((arts, golden))
+}
+
+fn golden_vec(g: &Json, key: &str) -> Vec<f32> {
+    g.get(key)
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("golden key {key}"))
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn prefill_decode_match_golden() {
+    let Some((arts, golden)) = artifacts() else { return };
+    let d = arts.dims.clone();
+    let s = d.max_seq;
+
+    // ---- prefill(b=1) on the golden prompt ----
+    let prompt: Vec<i32> = golden_vec(&golden, "prefill_tokens16")
+        .iter()
+        .map(|&x| x as i32)
+        .collect();
+    let mut tokens = vec![0i32; s];
+    tokens[..16].copy_from_slice(&prompt);
+    let prefill = arts.executable("lm_prefill_b1").expect("compile prefill");
+    let out = prefill
+        .run(&[
+            lit_i32(&tokens, &[1, s as i64]).unwrap(),
+            lit_i32(&[16], &[1]).unwrap(),
+        ])
+        .expect("prefill run");
+    assert_eq!(out.len(), 3, "prefill returns (logits, k, v)");
+    let logits = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(logits.len(), d.vocab);
+    close(
+        &logits[..8],
+        &golden_vec(&golden, "prefill_logits_head"),
+        2e-4,
+        "prefill logits",
+    );
+
+    // ---- decode one step with the produced KV ----
+    let decode = arts.executable("lm_decode_b1").expect("compile decode");
+    let tok = golden.get("decode_token").unwrap().as_f64().unwrap() as i32;
+    let pos = golden.get("decode_pos").unwrap().as_f64().unwrap() as i32;
+    let out2 = decode
+        .run(&[
+            lit_i32(&[tok], &[1]).unwrap(),
+            lit_i32(&[pos], &[1]).unwrap(),
+            out[1].clone(),
+            out[2].clone(),
+        ])
+        .expect("decode run");
+    let dlogits = to_vec_f32(&out2[0]).unwrap();
+    close(
+        &dlogits[..8],
+        &golden_vec(&golden, "decode_logits_head"),
+        2e-4,
+        "decode logits",
+    );
+}
+
+#[test]
+fn prm_scores_match_golden() {
+    let Some((arts, golden)) = artifacts() else { return };
+    let d = arts.dims.clone();
+    let s = d.max_seq;
+    let b = d.prm_batch;
+    let prompt: Vec<i32> = golden_vec(&golden, "prefill_tokens16")
+        .iter()
+        .map(|&x| x as i32)
+        .collect();
+    let mut tokens = vec![0i32; b * s];
+    tokens[..16].copy_from_slice(&prompt);
+    let mut lens = vec![1i32; b];
+    lens[0] = 16;
+    let prm = arts.executable(&format!("prm_score_b{b}")).expect("compile prm");
+    let out = prm
+        .run(&[
+            lit_i32(&tokens, &[b as i64, s as i64]).unwrap(),
+            lit_i32(&lens, &[b as i64]).unwrap(),
+        ])
+        .expect("prm run");
+    let scores = to_vec_f32(&out[0]).unwrap();
+    close(&scores, &golden_vec(&golden, "prm_scores"), 2e-4, "prm scores");
+    for &sc in &scores {
+        assert!((0.0..=1.0).contains(&sc), "score {sc} outside [0,1]");
+    }
+}
+
+#[test]
+fn embedder_matches_golden() {
+    let Some((arts, golden)) = artifacts() else { return };
+    let d = arts.dims.clone();
+    let (b, se) = (d.embed_batch, d.embed_max_seq);
+    let mut tokens = vec![0i32; b * se];
+    tokens[..5].copy_from_slice(&[3, 1, 4, 1, 5]);
+    tokens[se..se + 3].copy_from_slice(&[2, 7, 1]);
+    let mut lens = vec![1i32; b];
+    lens[0] = 5;
+    lens[1] = 3;
+    let emb = arts.executable(&format!("embed_b{b}")).expect("compile embed");
+    let out = emb
+        .run(&[
+            lit_i32(&tokens, &[b as i64, se as i64]).unwrap(),
+            lit_i32(&lens, &[b as i64]).unwrap(),
+        ])
+        .expect("embed run");
+    let e = to_vec_f32(&out[0]).unwrap();
+    close(
+        &e[..8],
+        &golden_vec(&golden, "embed_head"),
+        2e-4,
+        "embedding row 0",
+    );
+    let row1: &[f32] = &e[d.embed_out_dim..2 * d.embed_out_dim];
+    let norm = row1.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let expect = golden.get("embed_norm_row1").unwrap().as_f64().unwrap() as f32;
+    assert!((norm - expect).abs() < 1e-3, "norm {norm} vs {expect}");
+}
+
+#[test]
+fn tree_attn_artifact_runs_and_is_prefix_consistent() {
+    let Some((arts, _)) = artifacts() else { return };
+    // shapes from meta: g=8, sp=64, ss=16, H=n_heads, D=head_dim
+    let (g, sp, ss) = (8usize, 64usize, 16usize);
+    let (h, dd) = (arts.dims.n_heads, arts.dims.head_dim);
+    let exe = arts.executable("tree_attn").expect("compile tree_attn");
+    // deterministic pseudo-random inputs
+    let mut rng = ets::util::rng::Rng::new(42);
+    let fill = |rng: &mut ets::util::rng::Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    };
+    let q = fill(&mut rng, g * h * dd);
+    let kp = fill(&mut rng, h * sp * dd);
+    let vp = fill(&mut rng, h * sp * dd);
+    let ks = fill(&mut rng, g * h * ss * dd);
+    let vs = fill(&mut rng, g * h * ss * dd);
+    let slen = vec![ss as i32; g];
+    let run = |plen: i32| -> Vec<f32> {
+        let out = exe
+            .run(&[
+                lit_f32(&q, &[g as i64, h as i64, dd as i64]).unwrap(),
+                lit_f32(&kp, &[h as i64, sp as i64, dd as i64]).unwrap(),
+                lit_f32(&vp, &[h as i64, sp as i64, dd as i64]).unwrap(),
+                lit_f32(&ks, &[g as i64, h as i64, ss as i64, dd as i64]).unwrap(),
+                lit_f32(&vs, &[g as i64, h as i64, ss as i64, dd as i64]).unwrap(),
+                lit_i32(&[plen], &[1]).unwrap(),
+                lit_i32(&slen, &[g as i64]).unwrap(),
+            ])
+            .expect("tree_attn run");
+        to_vec_f32(&out[0]).unwrap()
+    };
+    let full = run(sp as i32);
+    let short = run(8);
+    assert_eq!(full.len(), g * h * dd);
+    assert!(full.iter().all(|x| x.is_finite()));
+    // masking must change the result (prefix positions 8.. carry signal)
+    let diff: f32 = full.iter().zip(&short).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 1e-3, "prefix_len mask has no effect (diff {diff})");
+}
