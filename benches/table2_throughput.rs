@@ -1,96 +1,82 @@
 //! Table 2 reproduction: serving throughput of ETS vs REBASE at width 256
-//! (synth-math500, llemma-34b-sim), on the H100-NVL roofline model with the
-//! paper's thread sweep {4, 8, 16, 32} — best configuration per method.
+//! (synth-math500, llemma-34b-sim) — measured through the *batched serve
+//! path*: concurrent problems interleave steps through one engine/radix
+//! cache, and every merged batch is costed on the H100-NVL roofline
+//! (`PerfModel::batch_latency`). Concurrency sweep {4, 8, 16, 32}, best
+//! configuration per method.
 //!
 //! Claim to reproduce: ETS's KV reduction (~1.8x) converts into higher
-//! throughput (~1.4x) without custom kernels, because smaller working sets
-//! mean fewer bytes and less batch fragmentation.
+//! throughput (~1.4x) without custom kernels, because a smaller resident
+//! working set means fewer bytes per decode iteration and less batch
+//! fragmentation.
 
 use ets::engine::{PerfModel, H100_NVL};
-use ets::eval::PolicySpec;
-use ets::lm::SynthLm;
-use ets::metrics::{pct, ratio, Table};
-use ets::reward::OraclePrm;
-use ets::search::{run_search, SearchOutcome, SearchParams};
-use ets::workload::{ProblemSet, WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
+use ets::eval::{evaluate_serve, EvalConfig, PolicySpec, ServeEvalReport};
+use ets::metrics::{ms, pct, ratio, Table};
+use ets::util::stats;
+use ets::workload::{WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
 
-fn outcomes(policy: &PolicySpec, width: usize, n: usize) -> (Vec<SearchOutcome>, f64) {
-    let spec = WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM);
-    let seed = 20260710u64;
-    let problems = ProblemSet::generate(&spec, n, seed);
-    let mut outs = Vec::with_capacity(n);
-    let mut correct = 0usize;
-    for p in problems.problems {
-        let truth = p.answer;
-        let id = p.id;
-        let mut lm = SynthLm::new(p, seed ^ id);
-        let mut prm = OraclePrm::for_profile(&spec.model, seed ^ 0xBEEF ^ id);
-        let mut pol: Box<dyn ets::search::SearchPolicy> = match policy {
-            PolicySpec::Rebase => Box::new(ets::search::RebasePolicy::default()),
-            PolicySpec::Ets { lambda_b, lambda_d } => Box::new(ets::search::EtsPolicy::new(
-                *lambda_b,
-                *lambda_d,
-                ets::embed::HashEmbedder::default(),
-            )),
-            _ => unreachable!(),
-        };
-        let out = run_search(
-            &mut lm,
-            &mut prm,
-            &mut pol,
-            &SearchParams { width, max_steps: SYNTH_MATH500.n_steps + 6 },
-        );
-        if out.answer == Some(truth) {
-            correct += 1;
-        }
-        outs.push(out);
-    }
-    (outs, correct as f64 / n as f64)
+fn serve_at(policy: &PolicySpec, width: usize, n: usize, concurrency: usize) -> ServeEvalReport {
+    let cfg = EvalConfig {
+        spec: WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM),
+        policy: policy.clone(),
+        width,
+        n_problems: n,
+        seed: 20260710,
+        max_steps: SYNTH_MATH500.n_steps + 6,
+    };
+    let perf = PerfModel::new(H100_NVL, true, concurrency);
+    evaluate_serve(&cfg, concurrency, &perf)
+}
+
+/// Sweep concurrency and keep the best modeled throughput.
+fn best_serve(policy: &PolicySpec, width: usize, n: usize) -> (usize, ServeEvalReport) {
+    [4usize, 8, 16, 32]
+        .iter()
+        .map(|&c| (c, serve_at(policy, width, n, c)))
+        .max_by(|a, b| {
+            a.1.serve
+                .throughput_problems_per_sec()
+                .partial_cmp(&b.1.serve.throughput_problems_per_sec())
+                .unwrap()
+        })
+        .unwrap()
 }
 
 fn main() {
     let width = 256;
     let n = 60;
-    let model = &LLEMMA_34B_SIM;
-    let (rebase_outs, rebase_acc) = outcomes(&PolicySpec::Rebase, width, n);
-    let (ets_outs, ets_acc) =
-        outcomes(&PolicySpec::Ets { lambda_b: 1.5, lambda_d: 1.0 }, width, n);
-
-    let kv = |outs: &[SearchOutcome]| -> f64 {
-        outs.iter().map(|o| o.total_kv_tokens() as f64).sum::<f64>() / outs.len() as f64
-    };
-    let best_tp = |outs: &[SearchOutcome]| -> (usize, f64) {
-        [4usize, 8, 16, 32]
-            .iter()
-            .map(|&t| (t, PerfModel::new(H100_NVL, true, t).throughput(outs, model)))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .unwrap()
-    };
-    let (rt, rtp) = best_tp(&rebase_outs);
-    let (et, etp) = best_tp(&ets_outs);
+    let rebase = best_serve(&PolicySpec::Rebase, width, n);
+    let ets = best_serve(&PolicySpec::Ets { lambda_b: 1.5, lambda_d: 1.0 }, width, n);
 
     let mut table = Table::new(
-        "Table 2 — throughput at width 256 (H100-NVL roofline, best of {4,8,16,32} threads)",
-        &["method", "acc%", "KV red.", "throughput", "threads"],
+        "Table 2 — batched serving throughput at width 256 (H100-NVL roofline, best of {4,8,16,32} concurrent)",
+        &["method", "acc%", "KV red.", "throughput", "concurrency", "batch p50"],
     );
-    table.row(vec![
-        "REBASE".into(),
-        pct(rebase_acc),
-        "1.00x".into(),
-        "1.00x".into(),
-        rt.to_string(),
-    ]);
-    table.row(vec![
-        "ETS(λb=1.5)".into(),
-        pct(ets_acc),
-        ratio(kv(&rebase_outs), kv(&ets_outs)),
-        format!("{:.2}x", etp / rtp),
-        et.to_string(),
-    ]);
+    let row = |label: &str, r: &(usize, ServeEvalReport), base: &ServeEvalReport| {
+        let secs = r.1.serve.batch_seconds();
+        vec![
+            label.to_string(),
+            pct(r.1.report.accuracy()),
+            ratio(base.report.mean_kv_tokens, r.1.report.mean_kv_tokens),
+            format!(
+                "{:.2}x",
+                r.1.serve.throughput_problems_per_sec()
+                    / base.serve.throughput_problems_per_sec()
+            ),
+            r.0.to_string(),
+            ms(stats::median(&secs)),
+        ]
+    };
+    table.row(row("REBASE", &rebase, &rebase.1));
+    table.row(row("ETS(λb=1.5)", &ets, &rebase.1));
     table.emit();
     println!(
-        "absolute modeled throughput: REBASE {:.3} problems/s, ETS {:.3} problems/s",
-        rtp, etp
+        "absolute modeled throughput: REBASE {:.3} problems/s (peak resident {} kv-tok), ETS {:.3} problems/s (peak resident {} kv-tok)",
+        rebase.1.serve.throughput_problems_per_sec(),
+        rebase.1.serve.peak_resident_kv_tokens,
+        ets.1.serve.throughput_problems_per_sec(),
+        ets.1.serve.peak_resident_kv_tokens
     );
     println!("shape check: ETS KV reduction translates to >1x throughput at equal accuracy.");
 }

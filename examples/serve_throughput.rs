@@ -11,11 +11,12 @@
 
 use ets::engine::pjrt_lm::{PjrtEmbedder, PjrtLm, PjrtLmConfig, PjrtPrm};
 use ets::search::{run_search, EtsPolicy, RebasePolicy, SearchParams};
+use ets::util::error::Result;
 use ets::util::rng::Rng;
 use ets::util::stats;
 use std::rc::Rc;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let dir = ets::runtime::default_artifacts_dir();
     if !dir.join("meta.json").exists() {
         eprintln!("run `make artifacts` first");

@@ -1,10 +1,29 @@
-//! L3 coordinator: request routing and the multi-threaded eval/serve loops.
+//! L3 coordinator: request routing, the multi-threaded eval loop, and the
+//! batched `serve` loop.
 //!
-//! Tokio is unavailable in the offline build environment, so the coordinator
-//! is built on `std::thread` scoped workers + mpsc channels: a work queue of
-//! problems, N workers running searches, and an aggregator folding results —
-//! the same leader/worker shape a vLLM-style router uses, at simulator scale.
+//! Two execution shapes:
+//!
+//! * [`par_map`] — embarrassingly-parallel eval: one search per thread,
+//!   fresh engine each (`std::thread` scoped workers + mpsc; tokio is
+//!   unavailable offline).
+//! * [`serve`] — continuous batching at simulator scale: up to `concurrency`
+//!   concurrent [`SearchSession`]s interleave steps through **one**
+//!   [`BatchEngine`]/radix cache; each round's merged expansion batch is
+//!   costed by [`PerfModel::batch_latency`], and a finished problem's slot
+//!   is immediately refilled from the queue — the SGLang-style serving shape
+//!   the paper's throughput numbers assume.
+//!
+//! Both are deterministic for a fixed seed: per-problem RNG streams are
+//! independent, so worker count / concurrency never changes results.
 
+use crate::engine::batch::{BatchEngine, ExpandRequest, DEFAULT_KV_CAPACITY};
+use crate::engine::perfmodel::{BatchStats, PerfModel};
+use crate::lm::StepGenerator;
+use crate::reward::RewardModel;
+use crate::search::driver::{SearchOutcome, SearchParams, SearchSession};
+use crate::search::policy::SearchPolicy;
+use crate::workload::ModelProfile;
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Mutex;
 
@@ -61,6 +80,163 @@ pub struct SearchRequest {
     pub problem_id: u64,
 }
 
+/// One problem's ingredients for the batched serve loop.
+pub struct ServeJob<G, R, P> {
+    pub lm: G,
+    pub prm: R,
+    pub policy: P,
+}
+
+/// Telemetry of one engine round: the merged expansion batch of every active
+/// problem, plus its modeled cost.
+#[derive(Clone, Debug, Default)]
+pub struct BatchRecord {
+    /// Problems that contributed expansions this round.
+    pub problems: usize,
+    /// Leaves expanded (requests in the merged batch).
+    pub requests: usize,
+    /// Continuations sampled (lockstep decode batch size).
+    pub model_calls: usize,
+    /// Tokens generated this round.
+    pub new_tokens: usize,
+    /// Unique KV tokens resident in the shared cache after the round.
+    pub resident_kv_tokens: usize,
+    /// What the same round would pin without radix sharing.
+    pub unshared_kv_tokens: usize,
+    /// Modeled wall-clock of this round ([`PerfModel::batch_latency`]).
+    pub seconds: f64,
+}
+
+/// Result of a [`serve`] run.
+pub struct ServeReport {
+    /// Per-problem outcomes, in job order.
+    pub outcomes: Vec<SearchOutcome>,
+    /// One record per engine round.
+    pub batches: Vec<BatchRecord>,
+    /// Σ per-batch modeled seconds — the serving-time denominator for
+    /// throughput.
+    pub modeled_seconds: f64,
+    /// High-water mark of the shared cache (unique tokens).
+    pub peak_resident_kv_tokens: usize,
+    /// Most problems ever simultaneously active.
+    pub max_concurrent: usize,
+}
+
+impl ServeReport {
+    pub fn throughput_problems_per_sec(&self) -> f64 {
+        if self.modeled_seconds > 0.0 {
+            self.outcomes.len() as f64 / self.modeled_seconds
+        } else {
+            0.0
+        }
+    }
+
+    pub fn batch_seconds(&self) -> Vec<f64> {
+        self.batches.iter().map(|b| b.seconds).collect()
+    }
+}
+
+/// Serve `jobs` through one shared engine with continuous batching: at most
+/// `concurrency` searches are live at a time, each engine round advances all
+/// of them by one step in a single merged batch, and finished searches hand
+/// their slot to the next queued job mid-flight.
+pub fn serve<G, R, P>(
+    jobs: Vec<ServeJob<G, R, P>>,
+    params: &SearchParams,
+    concurrency: usize,
+    perf: &PerfModel,
+    model: &ModelProfile,
+) -> ServeReport
+where
+    G: StepGenerator,
+    R: RewardModel,
+    P: SearchPolicy,
+{
+    let concurrency = concurrency.max(1);
+    let n = jobs.len();
+    let mut engine = BatchEngine::new(DEFAULT_KV_CAPACITY);
+    let mut queue: VecDeque<(usize, ServeJob<G, R, P>)> =
+        jobs.into_iter().enumerate().collect();
+    let mut active: Vec<(usize, SearchSession<G, R, P>)> = Vec::new();
+    let mut outcomes: Vec<Option<SearchOutcome>> = (0..n).map(|_| None).collect();
+    let mut batches: Vec<BatchRecord> = Vec::new();
+    let mut peak = 0usize;
+    let mut max_concurrent = 0usize;
+
+    loop {
+        // admit from the queue until the batch is full (continuous batching)
+        while active.len() < concurrency {
+            let Some((id, job)) = queue.pop_front() else { break };
+            let session = SearchSession::new(&mut engine, job.lm, job.prm, job.policy, params);
+            active.push((id, session));
+        }
+        if active.is_empty() {
+            break;
+        }
+        max_concurrent = max_concurrent.max(active.len());
+
+        // Collect every active session's next allocation. Sessions with no
+        // work left finish *now* (release-on-complete), so the round's
+        // resident-set measurement only covers live problems and their slots
+        // refill from the queue on the next admission pass.
+        let mut round: Vec<(usize, SearchSession<G, R, P>, Vec<ExpandRequest>)> = Vec::new();
+        for (id, mut session) in active.drain(..) {
+            let requests = session.next_requests(&mut engine);
+            if requests.is_empty() {
+                outcomes[id] = Some(session.finish(&mut engine));
+            } else {
+                round.push((id, session, requests));
+            }
+        }
+
+        // execute the merged batch: one interleaved engine step
+        if !round.is_empty() {
+            let mut rec = BatchRecord::default();
+            for (_, session, requests) in round.iter_mut() {
+                let m = session.step(&mut engine, requests);
+                rec.problems += 1;
+                rec.requests += requests.len();
+                rec.model_calls += m.model_calls;
+                rec.new_tokens += m.new_tokens;
+                rec.unshared_kv_tokens += m.unshared_kv_tokens;
+            }
+            rec.resident_kv_tokens = engine.live_tokens();
+            peak = peak.max(rec.resident_kv_tokens);
+            let stats = BatchStats {
+                model_calls: rec.model_calls,
+                new_tokens: rec.new_tokens,
+                read_kv_tokens: if perf.shared_kv {
+                    rec.resident_kv_tokens
+                } else {
+                    rec.unshared_kv_tokens
+                },
+                resident_kv_tokens: if perf.shared_kv {
+                    rec.resident_kv_tokens
+                } else {
+                    rec.unshared_kv_tokens
+                },
+            };
+            rec.seconds = perf.batch_latency(&stats, model).seconds;
+            batches.push(rec);
+        }
+
+        active = round.into_iter().map(|(id, session, _)| (id, session)).collect();
+    }
+
+    debug_assert_eq!(engine.live_tokens(), 0, "serve left pinned KV behind");
+    let modeled_seconds = batches.iter().map(|b| b.seconds).sum();
+    ServeReport {
+        outcomes: outcomes
+            .into_iter()
+            .map(|o| o.expect("every job produces an outcome"))
+            .collect(),
+        batches,
+        modeled_seconds,
+        peak_resident_kv_tokens: peak,
+        max_concurrent,
+    }
+}
+
 /// Aggregated coordinator statistics.
 #[derive(Clone, Debug, Default)]
 pub struct CoordinatorStats {
@@ -85,6 +261,91 @@ impl CoordinatorStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::H100_NVL;
+    use crate::lm::SynthLm;
+    use crate::reward::OraclePrm;
+    use crate::search::policy::RebasePolicy;
+    use crate::workload::{ProblemSet, WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
+
+    fn jobs(n: usize, seed: u64) -> Vec<ServeJob<SynthLm, OraclePrm, RebasePolicy>> {
+        let spec = WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM);
+        ProblemSet::generate(&spec, n, seed)
+            .problems
+            .into_iter()
+            .map(|p| {
+                let id = p.id;
+                let prm = OraclePrm::for_profile(&spec.model, seed ^ 0xBEEF ^ id);
+                ServeJob {
+                    lm: SynthLm::new(p, seed ^ id),
+                    prm,
+                    policy: RebasePolicy::default(),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serve_interleaves_concurrent_problems_through_one_engine() {
+        let params = SearchParams { width: 8, max_steps: 16 };
+        let perf = PerfModel::new(H100_NVL, true, 1);
+        let report = serve(jobs(5, 42), &params, 3, &perf, &LLEMMA_34B_SIM);
+        assert_eq!(report.outcomes.len(), 5);
+        assert!(report.max_concurrent >= 2, "batching must co-schedule problems");
+        assert!(!report.batches.is_empty());
+        assert!(report.modeled_seconds > 0.0);
+        assert!(report.throughput_problems_per_sec() > 0.0);
+        // per-batch latency from the perf model on every executed round
+        let multi: Vec<&BatchRecord> =
+            report.batches.iter().filter(|b| b.problems >= 2).collect();
+        assert!(!multi.is_empty(), "no round ever held >= 2 problems");
+        for b in &report.batches {
+            assert!(b.seconds > 0.0, "{b:?}");
+            assert!(b.model_calls > 0);
+            assert!(b.resident_kv_tokens > 0);
+            assert!(b.resident_kv_tokens <= b.unshared_kv_tokens + 5_000);
+        }
+        // the shared cache's high-water mark covers the co-scheduled set
+        let solo_peak = report.outcomes.iter().map(|o| o.peak_kv_tokens()).max().unwrap();
+        assert!(report.peak_resident_kv_tokens as u64 >= solo_peak);
+        for o in &report.outcomes {
+            assert!(o.answer.is_some());
+        }
+    }
+
+    #[test]
+    fn serve_results_do_not_depend_on_concurrency() {
+        let params = SearchParams { width: 8, max_steps: 16 };
+        let perf = PerfModel::new(H100_NVL, true, 1);
+        let summary = |c: usize| -> Vec<(Option<i64>, u64, u64)> {
+            serve(jobs(6, 7), &params, c, &perf, &LLEMMA_34B_SIM)
+                .outcomes
+                .iter()
+                .map(|o| (o.answer, o.total_kv_tokens(), o.total_new_tokens()))
+                .collect()
+        };
+        let base = summary(1);
+        assert_eq!(base, summary(2));
+        assert_eq!(base, summary(4));
+    }
+
+    #[test]
+    fn serve_matches_run_search_per_problem() {
+        // The batched path must report exactly what a solo run reports: the
+        // cache views are per-ledger, so co-scheduling changes nothing.
+        let params = SearchParams { width: 8, max_steps: 16 };
+        let perf = PerfModel::new(H100_NVL, true, 1);
+        let report = serve(jobs(4, 11), &params, 4, &perf, &LLEMMA_34B_SIM);
+        for (job, served) in jobs(4, 11).into_iter().zip(&report.outcomes) {
+            let mut lm = job.lm;
+            let mut prm = job.prm;
+            let mut policy = job.policy;
+            let solo = crate::search::run_search(&mut lm, &mut prm, &mut policy, &params);
+            assert_eq!(solo.answer, served.answer);
+            assert_eq!(solo.total_kv_tokens(), served.total_kv_tokens());
+            assert_eq!(solo.total_new_tokens(), served.total_new_tokens());
+            assert_eq!(solo.steps.len(), served.steps.len());
+        }
+    }
 
     #[test]
     fn par_map_preserves_order_and_results() {

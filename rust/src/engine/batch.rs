@@ -1,0 +1,422 @@
+//! The batched expansion engine: one [`RadixCache`] is the *single source of
+//! truth* for KV accounting across every live trajectory of every problem it
+//! serves.
+//!
+//! The search driver no longer keeps its own token counters. Instead it
+//! hands the engine [`ExpandRequest`] batches; the engine
+//!
+//! * **insert-on-expand** — every new step's full token sequence is inserted
+//!   into the radix tree (synthetic generators get engine-minted unique ids,
+//!   so radix sharing exactly mirrors tree-prefix sharing; PJRT generators
+//!   contribute their real sampled ids),
+//! * **refcount-while-live** — the sequence end of every live leaf is
+//!   pinned; expanding a leaf pins the children before unpinning the parent
+//!   so shared prefixes never become evictable mid-step,
+//! * **release-on-prune/complete** — retiring trajectories unpins them and
+//!   reclaims every unpinned branch immediately.
+//!
+//! The KV metrics the driver reports ("live" = union of pinned paths,
+//! "unshared" = Σ per-leaf sequence lengths) are views computed from the
+//! cache ([`RadixCache::path_union_tokens`] / [`RadixCache::path_tokens`]),
+//! which is what makes the multi-problem `serve` path's resident-set numbers
+//! and the per-problem search metrics mutually consistent by construction.
+
+use crate::kvcache::{NodeIdx, RadixCache};
+use crate::tree::{NodeId, SearchTree};
+use std::collections::{HashMap, HashSet};
+
+/// Default engine cache capacity, in tokens.
+pub const DEFAULT_KV_CAPACITY: usize = 1 << 22;
+
+/// One leaf expansion in a step batch: sample `n` continuations of the
+/// trajectory ending at `leaf`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExpandRequest {
+    pub leaf: NodeId,
+    pub n: usize,
+}
+
+/// Per-problem view over the shared cache: which radix nodes this problem's
+/// prompt and live leaves have pinned.
+#[derive(Clone, Debug)]
+pub struct KvLedger {
+    /// Token ids of the prompt (prefix of every sequence of this problem).
+    prompt_ids: Vec<u32>,
+    /// Pinned radix node holding the prompt; `None` once closed.
+    prompt_node: Option<NodeIdx>,
+    /// tree leaf -> pinned radix node holding its sequence end.
+    locked: HashMap<NodeId, NodeIdx>,
+    /// True while every admitted step used engine-minted unique token ids,
+    /// in which case cache accounting provably equals tree accounting (the
+    /// step-level invariant the driver asserts in debug builds).
+    exact_accounting: bool,
+}
+
+impl KvLedger {
+    /// Radix nodes currently pinned by this problem (sequence ends).
+    pub fn pinned(&self) -> impl Iterator<Item = NodeIdx> + '_ {
+        self.locked.values().copied().chain(self.prompt_node)
+    }
+
+    /// Whether cache accounting is exactly the tree accounting (engine-minted
+    /// ids only; real-token generators can legitimately dedup further).
+    pub fn exact_accounting(&self) -> bool {
+        self.exact_accounting
+    }
+
+    pub fn live_leaves(&self) -> usize {
+        self.locked.len()
+    }
+}
+
+/// Shared batched engine: radix cache + token-id mint + batch telemetry.
+#[derive(Clone, Debug)]
+pub struct BatchEngine {
+    cache: RadixCache,
+    /// Next synthetic token id (ids are never reused, so distinct steps can
+    /// only share KV through genuine path-prefix sharing).
+    next_token: u32,
+    /// Problems ever registered.
+    pub problems_registered: u64,
+    /// Expansion batches executed via [`BatchEngine::expand`].
+    pub batches_executed: u64,
+    /// Tokens admitted into the cache (Σ new_tokens over inserts).
+    pub tokens_admitted: u64,
+    /// Tokens reclaimed by release-on-prune/complete.
+    pub tokens_reclaimed: u64,
+}
+
+impl BatchEngine {
+    pub fn new(capacity_tokens: usize) -> Self {
+        Self {
+            cache: RadixCache::new(capacity_tokens),
+            next_token: 1, // 0 is the conventional padding id
+            problems_registered: 0,
+            batches_executed: 0,
+            tokens_admitted: 0,
+            tokens_reclaimed: 0,
+        }
+    }
+
+    fn mint_tokens(&mut self, n: usize) -> Vec<u32> {
+        (0..n)
+            .map(|_| {
+                let t = self.next_token;
+                self.next_token = self.next_token.wrapping_add(1).max(1);
+                t
+            })
+            .collect()
+    }
+
+    /// Register a problem whose prompt has no real token ids: mint
+    /// `prompt_tokens` unique ids, insert, and pin them for the lifetime of
+    /// the search.
+    pub fn register(&mut self, prompt_tokens: usize) -> KvLedger {
+        let ids = self.mint_tokens(prompt_tokens);
+        self.register_ledger(ids, true)
+    }
+
+    /// Register a problem with real prompt token ids (PJRT path). Identical
+    /// prompts across problems will share cache honestly, which also means
+    /// cache accounting may undercut tree accounting — `exact_accounting`
+    /// is cleared.
+    pub fn register_with_prompt(&mut self, prompt_ids: Vec<u32>) -> KvLedger {
+        self.register_ledger(prompt_ids, false)
+    }
+
+    fn register_ledger(&mut self, prompt_ids: Vec<u32>, exact: bool) -> KvLedger {
+        let out = self.cache.insert(&prompt_ids);
+        self.tokens_admitted += out.new_tokens as u64;
+        self.cache.lock(out.node);
+        self.problems_registered += 1;
+        KvLedger {
+            prompt_ids,
+            prompt_node: Some(out.node),
+            locked: HashMap::new(),
+            exact_accounting: exact,
+        }
+    }
+
+    /// Full token sequence of `node` under this ledger's problem: prompt ids
+    /// followed by every step's ids along the root path.
+    pub fn sequence(ledger: &KvLedger, tree: &SearchTree, node: NodeId) -> Vec<u32> {
+        let mut seq = ledger.prompt_ids.clone();
+        for n in tree.path(node) {
+            seq.extend_from_slice(&tree.get(n).step.token_ids);
+        }
+        seq
+    }
+
+    /// Run one step's allocation through the generator as a single batched
+    /// call. Returns per-request continuations (request order preserved).
+    pub fn expand<G: crate::lm::StepGenerator>(
+        &mut self,
+        lm: &mut G,
+        tree: &SearchTree,
+        requests: &[ExpandRequest],
+    ) -> Vec<Vec<crate::tree::StepInfo>> {
+        let reqs: Vec<(NodeId, usize)> = requests.iter().map(|r| (r.leaf, r.n)).collect();
+        self.batches_executed += 1;
+        lm.expand_batch(tree, &reqs)
+    }
+
+    /// Charge a step's freshly added children to the cache: mint ids for
+    /// synthetic steps, insert every child's sequence (insert-on-expand),
+    /// pin the children, then unpin the parents they replace on the
+    /// frontier.
+    pub fn admit(&mut self, ledger: &mut KvLedger, tree: &mut SearchTree, children: &[NodeId]) {
+        for &c in children {
+            let (needs_ids, tokens) = {
+                let step = &tree.get(c).step;
+                (step.token_ids.is_empty(), step.tokens)
+            };
+            if needs_ids && tokens > 0 {
+                let ids = self.mint_tokens(tokens);
+                tree.get_mut(c).step.token_ids = ids;
+            } else if !needs_ids {
+                // real surface ids: radix dedup may exceed tree-level sharing
+                ledger.exact_accounting = false;
+            }
+        }
+        let mut parents: HashSet<NodeId> = HashSet::new();
+        for &c in children {
+            let seq = Self::sequence(ledger, tree, c);
+            let out = self.cache.insert(&seq);
+            self.tokens_admitted += out.new_tokens as u64;
+            self.cache.lock(out.node);
+            ledger.locked.insert(c, out.node);
+            if let Some(p) = tree.get(c).parent {
+                parents.insert(p);
+            }
+        }
+        for p in parents {
+            if let Some(idx) = ledger.locked.remove(&p) {
+                self.cache.unlock(idx);
+            }
+        }
+    }
+
+    /// Release-on-prune/complete: unpin every leaf not in `keep` and free
+    /// each one's now-exclusive branch (an O(path) walk-up per retired
+    /// sequence — shared prefixes stay, other problems' pins are never
+    /// touched). Returns tokens freed.
+    pub fn retire(&mut self, ledger: &mut KvLedger, keep: &[NodeId]) -> usize {
+        let keep: HashSet<NodeId> = keep.iter().copied().collect();
+        let drop: Vec<NodeId> =
+            ledger.locked.keys().copied().filter(|k| !keep.contains(k)).collect();
+        let mut freed = 0usize;
+        for k in drop {
+            if let Some(idx) = ledger.locked.remove(&k) {
+                self.cache.unlock(idx);
+                freed += self.cache.release_branch(idx);
+            }
+        }
+        self.tokens_reclaimed += freed as u64;
+        freed
+    }
+
+    /// Close a problem: unpin everything it holds (including the prompt) and
+    /// free the branches that become unreferenced. Idempotent.
+    pub fn close(&mut self, ledger: &mut KvLedger) {
+        let mut freed = 0usize;
+        for (_, idx) in ledger.locked.drain() {
+            self.cache.unlock(idx);
+            freed += self.cache.release_branch(idx);
+        }
+        if let Some(p) = ledger.prompt_node.take() {
+            self.cache.unlock(p);
+            freed += self.cache.release_branch(p);
+        }
+        self.tokens_reclaimed += freed as u64;
+    }
+
+    /// Live (radix-shared) KV tokens of one problem: unique tokens on the
+    /// union of its pinned paths. This is the paper's per-step "KV cache
+    /// size", read from the cache rather than recomputed from the tree.
+    pub fn live_kv(&self, ledger: &KvLedger) -> usize {
+        let nodes: Vec<NodeIdx> = ledger.pinned().collect();
+        self.cache.path_union_tokens(&nodes)
+    }
+
+    /// KV tokens the same frontier would cost a sharing-oblivious server:
+    /// every pinned leaf pays its full sequence length.
+    pub fn unshared_kv(&self, ledger: &KvLedger) -> usize {
+        ledger.locked.values().map(|&n| self.cache.path_tokens(n)).sum()
+    }
+
+    /// Unique tokens resident in the shared cache (all problems).
+    pub fn live_tokens(&self) -> usize {
+        self.cache.live_tokens()
+    }
+
+    pub fn cache(&self) -> &RadixCache {
+        &self.cache
+    }
+
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.cache.check_invariants()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::StepInfo;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    fn child(tree: &mut SearchTree, parent: NodeId, tokens: usize) -> NodeId {
+        tree.add_child(parent, StepInfo { tokens, ..Default::default() }, 0.5)
+    }
+
+    fn live_step_tokens(t: &SearchTree) -> usize {
+        (0..t.len()).filter(|&i| t.get(i).live).map(|i| t.get(i).step.tokens).sum()
+    }
+
+    #[test]
+    fn admit_then_live_matches_tree_accounting() {
+        let mut eng = BatchEngine::new(1 << 20);
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(100);
+        let mut ledger = eng.register(100);
+        let a = child(&mut tree, root, 10);
+        let b = child(&mut tree, root, 20);
+        eng.admit(&mut ledger, &mut tree, &[a, b]);
+        assert!(ledger.exact_accounting());
+        assert_eq!(eng.live_kv(&ledger), 130);
+        assert_eq!(eng.unshared_kv(&ledger), 110 + 120);
+        assert_eq!(eng.live_tokens(), 130);
+        assert_eq!(eng.live_kv(&ledger), live_step_tokens(&tree));
+        eng.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn expanding_a_leaf_moves_the_pin_to_its_children() {
+        let mut eng = BatchEngine::new(1 << 20);
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(5);
+        let mut ledger = eng.register(5);
+        let a = child(&mut tree, root, 3);
+        eng.admit(&mut ledger, &mut tree, &[a]);
+        let c1 = child(&mut tree, a, 7);
+        let c2 = child(&mut tree, a, 9);
+        eng.admit(&mut ledger, &mut tree, &[c1, c2]);
+        assert_eq!(ledger.live_leaves(), 2, "parent pin replaced by children");
+        assert_eq!(eng.live_kv(&ledger), 5 + 3 + 7 + 9);
+        // the shared prefix (prompt + a) stays pinned through the children
+        assert_eq!(eng.unshared_kv(&ledger), (5 + 3 + 7) + (5 + 3 + 9));
+        eng.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retire_reclaims_pruned_branches_only() {
+        let mut eng = BatchEngine::new(1 << 20);
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(4);
+        let mut ledger = eng.register(4);
+        let a = child(&mut tree, root, 10);
+        let b = child(&mut tree, root, 6);
+        eng.admit(&mut ledger, &mut tree, &[a, b]);
+        tree.retain_paths(&[a]);
+        let freed = eng.retire(&mut ledger, &[a]);
+        assert_eq!(freed, 6, "b's exclusive tokens reclaimed");
+        assert_eq!(eng.live_kv(&ledger), 14);
+        assert_eq!(eng.live_kv(&ledger), live_step_tokens(&tree));
+        assert_eq!(eng.live_tokens(), 14);
+        eng.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn close_releases_everything_and_is_idempotent() {
+        let mut eng = BatchEngine::new(1 << 20);
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(8);
+        let mut ledger = eng.register(8);
+        let a = child(&mut tree, root, 5);
+        eng.admit(&mut ledger, &mut tree, &[a]);
+        assert!(eng.live_tokens() > 0);
+        eng.close(&mut ledger);
+        assert_eq!(eng.live_tokens(), 0);
+        eng.close(&mut ledger); // second close is a no-op
+        assert_eq!(eng.live_tokens(), 0);
+        eng.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn problems_share_one_cache_without_interference() {
+        let mut eng = BatchEngine::new(1 << 20);
+        let mut t1 = SearchTree::new();
+        let mut t2 = SearchTree::new();
+        let r1 = t1.init_root(50);
+        let r2 = t2.init_root(70);
+        let mut l1 = eng.register(50);
+        let mut l2 = eng.register(70);
+        let a1 = child(&mut t1, r1, 10);
+        let a2 = child(&mut t2, r2, 20);
+        eng.admit(&mut l1, &mut t1, &[a1]);
+        eng.admit(&mut l2, &mut t2, &[a2]);
+        assert_eq!(eng.live_kv(&l1), 60);
+        assert_eq!(eng.live_kv(&l2), 90);
+        assert_eq!(eng.live_tokens(), 150, "disjoint problems sum exactly");
+        // retiring problem 1 cannot disturb problem 2's pins
+        eng.retire(&mut l1, &[]);
+        assert_eq!(eng.live_kv(&l1), 50, "prompt stays pinned until close");
+        assert_eq!(eng.live_kv(&l2), 90);
+        eng.close(&mut l1);
+        eng.close(&mut l2);
+        assert_eq!(eng.live_tokens(), 0);
+        eng.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_cache_accounting_tracks_random_trees() {
+        property(60, |rng: &mut Rng| {
+            let mut eng = BatchEngine::new(1 << 20);
+            let mut tree = SearchTree::new();
+            let prompt = 1 + rng.index(40);
+            let root = tree.init_root(prompt);
+            let mut ledger = eng.register(prompt);
+            let mut frontier = vec![root];
+            for _ in 0..(1 + rng.index(6)) {
+                // expand a random subset of the frontier, then retire to it
+                let keep: Vec<NodeId> = frontier
+                    .iter()
+                    .copied()
+                    .filter(|_| rng.chance(0.7))
+                    .collect();
+                let keep = if keep.is_empty() { vec![frontier[0]] } else { keep };
+                tree.retain_paths(&keep);
+                eng.retire(&mut ledger, &keep);
+                let mut next = vec![];
+                for &leaf in &keep {
+                    let fanout = 1 + rng.index(4);
+                    let children: Vec<NodeId> = (0..fanout)
+                        .map(|_| child(&mut tree, leaf, 1 + rng.index(30)))
+                        .collect();
+                    eng.admit(&mut ledger, &mut tree, &children);
+                    next.extend(children);
+                }
+                frontier = next;
+                // the step-level invariant: cache view == tree truth
+                crate::prop_check!(
+                    eng.live_kv(&ledger) == live_step_tokens(&tree),
+                    "cache {} != tree {}",
+                    eng.live_kv(&ledger),
+                    live_step_tokens(&tree)
+                );
+                crate::prop_check!(
+                    eng.live_tokens() == eng.live_kv(&ledger),
+                    "single problem must own the whole cache"
+                );
+                crate::prop_check!(
+                    eng.live_kv(&ledger) <= eng.unshared_kv(&ledger) + prompt,
+                    "shared exceeded unshared"
+                );
+                eng.check_invariants()?;
+            }
+            eng.close(&mut ledger);
+            crate::prop_check!(eng.live_tokens() == 0, "close left tokens");
+            Ok(())
+        });
+    }
+}

@@ -1,8 +1,13 @@
-//! Serving engine: the H100 roofline performance model (Fig. 2 / Table 2
-//! substitution) and the PJRT-backed providers that run the real AOT
-//! transformer on the request path.
+//! Serving engine: the batched expansion engine that routes all KV
+//! accounting through the shared radix cache, the H100 roofline performance
+//! model (Fig. 2 / Table 2 substitution), and — behind the `pjrt` feature —
+//! the PJRT-backed providers that run the real AOT transformer on the
+//! request path.
 
+pub mod batch;
 pub mod perfmodel;
+#[cfg(feature = "pjrt")]
 pub mod pjrt_lm;
 
-pub use perfmodel::{Hardware, LatencyEstimate, PerfModel, H100_NVL};
+pub use batch::{BatchEngine, ExpandRequest, KvLedger, DEFAULT_KV_CAPACITY};
+pub use perfmodel::{BatchStats, Hardware, LatencyEstimate, PerfModel, H100_NVL};

@@ -58,6 +58,24 @@ pub struct LatencyEstimate {
     pub extra_waves: u64,
 }
 
+/// Aggregate shape of one engine batch — possibly many problems' expansions
+/// decoding in lockstep through one [`crate::engine::BatchEngine`]. This is
+/// what the multi-problem `serve` path costs per round (real continuous
+/// batching, as opposed to [`PerfModel::latency`]'s per-problem replay).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BatchStats {
+    /// Sequences decoding in lockstep (continuations sampled this round).
+    pub model_calls: usize,
+    /// Tokens emitted by the whole batch.
+    pub new_tokens: usize,
+    /// KV tokens read per decode iteration. Under radix sharing this is the
+    /// engine cache's unique resident set; without sharing it is the
+    /// duplicated per-sequence footprint.
+    pub read_kv_tokens: usize,
+    /// Unique KV tokens resident on the node (drives wave fragmentation).
+    pub resident_kv_tokens: usize,
+}
+
 impl PerfModel {
     pub fn new(hw: Hardware, shared_kv: bool, threads: usize) -> Self {
         Self { hw, shared_kv, threads: threads.max(1) }
@@ -104,6 +122,32 @@ impl PerfModel {
             bytes += iters * bytes_per_iter;
         }
         LatencyEstimate { seconds: total_s, bytes_moved: bytes, extra_waves }
+    }
+
+    /// Wall-clock of one *merged* engine batch: every co-scheduled problem's
+    /// continuations decode in lockstep, so the weights are read once per
+    /// iteration for the whole batch (that is the amortization continuous
+    /// batching buys) and the full resident KV working set is streamed each
+    /// iteration. Fragmentation waves re-read the weights exactly as in
+    /// [`PerfModel::latency`].
+    pub fn batch_latency(&self, b: &BatchStats, model: &ModelProfile) -> LatencyEstimate {
+        if b.model_calls == 0 || b.new_tokens == 0 {
+            return LatencyEstimate::default();
+        }
+        let batch = b.model_calls as f64;
+        let iters = (b.new_tokens as f64 / batch).max(1.0);
+        let kv_read = b.read_kv_tokens as f64 * model.kv_bytes_per_token as f64;
+        let resident = b.resident_kv_tokens as f64 * model.kv_bytes_per_token as f64;
+        let free = (self.hw.mem_cap - model.weight_bytes as f64).max(1.0);
+        let waves = (resident / free).ceil().max(1.0);
+        let bytes_per_iter = model.weight_bytes as f64 * waves + kv_read;
+        let mem_s = bytes_per_iter / self.hw.mem_bw;
+        let comp_s = model.weight_bytes as f64 * batch / self.hw.peak_flops;
+        LatencyEstimate {
+            seconds: iters * mem_s.max(comp_s),
+            bytes_moved: iters * bytes_per_iter,
+            extra_waves: (waves as u64).saturating_sub(1) * iters as u64,
+        }
     }
 
     /// Aggregate throughput (problems/s) for a set of per-problem outcomes
@@ -190,6 +234,64 @@ mod tests {
             pm.latency(&b, &LLEMMA_34B_SIM).seconds,
         );
         assert!(tb > ta * 1.5, "{ta} vs {tb}");
+    }
+
+    #[test]
+    fn merged_batches_amortize_weight_reads() {
+        // Two problems fused into one batch finish faster than the same work
+        // run as two sequential batches: same tokens, same KV, one weight
+        // stream per iteration instead of two.
+        let pm = PerfModel::new(H100_NVL, true, 1);
+        let single = BatchStats {
+            model_calls: 64,
+            new_tokens: 64 * 50,
+            read_kv_tokens: 3_000,
+            resident_kv_tokens: 3_000,
+        };
+        let merged = BatchStats {
+            model_calls: 128,
+            new_tokens: 128 * 50,
+            read_kv_tokens: 6_000,
+            resident_kv_tokens: 6_000,
+        };
+        let two_rounds = 2.0 * pm.batch_latency(&single, &LLEMMA_34B_SIM).seconds;
+        let one_round = pm.batch_latency(&merged, &LLEMMA_34B_SIM).seconds;
+        assert!(
+            one_round < 0.75 * two_rounds,
+            "merged {one_round} vs sequential {two_rounds}"
+        );
+    }
+
+    #[test]
+    fn batch_latency_grows_with_resident_kv_and_fragments() {
+        let pm = PerfModel::new(H100_NVL, true, 1);
+        let small = BatchStats {
+            model_calls: 64,
+            new_tokens: 64 * 50,
+            read_kv_tokens: 10_000,
+            resident_kv_tokens: 10_000,
+        };
+        let big = BatchStats {
+            model_calls: 64,
+            new_tokens: 64 * 50,
+            read_kv_tokens: 200_000,
+            resident_kv_tokens: 200_000,
+        };
+        let (ts, tb) = (
+            pm.batch_latency(&small, &LLEMMA_34B_SIM),
+            pm.batch_latency(&big, &LLEMMA_34B_SIM),
+        );
+        assert!(tb.seconds > ts.seconds);
+        assert!(tb.extra_waves > 0, "200k tokens must not fit free HBM: {tb:?}");
+        assert_eq!(ts.extra_waves, 0, "{ts:?}");
+    }
+
+    #[test]
+    fn empty_batch_costs_nothing() {
+        let pm = PerfModel::new(H100_NVL, true, 1);
+        let est = pm.batch_latency(&BatchStats::default(), &LLEMMA_34B_SIM);
+        assert_eq!(est.seconds, 0.0);
+        assert_eq!(est.bytes_moved, 0.0);
     }
 
     #[test]

@@ -16,8 +16,8 @@ use crate::reward::RewardModel;
 use crate::embed::Embedder;
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Artifacts};
 use crate::tree::{NodeId, SearchTree, StepInfo};
+use crate::util::error::Result;
 use crate::util::rng::Rng;
-use anyhow::Result;
 use std::collections::HashMap;
 use std::rc::Rc;
 
@@ -256,6 +256,10 @@ impl StepGenerator for PjrtLm {
 
     fn prompt_tokens(&self) -> usize {
         self.prompt.len()
+    }
+
+    fn prompt_token_ids(&self) -> Option<Vec<u32>> {
+        Some(self.prompt.clone())
     }
 }
 

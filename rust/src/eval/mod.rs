@@ -4,11 +4,13 @@
 //! Used by the CLI (`ets eval`), the examples, and every bench that
 //! regenerates a paper table/figure.
 
+use crate::coordinator::{ServeJob, ServeReport};
 use crate::embed::HashEmbedder;
+use crate::engine::PerfModel;
 use crate::lm::SynthLm;
 use crate::reward::OraclePrm;
 use crate::search::policy::{BeamPolicy, DvtsPolicy, EtsPolicy, RebasePolicy, SearchPolicy};
-use crate::search::{run_search, SearchParams};
+use crate::search::{run_search, SearchOutcome, SearchParams};
 use crate::workload::{ProblemSet, WorkloadSpec};
 
 /// Which search policy to instantiate (fresh per problem — policies carry
@@ -161,11 +163,25 @@ impl SearchPolicy for Box<dyn SearchPolicy> {
     }
 }
 
-/// Run the evaluation in parallel over `workers` threads (problems are
-/// independent; per-problem determinism is seed-derived, so the report is
-/// identical regardless of worker count).
-pub fn evaluate_with_workers(cfg: &EvalConfig, workers: usize) -> EvalReport {
-    let problems = ProblemSet::generate(&cfg.spec, cfg.n_problems, cfg.seed);
+/// The per-problem summary both eval paths fold: (correct, total KV, total
+/// unshared KV, peak KV, new tokens, model calls).
+type ProblemSummary = (bool, u64, u64, u64, u64, u64);
+
+fn summarize(out: &SearchOutcome, truth: i64) -> ProblemSummary {
+    (
+        out.answer == Some(truth),
+        out.total_kv_tokens(),
+        out.total_unshared_kv_tokens(),
+        out.peak_kv_tokens(),
+        out.total_new_tokens(),
+        out.total_model_calls(),
+    )
+}
+
+/// Fold per-problem summaries into an [`EvalReport`] — shared by the
+/// `par_map` eval path and the batched serve path so the two can be compared
+/// field-for-field.
+fn fold_report(cfg: &EvalConfig, results: Vec<ProblemSummary>) -> EvalReport {
     let mut report = EvalReport {
         policy: cfg.policy.name(cfg.width),
         dataset: cfg.spec.dataset.name.to_string(),
@@ -174,24 +190,6 @@ pub fn evaluate_with_workers(cfg: &EvalConfig, workers: usize) -> EvalReport {
         n_problems: cfg.n_problems,
         ..Default::default()
     };
-    let params = SearchParams { width: cfg.width, max_steps: cfg.max_steps };
-    let results = crate::coordinator::par_map(problems.problems, workers, |_, p| {
-        let truth = p.answer;
-        let id = p.id;
-        let mut lm = SynthLm::new(p, cfg.seed ^ id);
-        let mut prm = OraclePrm::for_profile(&cfg.spec.model, cfg.seed ^ 0xBEEF ^ id);
-        let mut policy = make_policy(&cfg.policy, cfg.width);
-        let out = run_search(&mut lm, &mut prm, &mut policy, &params);
-        let correct = out.answer == Some(truth);
-        (
-            correct,
-            out.total_kv_tokens(),
-            out.total_unshared_kv_tokens(),
-            out.peak_kv_tokens(),
-            out.total_new_tokens(),
-            out.total_model_calls(),
-        )
-    });
     let (mut kv, mut unshared, mut peak, mut toks, mut calls) =
         (0u64, 0u64, 0u64, 0u64, 0u64);
     for (correct, okv, ouns, opeak, otoks, ocalls) in results {
@@ -214,10 +212,69 @@ pub fn evaluate_with_workers(cfg: &EvalConfig, workers: usize) -> EvalReport {
     report
 }
 
+/// Run the evaluation in parallel over `workers` threads (problems are
+/// independent; per-problem determinism is seed-derived, so the report is
+/// identical regardless of worker count).
+pub fn evaluate_with_workers(cfg: &EvalConfig, workers: usize) -> EvalReport {
+    let problems = ProblemSet::generate(&cfg.spec, cfg.n_problems, cfg.seed);
+    let params = SearchParams { width: cfg.width, max_steps: cfg.max_steps };
+    let results = crate::coordinator::par_map(problems.problems, workers, |_, p| {
+        let truth = p.answer;
+        let id = p.id;
+        let mut lm = SynthLm::new(p, cfg.seed ^ id);
+        let mut prm = OraclePrm::for_profile(&cfg.spec.model, cfg.seed ^ 0xBEEF ^ id);
+        let mut policy = make_policy(&cfg.policy, cfg.width);
+        let out = run_search(&mut lm, &mut prm, &mut policy, &params);
+        summarize(&out, truth)
+    });
+    fold_report(cfg, results)
+}
+
 /// Run the evaluation using all available cores.
 pub fn evaluate(cfg: &EvalConfig) -> EvalReport {
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     evaluate_with_workers(cfg, workers)
+}
+
+/// Eval result of the batched serve path: the standard report plus the
+/// serving telemetry (per-batch latency, modeled throughput, cache
+/// high-water mark).
+pub struct ServeEvalReport {
+    pub report: EvalReport,
+    pub serve: ServeReport,
+}
+
+/// Run the evaluation through [`crate::coordinator::serve`]: same problems,
+/// same seeds, but up to `concurrency` searches interleaved through one
+/// batched engine, with `perf` costing every merged batch. The folded
+/// [`EvalReport`] is identical to [`evaluate_with_workers`]'s for any worker
+/// count / concurrency — the determinism tests pin this.
+pub fn evaluate_serve(cfg: &EvalConfig, concurrency: usize, perf: &PerfModel) -> ServeEvalReport {
+    let problems = ProblemSet::generate(&cfg.spec, cfg.n_problems, cfg.seed);
+    let params = SearchParams { width: cfg.width, max_steps: cfg.max_steps };
+    let mut truths = Vec::with_capacity(problems.problems.len());
+    let jobs: Vec<ServeJob<SynthLm, OraclePrm, Box<dyn SearchPolicy>>> = problems
+        .problems
+        .into_iter()
+        .map(|p| {
+            truths.push(p.answer);
+            let id = p.id;
+            let prm = OraclePrm::for_profile(&cfg.spec.model, cfg.seed ^ 0xBEEF ^ id);
+            ServeJob {
+                lm: SynthLm::new(p, cfg.seed ^ id),
+                prm,
+                policy: make_policy(&cfg.policy, cfg.width),
+            }
+        })
+        .collect();
+    let serve = crate::coordinator::serve(jobs, &params, concurrency, perf, &cfg.spec.model);
+    let results = serve
+        .outcomes
+        .iter()
+        .zip(&truths)
+        .map(|(out, &truth)| summarize(out, truth))
+        .collect();
+    ServeEvalReport { report: fold_report(cfg, results), serve }
 }
 
 #[cfg(test)]

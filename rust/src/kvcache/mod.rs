@@ -10,7 +10,7 @@
 //! tracks token *counts* and identity so the engine can (a) compute how many
 //! new KV slots a sequence needs, (b) account memory, (c) evict.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Handle to a node in the radix tree.
 pub type NodeIdx = usize;
@@ -232,6 +232,94 @@ impl RadixCache {
         }
     }
 
+    /// Tokens stored along the path root..=`node` — the sequence length a
+    /// cached sequence end represents.
+    pub fn path_tokens(&self, node: NodeIdx) -> usize {
+        let mut tokens = 0usize;
+        let mut cur = Some(node);
+        while let Some(idx) = cur {
+            tokens += self.nodes[idx].key.len();
+            cur = self.nodes[idx].parent;
+        }
+        tokens
+    }
+
+    /// Unique tokens on the union of root-paths of `nodes` — the radix-shared
+    /// KV footprint of a set of sequence ends. This is the engine's canonical
+    /// "live KV" view (each shared prefix counted once).
+    pub fn path_union_tokens(&self, nodes: &[NodeIdx]) -> usize {
+        let mut seen: HashSet<NodeIdx> = HashSet::new();
+        let mut tokens = 0usize;
+        for &n in nodes {
+            let mut cur = Some(n);
+            while let Some(idx) = cur {
+                if !seen.insert(idx) {
+                    break; // the rest of this path is already counted
+                }
+                tokens += self.nodes[idx].key.len();
+                cur = self.nodes[idx].parent;
+            }
+        }
+        tokens
+    }
+
+    /// Sum of tokens held by pinned (refcount > 0) nodes.
+    pub fn pinned_tokens(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| !n.dead && n.refcount > 0)
+            .map(|n| n.key.len())
+            .sum()
+    }
+
+    /// Free the unpinned tail of the path ending at `node`: remove childless
+    /// refcount-0 nodes walking toward the root, stopping at the first node
+    /// that is still shared (has children) or pinned. O(path length) — the
+    /// targeted release the engine uses after unpinning a retired sequence,
+    /// instead of sweeping the whole arena. Returns tokens freed.
+    pub fn release_branch(&mut self, node: NodeIdx) -> usize {
+        let mut freed = 0usize;
+        let mut cur = Some(node);
+        while let Some(idx) = cur {
+            if idx == self.root || self.nodes[idx].dead {
+                break;
+            }
+            let n = &self.nodes[idx];
+            if !n.children.is_empty() || n.refcount > 0 {
+                break;
+            }
+            let parent = n.parent;
+            freed += self.remove_leaf(idx);
+            cur = parent;
+        }
+        freed
+    }
+
+    /// Evict *every* unpinned branch regardless of recency (full-arena
+    /// sweep; [`RadixCache::release_branch`] is the cheap per-sequence
+    /// variant). Returns tokens freed.
+    pub fn evict_unpinned(&mut self) -> usize {
+        let mut freed = 0usize;
+        loop {
+            let victims: Vec<NodeIdx> = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|&(idx, n)| {
+                    !n.dead && idx != self.root && n.children.is_empty() && n.refcount == 0
+                })
+                .map(|(idx, _)| idx)
+                .collect();
+            if victims.is_empty() {
+                return freed;
+            }
+            // removing a layer of leaves may expose the next layer
+            for v in victims {
+                freed += self.remove_leaf(v);
+            }
+        }
+    }
+
     /// Evict least-recently-used unpinned leaves until at least
     /// `target_tokens` have been freed (or nothing evictable remains).
     /// Returns tokens freed.
@@ -416,6 +504,109 @@ mod tests {
         let out = c.insert(&[5, 6, 7]);
         assert_eq!(out.new_tokens, 3);
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn split_preserves_pins_of_the_lower_node() {
+        // Lock a sequence end, then insert a diverging sequence that splits
+        // an edge *inside* the locked path: the pin must survive the split
+        // (the upper node inherits the refcount), so eviction cannot touch
+        // the locked path.
+        let mut c = RadixCache::new(1 << 20);
+        let end = c.insert(&[1, 2, 3, 4, 5]).node;
+        c.lock(end);
+        let other = c.insert(&[1, 2, 9]).node; // splits [1,2,3,4,5] after 2
+        c.check_invariants().unwrap();
+        std::hint::black_box(other);
+        c.evict_unpinned();
+        let (m, _) = c.match_prefix(&[1, 2, 3, 4, 5]);
+        assert_eq!(m, 5, "locked path lost after split");
+        let (m, _) = c.match_prefix(&[1, 2, 9]);
+        assert_eq!(m, 2, "unpinned branch should be gone");
+        assert_eq!(c.path_tokens(end), 5);
+        c.unlock(end);
+        c.evict_unpinned();
+        assert_eq!(c.live_tokens(), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn refcount_pin_blocks_lru_eviction_until_unlock() {
+        let mut c = RadixCache::new(1 << 20);
+        let pinned = c.insert(&[1, 2, 3]).node;
+        c.insert(&[9, 9]);
+        c.lock(pinned);
+        // [1,2,3] is LRU-older than [9,9] after this touch
+        c.match_prefix(&[9, 9]);
+        let freed = c.evict(usize::MAX);
+        assert_eq!(freed, 2, "only the unpinned [9,9] leaf is evictable");
+        assert_eq!(c.live_tokens(), 3);
+        c.unlock(pinned);
+        assert_eq!(c.evict(usize::MAX), 3);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn path_accounting_views() {
+        let mut c = RadixCache::new(1 << 20);
+        let a = c.insert(&[1, 2, 3, 4]).node;
+        let b = c.insert(&[1, 2, 7, 8, 9]).node;
+        // shared prefix [1,2]; total unique = 2 + 2 + 3 = 7
+        assert_eq!(c.path_tokens(a), 4);
+        assert_eq!(c.path_tokens(b), 5);
+        assert_eq!(c.path_union_tokens(&[a, b]), 7);
+        assert_eq!(c.path_union_tokens(&[a]), 4);
+        assert_eq!(c.path_union_tokens(&[a, a]), 4);
+        assert_eq!(c.path_union_tokens(&[]), 0);
+        assert_eq!(c.live_tokens(), 7);
+        c.lock(a);
+        assert_eq!(c.pinned_tokens(), 4);
+        c.unlock(a);
+    }
+
+    #[test]
+    fn release_branch_frees_exclusive_tail_only() {
+        let mut c = RadixCache::new(1 << 20);
+        let shared = c.insert(&[1, 2]).node;
+        let a = c.insert(&[1, 2, 3, 4]).node;
+        let b = c.insert(&[1, 2, 7]).node;
+        c.lock(a);
+        c.lock(b);
+        c.unlock(a);
+        // a's exclusive [3,4] tail goes; the shared [1,2] prefix stays
+        // (pinned through b) and b's branch is untouched
+        assert_eq!(c.release_branch(a), 2);
+        assert_eq!(c.live_tokens(), 3);
+        let (m, _) = c.match_prefix(&[1, 2, 7]);
+        assert_eq!(m, 3);
+        // releasing an already-shared interior node is a no-op
+        assert_eq!(c.release_branch(shared), 0);
+        c.unlock(b);
+        assert_eq!(c.release_branch(b), 3, "now the whole chain unwinds");
+        assert_eq!(c.live_tokens(), 0);
+        // releasing a dead node is a safe no-op
+        assert_eq!(c.release_branch(b), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evict_unpinned_cascades_and_spares_locks() {
+        let mut c = RadixCache::new(1 << 20);
+        let keep = c.insert(&[1, 2, 3]).node;
+        c.insert(&[1, 2, 3, 4, 5]);
+        c.insert(&[1, 7]);
+        c.insert(&[8, 9, 10]);
+        c.lock(keep);
+        let freed = c.evict_unpinned();
+        // everything except the pinned [1,2,3] path goes, including the
+        // [4,5] extension below the pin and multi-level branches
+        assert_eq!(freed, 2 + 1 + 3);
+        assert_eq!(c.live_tokens(), 3);
+        assert_eq!(c.path_union_tokens(&[keep]), 3);
+        c.check_invariants().unwrap();
+        c.unlock(keep);
+        assert_eq!(c.evict_unpinned(), 3);
+        assert_eq!(c.live_nodes(), 0);
     }
 
     #[test]

@@ -12,8 +12,12 @@
 //! * **L1 (python/compile/kernels/, build time)** — Pallas kernels for the
 //!   attention hot-spot (shared-prefix tree attention), interpret mode.
 //!
-//! Python never runs on the request path: `runtime` loads the compiled
-//! artifacts via PJRT and executes them from rust.
+//! Python never runs on the request path: `runtime` (behind the
+//! off-by-default `pjrt` feature) loads the compiled artifacts via PJRT and
+//! executes them from rust. The default build is fully offline: search,
+//! the batched [`engine::BatchEngine`], the radix KV cache, and the
+//! multi-problem [`coordinator::serve`] loop run against the calibrated
+//! synthetic workload with no external dependencies.
 
 pub mod cluster;
 pub mod coordinator;
@@ -28,5 +32,6 @@ pub mod reward;
 pub mod search;
 pub mod tree;
 pub mod util;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod workload;

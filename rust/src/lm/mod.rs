@@ -16,8 +16,50 @@ pub trait StepGenerator {
     /// Sample `n` continuations of the trajectory ending at `leaf`.
     fn expand(&mut self, tree: &SearchTree, leaf: NodeId, n: usize) -> Vec<StepInfo>;
 
+    /// Sample continuations for a whole step's allocation in one call — the
+    /// batched entry point [`crate::engine::BatchEngine`] drives. Results are
+    /// per-request, in request order. The default runs the requests through
+    /// [`StepGenerator::expand`] sequentially (deterministic RNG order);
+    /// batched backends override this to fuse the decode.
+    fn expand_batch(
+        &mut self,
+        tree: &SearchTree,
+        requests: &[(NodeId, usize)],
+    ) -> Vec<Vec<StepInfo>> {
+        requests.iter().map(|&(leaf, n)| self.expand(tree, leaf, n)).collect()
+    }
+
     /// Tokens in the problem prompt (root node size).
     fn prompt_tokens(&self) -> usize;
+
+    /// Surface token ids of the prompt, when the generator has real ones
+    /// (PJRT path). `None` lets the engine mint synthetic unique ids for its
+    /// radix accounting.
+    fn prompt_token_ids(&self) -> Option<Vec<u32>> {
+        None
+    }
+}
+
+impl<G: StepGenerator + ?Sized> StepGenerator for &mut G {
+    fn expand(&mut self, tree: &SearchTree, leaf: NodeId, n: usize) -> Vec<StepInfo> {
+        (**self).expand(tree, leaf, n)
+    }
+
+    fn expand_batch(
+        &mut self,
+        tree: &SearchTree,
+        requests: &[(NodeId, usize)],
+    ) -> Vec<Vec<StepInfo>> {
+        (**self).expand_batch(tree, requests)
+    }
+
+    fn prompt_tokens(&self) -> usize {
+        (**self).prompt_tokens()
+    }
+
+    fn prompt_token_ids(&self) -> Option<Vec<u32>> {
+        (**self).prompt_token_ids()
+    }
 }
 
 /// Synthetic LM over one [`Problem`]'s latent solution space.

@@ -2,18 +2,23 @@
 //!
 //! Subcommands:
 //!   eval   run a search policy over a synthetic problem set (accuracy/KV)
-//!   serve  end-to-end PJRT serving demo (real AOT transformer on CPU)
+//!   serve  batched serving demo: concurrent problems through one engine
+//!          (pass --pjrt for the real AOT transformer; needs the `pjrt`
+//!          feature and `make artifacts`)
 //!   info   show compiled artifact + workload configuration
 //!
 //! Global options can also come from a TOML config (`--config path`), with
 //! CLI flags taking precedence.
 
-use anyhow::{anyhow, bail, Result};
-use ets::eval::{evaluate_with_workers, EvalConfig, PolicySpec};
+use ets::engine::{PerfModel, H100_NVL};
+use ets::eval::{evaluate_serve, evaluate_with_workers, EvalConfig, PolicySpec};
 use ets::util::argparse::{Args, Spec};
+use ets::util::error::{Error, Result};
 use ets::util::json::Json;
+use ets::util::stats;
 use ets::util::toml::Doc;
 use ets::workload::{dataset_by_name, model_by_name, WorkloadSpec};
+use ets::{bail, err};
 
 const USAGE: &str = "\
 ets — Efficient Tree Search for Inference-Time Scaling (reproduction)
@@ -21,8 +26,9 @@ ets — Efficient Tree Search for Inference-Time Scaling (reproduction)
 USAGE:
   ets eval  [--dataset D] [--model M] [--policy P] [--width N]
             [--problems K] [--seed S] [--workers W] [--json FILE]
-  ets serve [--requests K] [--width N] [--policy P] [--lambda-b X]
-            [--artifacts DIR]
+  ets serve [--dataset D] [--model M] [--policy P] [--width N]
+            [--problems K] [--concurrency C] [--seed S] [--json FILE]
+            [--pjrt] [--requests K] [--artifacts DIR]
   ets info  [--artifacts DIR]
 
 POLICIES: rebase | beam-<k> | beam-sqrt | dvts-<k> | dvts-sqrt |
@@ -33,7 +39,7 @@ MODELS:   llemma-34b-sim | mistral-7b-sim";
 fn main() {
     let spec = Spec::new(&[
         "dataset", "model", "policy", "width", "problems", "seed", "workers",
-        "json", "config", "requests", "lambda-b", "artifacts",
+        "json", "config", "requests", "lambda-b", "artifacts", "concurrency",
     ]);
     let args = match spec.parse(std::env::args()) {
         Ok(a) => a,
@@ -52,7 +58,7 @@ fn main() {
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
@@ -61,35 +67,44 @@ fn load_config(args: &Args) -> Result<Doc> {
     match args.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
-            Doc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))
+            Doc::parse(&text).map_err(|e| err!("{path}: {e}"))
         }
         None => Ok(Doc::parse("").unwrap()),
     }
 }
 
-fn cmd_eval(args: &Args) -> Result<()> {
+/// Resolve the (dataset, model, policy, width, problems) eval/serve config
+/// shared by both subcommands.
+fn eval_config(args: &Args, section: &str, default_problems: usize) -> Result<EvalConfig> {
     let cfg_doc = load_config(args)?;
-    let dataset_name =
-        args.get_or("dataset", &cfg_doc.str_or("eval.dataset", "synth-math500")).to_string();
+    let key = |k: &str| format!("{section}.{k}");
+    let dataset_name = args
+        .get_or("dataset", &cfg_doc.str_or(&key("dataset"), "synth-math500"))
+        .to_string();
     let model_name =
-        args.get_or("model", &cfg_doc.str_or("eval.model", "llemma-34b-sim")).to_string();
-    let policy_name = args.get_or("policy", &cfg_doc.str_or("eval.policy", "ets")).to_string();
-    let dataset = dataset_by_name(&dataset_name)
-        .ok_or_else(|| anyhow!("unknown dataset {dataset_name}"))?;
-    let model =
-        model_by_name(&model_name).ok_or_else(|| anyhow!("unknown model {model_name}"))?;
-    let policy = PolicySpec::parse(&policy_name).map_err(|e| anyhow!(e))?;
-    let cfg = EvalConfig {
+        args.get_or("model", &cfg_doc.str_or(&key("model"), "llemma-34b-sim")).to_string();
+    let policy_name = args.get_or("policy", &cfg_doc.str_or(&key("policy"), "ets")).to_string();
+    let dataset =
+        dataset_by_name(&dataset_name).ok_or_else(|| err!("unknown dataset {dataset_name}"))?;
+    let model = model_by_name(&model_name).ok_or_else(|| err!("unknown model {model_name}"))?;
+    let policy = PolicySpec::parse(&policy_name).map_err(Error::msg)?;
+    Ok(EvalConfig {
         spec: WorkloadSpec::new(dataset, model),
         policy,
-        width: args.get_usize("width", cfg_doc.usize_or("eval.width", 64)).map_err(|e| anyhow!(e))?,
+        width: args
+            .get_usize("width", cfg_doc.usize_or(&key("width"), 64))
+            .map_err(Error::msg)?,
         n_problems: args
-            .get_usize("problems", cfg_doc.usize_or("eval.problems", 100))
-            .map_err(|e| anyhow!(e))?,
-        seed: args.get_u64("seed", 20260710).map_err(|e| anyhow!(e))?,
+            .get_usize("problems", cfg_doc.usize_or(&key("problems"), default_problems))
+            .map_err(Error::msg)?,
+        seed: args.get_u64("seed", 20260710).map_err(Error::msg)?,
         max_steps: dataset.n_steps + 6,
-    };
-    let workers = args.get_usize("workers", 0).map_err(|e| anyhow!(e))?;
+    })
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = eval_config(args, "eval", 100)?;
+    let workers = args.get_usize("workers", 0).map_err(Error::msg)?;
     let workers = if workers == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
@@ -128,17 +143,85 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Batched serving over the synthetic workload: up to `--concurrency`
+/// problems interleave steps through one engine/radix cache, with every
+/// merged batch costed on the H100 roofline.
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.flag("pjrt") {
+        return cmd_serve_pjrt(args);
+    }
+    let cfg = eval_config(args, "serve", 16)?; // serving-demo problem default
+    let cfg_doc = load_config(args)?;
+    let concurrency = args
+        .get_usize("concurrency", cfg_doc.usize_or("serve.concurrency", 8))
+        .map_err(Error::msg)?;
+    let perf = PerfModel::new(H100_NVL, true, concurrency);
+    let t0 = std::time::Instant::now();
+    let r = evaluate_serve(&cfg, concurrency, &perf);
+    let wall = t0.elapsed();
+    let secs = r.serve.batch_seconds();
+    let mean_batch = if r.serve.batches.is_empty() {
+        0.0
+    } else {
+        r.serve.batches.iter().map(|b| b.model_calls as f64).sum::<f64>()
+            / r.serve.batches.len() as f64
+    };
+    println!(
+        "served {} problems (width {}, policy {}) through one engine, concurrency {}",
+        cfg.n_problems, cfg.width, r.report.policy, concurrency
+    );
+    println!(
+        "  acc={:.1}%  kvΣ/problem={:.0}  peak resident kv={} tokens  max concurrent={}",
+        100.0 * r.report.accuracy(),
+        r.report.mean_kv_tokens,
+        r.serve.peak_resident_kv_tokens,
+        r.serve.max_concurrent
+    );
+    println!(
+        "  {} batches, mean {:.1} seqs/batch | batch latency p50 {:.1} ms p95 {:.1} ms",
+        r.serve.batches.len(),
+        mean_batch,
+        1e3 * stats::median(&secs),
+        1e3 * stats::percentile(&secs, 95.0),
+    );
+    println!(
+        "  modeled serving time {:.2}s → {:.3} problems/s  [host wall {:?}]",
+        r.serve.modeled_seconds,
+        r.serve.throughput_problems_per_sec(),
+        wall
+    );
+    if let Some(path) = args.get("json") {
+        let j = Json::obj(vec![
+            ("policy", Json::str(&r.report.policy)),
+            ("dataset", Json::str(&r.report.dataset)),
+            ("width", Json::num(cfg.width as f64)),
+            ("n_problems", Json::num(cfg.n_problems as f64)),
+            ("concurrency", Json::num(concurrency as f64)),
+            ("accuracy", Json::num(r.report.accuracy())),
+            ("mean_kv_tokens", Json::num(r.report.mean_kv_tokens)),
+            ("batches", Json::num(r.serve.batches.len() as f64)),
+            ("modeled_seconds", Json::num(r.serve.modeled_seconds)),
+            ("throughput", Json::num(r.serve.throughput_problems_per_sec())),
+            ("peak_resident_kv_tokens", Json::num(r.serve.peak_resident_kv_tokens as f64)),
+        ]);
+        std::fs::write(path, j.to_string_compact())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_serve_pjrt(args: &Args) -> Result<()> {
     use ets::embed::Embedder;
     use ets::engine::pjrt_lm::{PjrtEmbedder, PjrtLm, PjrtLmConfig, PjrtPrm};
-    use ets::search::{run_search, EtsPolicy, RebasePolicy, SearchParams, SearchPolicy};
+    use ets::search::{run_search, EtsPolicy, RebasePolicy, SearchParams};
     use std::rc::Rc;
 
     let dir = args.get_or("artifacts", "artifacts").to_string();
-    let requests = args.get_usize("requests", 4).map_err(|e| anyhow!(e))?;
-    let width = args.get_usize("width", 8).map_err(|e| anyhow!(e))?;
+    let requests = args.get_usize("requests", 4).map_err(Error::msg)?;
+    let width = args.get_usize("width", 8).map_err(Error::msg)?;
     let policy_name = args.get_or("policy", "ets").to_string();
-    let lambda_b = args.get_f64("lambda-b", 1.5).map_err(|e| anyhow!(e))?;
+    let lambda_b = args.get_f64("lambda-b", 1.5).map_err(Error::msg)?;
     let arts = Rc::new(ets::runtime::Artifacts::open(dir)?);
     println!(
         "serving on PJRT/{} — model d={} L={} H={} S={} V={}",
@@ -155,14 +238,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     for req in 0..requests {
         let mut rng = ets::util::rng::Rng::new(1000 + req as u64);
-        let prompt: Vec<u32> =
-            (0..12).map(|_| 2 + rng.below(200) as u32).collect();
-        let mut lm = PjrtLm::new(
-            arts.clone(),
-            prompt.clone(),
-            req as u64,
-            PjrtLmConfig::default(),
-        );
+        let prompt: Vec<u32> = (0..12).map(|_| 2 + rng.below(200) as u32).collect();
+        let mut lm =
+            PjrtLm::new(arts.clone(), prompt.clone(), req as u64, PjrtLmConfig::default());
         let mut prm = PjrtPrm::new(arts.clone(), prompt);
         let params = SearchParams { width, max_steps: 8 };
         let outcome = if policy_name.starts_with("ets") {
@@ -170,7 +248,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
             run_search(&mut lm, &mut prm, &mut pol, &params)
         } else {
             let mut pol = RebasePolicy::default();
-            let _: String = SearchPolicy::name(&pol);
             run_search(&mut lm, &mut prm, &mut pol, &params)
         };
         total_tokens += outcome.total_new_tokens();
@@ -199,6 +276,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve_pjrt(_args: &Args) -> Result<()> {
+    bail!("this binary was built without the `pjrt` feature; rebuild with `--features pjrt`")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts").to_string();
     if !std::path::Path::new(&dir).join("meta.json").exists() {
@@ -211,7 +294,18 @@ fn cmd_info(args: &Args) -> Result<()> {
         "lm: vocab={} d_model={} layers={} heads={} head_dim={} max_seq={} batches={:?}",
         d.vocab, d.d_model, d.n_layers, d.n_heads, d.head_dim, d.max_seq, d.lm_batches
     );
-    println!("prm batch: {}  embed: batch={} seq={} dim={}", d.prm_batch, d.embed_batch, d.embed_max_seq, d.embed_out_dim);
+    println!(
+        "prm batch: {}  embed: batch={} seq={} dim={}",
+        d.prm_batch, d.embed_batch, d.embed_max_seq, d.embed_out_dim
+    );
     println!("datasets: synth-math500, synth-gsm8k  models: llemma-34b-sim, mistral-7b-sim");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_info(_args: &Args) -> Result<()> {
+    println!("built without the `pjrt` feature — no compiled artifacts to inspect");
+    println!("datasets: synth-math500, synth-gsm8k  models: llemma-34b-sim, mistral-7b-sim");
+    println!("rebuild with `--features pjrt` (and run `make artifacts`) for the PJRT path");
     Ok(())
 }

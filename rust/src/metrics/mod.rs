@@ -102,6 +102,11 @@ pub fn pct(x: f64) -> String {
     format!("{:.1}", 100.0 * x)
 }
 
+/// Format a duration in seconds as milliseconds ("12.3ms").
+pub fn ms(seconds: f64) -> String {
+    format!("{:.1}ms", 1e3 * seconds)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +135,6 @@ mod tests {
         assert_eq!(ratio(180.0, 100.0), "1.80x");
         assert_eq!(ratio(1.0, 0.0), "-");
         assert_eq!(pct(0.525), "52.5");
+        assert_eq!(ms(0.0123), "12.3ms");
     }
 }

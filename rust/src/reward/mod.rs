@@ -17,6 +17,12 @@ pub trait RewardModel {
     fn score(&mut self, tree: &SearchTree, nodes: &[NodeId]) -> Vec<f64>;
 }
 
+impl<R: RewardModel + ?Sized> RewardModel for &mut R {
+    fn score(&mut self, tree: &SearchTree, nodes: &[NodeId]) -> Vec<f64> {
+        (**self).score(tree, nodes)
+    }
+}
+
 /// Noisy oracle: `sigmoid(margin * (alive ? 1 : -1) + path_bias + noise)`.
 ///
 /// Two noise components, both *deterministic per node path* (hash-seeded),

@@ -6,11 +6,17 @@
 //! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids and round-trips cleanly.
 
-use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+use crate::{bail, err};
+
+pub mod xla_shim;
+// The offline shim provides the exact `xla` API surface; link real PJRT
+// bindings by swapping this alias.
+use self::xla_shim as xla;
 
 /// A PJRT client; executables are loaded from `artifacts/`.
 pub struct Runtime {
@@ -123,13 +129,13 @@ impl Artifacts {
         let meta_path = dir.join("meta.json");
         let text = std::fs::read_to_string(&meta_path)
             .with_context(|| format!("reading {}", meta_path.display()))?;
-        let meta = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let meta = Json::parse(&text).map_err(|e| err!("meta.json: {e}"))?;
         let num = |path: &[&str]| -> Result<usize> {
             let mut v = &meta;
             for p in path {
-                v = v.get(p).ok_or_else(|| anyhow!("meta.json missing {path:?}"))?;
+                v = v.get(p).ok_or_else(|| err!("meta.json missing {path:?}"))?;
             }
-            v.as_f64().map(|x| x as usize).ok_or_else(|| anyhow!("{path:?} not a number"))
+            v.as_f64().map(|x| x as usize).ok_or_else(|| err!("{path:?} not a number"))
         };
         let dims = ModelDims {
             vocab: num(&["model", "vocab"])?,

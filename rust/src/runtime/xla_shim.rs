@@ -1,0 +1,200 @@
+//! Offline stand-in for the `xla` (PJRT bindings) crate.
+//!
+//! The build environment has no crate registry and no XLA toolchain, so the
+//! `pjrt` feature compiles against this shim: the exact API surface
+//! `runtime` and `engine::pjrt_lm` use, with real implementations for the
+//! host-side pieces ([`Literal`] construction / extraction) and honest
+//! runtime errors for anything that needs an actual PJRT backend
+//! ([`PjRtClient::cpu`], HLO parsing, execution). Swapping in real bindings
+//! is a one-line change in `runtime/mod.rs` (`use self::xla_shim as xla`).
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?` + context.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type XlaResult<T> = std::result::Result<T, XlaError>;
+
+const NO_BACKEND: &str =
+    "no real PJRT backend linked: this build uses the offline xla shim (see runtime/xla_shim.rs)";
+
+/// Element storage of a [`Literal`].
+#[derive(Clone, Debug)]
+pub enum Store {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + Sized {
+    fn into_store(v: Vec<Self>) -> Store;
+    fn from_store(s: &Store) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn into_store(v: Vec<Self>) -> Store {
+        Store::F32(v)
+    }
+
+    fn from_store(s: &Store) -> Option<Vec<Self>> {
+        match s {
+            Store::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn into_store(v: Vec<Self>) -> Store {
+        Store::I32(v)
+    }
+
+    fn from_store(s: &Store) -> Option<Vec<Self>> {
+        match s {
+            Store::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host literal: flat row-major data + dims. Fully functional in the shim.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    store: Store,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { store: T::into_store(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    fn len(&self) -> usize {
+        match &self.store {
+            Store::F32(v) => v.len(),
+            Store::I32(v) => v.len(),
+            Store::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> XlaResult<Literal> {
+        let expect: i64 = dims.iter().product();
+        if matches!(self.store, Store::Tuple(_)) {
+            return Err(XlaError("cannot reshape a tuple literal".into()));
+        }
+        if expect != self.len() as i64 {
+            return Err(XlaError(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.len()
+            )));
+        }
+        Ok(Literal { store: self.store.clone(), dims: dims.to_vec() })
+    }
+
+    /// Extract the elements as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> XlaResult<Vec<T>> {
+        T::from_store(&self.store)
+            .ok_or_else(|| XlaError("literal element type mismatch".into()))
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn decompose_tuple(&mut self) -> XlaResult<Vec<Literal>> {
+        match std::mem::replace(&mut self.store, Store::Tuple(vec![])) {
+            Store::Tuple(v) => Ok(v),
+            other => {
+                self.store = other;
+                Err(XlaError("decompose_tuple on a non-tuple literal".into()))
+            }
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (backend-only; the shim cannot parse HLO text).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> XlaResult<Self> {
+        Err(XlaError(NO_BACKEND.into()))
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        Err(XlaError(NO_BACKEND.into()))
+    }
+}
+
+/// Loaded executable (backend-only).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[Literal]) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError(NO_BACKEND.into()))
+    }
+}
+
+/// PJRT client (backend-only; construction reports the missing backend).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> XlaResult<Self> {
+        Err(XlaError(NO_BACKEND.into()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "shim".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
+        Err(XlaError(NO_BACKEND.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn backend_calls_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

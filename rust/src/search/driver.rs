@@ -1,17 +1,27 @@
-//! The PRM-guided tree-search driver: runs one problem to completion under a
-//! policy, recording the efficiency metrics the paper's evaluation reports.
+//! The PRM-guided tree-search driver, built on the batched engine: a
+//! [`SearchSession`] is one problem's resumable search state machine, and
+//! [`run_search`] drives a single session to completion. The multi-problem
+//! serving loop ([`crate::coordinator::serve`]) interleaves many sessions
+//! through one [`BatchEngine`] instead.
+//!
+//! All KV numbers reported here are *views over the engine's
+//! [`crate::kvcache::RadixCache`]* — the tree keeps no KV counters of its
+//! own. In debug builds every step asserts that the cache-derived live KV
+//! equals the sum of live tree step tokens (the accounting the seed kept by
+//! hand, now provably consistent).
 
+use crate::engine::batch::{BatchEngine, ExpandRequest, KvLedger, DEFAULT_KV_CAPACITY};
+use crate::lm::StepGenerator;
 use crate::reward::RewardModel;
 use crate::search::policy::SearchPolicy;
 use crate::search::voting::{weighted_majority, Completion};
-use crate::lm::StepGenerator;
 use crate::tree::{NodeId, SearchTree};
 
 /// Per-search-step efficiency record.
 #[derive(Clone, Debug, Default)]
 pub struct StepMetrics {
     /// Live unique KV tokens during this step (radix-shared; the paper's
-    /// per-step KV cache size).
+    /// per-step KV cache size), read from the engine's cache.
     pub live_kv_tokens: usize,
     /// KV tokens if every trajectory kept a private copy (no sharing).
     pub unshared_kv_tokens: usize,
@@ -78,7 +88,180 @@ impl Default for SearchParams {
     }
 }
 
-/// Run PRM-guided tree search for one problem.
+/// One problem's search as a resumable state machine, so a serving loop can
+/// interleave steps from many concurrent searches through one engine.
+///
+/// Protocol per step: [`SearchSession::next_requests`] returns the policy's
+/// allocation as an [`ExpandRequest`] batch (retiring pruned trajectories in
+/// both the tree and the cache); [`SearchSession::step`] executes the batch
+/// through the generator and charges the new KV to the engine. An empty
+/// request batch means the search is over — call [`SearchSession::finish`].
+pub struct SearchSession<G, R, P> {
+    pub lm: G,
+    pub prm: R,
+    pub policy: P,
+    params: SearchParams,
+    tree: SearchTree,
+    ledger: KvLedger,
+    frontier: Vec<NodeId>,
+    width: usize,
+    steps_taken: usize,
+    metrics: Vec<StepMetrics>,
+    completions: Vec<Completion>,
+    completed_leaves: Vec<NodeId>,
+    started: bool,
+}
+
+impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
+    pub fn new(engine: &mut BatchEngine, lm: G, prm: R, policy: P, params: &SearchParams) -> Self {
+        let mut tree = SearchTree::new();
+        let prompt_tokens = lm.prompt_tokens();
+        tree.init_root(prompt_tokens);
+        let ledger = match lm.prompt_token_ids() {
+            Some(ids) if !ids.is_empty() => engine.register_with_prompt(ids),
+            _ => engine.register(prompt_tokens),
+        };
+        Self {
+            lm,
+            prm,
+            policy,
+            params: params.clone(),
+            tree,
+            ledger,
+            frontier: Vec::new(),
+            width: params.width,
+            steps_taken: 0,
+            metrics: Vec::new(),
+            completions: Vec::new(),
+            completed_leaves: Vec::new(),
+            started: false,
+        }
+    }
+
+    pub fn tree(&self) -> &SearchTree {
+        &self.tree
+    }
+
+    pub fn ledger(&self) -> &KvLedger {
+        &self.ledger
+    }
+
+    pub fn metrics(&self) -> &[StepMetrics] {
+        &self.metrics
+    }
+
+    /// The next step's expansion batch. Prunes retired trajectories (policy
+    /// drops, prior completions) from the tree *and* releases their KV in
+    /// the engine's cache. Empty when the search is over.
+    pub fn next_requests(&mut self, engine: &mut BatchEngine) -> Vec<ExpandRequest> {
+        if !self.started {
+            self.started = true;
+            return vec![ExpandRequest { leaf: self.tree.root(), n: self.width }];
+        }
+        if self.steps_taken >= self.params.max_steps
+            || self.width == 0
+            || self.frontier.is_empty()
+        {
+            return Vec::new();
+        }
+        let alloc = self.policy.allocate(&self.tree, &self.frontier, self.width);
+        debug_assert!(!alloc.is_empty(), "policy returned empty allocation");
+        // Prune everything outside the allocated paths (completed
+        // trajectories' exclusive KV is released here too).
+        let keep: Vec<NodeId> = alloc.iter().map(|&(c, _)| c).collect();
+        self.tree.retain_paths(&keep);
+        engine.retire(&mut self.ledger, &keep);
+        alloc.into_iter().map(|(leaf, n)| ExpandRequest { leaf, n }).collect()
+    }
+
+    /// Execute one step's allocation: a single batched generator call,
+    /// insert-on-expand KV charging, PRM scoring, and completion retirement.
+    pub fn step(&mut self, engine: &mut BatchEngine, requests: &[ExpandRequest]) -> StepMetrics {
+        let mut m = StepMetrics {
+            frontier: if self.steps_taken == 0 { 1 } else { self.frontier.len() },
+            ..Default::default()
+        };
+        let expansions = engine.expand(&mut self.lm, &self.tree, requests);
+        let mut new_nodes: Vec<NodeId> = Vec::new();
+        for (req, steps) in requests.iter().zip(expansions) {
+            m.model_calls += steps.len();
+            for s in steps {
+                m.new_tokens += s.tokens;
+                new_nodes.push(self.tree.add_child(req.leaf, s, 0.0));
+            }
+        }
+        engine.admit(&mut self.ledger, &mut self.tree, &new_nodes);
+        let rewards = self.prm.score(&self.tree, &new_nodes);
+        m.prm_calls = new_nodes.len();
+        for (&n, &r) in new_nodes.iter().zip(&rewards) {
+            self.tree.get_mut(n).reward = r;
+        }
+        if self.steps_taken == 0 {
+            self.policy.on_root_children(&new_nodes);
+        }
+        m.live_kv_tokens = engine.live_kv(&self.ledger);
+        m.unshared_kv_tokens = engine.unshared_kv(&self.ledger);
+        #[cfg(debug_assertions)]
+        self.assert_cache_matches_tree(engine, &m);
+        self.frontier.clear();
+        for n in new_nodes {
+            let (terminal, answer, reward) = {
+                let node = self.tree.get(n);
+                (node.step.terminal, node.step.answer, node.reward)
+            };
+            if terminal {
+                if let Some(ans) = answer {
+                    self.completions.push((ans, reward));
+                }
+                // A terminal step with no parsed answer is dropped from
+                // voting but still retires its trajectory slot.
+                self.completed_leaves.push(n);
+                self.width = self.width.saturating_sub(1);
+            } else {
+                self.frontier.push(n);
+            }
+        }
+        self.steps_taken += 1;
+        self.metrics.push(m.clone());
+        m
+    }
+
+    /// Step-level invariant (debug builds): when every token id was minted
+    /// by the engine, the cache's live-KV view must equal the sum of live
+    /// tree step tokens exactly — the two accountings cannot drift.
+    #[cfg(debug_assertions)]
+    fn assert_cache_matches_tree(&self, engine: &BatchEngine, m: &StepMetrics) {
+        if let Err(e) = engine.check_invariants() {
+            panic!("radix cache invariant broken: {e}");
+        }
+        if !self.ledger.exact_accounting() {
+            return; // real surface ids may dedup beyond tree-level sharing
+        }
+        let tree_live: usize = (0..self.tree.len())
+            .filter(|&i| self.tree.get(i).live)
+            .map(|i| self.tree.get(i).step.tokens)
+            .sum();
+        assert_eq!(
+            m.live_kv_tokens, tree_live,
+            "cache live-KV accounting drifted from the tree at step {}",
+            self.steps_taken
+        );
+    }
+
+    /// Release every KV pin the session still holds and fold the outcome.
+    pub fn finish(mut self, engine: &mut BatchEngine) -> SearchOutcome {
+        engine.close(&mut self.ledger);
+        SearchOutcome {
+            answer: weighted_majority(&self.completions),
+            completions: self.completions,
+            steps: self.metrics,
+            tree: self.tree,
+            completed_leaves: self.completed_leaves,
+        }
+    }
+}
+
+/// Run PRM-guided tree search for one problem on a fresh engine.
 ///
 /// The loop mirrors the paper's setup: sample `width` continuations at the
 /// root, then at each step let the policy allocate the remaining width over
@@ -91,94 +274,27 @@ pub fn run_search<G: StepGenerator, R: RewardModel, P: SearchPolicy>(
     policy: &mut P,
     params: &SearchParams,
 ) -> SearchOutcome {
-    let mut tree = SearchTree::new();
-    let root = tree.init_root(lm.prompt_tokens());
-    let mut metrics: Vec<StepMetrics> = Vec::new();
-    let mut completions: Vec<Completion> = Vec::new();
-    let mut completed_leaves: Vec<NodeId> = Vec::new();
-    let mut width = params.width;
+    let mut engine = BatchEngine::new(DEFAULT_KV_CAPACITY);
+    run_search_on(&mut engine, lm, prm, policy, params)
+}
 
-    // ---- root expansion ----
-    let mut frontier: Vec<NodeId> = Vec::new();
-    {
-        let steps = lm.expand(&tree, root, width);
-        let mut m = StepMetrics { frontier: 1, model_calls: steps.len(), ..Default::default() };
-        let mut new_nodes = Vec::with_capacity(steps.len());
-        for s in steps {
-            m.new_tokens += s.tokens;
-            new_nodes.push(tree.add_child(root, s, 0.0));
-        }
-        let rewards = prm.score(&tree, &new_nodes);
-        m.prm_calls = new_nodes.len();
-        for (&n, &r) in new_nodes.iter().zip(&rewards) {
-            tree.get_mut(n).reward = r;
-        }
-        policy.on_root_children(&new_nodes);
-        m.live_kv_tokens = tree.live_kv_tokens();
-        m.unshared_kv_tokens = tree.unshared_kv_tokens(&new_nodes);
-        for n in new_nodes {
-            let node = tree.get(n);
-            if node.step.terminal {
-                completions.push((node.step.answer.unwrap(), node.reward));
-                completed_leaves.push(n);
-                width = width.saturating_sub(1);
-            } else {
-                frontier.push(n);
-            }
-        }
-        metrics.push(m);
-    }
-
-    // ---- search steps ----
-    for _ in 1..params.max_steps {
-        if width == 0 || frontier.is_empty() {
+/// Run one problem's search on an existing (possibly shared) engine.
+pub fn run_search_on<G: StepGenerator, R: RewardModel, P: SearchPolicy>(
+    engine: &mut BatchEngine,
+    lm: &mut G,
+    prm: &mut R,
+    policy: &mut P,
+    params: &SearchParams,
+) -> SearchOutcome {
+    let mut session = SearchSession::new(engine, lm, prm, policy, params);
+    loop {
+        let requests = session.next_requests(engine);
+        if requests.is_empty() {
             break;
         }
-        let alloc = policy.allocate(&tree, &frontier, width);
-        debug_assert!(!alloc.is_empty(), "policy returned empty allocation");
-        // Prune everything outside the allocated paths (completed
-        // trajectories' exclusive KV is freed here too).
-        let keep: Vec<NodeId> = alloc.iter().map(|&(c, _)| c).collect();
-        tree.retain_paths(&keep);
-
-        let mut m = StepMetrics { frontier: frontier.len(), ..Default::default() };
-        let mut new_nodes: Vec<NodeId> = Vec::new();
-        for &(leaf, n) in &alloc {
-            let steps = lm.expand(&tree, leaf, n);
-            m.model_calls += steps.len();
-            for s in steps {
-                m.new_tokens += s.tokens;
-                new_nodes.push(tree.add_child(leaf, s, 0.0));
-            }
-        }
-        let rewards = prm.score(&tree, &new_nodes);
-        m.prm_calls = new_nodes.len();
-        for (&n, &r) in new_nodes.iter().zip(&rewards) {
-            tree.get_mut(n).reward = r;
-        }
-        m.live_kv_tokens = tree.live_kv_tokens();
-        m.unshared_kv_tokens = tree.unshared_kv_tokens(&new_nodes);
-        frontier.clear();
-        for n in new_nodes {
-            let node = tree.get(n);
-            if node.step.terminal {
-                completions.push((node.step.answer.unwrap(), node.reward));
-                completed_leaves.push(n);
-                width = width.saturating_sub(1);
-            } else {
-                frontier.push(n);
-            }
-        }
-        metrics.push(m);
+        session.step(engine, &requests);
     }
-
-    SearchOutcome {
-        answer: weighted_majority(&completions),
-        completions,
-        steps: metrics,
-        tree,
-        completed_leaves,
-    }
+    session.finish(engine)
 }
 
 #[cfg(test)]
@@ -188,6 +304,7 @@ mod tests {
     use crate::lm::SynthLm;
     use crate::reward::OraclePrm;
     use crate::search::policy::{BeamPolicy, EtsPolicy, RebasePolicy};
+    use crate::tree::StepInfo;
     use crate::workload::{ProblemSet, WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
 
     fn setup(seed: u64) -> (SynthLm, OraclePrm) {
@@ -224,6 +341,30 @@ mod tests {
             (out.answer, out.total_kv_tokens(), out.total_new_tokens())
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn shared_engine_matches_fresh_engine() {
+        // Running on a shared engine (serve path) must not perturb results:
+        // KV accounting is per-ledger and token ids never collide.
+        let fresh = {
+            let (mut lm, mut prm) = setup(7);
+            let mut pol = RebasePolicy::default();
+            let params = SearchParams { width: 8, max_steps: 16 };
+            let out = run_search(&mut lm, &mut prm, &mut pol, &params);
+            (out.answer, out.total_kv_tokens(), out.total_new_tokens())
+        };
+        let mut engine = BatchEngine::new(DEFAULT_KV_CAPACITY);
+        // occupy the engine with another problem first
+        let (mut lm0, mut prm0) = setup(3);
+        let mut pol0 = RebasePolicy::default();
+        let params = SearchParams { width: 8, max_steps: 16 };
+        let _ = run_search_on(&mut engine, &mut lm0, &mut prm0, &mut pol0, &params);
+        let (mut lm, mut prm) = setup(7);
+        let mut pol = RebasePolicy::default();
+        let out = run_search_on(&mut engine, &mut lm, &mut prm, &mut pol, &params);
+        assert_eq!(fresh, (out.answer, out.total_kv_tokens(), out.total_new_tokens()));
+        assert_eq!(engine.live_tokens(), 0, "finished searches must release all KV");
     }
 
     #[test]
@@ -284,5 +425,49 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// A generator that emits terminal steps with *no parsed answer*: the
+    /// driver must drop them from voting instead of panicking (regression
+    /// for the `answer.unwrap()` crash).
+    struct NoAnswerLm {
+        emitted: usize,
+    }
+
+    impl StepGenerator for NoAnswerLm {
+        fn expand(&mut self, _tree: &SearchTree, _leaf: NodeId, n: usize) -> Vec<StepInfo> {
+            (0..n)
+                .map(|i| {
+                    self.emitted += 1;
+                    let parsed = self.emitted % 2 == 0;
+                    StepInfo {
+                        tokens: 5,
+                        sem: i as u64,
+                        paraphrase: self.emitted as u64,
+                        terminal: true,
+                        answer: if parsed { Some(42) } else { None },
+                        path_id: self.emitted as u64,
+                        alive: true,
+                        ..Default::default()
+                    }
+                })
+                .collect()
+        }
+
+        fn prompt_tokens(&self) -> usize {
+            10
+        }
+    }
+
+    #[test]
+    fn unparsed_terminal_answers_are_dropped_not_fatal() {
+        let mut lm = NoAnswerLm { emitted: 0 };
+        let mut prm = OraclePrm::new(1.0, 0.1, 9);
+        let mut pol = RebasePolicy::default();
+        let params = SearchParams { width: 6, max_steps: 4 };
+        let out = run_search(&mut lm, &mut prm, &mut pol, &params);
+        assert_eq!(out.completed_leaves.len(), 6, "all trajectories completed");
+        assert_eq!(out.completions.len(), 3, "only parsed answers vote");
+        assert_eq!(out.answer, Some(42));
     }
 }

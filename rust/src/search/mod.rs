@@ -6,5 +6,7 @@ pub mod policy;
 pub mod sampling;
 pub mod voting;
 
-pub use driver::{run_search, SearchOutcome, SearchParams, StepMetrics};
+pub use driver::{
+    run_search, run_search_on, SearchOutcome, SearchParams, SearchSession, StepMetrics,
+};
 pub use policy::{Allocation, BeamPolicy, DvtsPolicy, EtsPolicy, RebasePolicy, SearchPolicy};

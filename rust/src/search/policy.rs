@@ -28,6 +28,20 @@ pub trait SearchPolicy {
     fn on_root_children(&mut self, _children: &[NodeId]) {}
 }
 
+impl<P: SearchPolicy + ?Sized> SearchPolicy for &mut P {
+    fn allocate(&mut self, tree: &SearchTree, candidates: &[NodeId], width: usize) -> Allocation {
+        (**self).allocate(tree, candidates, width)
+    }
+
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn on_root_children(&mut self, children: &[NodeId]) {
+        (**self).on_root_children(children)
+    }
+}
+
 fn rewards_of(tree: &SearchTree, candidates: &[NodeId]) -> Vec<f64> {
     candidates.iter().map(|&c| tree.get(c).reward).collect()
 }

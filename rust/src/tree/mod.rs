@@ -3,8 +3,14 @@
 //! A [`SearchTree`] holds the partial-trajectory tree for one problem: every
 //! node is one reasoning *step* (a span of generated tokens), children extend
 //! their parent, and the KV cache for a node's tokens is shared by all
-//! descendants. Node bookkeeping (token counts, live/pruned state) feeds both
-//! the ETS cost model (`|V_S|`, `|V_A|`) and the KV-size efficiency metric.
+//! descendants. Node bookkeeping (token counts, live/pruned state) feeds the
+//! ETS cost model (`|V_S|`, `|V_A|`).
+//!
+//! KV accounting does *not* live here: the serving KV numbers (live /
+//! unshared footprints) are views over the shared
+//! [`crate::kvcache::RadixCache`], maintained by
+//! [`crate::engine::BatchEngine`] as trajectories are expanded, pruned, and
+//! completed. The tree only knows per-step token counts.
 
 use std::collections::HashSet;
 
@@ -154,18 +160,6 @@ impl SearchTree {
         self.nodes.iter().filter(|n| n.live).count()
     }
 
-    /// Total tokens held in KV cache by live nodes — the paper's per-step
-    /// "KV cache size" with perfect radix sharing (each node counted once).
-    pub fn live_kv_tokens(&self) -> usize {
-        self.nodes.iter().filter(|n| n.live).map(|n| n.step.tokens).sum()
-    }
-
-    /// Total KV tokens *without* any sharing (each live leaf pays its full
-    /// path) — what a sharing-oblivious server would allocate.
-    pub fn unshared_kv_tokens(&self, leaves: &[NodeId]) -> usize {
-        leaves.iter().map(|&l| self.seq_len(l)).sum()
-    }
-
     /// Build the ETS selection sub-problem over `candidates` (current
     /// frontier leaves): the spanned subtree with dense renumbering.
     ///
@@ -215,6 +209,12 @@ mod tests {
         cur
     }
 
+    /// Σ step tokens over live nodes (what the engine's cache accounting
+    /// must reproduce; computed here from first principles).
+    fn live_step_tokens(t: &SearchTree) -> usize {
+        (0..t.len()).filter(|&i| t.get(i).live).map(|i| t.get(i).step.tokens).sum()
+    }
+
     #[test]
     fn path_and_depth() {
         let mut t = SearchTree::new();
@@ -235,20 +235,22 @@ mod tests {
         let pruned = t.retain_paths(&[a]);
         assert_eq!(pruned, 2);
         assert_eq!(t.live_nodes(), 3);
-        assert!(t.get(b).live == false);
-        assert_eq!(t.live_kv_tokens(), 4 + 6);
+        assert!(!t.get(b).live);
+        assert_eq!(live_step_tokens(&t), 4 + 6);
     }
 
     #[test]
-    fn shared_vs_unshared_kv() {
+    fn seq_len_charges_the_full_path() {
         let mut t = SearchTree::new();
         let root = t.init_root(100);
         // two leaves sharing the 100-token prompt + a 10-token step
         let mid = t.add_child(root, StepInfo { tokens: 10, ..Default::default() }, 0.5);
         let l1 = t.add_child(mid, StepInfo { tokens: 10, ..Default::default() }, 0.5);
         let l2 = t.add_child(mid, StepInfo { tokens: 10, ..Default::default() }, 0.5);
-        assert_eq!(t.live_kv_tokens(), 130);
-        assert_eq!(t.unshared_kv_tokens(&[l1, l2]), 2 * 120);
+        assert_eq!(t.seq_len(l1), 120);
+        assert_eq!(t.seq_len(l2), 120);
+        // each node counted once when walking the union of paths
+        assert_eq!(live_step_tokens(&t), 130);
     }
 
     #[test]
@@ -296,8 +298,8 @@ mod tests {
                 .copied()
                 .filter(|&l| t.get(l).children.is_empty())
                 .collect();
-            let shared = t.live_kv_tokens();
-            let unshared = t.unshared_kv_tokens(&frontier);
+            let shared = live_step_tokens(&t);
+            let unshared: usize = frontier.iter().map(|&l| t.seq_len(l)).sum();
             crate::prop_check!(
                 shared <= unshared || frontier.is_empty(),
                 "shared {shared} > unshared {unshared}"

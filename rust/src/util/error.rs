@@ -1,0 +1,118 @@
+//! Minimal error plumbing (the `anyhow` crate is unavailable offline).
+//!
+//! [`Error`] is a message-carrying error; [`Context`] mirrors the
+//! `anyhow::Context` ergonomics for `Result` and `Option`, and the
+//! [`crate::bail!`] / [`crate::err!`] macros cover the common construction
+//! patterns. Anything implementing `std::error::Error` converts via `?`.
+
+use std::fmt;
+
+/// A human-readable error message.
+pub struct Error(pub String);
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Build an error from anything displayable (e.g. the `String` errors
+    /// returned by the util parsers).
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// Attach context to a failure, `anyhow::Context`-style.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error(format!("{msg}: {e}")))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error(msg.to_string()))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($fmt:tt)+) => {
+        $crate::util::error::Error(format!($($fmt)+))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($fmt:tt)+) => {
+        return Err($crate::err!($($fmt)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.0.is_empty());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), String> = Err("boom".into());
+        let e = r.context("stage").unwrap_err();
+        assert_eq!(e.0, "stage: boom");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| "missing key".to_string()).unwrap_err();
+        assert_eq!(e.0, "missing key");
+        assert_eq!(Some(3).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = err!("bad {}", 7);
+        assert_eq!(e.0, "bad 7");
+        fn f() -> Result<()> {
+            bail!("nope {}", "really");
+        }
+        assert_eq!(f().unwrap_err().0, "nope really");
+    }
+}

@@ -1,9 +1,10 @@
 //! Shared infrastructure substrates: RNG, stats, JSON, CLI args, TOML config,
-//! and a mini property-testing harness. These replace external crates that
-//! are unreachable in the offline build environment (rand, serde, clap, toml,
-//! proptest).
+//! error plumbing, and a mini property-testing harness. These replace
+//! external crates that are unreachable in the offline build environment
+//! (rand, serde, clap, toml, proptest, anyhow).
 
 pub mod argparse;
+pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;

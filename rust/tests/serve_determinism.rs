@@ -1,0 +1,63 @@
+//! Determinism across execution shapes: `coordinator::par_map` eval and the
+//! batched `serve` path must produce identical eval results for 1, 2, and 8
+//! workers / concurrent slots at a fixed seed. Per-problem RNG streams are
+//! seed-derived and the engine's KV accounting is per-ledger, so neither
+//! thread count nor co-scheduling may leak into results.
+
+use ets::engine::{PerfModel, H100_NVL};
+use ets::eval::{evaluate_serve, evaluate_with_workers, EvalConfig, PolicySpec};
+use ets::workload::{WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
+
+fn cfg(policy: PolicySpec) -> EvalConfig {
+    EvalConfig {
+        spec: WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM),
+        policy,
+        width: 16,
+        n_problems: 8,
+        seed: 20260730,
+        max_steps: SYNTH_MATH500.n_steps + 6,
+    }
+}
+
+fn fingerprint(r: &ets::eval::EvalReport) -> (usize, String, String, Vec<(bool, u64, u64)>) {
+    (
+        r.n_correct,
+        format!("{:.6}", r.mean_kv_tokens),
+        format!("{:.6}", r.mean_new_tokens),
+        r.per_problem.clone(),
+    )
+}
+
+#[test]
+fn par_map_workers_agree() {
+    let cfg = cfg(PolicySpec::Rebase);
+    let base = fingerprint(&evaluate_with_workers(&cfg, 1));
+    for workers in [2, 8] {
+        assert_eq!(
+            base,
+            fingerprint(&evaluate_with_workers(&cfg, workers)),
+            "worker count {workers} changed eval results"
+        );
+    }
+}
+
+#[test]
+fn serve_concurrency_agrees_with_par_map() {
+    for policy in [PolicySpec::Rebase, PolicySpec::Ets { lambda_b: 1.5, lambda_d: 1.0 }] {
+        let cfg = cfg(policy);
+        let base = fingerprint(&evaluate_with_workers(&cfg, 2));
+        for concurrency in [1usize, 2, 8] {
+            let perf = PerfModel::new(H100_NVL, true, concurrency);
+            let served = evaluate_serve(&cfg, concurrency, &perf);
+            assert_eq!(
+                base,
+                fingerprint(&served.report),
+                "serve concurrency {concurrency} diverged from par_map eval"
+            );
+            assert!(served.serve.modeled_seconds > 0.0);
+        }
+        let perf = PerfModel::new(H100_NVL, true, 8);
+        let served = evaluate_serve(&cfg, 8, &perf);
+        assert!(served.serve.max_concurrent >= 2, "width-8 run should co-schedule");
+    }
+}
