@@ -72,6 +72,23 @@ fn main() {
         table.row(vec!["clustering (UPGMA)".into(), format!("{n} vecs"), format!("{d:?}")]);
     }
 
+    // agglomerative clustering across merge-threshold regimes: a high
+    // threshold forces the full O(n³) merge cascade (worst case), a low one
+    // stops early — the spread documented by cluster/mod.rs
+    for &thr in &[0.1f64, 0.5, 0.9] {
+        let embs: Vec<Vec<f32>> = (0..128)
+            .map(|_| (0..32).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let d = bench(5, || {
+            std::hint::black_box(agglomerative(&embs, thr));
+        });
+        table.row(vec![
+            "clustering (UPGMA, threshold sweep)".into(),
+            format!("128 vecs, thr {thr}"),
+            format!("{d:?}"),
+        ]);
+    }
+
     {
         let seqs: Vec<Vec<u32>> = (0..256)
             .map(|i| {
@@ -87,6 +104,21 @@ fn main() {
             }
         });
         table.row(vec!["radix insert".into(), "256 × 200 tok".into(), format!("{d:?}")]);
+
+        // LRU eviction under pressure: O(log n) per freed leaf via the
+        // ordered evictable set (the seed rescanned the whole arena)
+        let d = bench(10, || {
+            let mut c = RadixCache::new(1 << 22);
+            for s in &seqs {
+                c.insert(s);
+            }
+            std::hint::black_box(c.evict(usize::MAX));
+        });
+        table.row(vec![
+            "radix insert + LRU evict-all".into(),
+            "256 × 200 tok".into(),
+            format!("{d:?}"),
+        ]);
     }
 
     for &n in &[64usize, 256] {

@@ -20,7 +20,8 @@ pub struct Clustering {
 /// (cosine distance).
 ///
 /// O(n³) naive implementation — candidate sets are ≤ a few hundred vectors,
-/// where this is sub-millisecond. (See `benches/micro_cluster.rs`.)
+/// where this is sub-millisecond. (Measured by the agglomerative-clustering
+/// cases in `benches/micro_substrates.rs`.)
 pub fn agglomerative(embeddings: &[Vec<f32>], distance_threshold: f64) -> Clustering {
     let n = embeddings.len();
     if n == 0 {
@@ -39,7 +40,8 @@ pub fn agglomerative(embeddings: &[Vec<f32>], distance_threshold: f64) -> Cluste
     // matrix and update rows on merge —
     //   d(a∪b, k) = (n_a d(a,k) + n_b d(b,k)) / (n_a + n_b)
     // O(n²) per merge, O(n³) total (sub-ms for the ≤ few hundred candidates
-    // ETS clusters per step; see benches/micro_cluster.rs).
+    // ETS clusters per step; see the clustering cases in
+    // benches/micro_substrates.rs).
     let mut clusters: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
     let mut alive: Vec<bool> = vec![true; n];
     let mut n_alive = n;

@@ -1,23 +1,37 @@
 //! L3 coordinator: request routing, the multi-threaded eval loop, and the
-//! batched `serve` loop.
+//! memory-pressure-aware batched `serve` scheduler.
 //!
 //! Two execution shapes:
 //!
 //! * [`par_map`] — embarrassingly-parallel eval: one search per thread,
 //!   fresh engine each (`std::thread` scoped workers + mpsc; tokio is
 //!   unavailable offline).
-//! * [`serve`] — continuous batching at simulator scale: up to `concurrency`
-//!   concurrent [`SearchSession`]s interleave steps through **one**
-//!   [`BatchEngine`]/radix cache; each round's merged expansion batch is
-//!   costed by [`PerfModel::batch_latency`], and a finished problem's slot
-//!   is immediately refilled from the queue — the SGLang-style serving shape
-//!   the paper's throughput numbers assume.
+//! * [`serve`] — continuous batching at simulator scale: up to
+//!   `concurrency` concurrent [`SearchSession`]s interleave steps through
+//!   **one** [`BatchEngine`]/radix cache whose block budget
+//!   ([`ServeOptions::capacity_tokens`]) is *hard*. The scheduler keeps an
+//!   admission queue, a running set, and a suspended set: admission is
+//!   gated on free-block watermarks, every step commit goes through the
+//!   engine's reserve → commit protocol, and when a reservation fails the
+//!   scheduler first LRU-evicts unpinned branches, then **preempts** the
+//!   lowest-priority session (releasing its blocks, keeping its tree) and
+//!   later resumes it by recomputing the evicted prefix through the radix
+//!   cache. Each round's merged batch is costed by
+//!   [`PerfModel::batch_latency`] — including the recompute-prefill of
+//!   resumed sessions — and a finished problem's slot is immediately
+//!   refilled from the queue: the paged-attention serving shape (vLLM/
+//!   SGLang) the paper's throughput numbers assume.
 //!
-//! Both are deterministic for a fixed seed: per-problem RNG streams are
-//! independent, so worker count / concurrency never changes results.
+//! Both are deterministic for a fixed seed, and — because sessions advance
+//! their RNG streams only in `prepare` and commit steps atomically —
+//! *scheduling cannot change search results*: worker count, concurrency,
+//! and even preemption under a tight capacity leave every problem's answer
+//! and KV/token accounting identical (`tests/serve_determinism.rs` pins
+//! this).
 
-use crate::engine::batch::{BatchEngine, ExpandRequest, DEFAULT_KV_CAPACITY};
+use crate::engine::batch::{BatchEngine, DEFAULT_KV_CAPACITY};
 use crate::engine::perfmodel::{BatchStats, PerfModel};
+use crate::kvcache::DEFAULT_BLOCK_SIZE;
 use crate::lm::StepGenerator;
 use crate::reward::RewardModel;
 use crate::search::driver::{SearchOutcome, SearchParams, SearchSession};
@@ -87,11 +101,38 @@ pub struct ServeJob<G, R, P> {
     pub policy: P,
 }
 
+/// Scheduler configuration for [`serve`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Most problems admitted (running + suspended) at a time.
+    pub concurrency: usize,
+    /// Hard KV budget in tokens; the engine rounds up to whole blocks.
+    pub capacity_tokens: usize,
+    /// Tokens per KV block (paged-allocator page size).
+    pub block_size: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            concurrency: 8,
+            capacity_tokens: DEFAULT_KV_CAPACITY,
+            block_size: DEFAULT_BLOCK_SIZE,
+        }
+    }
+}
+
+impl ServeOptions {
+    pub fn with_concurrency(concurrency: usize) -> Self {
+        Self { concurrency, ..Default::default() }
+    }
+}
+
 /// Telemetry of one engine round: the merged expansion batch of every active
 /// problem, plus its modeled cost.
 #[derive(Clone, Debug, Default)]
 pub struct BatchRecord {
-    /// Problems that contributed expansions this round.
+    /// Problems that committed expansions this round.
     pub problems: usize,
     /// Leaves expanded (requests in the merged batch).
     pub requests: usize,
@@ -99,10 +140,20 @@ pub struct BatchRecord {
     pub model_calls: usize,
     /// Tokens generated this round.
     pub new_tokens: usize,
-    /// Unique KV tokens resident in the shared cache after the round.
+    /// Unique KV tokens resident in the shared cache after the round —
+    /// physical occupancy, including warm (unpinned) working sets of
+    /// suspended sessions awaiting eviction. Drives wave fragmentation.
     pub resident_kv_tokens: usize,
+    /// Unique KV tokens pinned by the sessions that committed this round —
+    /// what the decode actually reads (suspended sessions' warm KV is not
+    /// touched by any running sequence).
+    pub pinned_kv_tokens: usize,
     /// What the same round would pin without radix sharing.
     pub unshared_kv_tokens: usize,
+    /// Tokens re-prefilled by sessions resumed this round.
+    pub recompute_tokens: usize,
+    /// Sessions preempted during this round's commits.
+    pub preemptions: usize,
     /// Modeled wall-clock of this round ([`PerfModel::batch_latency`]).
     pub seconds: f64,
 }
@@ -118,8 +169,28 @@ pub struct ServeReport {
     pub modeled_seconds: f64,
     /// High-water mark of the shared cache (unique tokens).
     pub peak_resident_kv_tokens: usize,
-    /// Most problems ever simultaneously active.
+    /// Most problems ever simultaneously admitted (running + suspended).
     pub max_concurrent: usize,
+    /// Most problems that actually advanced (committed a step) in a single
+    /// round — the *resident* concurrency, excluding swapped-out suspended
+    /// sessions. This is the number oversubscription throttles.
+    pub peak_step_concurrency: usize,
+    /// Sessions preempted under memory pressure (suspend events).
+    pub preemptions: u64,
+    /// Sessions resumed after preemption.
+    pub resumes: u64,
+    /// Tokens re-prefilled by resumes (the recompute bill of preemption).
+    pub recompute_tokens: u64,
+    /// Rounds where admission was blocked by the free-block watermark.
+    pub admission_blocked_rounds: u64,
+    /// Step commits deferred to a later round because nothing could be
+    /// evicted or preempted to make room.
+    pub deferred_commits: u64,
+    /// High-water mark of allocated blocks (≤ `total_blocks` by
+    /// construction — the hard budget).
+    pub peak_used_blocks: usize,
+    /// The hard block budget the run was scheduled under.
+    pub total_blocks: usize,
 }
 
 impl ServeReport {
@@ -134,16 +205,43 @@ impl ServeReport {
     pub fn batch_seconds(&self) -> Vec<f64> {
         self.batches.iter().map(|b| b.seconds).collect()
     }
+
+    /// Total memory-pressure interventions: preemptions, watermark-blocked
+    /// admissions, and deferred commits. 0 means the budget never bound.
+    pub fn kv_pressure_events(&self) -> u64 {
+        self.preemptions + self.admission_blocked_rounds + self.deferred_commits
+    }
 }
 
-/// Serve `jobs` through one shared engine with continuous batching: at most
-/// `concurrency` searches are live at a time, each engine round advances all
-/// of them by one step in a single merged batch, and finished searches hand
-/// their slot to the next queued job mid-flight.
+/// One admitted problem in the scheduler: its outcome slot and admission
+/// sequence number (lower = admitted earlier = higher priority; preemption
+/// victims are picked from the highest sequence numbers, vLLM-style).
+struct Slot<G, R, P> {
+    id: usize,
+    seq: u64,
+    session: SearchSession<G, R, P>,
+}
+
+/// Serve `jobs` through one shared engine with continuous batching under a
+/// hard KV block budget: at most `opts.concurrency` searches are admitted
+/// at a time, each engine round advances the resident ones by one step in a
+/// single merged batch, and finished searches hand their slot to the next
+/// queued job mid-flight.
+///
+/// Memory pressure is handled in escalating order: (1) admission is gated
+/// on a free-block watermark, (2) a failed step reservation LRU-evicts
+/// unpinned branches, (3) still failing, the lowest-priority resident
+/// session is preempted — its blocks released, its tree kept — and resumed
+/// later by recomputing the evicted prefix. Because a session's RNG
+/// advances only in prepare/commit (both atomic w.r.t. preemption), the
+/// schedule cannot change any search's results.
+///
+/// Panics when even a single session cannot advance alone at this budget —
+/// the capacity is below one problem's working set.
 pub fn serve<G, R, P>(
     jobs: Vec<ServeJob<G, R, P>>,
     params: &SearchParams,
-    concurrency: usize,
+    opts: &ServeOptions,
     perf: &PerfModel,
     model: &ModelProfile,
 ) -> ServeReport
@@ -152,75 +250,207 @@ where
     R: RewardModel,
     P: SearchPolicy,
 {
-    let concurrency = concurrency.max(1);
+    let concurrency = opts.concurrency.max(1);
     let n = jobs.len();
-    let mut engine = BatchEngine::new(DEFAULT_KV_CAPACITY);
+    let mut engine = BatchEngine::with_block_size(opts.capacity_tokens, opts.block_size);
     let mut queue: VecDeque<(usize, ServeJob<G, R, P>)> =
         jobs.into_iter().enumerate().collect();
-    let mut active: Vec<(usize, SearchSession<G, R, P>)> = Vec::new();
+    let mut running: Vec<Slot<G, R, P>> = Vec::new();
+    let mut suspended: Vec<Slot<G, R, P>> = Vec::new();
     let mut outcomes: Vec<Option<SearchOutcome>> = (0..n).map(|_| None).collect();
     let mut batches: Vec<BatchRecord> = Vec::new();
     let mut peak = 0usize;
+    let mut peak_used_blocks = 0usize;
     let mut max_concurrent = 0usize;
+    let mut peak_step_concurrency = 0usize;
+    let mut admit_seq = 0u64;
+    let mut preemptions = 0u64;
+    let mut resumes = 0u64;
+    let mut recompute_total = 0u64;
+    let mut admission_blocked_rounds = 0u64;
+    let mut deferred_commits = 0u64;
+    // Livelock guard: rounds that neither commit, finish, nor admit make no
+    // real progress (a resume alone does not count — resume → preempt can
+    // thrash); several in a row means the budget is below one working set.
+    let mut stalled_rounds = 0u32;
 
     loop {
-        // admit from the queue until the batch is full (continuous batching)
-        while active.len() < concurrency {
-            let Some((id, job)) = queue.pop_front() else { break };
-            let session = SearchSession::new(&mut engine, job.lm, job.prm, job.policy, params);
-            active.push((id, session));
+        let mut progressed = false;
+        let mut round_recompute = 0usize;
+
+        // 1. resume preempted sessions, oldest admission first (FIFO —
+        //    younger sessions never leapfrog a blocked elder)
+        suspended.sort_by_key(|s| s.seq);
+        let mut still_suspended: Vec<Slot<G, R, P>> = Vec::new();
+        for mut slot in suspended.drain(..) {
+            let mut resumed = false;
+            if still_suspended.is_empty() {
+                for attempt in 0..2 {
+                    match slot.session.try_resume(&mut engine) {
+                        Ok(recomputed) => {
+                            resumed = true;
+                            resumes += 1;
+                            round_recompute += recomputed;
+                            break;
+                        }
+                        Err(p) => {
+                            if attempt == 0 && engine.relieve(&p) > 0 {
+                                continue;
+                            }
+                            break;
+                        }
+                    }
+                }
+            }
+            if resumed {
+                running.push(slot);
+            } else {
+                still_suspended.push(slot);
+            }
         }
-        if active.is_empty() {
+        suspended = still_suspended;
+
+        // 2. admit from the queue while the watermark leaves headroom
+        //    (continuous batching: finished slots refill mid-flight)
+        while running.len() + suspended.len() < concurrency {
+            let admissible = match queue.front() {
+                Some((_, job)) => engine.can_admit(job.lm.prompt_tokens()),
+                None => break,
+            };
+            if !admissible {
+                admission_blocked_rounds += 1;
+                break;
+            }
+            let (id, job) = queue.pop_front().expect("front checked above");
+            let session = SearchSession::new(&mut engine, job.lm, job.prm, job.policy, params);
+            running.push(Slot { id, seq: admit_seq, session });
+            admit_seq += 1;
+            progressed = true;
+        }
+        if running.is_empty() && suspended.is_empty() && queue.is_empty() {
             break;
         }
-        max_concurrent = max_concurrent.max(active.len());
+        max_concurrent = max_concurrent.max(running.len() + suspended.len());
 
-        // Collect every active session's next allocation. Sessions with no
-        // work left finish *now* (release-on-complete), so the round's
-        // resident-set measurement only covers live problems and their slots
-        // refill from the queue on the next admission pass.
-        let mut round: Vec<(usize, SearchSession<G, R, P>, Vec<ExpandRequest>)> = Vec::new();
-        for (id, mut session) in active.drain(..) {
-            let requests = session.next_requests(&mut engine);
+        // 3. collect each resident session's next allocation and run the
+        //    generator (prepare — no KV charged yet). Sessions with no work
+        //    left finish *now* (release-on-complete) so their blocks refill
+        //    slots on the next admission pass. Sessions that already hold a
+        //    prepared step (deferred or preempted mid-commit) keep it.
+        let mut active: Vec<Slot<G, R, P>> = Vec::new();
+        for mut slot in running.drain(..) {
+            if slot.session.has_pending() {
+                active.push(slot);
+                continue;
+            }
+            let requests = slot.session.next_requests(&mut engine);
             if requests.is_empty() {
-                outcomes[id] = Some(session.finish(&mut engine));
+                outcomes[slot.id] = Some(slot.session.finish(&mut engine));
+                progressed = true;
             } else {
-                round.push((id, session, requests));
+                slot.session.prepare(&mut engine, &requests);
+                active.push(slot);
+            }
+        }
+        running = active;
+
+        // 4. commit the merged batch in priority order; on reservation
+        //    failure: evict unpinned branches, then preempt from the tail
+        //    (never the committing slot), then defer to the next round
+        running.sort_by_key(|s| s.seq);
+        let mut rec =
+            BatchRecord { recompute_tokens: round_recompute, ..Default::default() };
+        let mut i = 0usize;
+        while i < running.len() {
+            let n_requests = running[i].session.pending_requests();
+            let committed = loop {
+                match running[i].session.try_commit(&mut engine) {
+                    Ok(m) => break Some(m),
+                    Err(p) => {
+                        // first remedy: reclaim unpinned branches (LRU),
+                        // evicting only the deficit so other suspended
+                        // sessions keep as much warm KV as possible
+                        if engine.relieve(&p) > 0 {
+                            continue;
+                        }
+                        // second remedy: preempt the lowest-priority
+                        // not-yet-committed session (sorted tail)
+                        if running.len() > i + 1 {
+                            let mut victim = running.pop().expect("len > i + 1");
+                            victim.session.suspend(&mut engine);
+                            preemptions += 1;
+                            rec.preemptions += 1;
+                            suspended.push(victim);
+                            continue;
+                        }
+                        break None; // defer this step to the next round
+                    }
+                }
+            };
+            match committed {
+                Some(m) => {
+                    rec.problems += 1;
+                    rec.requests += n_requests;
+                    rec.model_calls += m.model_calls;
+                    rec.new_tokens += m.new_tokens;
+                    rec.pinned_kv_tokens += m.live_kv_tokens;
+                    rec.unshared_kv_tokens += m.unshared_kv_tokens;
+                    progressed = true;
+                    i += 1;
+                }
+                None => {
+                    // everything evictable is gone and no lower-priority
+                    // victim remains; later slots need even more room
+                    deferred_commits += 1;
+                    break;
+                }
             }
         }
 
-        // execute the merged batch: one interleaved engine step
-        if !round.is_empty() {
-            let mut rec = BatchRecord::default();
-            for (_, session, requests) in round.iter_mut() {
-                let m = session.step(&mut engine, requests);
-                rec.problems += 1;
-                rec.requests += requests.len();
-                rec.model_calls += m.model_calls;
-                rec.new_tokens += m.new_tokens;
-                rec.unshared_kv_tokens += m.unshared_kv_tokens;
-            }
-            rec.resident_kv_tokens = engine.live_tokens();
-            peak = peak.max(rec.resident_kv_tokens);
+        // 5. close the round: telemetry, hard-budget assertion, perf cost
+        peak_step_concurrency = peak_step_concurrency.max(rec.problems);
+        rec.resident_kv_tokens = engine.live_tokens();
+        peak = peak.max(rec.resident_kv_tokens);
+        peak_used_blocks = peak_used_blocks.max(engine.used_blocks());
+        debug_assert!(
+            engine.used_blocks() <= engine.total_blocks(),
+            "serve exceeded the hard block budget: {} > {}",
+            engine.used_blocks(),
+            engine.total_blocks()
+        );
+        if rec.problems > 0 || rec.recompute_tokens > 0 {
+            // decode reads only what the committed sessions pin; wave
+            // fragmentation is driven by physical occupancy (which, under
+            // lazy suspend, may include warm suspended working sets)
+            let (read, resident) = if perf.shared_kv {
+                (rec.pinned_kv_tokens, rec.resident_kv_tokens)
+            } else {
+                (rec.unshared_kv_tokens, rec.unshared_kv_tokens)
+            };
             let stats = BatchStats {
                 model_calls: rec.model_calls,
                 new_tokens: rec.new_tokens,
-                read_kv_tokens: if perf.shared_kv {
-                    rec.resident_kv_tokens
-                } else {
-                    rec.unshared_kv_tokens
-                },
-                resident_kv_tokens: if perf.shared_kv {
-                    rec.resident_kv_tokens
-                } else {
-                    rec.unshared_kv_tokens
-                },
+                read_kv_tokens: read,
+                resident_kv_tokens: resident,
+                recompute_prefill_tokens: rec.recompute_tokens,
+                block_size: engine.block_size(),
             };
             rec.seconds = perf.batch_latency(&stats, model).seconds;
+            recompute_total += rec.recompute_tokens as u64;
             batches.push(rec);
         }
-
-        active = round.into_iter().map(|(id, session, _)| (id, session)).collect();
+        if progressed {
+            stalled_rounds = 0;
+        } else {
+            stalled_rounds += 1;
+            assert!(
+                stalled_rounds < 4,
+                "serve stalled: KV capacity ({} blocks x {} tokens) is below a \
+                 single problem's working set",
+                engine.total_blocks(),
+                engine.block_size()
+            );
+        }
     }
 
     debug_assert_eq!(engine.live_tokens(), 0, "serve left pinned KV behind");
@@ -234,6 +464,14 @@ where
         modeled_seconds,
         peak_resident_kv_tokens: peak,
         max_concurrent,
+        peak_step_concurrency,
+        preemptions,
+        resumes,
+        recompute_tokens: recompute_total,
+        admission_blocked_rounds,
+        deferred_commits,
+        peak_used_blocks,
+        total_blocks: engine.total_blocks(),
     }
 }
 
@@ -284,16 +522,29 @@ mod tests {
             .collect()
     }
 
+    fn fingerprints(report: &ServeReport) -> Vec<(Option<i64>, u64, u64)> {
+        report
+            .outcomes
+            .iter()
+            .map(|o| (o.answer, o.total_kv_tokens(), o.total_new_tokens()))
+            .collect()
+    }
+
     #[test]
     fn serve_interleaves_concurrent_problems_through_one_engine() {
         let params = SearchParams { width: 8, max_steps: 16 };
         let perf = PerfModel::new(H100_NVL, true, 1);
-        let report = serve(jobs(5, 42), &params, 3, &perf, &LLEMMA_34B_SIM);
+        let opts = ServeOptions::with_concurrency(3);
+        let report = serve(jobs(5, 42), &params, &opts, &perf, &LLEMMA_34B_SIM);
         assert_eq!(report.outcomes.len(), 5);
         assert!(report.max_concurrent >= 2, "batching must co-schedule problems");
         assert!(!report.batches.is_empty());
         assert!(report.modeled_seconds > 0.0);
         assert!(report.throughput_problems_per_sec() > 0.0);
+        // ample capacity: the pressure machinery must stay dormant
+        assert_eq!(report.kv_pressure_events(), 0);
+        assert_eq!(report.resumes, 0);
+        assert!(report.peak_used_blocks <= report.total_blocks);
         // per-batch latency from the perf model on every executed round
         let multi: Vec<&BatchRecord> =
             report.batches.iter().filter(|b| b.problems >= 2).collect();
@@ -317,11 +568,8 @@ mod tests {
         let params = SearchParams { width: 8, max_steps: 16 };
         let perf = PerfModel::new(H100_NVL, true, 1);
         let summary = |c: usize| -> Vec<(Option<i64>, u64, u64)> {
-            serve(jobs(6, 7), &params, c, &perf, &LLEMMA_34B_SIM)
-                .outcomes
-                .iter()
-                .map(|o| (o.answer, o.total_kv_tokens(), o.total_new_tokens()))
-                .collect()
+            let opts = ServeOptions::with_concurrency(c);
+            fingerprints(&serve(jobs(6, 7), &params, &opts, &perf, &LLEMMA_34B_SIM))
         };
         let base = summary(1);
         assert_eq!(base, summary(2));
@@ -334,7 +582,8 @@ mod tests {
         // cache views are per-ledger, so co-scheduling changes nothing.
         let params = SearchParams { width: 8, max_steps: 16 };
         let perf = PerfModel::new(H100_NVL, true, 1);
-        let report = serve(jobs(4, 11), &params, 4, &perf, &LLEMMA_34B_SIM);
+        let opts = ServeOptions::with_concurrency(4);
+        let report = serve(jobs(4, 11), &params, &opts, &perf, &LLEMMA_34B_SIM);
         for (job, served) in jobs(4, 11).into_iter().zip(&report.outcomes) {
             let mut lm = job.lm;
             let mut prm = job.prm;
@@ -345,6 +594,88 @@ mod tests {
             assert_eq!(solo.total_new_tokens(), served.total_new_tokens());
             assert_eq!(solo.steps.len(), served.steps.len());
         }
+    }
+
+    #[test]
+    fn tight_capacity_preempts_but_cannot_change_results() {
+        // Oversubscribe: a budget well below the uncapped working set but
+        // comfortably above any single problem's peak. The scheduler must
+        // keep every answer and every per-problem KV/token count identical
+        // while visibly intervening (preempting / blocking admission /
+        // deferring commits).
+        let params = SearchParams { width: 16, max_steps: 16 };
+        let perf = PerfModel::new(H100_NVL, true, 1);
+        let uncapped = serve(
+            jobs(6, 42),
+            &params,
+            &ServeOptions::with_concurrency(6),
+            &perf,
+            &LLEMMA_34B_SIM,
+        );
+        let solo_peak = uncapped
+            .outcomes
+            .iter()
+            .map(|o| o.peak_kv_tokens())
+            .max()
+            .unwrap() as usize;
+        assert!(
+            uncapped.peak_resident_kv_tokens > 2 * solo_peak + 4096,
+            "precondition: co-scheduling must oversubscribe the tight budget \
+             (shared peak {} vs solo peak {})",
+            uncapped.peak_resident_kv_tokens,
+            solo_peak
+        );
+        let tight = ServeOptions {
+            concurrency: 6,
+            capacity_tokens: 2 * solo_peak + 4096,
+            block_size: 16,
+        };
+        let capped = serve(jobs(6, 42), &params, &tight, &perf, &LLEMMA_34B_SIM);
+        assert_eq!(
+            fingerprints(&uncapped),
+            fingerprints(&capped),
+            "memory pressure changed search results"
+        );
+        assert!(
+            capped.kv_pressure_events() > 0,
+            "a below-working-set budget must trigger interventions"
+        );
+        assert!(
+            capped.peak_used_blocks <= capped.total_blocks,
+            "hard budget violated: {} > {}",
+            capped.peak_used_blocks,
+            capped.total_blocks
+        );
+        assert!(
+            capped.peak_resident_kv_tokens
+                <= capped.total_blocks * tight.block_size,
+            "resident tokens exceeded the block budget"
+        );
+        // preempted sessions recompute on resume; if any session was
+        // preempted the recompute bill must be visible in the batches
+        if capped.preemptions > 0 {
+            assert!(capped.resumes > 0, "preempted sessions must resume");
+            assert!(capped.recompute_tokens > 0);
+            assert!(capped.batches.iter().any(|b| b.recompute_tokens > 0));
+        }
+        for o in &capped.outcomes {
+            assert!(o.answer.is_some());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "below a single problem's working set")]
+    fn serve_panics_when_capacity_cannot_hold_one_problem() {
+        let params = SearchParams { width: 8, max_steps: 16 };
+        let perf = PerfModel::new(H100_NVL, true, 1);
+        // 512 tokens barely covers the prompt (120) — the first real step
+        // cannot commit and there is nothing to preempt
+        let opts = ServeOptions {
+            concurrency: 2,
+            capacity_tokens: 512,
+            block_size: 16,
+        };
+        let _ = serve(jobs(2, 3), &params, &opts, &perf, &LLEMMA_34B_SIM);
     }
 
     #[test]

@@ -15,13 +15,27 @@
 //! * **release-on-prune/complete** — retiring trajectories unpins them and
 //!   reclaims every unpinned branch immediately.
 //!
+//! Capacity is a **hard block budget**: all admissions go through a
+//! `reserve → commit` protocol. [`BatchEngine::try_reserve`] earmarks the
+//! worst-case block need of an insert burst and fails with [`KvPressure`]
+//! (carrying free/evictable-block signals) when the budget cannot cover it;
+//! only after a successful reservation does the commit path touch the cache,
+//! so a failed step leaves no partial state behind. The serve scheduler
+//! reacts to pressure by LRU-evicting unpinned branches
+//! ([`BatchEngine::relieve_pressure`]) and, when that is not enough,
+//! preempting whole sessions: [`BatchEngine::suspend`] releases every block
+//! a ledger pins (the search tree keeps the trajectory), and
+//! [`BatchEngine::try_resume`] later re-admits it by *recomputing* the
+//! evicted prefix through the radix cache (the recompute-prefill cost is
+//! what the perf model charges for a resume).
+//!
 //! The KV metrics the driver reports ("live" = union of pinned paths,
 //! "unshared" = Σ per-leaf sequence lengths) are views computed from the
 //! cache ([`RadixCache::path_union_tokens`] / [`RadixCache::path_tokens`]),
 //! which is what makes the multi-problem `serve` path's resident-set numbers
 //! and the per-problem search metrics mutually consistent by construction.
 
-use crate::kvcache::{NodeIdx, RadixCache};
+use crate::kvcache::{KvPressure, NodeIdx, RadixCache, DEFAULT_BLOCK_SIZE};
 use crate::tree::{NodeId, SearchTree};
 use std::collections::{HashMap, HashSet};
 
@@ -36,16 +50,36 @@ pub struct ExpandRequest {
     pub n: usize,
 }
 
+/// Aggregate memory-pressure signals the scheduler steers by.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PressureSignals {
+    pub block_size: usize,
+    pub total_blocks: usize,
+    pub used_blocks: usize,
+    /// Free blocks net of open reservations.
+    pub free_blocks: usize,
+    /// Blocks one LRU pass could reclaim from unpinned leaves.
+    pub evictable_blocks: usize,
+    /// Admission headroom the scheduler keeps in reserve: new problems are
+    /// only admitted while `free_blocks` stays above this low watermark
+    /// (plus the admission's own need), so running sessions keep room to
+    /// grow before preemption kicks in.
+    pub low_watermark_blocks: usize,
+}
+
 /// Per-problem view over the shared cache: which radix nodes this problem's
 /// prompt and live leaves have pinned.
 #[derive(Clone, Debug)]
 pub struct KvLedger {
     /// Token ids of the prompt (prefix of every sequence of this problem).
     prompt_ids: Vec<u32>,
-    /// Pinned radix node holding the prompt; `None` once closed.
+    /// Pinned radix node holding the prompt; `None` once closed/suspended.
     prompt_node: Option<NodeIdx>,
     /// tree leaf -> pinned radix node holding its sequence end.
     locked: HashMap<NodeId, NodeIdx>,
+    /// Tree leaves whose pins were released by a suspend; re-pinned (with
+    /// their prefixes recomputed) on resume. Empty while resident.
+    suspended_leaves: Vec<NodeId>,
     /// True while every admitted step used engine-minted unique token ids,
     /// in which case cache accounting provably equals tree accounting (the
     /// step-level invariant the driver asserts in debug builds).
@@ -67,6 +101,22 @@ impl KvLedger {
     pub fn live_leaves(&self) -> usize {
         self.locked.len()
     }
+
+    /// True between a suspend and the matching resume: nothing is pinned
+    /// and the problem's KV may be evicted by others at any time.
+    pub fn is_suspended(&self) -> bool {
+        self.prompt_node.is_none()
+            && (!self.suspended_leaves.is_empty() || self.locked.is_empty())
+    }
+}
+
+/// What a [`BatchEngine::try_resume`] had to recompute.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResumeStats {
+    /// Tokens whose KV was evicted while suspended and must be re-prefilled.
+    pub recomputed_tokens: usize,
+    /// Tokens still resident (survived eviction, re-pinned for free).
+    pub retained_tokens: usize,
 }
 
 /// Shared batched engine: radix cache + token-id mint + batch telemetry.
@@ -84,17 +134,33 @@ pub struct BatchEngine {
     pub tokens_admitted: u64,
     /// Tokens reclaimed by release-on-prune/complete.
     pub tokens_reclaimed: u64,
+    /// Sessions preempted (suspend calls).
+    pub suspensions: u64,
+    /// Sessions resumed (successful try_resume calls).
+    pub resumes: u64,
+    /// Tokens re-prefilled by resumes (the recompute cost of preemption).
+    pub tokens_recomputed: u64,
+    /// LRU evictions run to relieve reservation pressure.
+    pub pressure_evictions: u64,
 }
 
 impl BatchEngine {
     pub fn new(capacity_tokens: usize) -> Self {
+        Self::with_block_size(capacity_tokens, DEFAULT_BLOCK_SIZE)
+    }
+
+    pub fn with_block_size(capacity_tokens: usize, block_size: usize) -> Self {
         Self {
-            cache: RadixCache::new(capacity_tokens),
+            cache: RadixCache::with_block_size(capacity_tokens, block_size),
             next_token: 1, // 0 is the conventional padding id
             problems_registered: 0,
             batches_executed: 0,
             tokens_admitted: 0,
             tokens_reclaimed: 0,
+            suspensions: 0,
+            resumes: 0,
+            tokens_recomputed: 0,
+            pressure_evictions: 0,
         }
     }
 
@@ -108,9 +174,96 @@ impl BatchEngine {
             .collect()
     }
 
+    // -- pressure signals & the reserve protocol ---------------------------
+
+    /// Current pressure signals (free blocks, evictable blocks, watermarks).
+    pub fn pressure(&self) -> PressureSignals {
+        let total = self.cache.total_blocks();
+        PressureSignals {
+            block_size: self.cache.block_size(),
+            total_blocks: total,
+            used_blocks: self.cache.used_blocks(),
+            free_blocks: self.cache.free_blocks(),
+            evictable_blocks: self.cache.evictable_blocks(),
+            low_watermark_blocks: (total / 16).max(1),
+        }
+    }
+
+    /// Worst-case blocks an insert of `tokens` new tokens can need: the
+    /// paged suffix plus one block of split fragmentation. Use the
+    /// ledger-aware [`BatchEngine::blocks_for_insert`] when the insert's id
+    /// provenance is known — engine-minted unique ids can never split an
+    /// edge, so exact-accounting inserts skip the slack block.
+    pub fn blocks_for_step(&self, tokens: usize) -> usize {
+        self.cache.blocks_for(tokens) + 1
+    }
+
+    /// Blocks needed to hold `tokens` new tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        self.cache.blocks_for(tokens)
+    }
+
+    /// Worst-case blocks for inserting one sequence under `ledger`:
+    /// engine-minted unique ids (exact accounting, no real surface ids in
+    /// this step) append at node boundaries and never split, so only
+    /// real-id inserts pay the split-slack block.
+    pub fn blocks_for_insert(
+        &self,
+        ledger: &KvLedger,
+        tokens: usize,
+        has_real_ids: bool,
+    ) -> usize {
+        let slack = usize::from(!ledger.exact_accounting() || has_real_ids);
+        self.cache.blocks_for(tokens) + slack
+    }
+
+    /// Earmark `blocks` for an imminent commit; typed failure on pressure.
+    pub fn try_reserve(&mut self, blocks: usize) -> Result<(), KvPressure> {
+        self.cache.try_reserve(blocks)
+    }
+
+    /// Should the scheduler admit a new problem with this prompt? True when
+    /// the prompt fits with the low-watermark headroom to spare (the
+    /// headroom is waived while the cache is empty, so a capacity that fits
+    /// exactly one problem still admits it).
+    pub fn can_admit(&self, prompt_tokens: usize) -> bool {
+        let sig = self.pressure();
+        let need = self.blocks_for_step(prompt_tokens);
+        if sig.used_blocks == 0 {
+            sig.free_blocks >= need
+        } else {
+            sig.free_blocks >= need + sig.low_watermark_blocks
+        }
+    }
+
+    /// LRU-evict unpinned branches to free up to `needed_blocks` blocks.
+    /// Returns blocks actually freed (0 when nothing is evictable).
+    pub fn relieve_pressure(&mut self, needed_blocks: usize) -> usize {
+        let before = self.cache.used_blocks();
+        let freed_tokens =
+            self.cache.evict(needed_blocks.saturating_mul(self.cache.block_size()));
+        if freed_tokens > 0 {
+            self.pressure_evictions += 1;
+            self.tokens_reclaimed += freed_tokens as u64;
+        }
+        before - self.cache.used_blocks()
+    }
+
+    /// Evict just enough to satisfy a failed reservation: the deficit
+    /// between what it asked for and what was free — warm suspended working
+    /// sets beyond the deficit are left cached (they may resume for free).
+    pub fn relieve(&mut self, p: &KvPressure) -> usize {
+        self.relieve_pressure(p.needed_blocks.saturating_sub(p.free_blocks).max(1))
+    }
+
+    // -- registration ------------------------------------------------------
+
     /// Register a problem whose prompt has no real token ids: mint
     /// `prompt_tokens` unique ids, insert, and pin them for the lifetime of
     /// the search.
+    ///
+    /// Panics when the block budget cannot even hold the prompt — the serve
+    /// scheduler gates admission with [`BatchEngine::can_admit`] first.
     pub fn register(&mut self, prompt_tokens: usize) -> KvLedger {
         let ids = self.mint_tokens(prompt_tokens);
         self.register_ledger(ids, true)
@@ -133,6 +286,7 @@ impl BatchEngine {
             prompt_ids,
             prompt_node: Some(out.node),
             locked: HashMap::new(),
+            suspended_leaves: Vec::new(),
             exact_accounting: exact,
         }
     }
@@ -160,11 +314,56 @@ impl BatchEngine {
         lm.expand_batch(tree, &reqs)
     }
 
-    /// Charge a step's freshly added children to the cache: mint ids for
+    // -- admission (reserve → commit) --------------------------------------
+
+    /// Charge a step's freshly added children to the cache with the full
+    /// reserve → commit protocol: reserve the worst-case block need of the
+    /// burst *before* touching the cache or minting ids, then mint ids for
     /// synthetic steps, insert every child's sequence (insert-on-expand),
-    /// pin the children, then unpin the parents they replace on the
-    /// frontier.
+    /// pin the children, and unpin the parents they replace on the
+    /// frontier. `Err(KvPressure)` leaves the engine and tree untouched.
+    pub fn try_admit(
+        &mut self,
+        ledger: &mut KvLedger,
+        tree: &mut SearchTree,
+        children: &[NodeId],
+    ) -> Result<(), KvPressure> {
+        let need: usize = children
+            .iter()
+            .map(|&c| {
+                let step = &tree.get(c).step;
+                self.blocks_for_insert(ledger, step.tokens, !step.token_ids.is_empty())
+            })
+            .sum();
+        self.try_reserve(need)?;
+        self.commit_admit(ledger, tree, children, need);
+        Ok(())
+    }
+
+    /// Infallible admission for callers with ample capacity (the solo
+    /// `run_search` path): on pressure, LRU-evicts and retries once, then
+    /// panics — a single problem's step not fitting means the engine was
+    /// built with a budget below one search's working set.
     pub fn admit(&mut self, ledger: &mut KvLedger, tree: &mut SearchTree, children: &[NodeId]) {
+        if let Err(p) = self.try_admit(ledger, tree, children) {
+            self.relieve(&p);
+            self.try_admit(ledger, tree, children).unwrap_or_else(|p| {
+                panic!("KV block budget below a single step's need: {p}")
+            });
+        }
+    }
+
+    /// Commit half of the protocol: the caller already holds a reservation
+    /// of `reserved` blocks covering the burst's worst case.
+    pub fn commit_admit(
+        &mut self,
+        ledger: &mut KvLedger,
+        tree: &mut SearchTree,
+        children: &[NodeId],
+        reserved: usize,
+    ) {
+        debug_assert!(!ledger.is_suspended(), "admitting into a suspended ledger");
+        self.cache.release_reservation(reserved);
         for &c in children {
             let (needs_ids, tokens) = {
                 let step = &tree.get(c).step;
@@ -194,6 +393,10 @@ impl BatchEngine {
                 self.cache.unlock(idx);
             }
         }
+        debug_assert!(
+            self.cache.used_blocks() <= self.cache.total_blocks(),
+            "block budget exceeded after commit"
+        );
     }
 
     /// Release-on-prune/complete: unpin every leaf not in `keep` and free
@@ -215,6 +418,102 @@ impl BatchEngine {
         freed
     }
 
+    // -- preemption --------------------------------------------------------
+
+    /// Preempt a problem: drop every pin it holds (prompt included) and
+    /// *remember* the pinned tree leaves so [`BatchEngine::try_resume`] can
+    /// rebuild the working set. Release is lazy, vLLM-style: the blocks
+    /// stay cached but become evictable, so LRU eviction reclaims them only
+    /// under actual pressure and an undisturbed resume is free (warm). The
+    /// search tree itself is untouched — suspension trades KV residency for
+    /// recompute, never search state. Returns the tokens unpinned (the
+    /// problem's live KV at suspension).
+    pub fn suspend(&mut self, ledger: &mut KvLedger) -> usize {
+        let unpinned = self.live_kv(ledger);
+        let mut leaves: Vec<(NodeId, NodeIdx)> = ledger.locked.drain().collect();
+        // deterministic unlock/re-insert order regardless of map iteration
+        leaves.sort_unstable_by_key(|&(leaf, _)| leaf);
+        for (leaf, idx) in leaves {
+            self.cache.unlock(idx);
+            ledger.suspended_leaves.push(leaf);
+        }
+        if let Some(p) = ledger.prompt_node.take() {
+            self.cache.unlock(p);
+        }
+        self.suspensions += 1;
+        unpinned
+    }
+
+    /// Resume a suspended problem: reserve a worst-case block need, then
+    /// re-insert and re-pin the prompt and every suspended leaf's sequence.
+    /// Tokens the cache no longer holds are *recomputed* (re-prefilled) —
+    /// the latency cost the perf model charges resumed sessions; tokens
+    /// that survived eviction re-pin for free. `Err(KvPressure)` leaves
+    /// everything suspended.
+    ///
+    /// The reservation is the min of two valid upper bounds: a *cold*
+    /// estimate (prompt + the union of suspended tree paths, paged, plus
+    /// split slack — tight when everything was evicted) and a *probe*
+    /// estimate from `match_prefix` misses (tight when the cache is still
+    /// warm). Residency can only shrink the actual draw below either bound.
+    pub fn try_resume(
+        &mut self,
+        ledger: &mut KvLedger,
+        tree: &SearchTree,
+    ) -> Result<ResumeStats, KvPressure> {
+        let seqs: Vec<Vec<u32>> = ledger
+            .suspended_leaves
+            .iter()
+            .map(|&leaf| Self::sequence(ledger, tree, leaf))
+            .collect();
+        // Per-insert split slack is unconditional here, unlike admission:
+        // even with minted ids a re-insert can SPLIT — a partially evicted
+        // working set lets the first re-inserted leaf coalesce several
+        // steps into one radix node, which the next leaf's re-insert then
+        // splits at a non-block-aligned step boundary.
+        // cold bound: every union node paged separately (the tree root is
+        // skipped — its tokens *are* the prompt), + 1 split slack per insert
+        let mut seen: HashSet<NodeId> = HashSet::new();
+        let mut need_cold = self.cache.blocks_for(ledger.prompt_ids.len()) + 1;
+        for &leaf in &ledger.suspended_leaves {
+            for n in tree.path(leaf) {
+                if tree.get(n).parent.is_some() && seen.insert(n) {
+                    need_cold += self.cache.blocks_for(tree.get(n).step.tokens);
+                }
+            }
+            need_cold += 1;
+        }
+        // probe bound: blocks for each insert's actual prefix miss
+        let (matched, _) = self.cache.match_prefix(&ledger.prompt_ids);
+        let mut need_probe =
+            self.cache.blocks_for(ledger.prompt_ids.len() - matched) + 1;
+        for seq in &seqs {
+            let (matched, _) = self.cache.match_prefix(seq);
+            need_probe += self.cache.blocks_for(seq.len() - matched) + 1;
+        }
+        let need = need_cold.min(need_probe);
+        self.try_reserve(need)?;
+        self.cache.release_reservation(need);
+        let mut stats = ResumeStats::default();
+        let out = self.cache.insert(&ledger.prompt_ids);
+        stats.recomputed_tokens += out.new_tokens;
+        stats.retained_tokens += out.shared_tokens;
+        self.cache.lock(out.node);
+        ledger.prompt_node = Some(out.node);
+        let leaves = std::mem::take(&mut ledger.suspended_leaves);
+        for (leaf, seq) in leaves.into_iter().zip(&seqs) {
+            let out = self.cache.insert(seq);
+            stats.recomputed_tokens += out.new_tokens;
+            stats.retained_tokens += out.shared_tokens;
+            self.cache.lock(out.node);
+            ledger.locked.insert(leaf, out.node);
+        }
+        self.tokens_admitted += stats.recomputed_tokens as u64;
+        self.tokens_recomputed += stats.recomputed_tokens as u64;
+        self.resumes += 1;
+        Ok(stats)
+    }
+
     /// Close a problem: unpin everything it holds (including the prompt) and
     /// free the branches that become unreferenced. Idempotent.
     pub fn close(&mut self, ledger: &mut KvLedger) {
@@ -223,6 +522,7 @@ impl BatchEngine {
             self.cache.unlock(idx);
             freed += self.cache.release_branch(idx);
         }
+        ledger.suspended_leaves.clear();
         if let Some(p) = ledger.prompt_node.take() {
             self.cache.unlock(p);
             freed += self.cache.release_branch(p);
@@ -247,6 +547,18 @@ impl BatchEngine {
     /// Unique tokens resident in the shared cache (all problems).
     pub fn live_tokens(&self) -> usize {
         self.cache.live_tokens()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.cache.used_blocks()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.cache.total_blocks()
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.cache.block_size()
     }
 
     pub fn cache(&self) -> &RadixCache {
@@ -369,6 +681,137 @@ mod tests {
     }
 
     #[test]
+    fn try_admit_fails_cleanly_under_pressure_and_succeeds_after_relief() {
+        // Budget: 8 blocks of 16 tokens. A 64-token prompt takes 4 blocks.
+        let mut eng = BatchEngine::with_block_size(16 * 8, 16);
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(64);
+        let mut ledger = eng.register(64);
+        assert_eq!(eng.used_blocks(), 4);
+        // Two 40-token children need 2 * 3 = 6 blocks (minted ids never
+        // split, so no slack) > 4 free.
+        let a = child(&mut tree, root, 40);
+        let b = child(&mut tree, root, 40);
+        let err = eng.try_admit(&mut ledger, &mut tree, &[a, b]).unwrap_err();
+        assert_eq!(err.needed_blocks, 6);
+        assert_eq!(err.free_blocks, 4);
+        // the failed attempt left no partial state behind
+        assert_eq!(eng.live_tokens(), 64);
+        assert!(tree.get(a).step.token_ids.is_empty(), "no ids minted on failure");
+        eng.check_invariants().unwrap();
+        // one 40-token child (3 blocks) fits
+        eng.try_admit(&mut ledger, &mut tree, &[a]).unwrap();
+        assert_eq!(eng.live_kv(&ledger), 104);
+        eng.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pressure_signals_track_free_and_evictable_blocks() {
+        let mut eng = BatchEngine::with_block_size(16 * 16, 16);
+        let sig = eng.pressure();
+        assert_eq!(sig.total_blocks, 16);
+        assert_eq!(sig.free_blocks, 16);
+        assert_eq!(sig.evictable_blocks, 0);
+        assert!(eng.can_admit(64));
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(64);
+        let mut ledger = eng.register(64);
+        let a = child(&mut tree, root, 32);
+        eng.admit(&mut ledger, &mut tree, &[a]);
+        let sig = eng.pressure();
+        assert_eq!(sig.used_blocks, 6);
+        assert_eq!(sig.free_blocks, 10);
+        assert_eq!(sig.evictable_blocks, 0, "live session fully pinned");
+        // closing unpins; branches are reclaimed eagerly so nothing lingers
+        eng.close(&mut ledger);
+        assert_eq!(eng.pressure().free_blocks, 16);
+        eng.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn suspend_unpins_lazily_and_evicted_working_sets_recompute_on_resume() {
+        let mut eng = BatchEngine::with_block_size(1 << 16, 16);
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(30);
+        let mut ledger = eng.register(30);
+        let a = child(&mut tree, root, 20);
+        let b = child(&mut tree, root, 25);
+        eng.admit(&mut ledger, &mut tree, &[a, b]);
+        let live_before = eng.live_kv(&ledger);
+        assert_eq!(live_before, 75);
+        let unpinned = eng.suspend(&mut ledger);
+        assert!(ledger.is_suspended());
+        assert_eq!(unpinned, 75, "all pins dropped");
+        // lazy release: blocks stay cached (warm) but are now evictable
+        assert_eq!(eng.live_tokens(), 75);
+        assert!(eng.pressure().evictable_blocks > 0);
+        // pressure arrives: LRU eviction reclaims the suspended working set
+        let freed_blocks = eng.relieve_pressure(usize::MAX);
+        assert!(freed_blocks > 0);
+        assert_eq!(eng.live_tokens(), 0);
+        // resume recomputes exactly what was evicted
+        let stats = eng.try_resume(&mut ledger, &tree).unwrap();
+        assert!(!ledger.is_suspended());
+        assert_eq!(stats.recomputed_tokens, 75);
+        assert_eq!(eng.live_kv(&ledger), live_before, "working set restored");
+        assert_eq!(eng.unshared_kv(&ledger), (30 + 20) + (30 + 25));
+        assert_eq!(ledger.live_leaves(), 2);
+        eng.check_invariants().unwrap();
+        // a second search step continues normally after the round trip
+        let c = child(&mut tree, a, 12);
+        eng.admit(&mut ledger, &mut tree, &[c]);
+        assert_eq!(eng.live_kv(&ledger), 75 + 12);
+        eng.close(&mut ledger);
+        assert_eq!(eng.live_tokens(), 0);
+    }
+
+    #[test]
+    fn undisturbed_resume_is_warm_and_free() {
+        let mut eng = BatchEngine::with_block_size(1 << 16, 16);
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(30);
+        let mut ledger = eng.register(30);
+        let a = child(&mut tree, root, 20);
+        eng.admit(&mut ledger, &mut tree, &[a]);
+        eng.suspend(&mut ledger);
+        // nothing else ran, so nothing was evicted: resume is free
+        let stats = eng.try_resume(&mut ledger, &tree).unwrap();
+        assert_eq!(stats.recomputed_tokens, 0, "cache still warm");
+        assert!(stats.retained_tokens > 0);
+        assert_eq!(eng.live_kv(&ledger), 50);
+        eng.close(&mut ledger);
+        assert_eq!(eng.live_tokens(), 0);
+    }
+
+    #[test]
+    fn resume_fails_with_pressure_when_the_working_set_cannot_fit() {
+        let mut eng = BatchEngine::with_block_size(16 * 8, 16); // 8 blocks
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(48);
+        let mut ledger = eng.register(48); // 3 blocks
+        let a = child(&mut tree, root, 30);
+        eng.admit(&mut ledger, &mut tree, &[a]); // +2 blocks
+        eng.suspend(&mut ledger);
+        // flush the suspended working set so another problem can hog it
+        assert!(eng.relieve_pressure(usize::MAX) >= 5);
+        assert_eq!(eng.used_blocks(), 0);
+        let mut tree2 = SearchTree::new();
+        tree2.init_root(96);
+        let mut hog = eng.register(96); // 6 blocks
+        let err = eng.try_resume(&mut ledger, &tree).unwrap_err();
+        // cold need: prompt (3+1 slack) + a's node (2) + a's slack (1) = 7
+        // (resume slack is unconditional: re-inserts can split)
+        assert_eq!(err.needed_blocks, 7);
+        assert!(err.needed_blocks > err.free_blocks, "{err}");
+        assert!(ledger.is_suspended(), "failed resume stays suspended");
+        eng.close(&mut hog);
+        let stats = eng.try_resume(&mut ledger, &tree).unwrap();
+        assert_eq!(stats.recomputed_tokens, 78, "full working set recomputed");
+        eng.close(&mut ledger);
+        eng.check_invariants().unwrap();
+    }
+
+    #[test]
     fn prop_cache_accounting_tracks_random_trees() {
         property(60, |rng: &mut Rng| {
             let mut eng = BatchEngine::new(1 << 20);
@@ -387,6 +830,12 @@ mod tests {
                 let keep = if keep.is_empty() { vec![frontier[0]] } else { keep };
                 tree.retain_paths(&keep);
                 eng.retire(&mut ledger, &keep);
+                // occasionally suspend + resume mid-search: the round trip
+                // must be invisible to the accounting
+                if rng.chance(0.3) {
+                    eng.suspend(&mut ledger);
+                    eng.try_resume(&mut ledger, &tree).map_err(|e| e.to_string())?;
+                }
                 let mut next = vec![];
                 for &leaf in &keep {
                     let fanout = 1 + rng.index(4);

@@ -9,5 +9,7 @@ pub mod perfmodel;
 #[cfg(feature = "pjrt")]
 pub mod pjrt_lm;
 
-pub use batch::{BatchEngine, ExpandRequest, KvLedger, DEFAULT_KV_CAPACITY};
+pub use batch::{
+    BatchEngine, ExpandRequest, KvLedger, PressureSignals, ResumeStats, DEFAULT_KV_CAPACITY,
+};
 pub use perfmodel::{BatchStats, Hardware, LatencyEstimate, PerfModel, H100_NVL};

@@ -74,6 +74,14 @@ pub struct BatchStats {
     pub read_kv_tokens: usize,
     /// Unique KV tokens resident on the node (drives wave fragmentation).
     pub resident_kv_tokens: usize,
+    /// Tokens re-prefilled this round to rebuild the KV of sessions resumed
+    /// after preemption (recompute-for-resume; charged as a compute-bound
+    /// prefill pass plus the KV write traffic, ahead of the decode).
+    pub recompute_prefill_tokens: usize,
+    /// KV block size of the paged allocator, in tokens. Memory is charged
+    /// per *block*, not per token: a partially filled page still moves and
+    /// occupies the whole page. 0 is treated as 1 (token granularity).
+    pub block_size: usize,
 }
 
 impl PerfModel {
@@ -130,22 +138,45 @@ impl PerfModel {
     /// batching buys) and the full resident KV working set is streamed each
     /// iteration. Fragmentation waves re-read the weights exactly as in
     /// [`PerfModel::latency`].
+    ///
+    /// KV bytes are charged at *block* granularity (`b.block_size`): the
+    /// paged allocator moves whole pages, so a partially filled tail block
+    /// costs as much as a full one. Rounds that resumed preempted sessions
+    /// additionally pay a recompute-prefill pass
+    /// (`b.recompute_prefill_tokens`): a compute-bound forward over the
+    /// evicted prefix plus one weight read and the KV write traffic, run
+    /// before the decode iterations.
     pub fn batch_latency(&self, b: &BatchStats, model: &ModelProfile) -> LatencyEstimate {
+        let bs = b.block_size.max(1) as f64;
+        let page = |tokens: usize| (tokens as f64 / bs).ceil() * bs;
+        let kv_b = model.kv_bytes_per_token as f64;
+        // recompute-prefill for resumed sessions (possibly the whole round)
+        let mut seconds = 0.0;
+        let mut bytes = 0.0;
+        if b.recompute_prefill_tokens > 0 {
+            let prefill_comp =
+                model.weight_bytes as f64 * b.recompute_prefill_tokens as f64
+                    / self.hw.peak_flops;
+            let prefill_bytes =
+                model.weight_bytes as f64 + page(b.recompute_prefill_tokens) * kv_b;
+            seconds += prefill_comp.max(prefill_bytes / self.hw.mem_bw);
+            bytes += prefill_bytes;
+        }
         if b.model_calls == 0 || b.new_tokens == 0 {
-            return LatencyEstimate::default();
+            return LatencyEstimate { seconds, bytes_moved: bytes, extra_waves: 0 };
         }
         let batch = b.model_calls as f64;
         let iters = (b.new_tokens as f64 / batch).max(1.0);
-        let kv_read = b.read_kv_tokens as f64 * model.kv_bytes_per_token as f64;
-        let resident = b.resident_kv_tokens as f64 * model.kv_bytes_per_token as f64;
+        let kv_read = page(b.read_kv_tokens) * kv_b;
+        let resident = page(b.resident_kv_tokens) * kv_b;
         let free = (self.hw.mem_cap - model.weight_bytes as f64).max(1.0);
         let waves = (resident / free).ceil().max(1.0);
         let bytes_per_iter = model.weight_bytes as f64 * waves + kv_read;
         let mem_s = bytes_per_iter / self.hw.mem_bw;
         let comp_s = model.weight_bytes as f64 * batch / self.hw.peak_flops;
         LatencyEstimate {
-            seconds: iters * mem_s.max(comp_s),
-            bytes_moved: iters * bytes_per_iter,
+            seconds: seconds + iters * mem_s.max(comp_s),
+            bytes_moved: bytes + iters * bytes_per_iter,
             extra_waves: (waves as u64).saturating_sub(1) * iters as u64,
         }
     }
@@ -177,6 +208,7 @@ mod tests {
             steps,
             tree: crate::tree::SearchTree::new(),
             completed_leaves: vec![],
+            recompute_tokens: 0,
         }
     }
 
@@ -247,12 +279,14 @@ mod tests {
             new_tokens: 64 * 50,
             read_kv_tokens: 3_000,
             resident_kv_tokens: 3_000,
+            ..Default::default()
         };
         let merged = BatchStats {
             model_calls: 128,
             new_tokens: 128 * 50,
             read_kv_tokens: 6_000,
             resident_kv_tokens: 6_000,
+            ..Default::default()
         };
         let two_rounds = 2.0 * pm.batch_latency(&single, &LLEMMA_34B_SIM).seconds;
         let one_round = pm.batch_latency(&merged, &LLEMMA_34B_SIM).seconds;
@@ -270,12 +304,14 @@ mod tests {
             new_tokens: 64 * 50,
             read_kv_tokens: 10_000,
             resident_kv_tokens: 10_000,
+            ..Default::default()
         };
         let big = BatchStats {
             model_calls: 64,
             new_tokens: 64 * 50,
             read_kv_tokens: 200_000,
             resident_kv_tokens: 200_000,
+            ..Default::default()
         };
         let (ts, tb) = (
             pm.batch_latency(&small, &LLEMMA_34B_SIM),
@@ -292,6 +328,63 @@ mod tests {
         let est = pm.batch_latency(&BatchStats::default(), &LLEMMA_34B_SIM);
         assert_eq!(est.seconds, 0.0);
         assert_eq!(est.bytes_moved, 0.0);
+    }
+
+    #[test]
+    fn recompute_prefill_charges_resumed_sessions() {
+        let pm = PerfModel::new(H100_NVL, true, 1);
+        let plain = BatchStats {
+            model_calls: 64,
+            new_tokens: 64 * 50,
+            read_kv_tokens: 30_000,
+            resident_kv_tokens: 30_000,
+            ..Default::default()
+        };
+        let resumed = BatchStats { recompute_prefill_tokens: 20_000, ..plain.clone() };
+        let (tp, tr) = (
+            pm.batch_latency(&plain, &LLEMMA_34B_SIM),
+            pm.batch_latency(&resumed, &LLEMMA_34B_SIM),
+        );
+        assert!(tr.seconds > tp.seconds, "resume must not be free: {tr:?} vs {tp:?}");
+        assert!(tr.bytes_moved > tp.bytes_moved);
+        // a recompute-only round (resumes, no decode) still costs time
+        let only = BatchStats { recompute_prefill_tokens: 5_000, ..Default::default() };
+        let est = pm.batch_latency(&only, &LLEMMA_34B_SIM);
+        assert!(est.seconds > 0.0);
+    }
+
+    #[test]
+    fn kv_is_charged_per_block_not_per_token() {
+        let pm = PerfModel::new(H100_NVL, true, 1);
+        // 1 token into a 16-token page: the whole page moves
+        let tiny = BatchStats {
+            model_calls: 8,
+            new_tokens: 8,
+            read_kv_tokens: 33, // 3 pages of 16
+            resident_kv_tokens: 33,
+            block_size: 16,
+            ..Default::default()
+        };
+        let exact = BatchStats { block_size: 1, ..tiny.clone() };
+        let (tb, tt) = (
+            pm.batch_latency(&tiny, &LLEMMA_34B_SIM),
+            pm.batch_latency(&exact, &LLEMMA_34B_SIM),
+        );
+        assert!(
+            tb.bytes_moved > tt.bytes_moved,
+            "paged KV reads must round up to blocks: {tb:?} vs {tt:?}"
+        );
+        // block-aligned working sets cost the same either way
+        let aligned = BatchStats {
+            read_kv_tokens: 48,
+            resident_kv_tokens: 48,
+            ..tiny.clone()
+        };
+        let aligned_exact = BatchStats { block_size: 1, ..aligned.clone() };
+        assert_eq!(
+            pm.batch_latency(&aligned, &LLEMMA_34B_SIM).bytes_moved,
+            pm.batch_latency(&aligned_exact, &LLEMMA_34B_SIM).bytes_moved
+        );
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! Used by the CLI (`ets eval`), the examples, and every bench that
 //! regenerates a paper table/figure.
 
-use crate::coordinator::{ServeJob, ServeReport};
+use crate::coordinator::{ServeJob, ServeOptions, ServeReport};
 use crate::embed::HashEmbedder;
 use crate::engine::PerfModel;
 use crate::lm::SynthLm;
@@ -244,12 +244,28 @@ pub struct ServeEvalReport {
     pub serve: ServeReport,
 }
 
-/// Run the evaluation through [`crate::coordinator::serve`]: same problems,
-/// same seeds, but up to `concurrency` searches interleaved through one
-/// batched engine, with `perf` costing every merged batch. The folded
-/// [`EvalReport`] is identical to [`evaluate_with_workers`]'s for any worker
-/// count / concurrency — the determinism tests pin this.
+/// Run the evaluation through [`crate::coordinator::serve`] at the default
+/// (ample) KV capacity: same problems, same seeds, but up to `concurrency`
+/// searches interleaved through one batched engine, with `perf` costing
+/// every merged batch. The folded [`EvalReport`] is identical to
+/// [`evaluate_with_workers`]'s for any worker count / concurrency — the
+/// determinism tests pin this.
 pub fn evaluate_serve(cfg: &EvalConfig, concurrency: usize, perf: &PerfModel) -> ServeEvalReport {
+    evaluate_serve_with(cfg, &ServeOptions::with_concurrency(concurrency), perf)
+}
+
+/// Run the evaluation through the full memory-pressure-aware scheduler:
+/// `opts` carries the concurrency *and* the hard KV block budget, so this
+/// is the entry point for oversubscription experiments (capacity sweeps in
+/// `benches/table2_throughput.rs`, `ets serve --capacity`). Scheduling
+/// (admission gating, preemption, resume-with-recompute) shows up in
+/// `serve` telemetry only — the folded [`EvalReport`] stays identical to
+/// the uncapped run at the same seed.
+pub fn evaluate_serve_with(
+    cfg: &EvalConfig,
+    opts: &ServeOptions,
+    perf: &PerfModel,
+) -> ServeEvalReport {
     let problems = ProblemSet::generate(&cfg.spec, cfg.n_problems, cfg.seed);
     let params = SearchParams { width: cfg.width, max_steps: cfg.max_steps };
     let mut truths = Vec::with_capacity(problems.problems.len());
@@ -267,7 +283,7 @@ pub fn evaluate_serve(cfg: &EvalConfig, concurrency: usize, perf: &PerfModel) ->
             }
         })
         .collect();
-    let serve = crate::coordinator::serve(jobs, &params, concurrency, perf, &cfg.spec.model);
+    let serve = crate::coordinator::serve(jobs, &params, opts, perf, &cfg.spec.model);
     let results = serve
         .outcomes
         .iter()

@@ -765,6 +765,38 @@ mod tests {
     }
 
     #[test]
+    fn prop_three_solvers_agree_on_nonuniform_node_weights() {
+        // The engine weights nodes by KV *token* counts rather than the
+        // paper's uniform |V_S| — all three solvers must still agree on the
+        // optimum. Forcing wildly non-uniform weights stresses the cost
+        // decomposition the uniform instances never exercise.
+        property(40, |rng: &mut Rng| {
+            let mut p = random_problem(rng, 7);
+            p.node_weight =
+                (0..p.num_nodes()).map(|_| 1.0 + rng.index(97) as f64).collect();
+            p.validate().map_err(|e| e)?;
+            let brute = solve_brute(&p);
+            let ilp = solve_ilp(&p, LIMIT);
+            let tree = solve_tree(&p, LIMIT);
+            crate::prop_check!(
+                (brute.objective - ilp.objective).abs() < 1e-6,
+                "brute {brute:?} vs ilp {ilp:?} on {p:?}"
+            );
+            crate::prop_check!(
+                (brute.objective - tree.objective).abs() < 1e-6,
+                "brute {brute:?} vs tree {tree:?} on {p:?}"
+            );
+            // the winning subsets must score identically under the exact
+            // objective as well (ties may differ in membership)
+            crate::prop_check!(
+                (p.objective(&ilp.chosen) - p.objective(&tree.chosen)).abs() < 1e-6,
+                "ilp subset {ilp:?} vs tree subset {tree:?} on {p:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
     fn ilp_matches_brute_force() {
         property(40, |rng: &mut Rng| {
             let p = random_problem(rng, 7);

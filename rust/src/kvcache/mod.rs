@@ -1,4 +1,5 @@
-//! Radix-tree KV-cache manager (SGLang RadixAttention semantics).
+//! Radix-tree KV-cache manager (SGLang RadixAttention semantics) over a
+//! paged block allocator (vLLM PagedAttention semantics).
 //!
 //! The serving engine stores one KV entry per *token*, deduplicated across
 //! sequences that share a prefix — exactly the mechanism whose effectiveness
@@ -9,11 +10,136 @@
 //! Token KV payloads themselves live with the model executor; this tree
 //! tracks token *counts* and identity so the engine can (a) compute how many
 //! new KV slots a sequence needs, (b) account memory, (c) evict.
+//!
+//! Physical memory is accounted in fixed-size **blocks** via
+//! [`BlockAllocator`]: each radix node owns a span of blocks covering its
+//! token range, allocated from a free list whose size is the *hard* capacity
+//! budget — an insert that cannot get blocks is a bug in the caller's
+//! admission control, so callers reserve first ([`RadixCache::try_reserve`])
+//! and only then insert. [`KvPressure`] is the typed "no blocks" error the
+//! reserve protocol surfaces to the serve scheduler, which reacts by
+//! evicting unpinned branches or preempting low-priority sessions.
+//!
+//! Eviction is O(log n) per freed leaf: an ordered set of currently
+//! evictable leaves keyed by `(last_access, node)` replaces the full-arena
+//! rescan the seed implementation did per block.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap, HashSet};
 
 /// Handle to a node in the radix tree.
 pub type NodeIdx = usize;
+
+/// Handle to a physical KV block.
+pub type BlockId = usize;
+
+/// Default tokens per KV block (vLLM's classic page size).
+pub const DEFAULT_BLOCK_SIZE: usize = 16;
+
+/// Typed out-of-blocks error of the reserve protocol: the request could not
+/// be satisfied from the free list. Carries the signals the scheduler needs
+/// to choose a remedy (evict vs. preempt vs. defer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvPressure {
+    /// Blocks the failed reservation asked for.
+    pub needed_blocks: usize,
+    /// Blocks actually free (net of open reservations) at failure time.
+    pub free_blocks: usize,
+    /// Blocks held by currently evictable (unpinned, childless) leaves.
+    pub evictable_blocks: usize,
+}
+
+impl std::fmt::Display for KvPressure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "KV pressure: need {} blocks, {} free, {} evictable",
+            self.needed_blocks, self.free_blocks, self.evictable_blocks
+        )
+    }
+}
+
+/// Fixed-size block allocator: a free list of physical KV block ids.
+///
+/// Only *accounting* lives here (payloads live with the model executor), but
+/// block identity is tracked for real so double-frees and budget overruns
+/// are structurally impossible: a block is either on the free list or owned
+/// by exactly one radix node's span.
+#[derive(Clone, Debug)]
+pub struct BlockAllocator {
+    block_size: usize,
+    total_blocks: usize,
+    /// LIFO free list.
+    free: Vec<BlockId>,
+    /// Blocks earmarked by open reservations (admission control). `alloc`
+    /// deliberately ignores this: the single-threaded commit path releases
+    /// its reservation immediately before drawing the blocks it covers.
+    reserved: usize,
+}
+
+impl BlockAllocator {
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        Self {
+            block_size,
+            total_blocks,
+            free: (0..total_blocks).rev().collect(),
+            reserved: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    /// Free blocks net of open reservations.
+    pub fn available_blocks(&self) -> usize {
+        self.free.len().saturating_sub(self.reserved)
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    /// Blocks needed to hold `tokens` tokens (0 for 0).
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Earmark `blocks` for an imminent commit. Fails without side effects
+    /// when the free list (net of prior reservations) cannot cover them.
+    pub fn try_reserve(&mut self, blocks: usize) -> bool {
+        if self.available_blocks() >= blocks {
+            self.reserved += blocks;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Release a reservation (commit or abandon). Callers release exactly
+    /// what they reserved, right before allocating the covered spans.
+    pub fn release_reservation(&mut self, blocks: usize) {
+        debug_assert!(self.reserved >= blocks, "reservation underflow");
+        self.reserved = self.reserved.saturating_sub(blocks);
+    }
+
+    /// Draw a span of `blocks` blocks off the free list.
+    pub fn alloc(&mut self, blocks: usize) -> Option<Vec<BlockId>> {
+        if self.free.len() < blocks {
+            return None;
+        }
+        Some((0..blocks).map(|_| self.free.pop().expect("free list len checked")).collect())
+    }
+
+    /// Return a span to the free list.
+    pub fn release_span(&mut self, span: Vec<BlockId>) {
+        self.free.extend(span);
+    }
+}
 
 #[derive(Clone, Debug)]
 struct RNode {
@@ -28,6 +154,9 @@ struct RNode {
     last_access: u64,
     /// Free-list marker.
     dead: bool,
+    /// Physical KV blocks backing this node's tokens
+    /// (`blocks_for(key.len())` of them).
+    blocks: Vec<BlockId>,
 }
 
 /// Result of an [`RadixCache::insert`].
@@ -41,7 +170,8 @@ pub struct InsertOutcome {
     pub node: NodeIdx,
 }
 
-/// Radix-tree KV cache with token-granularity accounting.
+/// Radix-tree KV cache with block-granularity accounting and a hard
+/// capacity budget enforced by the [`BlockAllocator`].
 #[derive(Clone, Debug)]
 pub struct RadixCache {
     nodes: Vec<RNode>,
@@ -50,12 +180,25 @@ pub struct RadixCache {
     clock: u64,
     /// Unique tokens currently cached.
     live_tokens: usize,
-    /// Capacity in tokens (eviction target; callers enforce policy).
-    pub capacity_tokens: usize,
+    /// Physical block accounting + the hard budget.
+    allocator: BlockAllocator,
+    /// Currently evictable leaves (childless, refcount 0, not root), keyed
+    /// by `(last_access, idx)` so the first element is the LRU victim.
+    evictable: BTreeSet<(u64, NodeIdx)>,
+    /// Σ blocks held by members of `evictable` — kept in lockstep so
+    /// pressure signals don't re-scan the set (O(1) instead of O(n)).
+    evictable_block_count: usize,
 }
 
 impl RadixCache {
+    /// Cache with a `capacity_tokens` budget at [`DEFAULT_BLOCK_SIZE`].
     pub fn new(capacity_tokens: usize) -> Self {
+        Self::with_block_size(capacity_tokens, DEFAULT_BLOCK_SIZE)
+    }
+
+    /// Cache whose hard budget is `ceil(capacity_tokens / block_size)`
+    /// blocks of `block_size` tokens each.
+    pub fn with_block_size(capacity_tokens: usize, block_size: usize) -> Self {
         let root = RNode {
             key: vec![],
             parent: None,
@@ -63,14 +206,19 @@ impl RadixCache {
             refcount: 1, // root is never evictable
             last_access: 0,
             dead: false,
+            blocks: vec![],
         };
+        let bs = block_size.max(1);
+        let total_blocks = capacity_tokens.div_ceil(bs);
         Self {
             nodes: vec![root],
             free: vec![],
             root: 0,
             clock: 0,
             live_tokens: 0,
-            capacity_tokens,
+            allocator: BlockAllocator::new(total_blocks, bs),
+            evictable: BTreeSet::new(),
+            evictable_block_count: 0,
         }
     }
 
@@ -83,15 +231,111 @@ impl RadixCache {
         self.nodes.iter().filter(|n| !n.dead).count() - 1
     }
 
+    pub fn block_size(&self) -> usize {
+        self.allocator.block_size()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.allocator.total_blocks()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.allocator.used_blocks()
+    }
+
+    /// Free blocks net of open reservations.
+    pub fn free_blocks(&self) -> usize {
+        self.allocator.available_blocks()
+    }
+
+    /// Token capacity implied by the block budget.
+    pub fn capacity_tokens(&self) -> usize {
+        self.allocator.total_blocks() * self.allocator.block_size()
+    }
+
+    /// Blocks needed to hold `tokens` new tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        self.allocator.blocks_for(tokens)
+    }
+
+    /// Blocks held by currently evictable leaves — what one pass of LRU
+    /// eviction could free without touching pinned paths (cascading frees
+    /// may release more). O(1): a running counter maintained alongside the
+    /// evictable set.
+    pub fn evictable_blocks(&self) -> usize {
+        self.evictable_block_count
+    }
+
+    /// Reserve `blocks` ahead of an insert burst; the typed failure carries
+    /// the pressure signals. Callers release with
+    /// [`RadixCache::release_reservation`] right before inserting.
+    pub fn try_reserve(&mut self, blocks: usize) -> Result<(), KvPressure> {
+        if self.allocator.try_reserve(blocks) {
+            Ok(())
+        } else {
+            Err(KvPressure {
+                needed_blocks: blocks,
+                free_blocks: self.allocator.available_blocks(),
+                evictable_blocks: self.evictable_blocks(),
+            })
+        }
+    }
+
+    pub fn release_reservation(&mut self, blocks: usize) {
+        self.allocator.release_reservation(blocks);
+    }
+
+    fn alloc_span(&mut self, tokens: usize) -> Vec<BlockId> {
+        let need = self.allocator.blocks_for(tokens);
+        self.allocator.alloc(need).expect(
+            "KV block budget exhausted mid-insert — callers must try_reserve before inserting",
+        )
+    }
+
+    /// Re-sync `idx`'s membership in the evictable set. Must be called after
+    /// any change to a node's refcount / children / dead flag; last_access
+    /// and block-span changes go through [`RadixCache::touch`] /
+    /// [`RadixCache::drop_evictable`] instead (the set key embeds the old
+    /// clock value, the counter the old span size).
+    fn refresh_evictable(&mut self, idx: NodeIdx) {
+        let n = &self.nodes[idx];
+        let key = (n.last_access, idx);
+        let span = n.blocks.len();
+        if !n.dead && idx != self.root && n.children.is_empty() && n.refcount == 0 {
+            if self.evictable.insert(key) {
+                self.evictable_block_count += span;
+            }
+        } else if self.evictable.remove(&key) {
+            self.evictable_block_count -= span;
+        }
+    }
+
+    /// Remove `idx` from the evictable set (counter-consistent) ahead of a
+    /// mutation that changes its set key or block span.
+    fn drop_evictable(&mut self, idx: NodeIdx) {
+        if self.evictable.remove(&(self.nodes[idx].last_access, idx)) {
+            self.evictable_block_count -= self.nodes[idx].blocks.len();
+        }
+    }
+
+    /// Update a node's LRU clock, keeping the evictable set keyed correctly.
+    fn touch(&mut self, idx: NodeIdx, now: u64) {
+        self.drop_evictable(idx);
+        self.nodes[idx].last_access = now;
+        self.refresh_evictable(idx);
+    }
+
     fn alloc(&mut self, node: RNode) -> NodeIdx {
         self.live_tokens += node.key.len();
-        if let Some(idx) = self.free.pop() {
+        let idx = if let Some(idx) = self.free.pop() {
             self.nodes[idx] = node;
             idx
         } else {
             self.nodes.push(node);
             self.nodes.len() - 1
-        }
+        };
+        self.refresh_evictable(idx);
+        idx
     }
 
     fn tick(&mut self) -> u64 {
@@ -105,7 +349,7 @@ impl RadixCache {
         let now = self.tick();
         let mut cur = self.root;
         let mut matched = 0usize;
-        self.nodes[cur].last_access = now;
+        self.touch(cur, now);
         while matched < tokens.len() {
             let Some(&child) = self.nodes[cur].children.get(&tokens[matched]) else {
                 break;
@@ -117,7 +361,7 @@ impl RadixCache {
                 .zip(&tokens[matched..])
                 .take_while(|(a, b)| a == b)
                 .count();
-            self.nodes[child].last_access = now;
+            self.touch(child, now);
             matched += common;
             if common < klen {
                 break; // partial edge match: stop (match granularity = token)
@@ -129,16 +373,21 @@ impl RadixCache {
 
     /// Insert `tokens`, sharing any existing prefix. Splits edges on partial
     /// matches. Returns allocation accounting and the terminal node.
+    ///
+    /// Block discipline: the new suffix costs `blocks_for(suffix)` and an
+    /// edge split can cost one extra block of fragmentation, so a caller
+    /// that reserved `blocks_for(new tokens) + 1` can never see this panic.
     pub fn insert(&mut self, tokens: &[u32]) -> InsertOutcome {
         let now = self.tick();
         let mut cur = self.root;
         let mut pos = 0usize;
         let mut shared = 0usize;
-        self.nodes[cur].last_access = now;
+        self.touch(cur, now);
         while pos < tokens.len() {
             match self.nodes[cur].children.get(&tokens[pos]).copied() {
                 None => {
                     // Append the remaining tokens as a fresh child.
+                    let span = self.alloc_span(tokens.len() - pos);
                     let node = RNode {
                         key: tokens[pos..].to_vec(),
                         parent: Some(cur),
@@ -146,9 +395,11 @@ impl RadixCache {
                         refcount: 0,
                         last_access: now,
                         dead: false,
+                        blocks: span,
                     };
                     let idx = self.alloc(node);
                     self.nodes[cur].children.insert(tokens[pos], idx);
+                    self.refresh_evictable(cur); // gained a child
                     return InsertOutcome {
                         new_tokens: tokens.len() - pos,
                         shared_tokens: shared,
@@ -163,7 +414,7 @@ impl RadixCache {
                         .zip(&tokens[pos..])
                         .take_while(|(a, b)| a == b)
                         .count();
-                    self.nodes[child].last_access = now;
+                    self.touch(child, now);
                     if common == klen {
                         // Full edge consumed.
                         shared += common;
@@ -190,6 +441,15 @@ impl RadixCache {
         let parent = self.nodes[node].parent.expect("split of root");
         let upper_key = self.nodes[node].key[..at].to_vec();
         let lower_key = self.nodes[node].key[at..].to_vec();
+        // Re-page the split halves: release the old span first, so the two
+        // fresh spans need at most one extra block (page fragmentation).
+        // `node` may sit in the evictable set; pull it out before its span
+        // changes so the block counter stays exact (re-added below).
+        self.drop_evictable(node);
+        let old_span = std::mem::take(&mut self.nodes[node].blocks);
+        self.allocator.release_span(old_span);
+        let upper_span = self.alloc_span(at);
+        let lower_span = self.alloc_span(lower_key.len());
         let upper = RNode {
             key: upper_key,
             parent: Some(parent),
@@ -199,6 +459,7 @@ impl RadixCache {
             refcount: self.nodes[node].refcount,
             last_access: now,
             dead: false,
+            blocks: upper_span,
         };
         // Note: alloc counts upper's tokens as new, but the split conserves
         // total tokens (lower loses `at` tokens) — adjust below.
@@ -208,8 +469,11 @@ impl RadixCache {
         let first_lower = lower_key[0];
         self.nodes[parent].children.insert(first_upper, upper_idx);
         self.nodes[node].key = lower_key;
+        self.nodes[node].blocks = lower_span;
         self.nodes[node].parent = Some(upper_idx);
         self.nodes[upper_idx].children.insert(first_lower, node);
+        self.refresh_evictable(upper_idx); // gained a child: not evictable
+        self.refresh_evictable(node); // re-add with the re-paged span
         upper_idx
     }
 
@@ -218,6 +482,7 @@ impl RadixCache {
         let mut cur = Some(node);
         while let Some(idx) = cur {
             self.nodes[idx].refcount += 1;
+            self.refresh_evictable(idx);
             cur = self.nodes[idx].parent;
         }
     }
@@ -228,6 +493,7 @@ impl RadixCache {
         while let Some(idx) = cur {
             assert!(self.nodes[idx].refcount > 0, "unlock without lock");
             self.nodes[idx].refcount -= 1;
+            self.refresh_evictable(idx);
             cur = self.nodes[idx].parent;
         }
     }
@@ -295,52 +561,29 @@ impl RadixCache {
         freed
     }
 
-    /// Evict *every* unpinned branch regardless of recency (full-arena
-    /// sweep; [`RadixCache::release_branch`] is the cheap per-sequence
-    /// variant). Returns tokens freed.
+    /// Evict *every* unpinned branch regardless of recency (the evictable
+    /// set makes the cascade O(log n) per removed leaf;
+    /// [`RadixCache::release_branch`] is the cheap per-sequence variant).
+    /// Returns tokens freed.
     pub fn evict_unpinned(&mut self) -> usize {
         let mut freed = 0usize;
+        // removing a leaf may make its parent evictable; the set picks the
+        // cascade up automatically
         loop {
-            let victims: Vec<NodeIdx> = self
-                .nodes
-                .iter()
-                .enumerate()
-                .filter(|&(idx, n)| {
-                    !n.dead && idx != self.root && n.children.is_empty() && n.refcount == 0
-                })
-                .map(|(idx, _)| idx)
-                .collect();
-            if victims.is_empty() {
-                return freed;
-            }
-            // removing a layer of leaves may expose the next layer
-            for v in victims {
-                freed += self.remove_leaf(v);
-            }
+            let Some(&(_, idx)) = self.evictable.iter().next() else { break };
+            freed += self.remove_leaf(idx);
         }
+        freed
     }
 
     /// Evict least-recently-used unpinned leaves until at least
     /// `target_tokens` have been freed (or nothing evictable remains).
+    /// O(log n) per freed leaf via the ordered evictable set.
     /// Returns tokens freed.
     pub fn evict(&mut self, target_tokens: usize) -> usize {
         let mut freed = 0usize;
         while freed < target_tokens {
-            // Find the LRU evictable leaf: no children, refcount 0, not root.
-            let mut victim: Option<NodeIdx> = None;
-            let mut oldest = u64::MAX;
-            for (idx, n) in self.nodes.iter().enumerate() {
-                if !n.dead
-                    && idx != self.root
-                    && n.children.is_empty()
-                    && n.refcount == 0
-                    && n.last_access < oldest
-                {
-                    oldest = n.last_access;
-                    victim = Some(idx);
-                }
-            }
-            let Some(idx) = victim else { break };
+            let Some(&(_, idx)) = self.evictable.iter().next() else { break };
             freed += self.remove_leaf(idx);
         }
         freed
@@ -348,28 +591,59 @@ impl RadixCache {
 
     fn remove_leaf(&mut self, idx: NodeIdx) -> usize {
         debug_assert!(self.nodes[idx].children.is_empty());
+        debug_assert_eq!(self.nodes[idx].refcount, 0, "removing a pinned leaf");
         let parent = self.nodes[idx].parent.expect("removing root");
         let first = self.nodes[idx].key[0];
         self.nodes[parent].children.remove(&first);
         let tokens = self.nodes[idx].key.len();
         self.live_tokens -= tokens;
+        self.drop_evictable(idx);
+        let span = std::mem::take(&mut self.nodes[idx].blocks);
+        self.allocator.release_span(span);
         self.nodes[idx].dead = true;
         self.nodes[idx].key = vec![];
         self.nodes[idx].children = HashMap::new();
         self.free.push(idx);
+        self.refresh_evictable(parent); // may have become a childless leaf
         tokens
     }
 
     /// Check internal invariants (tests / debug).
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut token_sum = 0usize;
+        let mut block_sum = 0usize;
+        let mut seen_blocks: HashSet<BlockId> = HashSet::new();
+        let mut expect_evictable: BTreeSet<(u64, NodeIdx)> = BTreeSet::new();
         for (idx, n) in self.nodes.iter().enumerate() {
             if n.dead {
+                if !n.blocks.is_empty() {
+                    return Err(format!("dead node {idx} still holds blocks"));
+                }
                 continue;
             }
             token_sum += n.key.len();
+            block_sum += n.blocks.len();
+            if n.blocks.len() != self.allocator.blocks_for(n.key.len()) {
+                return Err(format!(
+                    "node {idx}: {} blocks for {} tokens (block_size {})",
+                    n.blocks.len(),
+                    n.key.len(),
+                    self.allocator.block_size()
+                ));
+            }
+            for &b in &n.blocks {
+                if b >= self.allocator.total_blocks() {
+                    return Err(format!("node {idx} holds out-of-range block {b}"));
+                }
+                if !seen_blocks.insert(b) {
+                    return Err(format!("block {b} owned twice"));
+                }
+            }
             if idx != self.root && n.key.is_empty() {
                 return Err(format!("non-root node {idx} with empty key"));
+            }
+            if idx != self.root && n.children.is_empty() && n.refcount == 0 {
+                expect_evictable.insert((n.last_access, idx));
             }
             for (&first, &child) in &n.children {
                 let c = &self.nodes[child];
@@ -388,6 +662,32 @@ impl RadixCache {
             return Err(format!(
                 "token accounting drift: sum {token_sum} != live {}",
                 self.live_tokens
+            ));
+        }
+        if block_sum != self.allocator.used_blocks() {
+            return Err(format!(
+                "block accounting drift: spans {block_sum} != used {}",
+                self.allocator.used_blocks()
+            ));
+        }
+        if self.allocator.used_blocks() > self.allocator.total_blocks() {
+            return Err("block budget exceeded".into());
+        }
+        if expect_evictable != self.evictable {
+            return Err(format!(
+                "evictable set drift: expect {expect_evictable:?} got {:?}",
+                self.evictable
+            ));
+        }
+        let expect_blocks: usize = self
+            .evictable
+            .iter()
+            .map(|&(_, idx)| self.nodes[idx].blocks.len())
+            .sum();
+        if expect_blocks != self.evictable_block_count {
+            return Err(format!(
+                "evictable block counter drift: sum {expect_blocks} != counter {}",
+                self.evictable_block_count
             ));
         }
         Ok(())
@@ -493,6 +793,7 @@ mod tests {
         assert_eq!(freed, 4);
         assert_eq!(c.live_tokens(), 0);
         assert_eq!(c.live_nodes(), 0);
+        assert_eq!(c.used_blocks(), 0);
         c.check_invariants().unwrap();
     }
 
@@ -610,12 +911,90 @@ mod tests {
     }
 
     #[test]
+    fn block_accounting_tracks_inserts_splits_and_evictions() {
+        let mut c = RadixCache::with_block_size(16 * 64, 16);
+        assert_eq!(c.total_blocks(), 64);
+        assert_eq!(c.used_blocks(), 0);
+        let seq: Vec<u32> = (0..40).collect(); // 40 tokens → 3 blocks
+        c.insert(&seq);
+        assert_eq!(c.used_blocks(), 3);
+        assert_eq!(c.free_blocks(), 61);
+        // diverge after 20 tokens: split re-pages into 2 + 2 blocks, the
+        // new 10-token branch adds 1 → 5 total
+        let mut d: Vec<u32> = (0..20).collect();
+        d.extend(100..110);
+        c.insert(&d);
+        assert_eq!(c.used_blocks(), 2 + 2 + 1);
+        c.check_invariants().unwrap();
+        c.evict(usize::MAX);
+        assert_eq!(c.used_blocks(), 0);
+        assert_eq!(c.free_blocks(), 64);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reserve_protocol_enforces_hard_budget() {
+        let mut c = RadixCache::with_block_size(16 * 4, 16); // 4 blocks
+        c.try_reserve(3).unwrap();
+        // a second reservation beyond the remainder fails with signals
+        let err = c.try_reserve(2).unwrap_err();
+        assert_eq!(err.needed_blocks, 2);
+        assert_eq!(err.free_blocks, 1);
+        assert_eq!(err.evictable_blocks, 0);
+        c.release_reservation(3);
+        // commit path: reserve, release right before inserting, insert
+        c.try_reserve(3).unwrap();
+        c.release_reservation(3);
+        let seq: Vec<u32> = (0..33).collect(); // 3 blocks
+        c.insert(&seq);
+        assert_eq!(c.used_blocks(), 3);
+        let err = c.try_reserve(2).unwrap_err();
+        assert_eq!(err.free_blocks, 1);
+        assert_eq!(err.evictable_blocks, 3, "the unpinned leaf is reclaimable");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_survives_repeated_evict_reinsert_cycles() {
+        // The O(log n) evictable set must stay consistent across many
+        // insert → touch → evict → reinsert cycles (node slots are reused
+        // from the free list, LRU keys change on every touch).
+        let mut c = RadixCache::with_block_size(1 << 14, 4);
+        for cycle in 0..40u32 {
+            // three branches off a shared prefix
+            let mk = |tag: u32| {
+                let mut s = vec![1, 2, 3];
+                s.extend((0..5).map(|t| 100 + tag * 10 + t));
+                s
+            };
+            c.insert(&mk(0));
+            c.insert(&mk(1));
+            c.insert(&mk(2));
+            // touch branches 1 and 2 so branch 0 is the LRU victim
+            c.match_prefix(&mk(1));
+            c.match_prefix(&mk(2));
+            let freed = c.evict(1);
+            assert_eq!(freed, 5, "cycle {cycle}: LRU victim must be branch 0");
+            let (m, _) = c.match_prefix(&mk(0));
+            assert_eq!(m, 3, "cycle {cycle}: branch 0 back to shared prefix");
+            let (m, _) = c.match_prefix(&mk(1));
+            assert_eq!(m, 8, "cycle {cycle}: branch 1 untouched");
+            c.check_invariants().unwrap();
+            // drain fully; reinsertion next cycle reuses freed node slots
+            c.evict(usize::MAX);
+            assert_eq!(c.live_tokens(), 0);
+            assert_eq!(c.used_blocks(), 0);
+            c.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
     fn prop_radix_semantics_match_naive_model() {
         // Model: a set of inserted sequences. Invariants:
         //  (1) match_prefix(s) for any inserted s == len(s)
         //  (2) live_tokens == |distinct prefixes| (trie token count)
         property(80, |rng: &mut Rng| {
-            let mut c = RadixCache::new(1 << 20);
+            let mut c = RadixCache::with_block_size(1 << 20, 1 + rng.index(8));
             let mut inserted: Vec<Vec<u32>> = vec![];
             let vocab = 4u32; // small vocab → lots of shared prefixes
             for _ in 0..(1 + rng.index(25)) {
@@ -662,7 +1041,7 @@ mod tests {
     #[test]
     fn prop_eviction_preserves_invariants_and_locked_paths() {
         property(60, |rng: &mut Rng| {
-            let mut c = RadixCache::new(1 << 20);
+            let mut c = RadixCache::with_block_size(1 << 20, 1 + rng.index(8));
             let mut locked: Vec<(Vec<u32>, NodeIdx)> = vec![];
             for _ in 0..(1 + rng.index(15)) {
                 let len = 1 + rng.index(10);
@@ -685,6 +1064,7 @@ mod tests {
             }
             c.evict(usize::MAX);
             crate::prop_check!(c.live_tokens() == 0, "full evict left tokens");
+            crate::prop_check!(c.used_blocks() == 0, "full evict left blocks");
             c.check_invariants().map_err(|e| e)?;
             Ok(())
         });

@@ -10,8 +10,9 @@
 //! Global options can also come from a TOML config (`--config path`), with
 //! CLI flags taking precedence.
 
+use ets::coordinator::ServeOptions;
 use ets::engine::{PerfModel, H100_NVL};
-use ets::eval::{evaluate_serve, evaluate_with_workers, EvalConfig, PolicySpec};
+use ets::eval::{evaluate_serve_with, evaluate_with_workers, EvalConfig, PolicySpec};
 use ets::util::argparse::{Args, Spec};
 use ets::util::error::{Error, Result};
 use ets::util::json::Json;
@@ -27,9 +28,14 @@ USAGE:
   ets eval  [--dataset D] [--model M] [--policy P] [--width N]
             [--problems K] [--seed S] [--workers W] [--json FILE]
   ets serve [--dataset D] [--model M] [--policy P] [--width N]
-            [--problems K] [--concurrency C] [--seed S] [--json FILE]
+            [--problems K] [--concurrency C] [--capacity TOKENS]
+            [--block-size TOKENS] [--seed S] [--json FILE]
             [--pjrt] [--requests K] [--artifacts DIR]
   ets info  [--artifacts DIR]
+
+`--capacity` makes the KV budget *hard*: the scheduler gates admission on
+free-block watermarks and preempts/resumes sessions under pressure
+(recomputing evicted prefixes), never exceeding the block budget.
 
 POLICIES: rebase | beam-<k> | beam-sqrt | dvts-<k> | dvts-sqrt |
           ets[:<lambda_b>] | ets-kv[:<lambda_b>]
@@ -40,6 +46,7 @@ fn main() {
     let spec = Spec::new(&[
         "dataset", "model", "policy", "width", "problems", "seed", "workers",
         "json", "config", "requests", "lambda-b", "artifacts", "concurrency",
+        "capacity", "block-size",
     ]);
     let args = match spec.parse(std::env::args()) {
         Ok(a) => a,
@@ -155,9 +162,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let concurrency = args
         .get_usize("concurrency", cfg_doc.usize_or("serve.concurrency", 8))
         .map_err(Error::msg)?;
+    let defaults = ServeOptions::default();
+    let opts = ServeOptions {
+        concurrency,
+        capacity_tokens: args
+            .get_usize(
+                "capacity",
+                cfg_doc.usize_or("serve.capacity", defaults.capacity_tokens),
+            )
+            .map_err(Error::msg)?,
+        block_size: args
+            .get_usize(
+                "block-size",
+                cfg_doc.usize_or("serve.block_size", defaults.block_size),
+            )
+            .map_err(Error::msg)?,
+    };
+    if opts.capacity_tokens == 0 {
+        bail!("--capacity must be a positive token budget");
+    }
     let perf = PerfModel::new(H100_NVL, true, concurrency);
     let t0 = std::time::Instant::now();
-    let r = evaluate_serve(&cfg, concurrency, &perf);
+    let r = evaluate_serve_with(&cfg, &opts, &perf);
     let wall = t0.elapsed();
     let secs = r.serve.batch_seconds();
     let mean_batch = if r.serve.batches.is_empty() {
@@ -185,6 +211,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         1e3 * stats::percentile(&secs, 95.0),
     );
     println!(
+        "  block budget: peak {} of {} blocks used ({} tokens/block)",
+        r.serve.peak_used_blocks,
+        r.serve.total_blocks,
+        opts.block_size,
+    );
+    if r.serve.kv_pressure_events() > 0 {
+        println!(
+            "  memory pressure: {} preemptions, {} resumes ({} tokens recomputed), {} admission-blocked rounds, {} deferred commits",
+            r.serve.preemptions,
+            r.serve.resumes,
+            r.serve.recompute_tokens,
+            r.serve.admission_blocked_rounds,
+            r.serve.deferred_commits,
+        );
+    }
+    println!(
         "  modeled serving time {:.2}s → {:.3} problems/s  [host wall {:?}]",
         r.serve.modeled_seconds,
         r.serve.throughput_problems_per_sec(),
@@ -197,12 +239,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("width", Json::num(cfg.width as f64)),
             ("n_problems", Json::num(cfg.n_problems as f64)),
             ("concurrency", Json::num(concurrency as f64)),
+            ("capacity_tokens", Json::num(opts.capacity_tokens as f64)),
+            ("block_size", Json::num(opts.block_size as f64)),
             ("accuracy", Json::num(r.report.accuracy())),
             ("mean_kv_tokens", Json::num(r.report.mean_kv_tokens)),
             ("batches", Json::num(r.serve.batches.len() as f64)),
             ("modeled_seconds", Json::num(r.serve.modeled_seconds)),
             ("throughput", Json::num(r.serve.throughput_problems_per_sec())),
             ("peak_resident_kv_tokens", Json::num(r.serve.peak_resident_kv_tokens as f64)),
+            ("peak_used_blocks", Json::num(r.serve.peak_used_blocks as f64)),
+            ("total_blocks", Json::num(r.serve.total_blocks as f64)),
+            ("preemptions", Json::num(r.serve.preemptions as f64)),
+            ("resumes", Json::num(r.serve.resumes as f64)),
+            ("recompute_tokens", Json::num(r.serve.recompute_tokens as f64)),
+            (
+                "admission_blocked_rounds",
+                Json::num(r.serve.admission_blocked_rounds as f64),
+            ),
+            ("deferred_commits", Json::num(r.serve.deferred_commits as f64)),
+            (
+                "peak_step_concurrency",
+                Json::num(r.serve.peak_step_concurrency as f64),
+            ),
         ]);
         std::fs::write(path, j.to_string_compact())?;
         println!("wrote {path}");

@@ -9,13 +9,25 @@
 //! own. In debug builds every step asserts that the cache-derived live KV
 //! equals the sum of live tree step tokens (the accounting the seed kept by
 //! hand, now provably consistent).
+//!
+//! A step is two phases so a scheduler can handle memory pressure between
+//! them: [`SearchSession::prepare`] runs the generator (advancing the
+//! per-problem RNG exactly once) without charging any KV, and
+//! [`SearchSession::try_commit`] reserves the worst-case block need and
+//! only then mutates the tree and cache — a commit that fails with
+//! [`KvPressure`] leaves the prepared step stored and retryable, so
+//! preemption can never change search results. [`SearchSession::suspend`] /
+//! [`SearchSession::try_resume`] are the preemption hooks: suspend releases
+//! every KV block (keeping the tree), resume recomputes the evicted prefix
+//! through the radix cache.
 
 use crate::engine::batch::{BatchEngine, ExpandRequest, KvLedger, DEFAULT_KV_CAPACITY};
+use crate::kvcache::KvPressure;
 use crate::lm::StepGenerator;
 use crate::reward::RewardModel;
 use crate::search::policy::SearchPolicy;
 use crate::search::voting::{weighted_majority, Completion};
-use crate::tree::{NodeId, SearchTree};
+use crate::tree::{NodeId, SearchTree, StepInfo};
 
 /// Per-search-step efficiency record.
 #[derive(Clone, Debug, Default)]
@@ -46,6 +58,11 @@ pub struct SearchOutcome {
     pub tree: SearchTree,
     /// Leaf node of every completed trajectory (for engine replay).
     pub completed_leaves: Vec<NodeId>,
+    /// Tokens re-prefilled across every preemption/resume round trip this
+    /// search went through (0 when it was never preempted). Kept out of
+    /// [`StepMetrics`] on purpose: scheduling must not change the search's
+    /// own KV/token accounting.
+    pub recompute_tokens: u64,
 }
 
 impl SearchOutcome {
@@ -88,14 +105,22 @@ impl Default for SearchParams {
     }
 }
 
+/// A generated-but-uncommitted step: the expansion results are held here
+/// (per-problem RNG already advanced) until a commit reserves the KV.
+struct PendingStep {
+    requests: Vec<ExpandRequest>,
+    expansions: Vec<Vec<StepInfo>>,
+}
+
 /// One problem's search as a resumable state machine, so a serving loop can
 /// interleave steps from many concurrent searches through one engine.
 ///
 /// Protocol per step: [`SearchSession::next_requests`] returns the policy's
 /// allocation as an [`ExpandRequest`] batch (retiring pruned trajectories in
-/// both the tree and the cache); [`SearchSession::step`] executes the batch
-/// through the generator and charges the new KV to the engine. An empty
-/// request batch means the search is over — call [`SearchSession::finish`].
+/// both the tree and the cache); [`SearchSession::prepare`] samples the
+/// continuations; [`SearchSession::try_commit`] charges the new KV to the
+/// engine (retryable under pressure). An empty request batch means the
+/// search is over — call [`SearchSession::finish`].
 pub struct SearchSession<G, R, P> {
     pub lm: G,
     pub prm: R,
@@ -110,6 +135,9 @@ pub struct SearchSession<G, R, P> {
     completions: Vec<Completion>,
     completed_leaves: Vec<NodeId>,
     started: bool,
+    pending: Option<PendingStep>,
+    suspended: bool,
+    recompute_tokens: u64,
 }
 
 impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
@@ -135,6 +163,9 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
             completions: Vec::new(),
             completed_leaves: Vec::new(),
             started: false,
+            pending: None,
+            suspended: false,
+            recompute_tokens: 0,
         }
     }
 
@@ -150,10 +181,33 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
         &self.metrics
     }
 
+    /// A prepared step is waiting for (re)commit.
+    pub fn has_pending(&self) -> bool {
+        self.pending.is_some()
+    }
+
+    /// Leaf-expansion requests in the prepared step (0 when none pending).
+    pub fn pending_requests(&self) -> usize {
+        self.pending.as_ref().map(|p| p.requests.len()).unwrap_or(0)
+    }
+
+    /// True between [`SearchSession::suspend`] and a successful
+    /// [`SearchSession::try_resume`].
+    pub fn is_suspended(&self) -> bool {
+        self.suspended
+    }
+
+    /// Tokens re-prefilled across this session's preemption round trips.
+    pub fn recompute_tokens(&self) -> u64 {
+        self.recompute_tokens
+    }
+
     /// The next step's expansion batch. Prunes retired trajectories (policy
     /// drops, prior completions) from the tree *and* releases their KV in
     /// the engine's cache. Empty when the search is over.
     pub fn next_requests(&mut self, engine: &mut BatchEngine) -> Vec<ExpandRequest> {
+        debug_assert!(self.pending.is_none(), "next_requests with a step pending");
+        debug_assert!(!self.suspended, "next_requests on a suspended session");
         if !self.started {
             self.started = true;
             return vec![ExpandRequest { leaf: self.tree.root(), n: self.width }];
@@ -174,14 +228,46 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
         alloc.into_iter().map(|(leaf, n)| ExpandRequest { leaf, n }).collect()
     }
 
-    /// Execute one step's allocation: a single batched generator call,
-    /// insert-on-expand KV charging, PRM scoring, and completion retirement.
-    pub fn step(&mut self, engine: &mut BatchEngine, requests: &[ExpandRequest]) -> StepMetrics {
+    /// Phase 1 of a step: run the allocation through the generator as one
+    /// batched call and hold the results. Advances the per-problem RNG
+    /// exactly once — committing later (or after a preemption round trip)
+    /// cannot change what was sampled.
+    pub fn prepare(&mut self, engine: &mut BatchEngine, requests: &[ExpandRequest]) {
+        debug_assert!(self.pending.is_none(), "prepare with a step already pending");
+        debug_assert!(!self.suspended, "prepare on a suspended session");
+        let expansions = engine.expand(&mut self.lm, &self.tree, requests);
+        self.pending = Some(PendingStep { requests: requests.to_vec(), expansions });
+    }
+
+    /// Phase 2: reserve the worst-case block need of the prepared step and,
+    /// only if that succeeds, mutate the tree, charge the KV
+    /// (insert-on-expand), score with the PRM, and retire completions.
+    /// `Err(KvPressure)` keeps the prepared step stored for a later retry —
+    /// the engine, tree, and RNG streams are untouched.
+    pub fn try_commit(&mut self, engine: &mut BatchEngine) -> Result<StepMetrics, KvPressure> {
+        debug_assert!(!self.suspended, "commit on a suspended session");
+        let need: usize = {
+            let pending = self.pending.as_ref().expect("try_commit without prepare");
+            pending
+                .expansions
+                .iter()
+                .flat_map(|steps| steps.iter())
+                .map(|s| {
+                    engine.blocks_for_insert(
+                        &self.ledger,
+                        s.tokens,
+                        !s.token_ids.is_empty(),
+                    )
+                })
+                .sum()
+        };
+        engine.try_reserve(need)?;
+        let PendingStep { requests, expansions } =
+            self.pending.take().expect("pending checked above");
         let mut m = StepMetrics {
             frontier: if self.steps_taken == 0 { 1 } else { self.frontier.len() },
             ..Default::default()
         };
-        let expansions = engine.expand(&mut self.lm, &self.tree, requests);
         let mut new_nodes: Vec<NodeId> = Vec::new();
         for (req, steps) in requests.iter().zip(expansions) {
             m.model_calls += steps.len();
@@ -190,7 +276,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
                 new_nodes.push(self.tree.add_child(req.leaf, s, 0.0));
             }
         }
-        engine.admit(&mut self.ledger, &mut self.tree, &new_nodes);
+        engine.commit_admit(&mut self.ledger, &mut self.tree, &new_nodes, need);
         let rewards = self.prm.score(&self.tree, &new_nodes);
         m.prm_calls = new_nodes.len();
         for (&n, &r) in new_nodes.iter().zip(&rewards) {
@@ -223,7 +309,46 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
         }
         self.steps_taken += 1;
         self.metrics.push(m.clone());
-        m
+        Ok(m)
+    }
+
+    /// Execute one step's allocation end to end (prepare + commit). For
+    /// callers with ample capacity; on pressure it LRU-evicts and retries,
+    /// then panics — the scheduler path uses
+    /// [`SearchSession::prepare`]/[`SearchSession::try_commit`] and handles
+    /// pressure with preemption instead.
+    pub fn step(&mut self, engine: &mut BatchEngine, requests: &[ExpandRequest]) -> StepMetrics {
+        self.prepare(engine, requests);
+        match self.try_commit(engine) {
+            Ok(m) => m,
+            Err(p) => {
+                engine.relieve(&p);
+                self.try_commit(engine).unwrap_or_else(|p| {
+                    panic!("KV block budget below a single step's need: {p}")
+                })
+            }
+        }
+    }
+
+    /// Preemption hook: release every KV block this session pins (prompt
+    /// included), keeping the search tree and any prepared step. Returns
+    /// tokens whose pins were dropped.
+    pub fn suspend(&mut self, engine: &mut BatchEngine) -> usize {
+        debug_assert!(!self.suspended, "double suspend");
+        let freed = engine.suspend(&mut self.ledger);
+        self.suspended = true;
+        freed
+    }
+
+    /// Resume hook: reserve and rebuild the working set, recomputing
+    /// whatever was evicted while suspended. Returns the recomputed token
+    /// count; `Err(KvPressure)` leaves the session suspended.
+    pub fn try_resume(&mut self, engine: &mut BatchEngine) -> Result<usize, KvPressure> {
+        debug_assert!(self.suspended, "resume without suspend");
+        let stats = engine.try_resume(&mut self.ledger, &self.tree)?;
+        self.suspended = false;
+        self.recompute_tokens += stats.recomputed_tokens as u64;
+        Ok(stats.recomputed_tokens)
     }
 
     /// Step-level invariant (debug builds): when every token id was minted
@@ -257,6 +382,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
             steps: self.metrics,
             tree: self.tree,
             completed_leaves: self.completed_leaves,
+            recompute_tokens: self.recompute_tokens,
         }
     }
 }
@@ -365,6 +491,89 @@ mod tests {
         let out = run_search_on(&mut engine, &mut lm, &mut prm, &mut pol, &params);
         assert_eq!(fresh, (out.answer, out.total_kv_tokens(), out.total_new_tokens()));
         assert_eq!(engine.live_tokens(), 0, "finished searches must release all KV");
+    }
+
+    #[test]
+    fn suspend_resume_between_every_step_changes_nothing() {
+        // The preemption acid test: a session that is suspended and resumed
+        // between every single step (and with a prepared step pending) must
+        // produce byte-identical results to an undisturbed run.
+        let params = SearchParams { width: 8, max_steps: 16 };
+        let undisturbed = {
+            let (mut lm, mut prm) = setup(13);
+            let mut pol = RebasePolicy::default();
+            let out = run_search(&mut lm, &mut prm, &mut pol, &params);
+            (out.answer, out.total_kv_tokens(), out.total_new_tokens(), out.steps.len())
+        };
+        let mut engine = BatchEngine::new(DEFAULT_KV_CAPACITY);
+        let (lm, prm) = setup(13);
+        let mut session =
+            SearchSession::new(&mut engine, lm, prm, RebasePolicy::default(), &params);
+        let mut flip = false;
+        loop {
+            let requests = session.next_requests(&mut engine);
+            if requests.is_empty() {
+                break;
+            }
+            session.prepare(&mut engine, &requests);
+            // alternate: preempt before commit / after commit; evicting the
+            // whole unpinned working set while suspended forces the resume
+            // down the recompute path (a warm resume would be free)
+            if flip {
+                session.suspend(&mut engine);
+                engine.relieve_pressure(usize::MAX);
+                session.try_resume(&mut engine).unwrap();
+                session.try_commit(&mut engine).unwrap();
+            } else {
+                session.try_commit(&mut engine).unwrap();
+                session.suspend(&mut engine);
+                engine.relieve_pressure(usize::MAX);
+                session.try_resume(&mut engine).unwrap();
+            }
+            flip = !flip;
+        }
+        let out = session.finish(&mut engine);
+        assert_eq!(
+            undisturbed,
+            (out.answer, out.total_kv_tokens(), out.total_new_tokens(), out.steps.len()),
+            "preemption round trips changed search results"
+        );
+        assert!(out.recompute_tokens > 0, "resumes must have recomputed KV");
+        assert_eq!(engine.live_tokens(), 0);
+        engine.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deferred_commit_after_pressure_is_lossless() {
+        // A commit that fails on a tiny budget must leave the prepared step
+        // intact; retrying after relief commits the identical step.
+        let params = SearchParams { width: 6, max_steps: 8 };
+        let undisturbed = {
+            let (mut lm, mut prm) = setup(21);
+            let mut pol = RebasePolicy::default();
+            let out = run_search(&mut lm, &mut prm, &mut pol, &params);
+            (out.answer, out.total_kv_tokens(), out.total_new_tokens())
+        };
+        // budget: enough for one problem's working set (measured in the
+        // undisturbed run: a few thousand tokens), not for hoarded garbage
+        let mut engine = BatchEngine::with_block_size(1 << 22, 16);
+        let (lm, prm) = setup(21);
+        let mut session =
+            SearchSession::new(&mut engine, lm, prm, RebasePolicy::default(), &params);
+        loop {
+            let requests = session.next_requests(&mut engine);
+            if requests.is_empty() {
+                break;
+            }
+            session.prepare(&mut engine, &requests);
+            assert!(session.has_pending());
+            // commit must succeed here (ample budget) — the pending-step
+            // bookkeeping is what we exercise
+            session.try_commit(&mut engine).unwrap();
+            assert!(!session.has_pending());
+        }
+        let out = session.finish(&mut engine);
+        assert_eq!(undisturbed, (out.answer, out.total_kv_tokens(), out.total_new_tokens()));
     }
 
     #[test]

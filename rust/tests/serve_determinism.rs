@@ -3,9 +3,15 @@
 //! workers / concurrent slots at a fixed seed. Per-problem RNG streams are
 //! seed-derived and the engine's KV accounting is per-ledger, so neither
 //! thread count nor co-scheduling may leak into results.
+//!
+//! The same holds under *memory pressure*: a hard KV budget tight enough to
+//! force admission gating and preemption/resume must leave every answer and
+//! every per-problem KV/token count identical to the effectively-unbounded
+//! run at the same seed — scheduling must never change search outcomes.
 
+use ets::coordinator::ServeOptions;
 use ets::engine::{PerfModel, H100_NVL};
-use ets::eval::{evaluate_serve, evaluate_with_workers, EvalConfig, PolicySpec};
+use ets::eval::{evaluate_serve, evaluate_serve_with, evaluate_with_workers, EvalConfig, PolicySpec};
 use ets::workload::{WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
 
 fn cfg(policy: PolicySpec) -> EvalConfig {
@@ -59,5 +65,69 @@ fn serve_concurrency_agrees_with_par_map() {
         let perf = PerfModel::new(H100_NVL, true, 8);
         let served = evaluate_serve(&cfg, 8, &perf);
         assert!(served.serve.max_concurrent >= 2, "width-8 run should co-schedule");
+    }
+}
+
+#[test]
+fn tight_capacity_preemption_cannot_change_results() {
+    for policy in [PolicySpec::Rebase, PolicySpec::Ets { lambda_b: 1.5, lambda_d: 1.0 }] {
+        let cfg = cfg(policy);
+        let perf = PerfModel::new(H100_NVL, true, 8);
+        let uncapped = evaluate_serve_with(&cfg, &ServeOptions::with_concurrency(8), &perf);
+        let solo_peak = uncapped
+            .serve
+            .outcomes
+            .iter()
+            .map(|o| o.peak_kv_tokens())
+            .max()
+            .unwrap() as usize;
+        // a budget comfortably above any single problem's working set but
+        // well below the 8-way co-scheduled one
+        let tight_tokens = 2 * solo_peak + 4096;
+        assert!(
+            uncapped.serve.peak_resident_kv_tokens > tight_tokens,
+            "precondition: uncapped peak {} must oversubscribe the tight budget {}",
+            uncapped.serve.peak_resident_kv_tokens,
+            tight_tokens
+        );
+        let opts = ServeOptions {
+            concurrency: 8,
+            capacity_tokens: tight_tokens,
+            block_size: 16,
+        };
+        let capped = evaluate_serve_with(&cfg, &opts, &perf);
+        // identical to the uncapped serve AND to the par_map baseline
+        assert_eq!(
+            fingerprint(&uncapped.report),
+            fingerprint(&capped.report),
+            "a tight capacity changed search results"
+        );
+        assert_eq!(
+            fingerprint(&evaluate_with_workers(&cfg, 2)),
+            fingerprint(&capped.report),
+            "capped serve diverged from par_map eval"
+        );
+        // the budget actually bound: the scheduler visibly intervened and
+        // the block budget was never exceeded
+        assert!(
+            capped.serve.kv_pressure_events() > 0,
+            "tight budget produced no pressure events"
+        );
+        assert!(capped.serve.peak_used_blocks <= capped.serve.total_blocks);
+        assert!(
+            capped.serve.peak_resident_kv_tokens
+                <= capped.serve.total_blocks * opts.block_size
+        );
+        if capped.serve.preemptions > 0 {
+            assert!(capped.serve.resumes > 0, "preempted sessions must resume");
+            // note: capped is not necessarily *slower* overall — a smaller
+            // resident set can avoid wave fragmentation — but the recompute
+            // bill of preemption must be visible in the telemetry
+            assert_eq!(
+                capped.serve.recompute_tokens,
+                capped.serve.batches.iter().map(|b| b.recompute_tokens as u64).sum::<u64>(),
+                "recompute accounting must reconcile with the per-round records"
+            );
+        }
     }
 }
