@@ -62,7 +62,7 @@ fn main() {
         table.row(vec!["ets-select (tree B&B)".into(), format!("{n} leaves"), format!("{d:?}")]);
     }
 
-    for &n in &[16usize, 64, 256] {
+    for &n in &[16usize, 64, 256, 512] {
         let embs: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..32).map(|_| rng.normal() as f32).collect())
             .collect();
@@ -73,8 +73,10 @@ fn main() {
     }
 
     // agglomerative clustering across merge-threshold regimes: a high
-    // threshold forces the full O(n³) merge cascade (worst case), a low one
-    // stops early — the spread documented by cluster/mod.rs
+    // threshold forces the full merge cascade (worst case), a low one stops
+    // early. The cascade is O(n² log n) via the lazy pair min-heap (the
+    // seed's best-pair rescan was O(n³)) — the spread and the win are
+    // documented by cluster/mod.rs
     for &thr in &[0.1f64, 0.5, 0.9] {
         let embs: Vec<Vec<f32>> = (0..128)
             .map(|_| (0..32).map(|_| rng.normal() as f32).collect())

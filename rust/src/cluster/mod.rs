@@ -7,6 +7,8 @@
 //! threshold cut, exactly as the paper configures scipy.
 
 use crate::util::stats::cosine;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
 /// Assignment of each input vector to a cluster id `0..num_clusters`.
 #[derive(Clone, Debug, PartialEq)]
@@ -15,64 +17,107 @@ pub struct Clustering {
     pub num_clusters: usize,
 }
 
+/// One candidate merge in the lazy min-heap: the average-linkage distance
+/// between clusters `a < b` recorded at versions (`va`, `vb`). Entries are
+/// never updated in place — a merge bumps the surviving cluster's version
+/// (and kills the absorbed one), which invalidates every older entry
+/// lazily; stale entries are skipped on pop. Ordered as a *min*-heap on
+/// `(d, a, b)` so ties break exactly like a row-major best-pair scan (first
+/// pair wins), keeping results identical to the previous O(n³)
+/// implementation.
+struct PairEntry {
+    d: f64,
+    a: usize,
+    b: usize,
+    va: u32,
+    vb: u32,
+}
+
+impl PartialEq for PairEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for PairEntry {}
+
+impl PartialOrd for PairEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for PairEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse (d, a, b) for min-heap behavior.
+        // `total_cmp` gives a total order (cosine distances are never NaN,
+        // but the heap must not care either way).
+        other
+            .d
+            .total_cmp(&self.d)
+            .then_with(|| other.a.cmp(&self.a))
+            .then_with(|| other.b.cmp(&self.b))
+    }
+}
+
 /// Cluster `embeddings` with average-linkage agglomerative clustering,
 /// merging while the closest pair of clusters is below `distance_threshold`
 /// (cosine distance).
 ///
-/// O(n³) naive implementation — candidate sets are ≤ a few hundred vectors,
-/// where this is sub-millisecond. (Measured by the agglomerative-clustering
-/// cases in `benches/micro_substrates.rs`.)
+/// UPGMA via Lance–Williams updates over a lazy pair min-heap: on merging
+/// `b` into `a`, every row entry is updated as
+///   `d(a∪b, k) = (n_a d(a,k) + n_b d(b,k)) / (n_a + n_b)`
+/// and the fresh `(a, k)` pairs are pushed; superseded entries die lazily
+/// via version stamps. O(n²) heap entries total → O(n² log n) for a full
+/// merge cascade, replacing the previous O(n³) full-matrix rescan per
+/// merge. (Measured by the agglomerative-clustering threshold-sweep cases
+/// in `benches/micro_substrates.rs`.)
 pub fn agglomerative(embeddings: &[Vec<f32>], distance_threshold: f64) -> Clustering {
     let n = embeddings.len();
     if n == 0 {
         return Clustering { assignment: vec![], num_clusters: 0 };
     }
-    // Pairwise cosine distances.
+    // Pairwise cosine distances + the initial heap of candidate merges.
     let mut dist = vec![vec![0.0f64; n]; n];
+    let mut heap: BinaryHeap<PairEntry> =
+        BinaryHeap::with_capacity(n * n.saturating_sub(1) / 2);
     for i in 0..n {
         for j in (i + 1)..n {
             let d = 1.0 - cosine(&embeddings[i], &embeddings[j]);
             dist[i][j] = d;
             dist[j][i] = d;
+            heap.push(PairEntry { d, a: i, b: j, va: 0, vb: 0 });
         }
     }
-    // UPGMA via Lance–Williams updates: maintain the cluster-level distance
-    // matrix and update rows on merge —
-    //   d(a∪b, k) = (n_a d(a,k) + n_b d(b,k)) / (n_a + n_b)
-    // O(n²) per merge, O(n³) total (sub-ms for the ≤ few hundred candidates
-    // ETS clusters per step; see the clustering cases in
-    // benches/micro_substrates.rs).
     let mut clusters: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
     let mut alive: Vec<bool> = vec![true; n];
-    let mut n_alive = n;
-    while n_alive > 1 {
-        let mut best = (f64::INFINITY, 0usize, 0usize);
-        for a in 0..n {
-            if !alive[a] {
-                continue;
-            }
-            for b in (a + 1)..n {
-                if alive[b] && dist[a][b] < best.0 {
-                    best = (dist[a][b], a, b);
-                }
-            }
+    let mut version: Vec<u32> = vec![0; n];
+    while let Some(PairEntry { d, a, b, va, vb }) = heap.pop() {
+        if !alive[a] || !alive[b] || version[a] != va || version[b] != vb {
+            continue; // stale: a side was merged since this entry was pushed
         }
-        if best.0 >= distance_threshold {
-            break;
+        if d >= distance_threshold {
+            break; // the closest live pair is already too far apart
         }
-        let (_, a, b) = best;
+        // Lance–Williams average-linkage update, arithmetic identical to
+        // the former rescan implementation (merge order and distances must
+        // match exactly). Invariant: after every merge the slots touched
+        // get fresh-version entries pushed for all live partners, so each
+        // live pair always has exactly one valid entry in the heap.
         let (na, nb) = (clusters[a].len() as f64, clusters[b].len() as f64);
+        alive[b] = false;
+        version[a] += 1;
         for k in 0..n {
-            if alive[k] && k != a && k != b {
-                let d = (na * dist[a][k] + nb * dist[b][k]) / (na + nb);
-                dist[a][k] = d;
-                dist[k][a] = d;
+            if alive[k] && k != a {
+                let dk = (na * dist[a][k] + nb * dist[b][k]) / (na + nb);
+                dist[a][k] = dk;
+                dist[k][a] = dk;
+                let (x, y) = if a < k { (a, k) } else { (k, a) };
+                heap.push(PairEntry { d: dk, a: x, b: y, va: version[x], vb: version[y] });
             }
         }
         let merged = std::mem::take(&mut clusters[b]);
         clusters[a].extend(merged);
-        alive[b] = false;
-        n_alive -= 1;
     }
     let mut assignment = vec![0usize; n];
     let mut num_clusters = 0;

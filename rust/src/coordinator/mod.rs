@@ -1,33 +1,53 @@
-//! L3 coordinator: request routing, the multi-threaded eval loop, and the
-//! memory-pressure-aware batched `serve` scheduler.
+//! L3 coordinator: request routing, the generic parallel-map helper, and the
+//! sharded, memory-pressure-aware batched `serve` scheduler.
 //!
-//! Two execution shapes:
+//! Execution shapes:
 //!
-//! * [`par_map`] — embarrassingly-parallel eval: one search per thread,
-//!   fresh engine each (`std::thread` scoped workers + mpsc; tokio is
-//!   unavailable offline).
-//! * [`serve`] — continuous batching at simulator scale: up to
-//!   `concurrency` concurrent [`SearchSession`]s interleave steps through
-//!   **one** [`BatchEngine`]/radix cache whose block budget
-//!   ([`ServeOptions::capacity_tokens`]) is *hard*. The scheduler keeps an
-//!   admission queue, a running set, and a suspended set: admission is
-//!   gated on free-block watermarks, every step commit goes through the
-//!   engine's reserve → commit protocol, and when a reservation fails the
-//!   scheduler first LRU-evicts unpinned branches, then **preempts** the
-//!   lowest-priority session (releasing its blocks, keeping its tree) and
-//!   later resumes it by recomputing the evicted prefix through the radix
-//!   cache. Each round's merged batch is costed by
-//!   [`PerfModel::batch_latency`] — including the recompute-prefill of
-//!   resumed sessions — and a finished problem's slot is immediately
-//!   refilled from the queue: the paged-attention serving shape (vLLM/
-//!   SGLang) the paper's throughput numbers assume.
+//! * [`par_map`] — generic embarrassingly-parallel fan-out (`std::thread`
+//!   scoped workers + mpsc; tokio is unavailable offline). Retained as a
+//!   utility; the eval path now rides [`serve`] instead so there is a single
+//!   execution engine.
+//! * [`serve`] — continuous batching at simulator scale, sharded
+//!   shard-per-core: [`ServeOptions::shards`] workers each own a
+//!   shared-nothing [`BatchEngine`] (radix cache) holding a
+//!   `capacity_tokens / shards` partition of the *hard* global block budget.
+//!   The scheduler runs deterministic lockstep rounds:
 //!
-//! Both are deterministic for a fixed seed, and — because sessions advance
-//! their RNG streams only in `prepare` and commit steps atomically —
+//!   1. **resume** — each shard retries its preempted sessions (oldest
+//!      admission first), recomputing evicted prefixes through its cache;
+//!   2. **migrate** — a suspended session whose resume failed
+//!      [`MIGRATION_PATIENCE`] times in a row (sustained pressure) is handed
+//!      to the best peer shard that can cover its worst-case resume
+//!      reservation (`resume_need_blocks_with`), instead of thrashing
+//!      preempt/resume locally. Correct by construction: a suspended
+//!      session holds no cache node indices, so `try_resume` simply
+//!      recomputes the prefix through whichever cache it lands in — and
+//!      per-shard minted-id bases keep the "ids are never reused" invariant
+//!      fleet-wide, so a migrant can never falsely share cache with the
+//!      target's unrelated problems;
+//!   3. **admit** — a deterministic global queue routes each job to the
+//!      least-loaded shard (load = resident sessions, then total admissions,
+//!      then shard index — all deterministic units, so routing is
+//!      reproducible for a fixed seed regardless of thread timing), gated on
+//!      each shard's free-block watermark and the global concurrency cap;
+//!   4. **step** — every shard with work runs one engine round (prepare →
+//!      merged-batch commit with LRU-evict-then-preempt pressure handling →
+//!      telemetry) on its own OS thread. Shards are shared-nothing, so the
+//!      rounds are embarrassingly parallel; results merge in shard index
+//!      order, keeping the whole run deterministic.
+//!
+//!   Each shard round is costed by [`PerfModel::batch_latency`] (including
+//!   resumed sessions' recompute prefill); a global round costs its
+//!   *slowest shard* ([`ServeReport::modeled_seconds`] sums the per-round
+//!   maxima — shards model parallel serving replicas).
+//!
+//! All shapes are deterministic for a fixed seed, and — because sessions
+//! advance their RNG streams only in `prepare` and commit steps atomically —
 //! *scheduling cannot change search results*: worker count, concurrency,
-//! and even preemption under a tight capacity leave every problem's answer
-//! and KV/token accounting identical (`tests/serve_determinism.rs` pins
-//! this).
+//! shard count, preemption, and cross-shard migration all leave every
+//! problem's answer and KV/token accounting identical
+//! (`tests/serve_determinism.rs` pins this for shards ∈ {1, 2, 4} under both
+//! ample and tight capacity).
 
 use crate::engine::batch::{BatchEngine, DEFAULT_KV_CAPACITY};
 use crate::engine::perfmodel::{BatchStats, PerfModel};
@@ -40,6 +60,11 @@ use crate::workload::ModelProfile;
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Mutex;
+
+/// Consecutive failed resume attempts after which a suspended session is
+/// considered *stuck* (sustained pressure) and the coordinator tries to
+/// migrate it to a shard with free blocks instead of retrying locally.
+pub const MIGRATION_PATIENCE: u32 = 2;
 
 /// Parallel map over `items` with `workers` threads, preserving order.
 ///
@@ -87,6 +112,18 @@ where
     })
 }
 
+/// Shared throughput fold: `completed` problems over `seconds`, guarding
+/// the zero/negative-denominator case (no batches executed, zero wall
+/// clock). Both the modeled [`ServeReport`] and the wall-clock
+/// [`CoordinatorStats`] throughputs fold through here.
+pub fn throughput_problems_per_sec(completed: usize, seconds: f64) -> f64 {
+    if seconds > 0.0 {
+        completed as f64 / seconds
+    } else {
+        0.0
+    }
+}
+
 /// A request to the serving coordinator.
 #[derive(Clone, Debug)]
 pub struct SearchRequest {
@@ -104,12 +141,18 @@ pub struct ServeJob<G, R, P> {
 /// Scheduler configuration for [`serve`].
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
-    /// Most problems admitted (running + suspended) at a time.
+    /// Most problems admitted (running + suspended, across all shards) at a
+    /// time.
     pub concurrency: usize,
-    /// Hard KV budget in tokens; the engine rounds up to whole blocks.
+    /// Hard global KV budget in tokens; each shard owns an equal partition
+    /// (`capacity_tokens / shards`), rounded up to whole blocks.
     pub capacity_tokens: usize,
     /// Tokens per KV block (paged-allocator page size).
     pub block_size: usize,
+    /// Shard-per-core engines: `shards` workers, each owning a
+    /// shared-nothing radix cache and stepped on its own OS thread.
+    /// 1 (the default) is the single-engine scheduler.
+    pub shards: usize,
 }
 
 impl Default for ServeOptions {
@@ -118,6 +161,7 @@ impl Default for ServeOptions {
             concurrency: 8,
             capacity_tokens: DEFAULT_KV_CAPACITY,
             block_size: DEFAULT_BLOCK_SIZE,
+            shards: 1,
         }
     }
 }
@@ -126,12 +170,18 @@ impl ServeOptions {
     pub fn with_concurrency(concurrency: usize) -> Self {
         Self { concurrency, ..Default::default() }
     }
+
+    pub fn with_shards(concurrency: usize, shards: usize) -> Self {
+        Self { concurrency, shards, ..Default::default() }
+    }
 }
 
-/// Telemetry of one engine round: the merged expansion batch of every active
-/// problem, plus its modeled cost.
+/// Telemetry of one engine round on one shard: the merged expansion batch of
+/// every active problem, plus its modeled cost.
 #[derive(Clone, Debug, Default)]
 pub struct BatchRecord {
+    /// Shard that executed this round's batch.
+    pub shard: usize,
     /// Problems that committed expansions this round.
     pub problems: usize,
     /// Leaves expanded (requests in the merged batch).
@@ -140,7 +190,7 @@ pub struct BatchRecord {
     pub model_calls: usize,
     /// Tokens generated this round.
     pub new_tokens: usize,
-    /// Unique KV tokens resident in the shared cache after the round —
+    /// Unique KV tokens resident in the shard's cache after the round —
     /// physical occupancy, including warm (unpinned) working sets of
     /// suspended sessions awaiting eviction. Drives wave fragmentation.
     pub resident_kv_tokens: usize,
@@ -150,7 +200,7 @@ pub struct BatchRecord {
     pub pinned_kv_tokens: usize,
     /// What the same round would pin without radix sharing.
     pub unshared_kv_tokens: usize,
-    /// Tokens re-prefilled by sessions resumed this round.
+    /// Tokens re-prefilled by sessions resumed (or migrated in) this round.
     pub recompute_tokens: usize,
     /// Sessions preempted during this round's commits.
     pub preemptions: usize,
@@ -158,48 +208,84 @@ pub struct BatchRecord {
     pub seconds: f64,
 }
 
+/// Per-shard aggregate telemetry of a [`serve`] run.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Problems admitted to this shard by the global router (migrations in
+    /// are counted separately).
+    pub admitted: u64,
+    /// Sessions preempted on this shard under memory pressure.
+    pub preemptions: u64,
+    /// Sessions resumed on this shard (local resumes + migrated-in resumes).
+    pub resumes: u64,
+    /// Tokens re-prefilled by resumes through this shard's cache.
+    pub recompute_tokens: u64,
+    /// Suspended sessions this shard received from pressured peers.
+    pub migrations_in: u64,
+    /// Suspended sessions this shard handed to peers with free blocks.
+    pub migrations_out: u64,
+    /// High-water mark of this shard's cache (unique tokens).
+    pub peak_resident_kv_tokens: usize,
+    /// High-water mark of this shard's allocated blocks.
+    pub peak_used_blocks: usize,
+    /// This shard's partition of the global block budget.
+    pub total_blocks: usize,
+    /// Σ of this shard's modeled batch latencies (its busy time).
+    pub busy_seconds: f64,
+}
+
 /// Result of a [`serve`] run.
 pub struct ServeReport {
     /// Per-problem outcomes, in job order.
     pub outcomes: Vec<SearchOutcome>,
-    /// One record per engine round.
+    /// One record per shard per executed round, in (round, shard) order.
     pub batches: Vec<BatchRecord>,
-    /// Σ per-batch modeled seconds — the serving-time denominator for
+    /// Modeled serving time: Σ over rounds of the *slowest shard's* batch
+    /// latency (shards model parallel replicas). For `shards == 1` this is
+    /// exactly Σ batch seconds — the serving-time denominator for
     /// throughput.
     pub modeled_seconds: f64,
-    /// High-water mark of the shared cache (unique tokens).
+    /// High-water mark across rounds of the summed shard caches (unique
+    /// tokens).
     pub peak_resident_kv_tokens: usize,
-    /// Most problems ever simultaneously admitted (running + suspended).
+    /// Most problems ever simultaneously admitted (running + suspended,
+    /// all shards).
     pub max_concurrent: usize,
     /// Most problems that actually advanced (committed a step) in a single
-    /// round — the *resident* concurrency, excluding swapped-out suspended
-    /// sessions. This is the number oversubscription throttles.
+    /// round across all shards — the *resident* concurrency, excluding
+    /// swapped-out suspended sessions. This is the number oversubscription
+    /// throttles.
     pub peak_step_concurrency: usize,
     /// Sessions preempted under memory pressure (suspend events).
     pub preemptions: u64,
-    /// Sessions resumed after preemption.
+    /// Sessions resumed after preemption (including migrated resumes).
     pub resumes: u64,
-    /// Tokens re-prefilled by resumes (the recompute bill of preemption).
+    /// Tokens re-prefilled by resumes (the recompute bill of preemption and
+    /// migration).
     pub recompute_tokens: u64,
-    /// Rounds where admission was blocked by the free-block watermark.
+    /// Rounds where admission was blocked by every shard's free-block
+    /// watermark.
     pub admission_blocked_rounds: u64,
     /// Step commits deferred to a later round because nothing could be
     /// evicted or preempted to make room.
     pub deferred_commits: u64,
-    /// High-water mark of allocated blocks (≤ `total_blocks` by
-    /// construction — the hard budget).
+    /// Σ per-shard high-water marks of allocated blocks (≤ `total_blocks`
+    /// by construction — each shard's budget is hard).
     pub peak_used_blocks: usize,
-    /// The hard block budget the run was scheduled under.
+    /// The hard global block budget (Σ shard partitions).
     pub total_blocks: usize,
+    /// Shard count the run was scheduled with.
+    pub shards: usize,
+    /// Suspended sessions moved across shards under sustained pressure.
+    pub migrations: u64,
+    /// Per-shard telemetry, indexed by shard.
+    pub shard_stats: Vec<ShardStats>,
 }
 
 impl ServeReport {
     pub fn throughput_problems_per_sec(&self) -> f64 {
-        if self.modeled_seconds > 0.0 {
-            self.outcomes.len() as f64 / self.modeled_seconds
-        } else {
-            0.0
-        }
+        throughput_problems_per_sec(self.outcomes.len(), self.modeled_seconds)
     }
 
     pub fn batch_seconds(&self) -> Vec<f64> {
@@ -219,168 +305,182 @@ impl ServeReport {
 struct Slot<G, R, P> {
     id: usize,
     seq: u64,
+    /// Consecutive failed resume attempts while suspended — the per-session
+    /// sustained-pressure signal the migration policy keys on. Reset on any
+    /// successful resume and on migration (the new shard gets a fresh try).
+    stalled: u32,
     session: SearchSession<G, R, P>,
 }
 
-/// Serve `jobs` through one shared engine with continuous batching under a
-/// hard KV block budget: at most `opts.concurrency` searches are admitted
-/// at a time, each engine round advances the resident ones by one step in a
-/// single merged batch, and finished searches hand their slot to the next
-/// queued job mid-flight.
-///
-/// Memory pressure is handled in escalating order: (1) admission is gated
-/// on a free-block watermark, (2) a failed step reservation LRU-evicts
-/// unpinned branches, (3) still failing, the lowest-priority resident
-/// session is preempted — its blocks released, its tree kept — and resumed
-/// later by recomputing the evicted prefix. Because a session's RNG
-/// advances only in prepare/commit (both atomic w.r.t. preemption), the
-/// schedule cannot change any search's results.
-///
-/// Panics when even a single session cannot advance alone at this budget —
-/// the capacity is below one problem's working set.
-pub fn serve<G, R, P>(
-    jobs: Vec<ServeJob<G, R, P>>,
-    params: &SearchParams,
-    opts: &ServeOptions,
-    perf: &PerfModel,
-    model: &ModelProfile,
-) -> ServeReport
-where
-    G: StepGenerator,
-    R: RewardModel,
-    P: SearchPolicy,
-{
-    let concurrency = opts.concurrency.max(1);
-    let n = jobs.len();
-    let mut engine = BatchEngine::with_block_size(opts.capacity_tokens, opts.block_size);
-    let mut queue: VecDeque<(usize, ServeJob<G, R, P>)> =
-        jobs.into_iter().enumerate().collect();
-    let mut running: Vec<Slot<G, R, P>> = Vec::new();
-    let mut suspended: Vec<Slot<G, R, P>> = Vec::new();
-    let mut outcomes: Vec<Option<SearchOutcome>> = (0..n).map(|_| None).collect();
-    let mut batches: Vec<BatchRecord> = Vec::new();
-    let mut peak = 0usize;
-    let mut peak_used_blocks = 0usize;
-    let mut max_concurrent = 0usize;
-    let mut peak_step_concurrency = 0usize;
-    let mut admit_seq = 0u64;
-    let mut preemptions = 0u64;
-    let mut resumes = 0u64;
-    let mut recompute_total = 0u64;
-    let mut admission_blocked_rounds = 0u64;
-    let mut deferred_commits = 0u64;
-    // Livelock guard: rounds that neither commit, finish, nor admit make no
-    // real progress (a resume alone does not count — resume → preempt can
-    // thrash); several in a row means the budget is below one working set.
-    let mut stalled_rounds = 0u32;
+/// One shard of the serve scheduler: a shared-nothing engine plus the
+/// sessions resident on it. Cross-shard state (the admission queue, the
+/// migration policy, round merging) lives in [`serve`]; everything here is
+/// touched by at most one thread per round.
+struct Shard<G, R, P> {
+    index: usize,
+    engine: BatchEngine,
+    running: Vec<Slot<G, R, P>>,
+    suspended: Vec<Slot<G, R, P>>,
+    stats: ShardStats,
+}
 
-    loop {
-        let mut progressed = false;
-        let mut round_recompute = 0usize;
+/// What one shard produced in one round.
+struct RoundResult {
+    record: Option<BatchRecord>,
+    finished: Vec<(usize, SearchOutcome)>,
+    progressed: bool,
+    deferred_commits: u64,
+}
 
-        // 1. resume preempted sessions, oldest admission first (FIFO —
-        //    younger sessions never leapfrog a blocked elder)
-        suspended.sort_by_key(|s| s.seq);
-        let mut still_suspended: Vec<Slot<G, R, P>> = Vec::new();
-        for mut slot in suspended.drain(..) {
-            let mut resumed = false;
-            if still_suspended.is_empty() {
-                for attempt in 0..2 {
-                    match slot.session.try_resume(&mut engine) {
-                        Ok(recomputed) => {
-                            resumed = true;
-                            resumes += 1;
-                            round_recompute += recomputed;
-                            break;
-                        }
-                        Err(p) => {
-                            if attempt == 0 && engine.relieve(&p) > 0 {
-                                continue;
-                            }
-                            break;
-                        }
+impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
+    fn new(index: usize, n_shards: usize, capacity_tokens: usize, block_size: usize) -> Self {
+        // Disjoint minted-id residue classes per shard keep the "ids are
+        // never reused" invariant fleet-wide, so a migrated session can
+        // never falsely share cache with the target shard's unrelated
+        // problems (see BatchEngine::for_shard).
+        let engine = BatchEngine::for_shard(
+            capacity_tokens,
+            block_size,
+            index as u32,
+            n_shards as u32,
+        );
+        let stats = ShardStats {
+            shard: index,
+            total_blocks: engine.total_blocks(),
+            ..Default::default()
+        };
+        Self { index, engine, running: Vec::new(), suspended: Vec::new(), stats }
+    }
+
+    /// Problems resident on this shard (running + suspended) — the
+    /// deterministic load unit the admission router sorts by.
+    fn resident(&self) -> usize {
+        self.running.len() + self.suspended.len()
+    }
+
+    /// One resume attempt for `slot` on this shard's engine, with a single
+    /// relieve-and-retry on pressure. Returns the recomputed tokens on
+    /// success. The resume protocol lives only here — both the local
+    /// resume pass and the migration path go through it.
+    fn try_resume_slot(&mut self, slot: &mut Slot<G, R, P>) -> Option<usize> {
+        for attempt in 0..2 {
+            match slot.session.try_resume(&mut self.engine) {
+                Ok(recomputed) => {
+                    self.stats.resumes += 1;
+                    return Some(recomputed);
+                }
+                Err(p) => {
+                    if attempt == 0 && self.engine.relieve(&p) > 0 {
+                        continue;
                     }
+                    break;
                 }
             }
-            if resumed {
-                running.push(slot);
+        }
+        None
+    }
+
+    /// Round step 1: resume preempted sessions, oldest admission first
+    /// (FIFO — younger sessions never leapfrog a blocked elder). Returns
+    /// tokens recomputed; a failed attempt bumps that session's `stalled`
+    /// counter (the migration trigger), a success clears it.
+    fn resume_pass(&mut self) -> usize {
+        let mut pending = std::mem::take(&mut self.suspended);
+        pending.sort_by_key(|s| s.seq);
+        let mut recompute = 0usize;
+        for mut slot in pending {
+            // self.suspended doubles as the still-suspended list: attempt
+            // resumes only while it is empty (strict FIFO)
+            let resumed = if self.suspended.is_empty() {
+                match self.try_resume_slot(&mut slot) {
+                    Some(recomputed) => {
+                        recompute += recomputed;
+                        true
+                    }
+                    None => {
+                        slot.stalled += 1;
+                        false
+                    }
+                }
             } else {
-                still_suspended.push(slot);
-            }
-        }
-        suspended = still_suspended;
-
-        // 2. admit from the queue while the watermark leaves headroom
-        //    (continuous batching: finished slots refill mid-flight)
-        while running.len() + suspended.len() < concurrency {
-            let admissible = match queue.front() {
-                Some((_, job)) => engine.can_admit(job.lm.prompt_tokens()),
-                None => break,
+                false
             };
-            if !admissible {
-                admission_blocked_rounds += 1;
-                break;
+            if resumed {
+                slot.stalled = 0;
+                self.running.push(slot);
+            } else {
+                self.suspended.push(slot);
             }
-            let (id, job) = queue.pop_front().expect("front checked above");
-            let session = SearchSession::new(&mut engine, job.lm, job.prm, job.policy, params);
-            running.push(Slot { id, seq: admit_seq, session });
-            admit_seq += 1;
-            progressed = true;
         }
-        if running.is_empty() && suspended.is_empty() && queue.is_empty() {
-            break;
-        }
-        max_concurrent = max_concurrent.max(running.len() + suspended.len());
+        recompute
+    }
 
-        // 3. collect each resident session's next allocation and run the
-        //    generator (prepare — no KV charged yet). Sessions with no work
-        //    left finish *now* (release-on-complete) so their blocks refill
-        //    slots on the next admission pass. Sessions that already hold a
-        //    prepared step (deferred or preempted mid-commit) keep it.
+    /// Round steps 3–5 (thread-parallel across shards): finish drained
+    /// sessions, prepare the merged batch, commit it in priority order with
+    /// evict-then-preempt pressure handling, and close the round with
+    /// telemetry + the perf-model cost.
+    fn run_round(
+        &mut self,
+        perf: &PerfModel,
+        model: &ModelProfile,
+        round_recompute: usize,
+    ) -> RoundResult {
+        let mut progressed = false;
+        let mut finished: Vec<(usize, SearchOutcome)> = Vec::new();
+        let mut deferred_commits = 0u64;
+
+        // collect each resident session's next allocation and run the
+        // generator (prepare — no KV charged yet). Sessions with no work
+        // left finish *now* (release-on-complete) so their blocks refill
+        // slots on the next admission pass. Sessions that already hold a
+        // prepared step (deferred or preempted mid-commit) keep it.
         let mut active: Vec<Slot<G, R, P>> = Vec::new();
-        for mut slot in running.drain(..) {
+        for mut slot in self.running.drain(..) {
             if slot.session.has_pending() {
                 active.push(slot);
                 continue;
             }
-            let requests = slot.session.next_requests(&mut engine);
+            let requests = slot.session.next_requests(&mut self.engine);
             if requests.is_empty() {
-                outcomes[slot.id] = Some(slot.session.finish(&mut engine));
+                finished.push((slot.id, slot.session.finish(&mut self.engine)));
                 progressed = true;
             } else {
-                slot.session.prepare(&mut engine, &requests);
+                slot.session.prepare(&mut self.engine, &requests);
                 active.push(slot);
             }
         }
-        running = active;
+        self.running = active;
 
-        // 4. commit the merged batch in priority order; on reservation
-        //    failure: evict unpinned branches, then preempt from the tail
-        //    (never the committing slot), then defer to the next round
-        running.sort_by_key(|s| s.seq);
-        let mut rec =
-            BatchRecord { recompute_tokens: round_recompute, ..Default::default() };
+        // commit the merged batch in priority order; on reservation
+        // failure: evict unpinned branches, then preempt from the tail
+        // (never the committing slot), then defer to the next round
+        self.running.sort_by_key(|s| s.seq);
+        let mut rec = BatchRecord {
+            shard: self.index,
+            recompute_tokens: round_recompute,
+            ..Default::default()
+        };
         let mut i = 0usize;
-        while i < running.len() {
-            let n_requests = running[i].session.pending_requests();
+        while i < self.running.len() {
+            let n_requests = self.running[i].session.pending_requests();
             let committed = loop {
-                match running[i].session.try_commit(&mut engine) {
+                match self.running[i].session.try_commit(&mut self.engine) {
                     Ok(m) => break Some(m),
                     Err(p) => {
                         // first remedy: reclaim unpinned branches (LRU),
                         // evicting only the deficit so other suspended
                         // sessions keep as much warm KV as possible
-                        if engine.relieve(&p) > 0 {
+                        if self.engine.relieve(&p) > 0 {
                             continue;
                         }
                         // second remedy: preempt the lowest-priority
                         // not-yet-committed session (sorted tail)
-                        if running.len() > i + 1 {
-                            let mut victim = running.pop().expect("len > i + 1");
-                            victim.session.suspend(&mut engine);
-                            preemptions += 1;
+                        if self.running.len() > i + 1 {
+                            let mut victim = self.running.pop().expect("len > i + 1");
+                            victim.session.suspend(&mut self.engine);
+                            self.stats.preemptions += 1;
                             rec.preemptions += 1;
-                            suspended.push(victim);
+                            self.suspended.push(victim);
                             continue;
                         }
                         break None; // defer this step to the next round
@@ -407,18 +507,20 @@ where
             }
         }
 
-        // 5. close the round: telemetry, hard-budget assertion, perf cost
-        peak_step_concurrency = peak_step_concurrency.max(rec.problems);
-        rec.resident_kv_tokens = engine.live_tokens();
-        peak = peak.max(rec.resident_kv_tokens);
-        peak_used_blocks = peak_used_blocks.max(engine.used_blocks());
+        // close the round: telemetry, hard-budget assertion, perf cost
+        rec.resident_kv_tokens = self.engine.live_tokens();
+        self.stats.peak_resident_kv_tokens =
+            self.stats.peak_resident_kv_tokens.max(rec.resident_kv_tokens);
+        self.stats.peak_used_blocks =
+            self.stats.peak_used_blocks.max(self.engine.used_blocks());
         debug_assert!(
-            engine.used_blocks() <= engine.total_blocks(),
-            "serve exceeded the hard block budget: {} > {}",
-            engine.used_blocks(),
-            engine.total_blocks()
+            self.engine.used_blocks() <= self.engine.total_blocks(),
+            "shard {} exceeded the hard block budget: {} > {}",
+            self.index,
+            self.engine.used_blocks(),
+            self.engine.total_blocks()
         );
-        if rec.problems > 0 || rec.recompute_tokens > 0 {
+        let record = if rec.problems > 0 || rec.recompute_tokens > 0 {
             // decode reads only what the committed sessions pin; wave
             // fragmentation is driven by physical occupancy (which, under
             // lazy suspend, may include warm suspended working sets)
@@ -433,28 +535,290 @@ where
                 read_kv_tokens: read,
                 resident_kv_tokens: resident,
                 recompute_prefill_tokens: rec.recompute_tokens,
-                block_size: engine.block_size(),
+                block_size: self.engine.block_size(),
             };
             rec.seconds = perf.batch_latency(&stats, model).seconds;
-            recompute_total += rec.recompute_tokens as u64;
-            batches.push(rec);
+            self.stats.busy_seconds += rec.seconds;
+            self.stats.recompute_tokens += rec.recompute_tokens as u64;
+            Some(rec)
+        } else {
+            None
+        };
+        RoundResult { record, finished, progressed, deferred_commits }
+    }
+}
+
+/// Serve `jobs` through `opts.shards` shared-nothing engines with
+/// continuous batching under a hard, partitioned KV block budget: at most
+/// `opts.concurrency` searches are admitted at a time across all shards, a
+/// deterministic router assigns each to the least-loaded shard, each global
+/// round advances every shard's resident sessions by one step (shards on
+/// parallel OS threads, one merged batch per shard), and finished searches
+/// hand their slot to the next queued job mid-flight.
+///
+/// Memory pressure is handled in escalating order per shard: (1) admission
+/// is gated on a free-block watermark, (2) a failed step reservation
+/// LRU-evicts unpinned branches, (3) still failing, the lowest-priority
+/// resident session is preempted — its blocks released, its tree kept — and
+/// resumed later by recomputing the evicted prefix. Under *sustained*
+/// pressure ([`MIGRATION_PATIENCE`]), a stuck suspended session migrates to
+/// the shard with the most reclaimable headroom instead of thrashing
+/// preempt/resume locally. Because a session's RNG advances only in
+/// prepare/commit (both atomic w.r.t. preemption and migration), neither
+/// the schedule, the shard count, nor any migration can change search
+/// results.
+///
+/// Panics when even a single session cannot advance alone at the per-shard
+/// budget — the partitioned capacity is below one problem's working set.
+pub fn serve<G, R, P>(
+    jobs: Vec<ServeJob<G, R, P>>,
+    params: &SearchParams,
+    opts: &ServeOptions,
+    perf: &PerfModel,
+    model: &ModelProfile,
+) -> ServeReport
+where
+    G: StepGenerator + Send,
+    R: RewardModel + Send,
+    P: SearchPolicy + Send,
+{
+    let concurrency = opts.concurrency.max(1);
+    let n_shards = opts.shards.max(1);
+    let per_shard_capacity = (opts.capacity_tokens / n_shards).max(opts.block_size);
+    let n = jobs.len();
+    let mut shards: Vec<Shard<G, R, P>> = (0..n_shards)
+        .map(|index| Shard::new(index, n_shards, per_shard_capacity, opts.block_size))
+        .collect();
+    let mut queue: VecDeque<(usize, ServeJob<G, R, P>)> =
+        jobs.into_iter().enumerate().collect();
+    let mut outcomes: Vec<Option<SearchOutcome>> = (0..n).map(|_| None).collect();
+    let mut batches: Vec<BatchRecord> = Vec::new();
+    let mut peak = 0usize;
+    let mut max_concurrent = 0usize;
+    let mut peak_step_concurrency = 0usize;
+    let mut modeled_seconds = 0.0f64;
+    let mut admit_seq = 0u64;
+    let mut migrations = 0u64;
+    let mut admission_blocked_rounds = 0u64;
+    let mut deferred_commits = 0u64;
+    // Livelock guard: rounds that neither commit, finish, nor admit make no
+    // real progress (a resume or migration alone does not count — resume →
+    // preempt can thrash); several in a row means the per-shard budget is
+    // below one working set.
+    let mut stalled_rounds = 0u32;
+
+    loop {
+        let mut progressed = false;
+        let mut round_recompute = vec![0usize; n_shards];
+
+        // 1. per-shard resume pass, serial in shard index order (cheap:
+        //    cache bookkeeping only, no generator calls)
+        for shard in shards.iter_mut() {
+            round_recompute[shard.index] = shard.resume_pass();
         }
+
+        // 2. cross-shard migration: a session whose resume failed
+        //    MIGRATION_PATIENCE times in a row (sustained pressure) is
+        //    handed to the best peer that can actually cover its worst-case
+        //    resume reservation — peers ranked by (no suspended backlog of
+        //    their own, reclaimable headroom, index), every viable one
+        //    considered. The move is a plain ownership transfer — a
+        //    suspended ledger holds no cache node indices — and the resume
+        //    recomputes the prefix through the target cache, charged to the
+        //    target's round recompute.
+        if n_shards > 1 {
+            for src in 0..n_shards {
+                let stuck = shards[src]
+                    .suspended
+                    .first()
+                    .map_or(false, |s| s.stalled >= MIGRATION_PATIENCE);
+                if !stuck {
+                    continue;
+                }
+                let mut candidates: Vec<usize> =
+                    (0..n_shards).filter(|&d| d != src).collect();
+                candidates.sort_by_key(|&d| {
+                    let sig = shards[d].engine.pressure();
+                    (
+                        !shards[d].suspended.is_empty(), // unloaded peers first
+                        std::cmp::Reverse(sig.free_blocks + sig.evictable_blocks),
+                        d,
+                    )
+                });
+                // the migrant's working-set sequences are engine-independent:
+                // build them once, size every candidate against them
+                let seqs = shards[src].suspended[0].session.suspended_sequences();
+                let dst = candidates.into_iter().find(|&d| {
+                    let need = shards[src].suspended[0]
+                        .session
+                        .resume_need_blocks_with(&shards[d].engine, &seqs);
+                    let sig = shards[d].engine.pressure();
+                    sig.free_blocks + sig.evictable_blocks >= need
+                });
+                let Some(dst) = dst else {
+                    continue; // genuinely no shard can host it — retry locally
+                };
+                let mut slot = shards[src].suspended.remove(0);
+                slot.stalled = 0; // fresh patience on the new shard
+                shards[src].stats.migrations_out += 1;
+                let dst_shard = &mut shards[dst];
+                dst_shard.stats.migrations_in += 1;
+                match dst_shard.try_resume_slot(&mut slot) {
+                    Some(recomputed) => {
+                        round_recompute[dst] += recomputed;
+                        dst_shard.running.push(slot);
+                    }
+                    None => dst_shard.suspended.push(slot),
+                }
+                migrations += 1;
+            }
+        }
+
+        // 3. deterministic global admission: route each queued job to the
+        //    least-loaded shard — (resident sessions, admissions so far,
+        //    shard index), all deterministic units — skipping shards whose
+        //    free-block watermark leaves no headroom. Continuous batching:
+        //    finished slots refill mid-flight.
+        loop {
+            let resident_total: usize = shards.iter().map(|s| s.resident()).sum();
+            if resident_total >= concurrency {
+                break;
+            }
+            let prompt = match queue.front() {
+                Some((_, job)) => job.lm.prompt_tokens(),
+                None => break,
+            };
+            let mut order: Vec<usize> = (0..n_shards).collect();
+            order.sort_by_key(|&s| (shards[s].resident(), shards[s].stats.admitted, s));
+            let mut target: Option<usize> = None;
+            for &s in &order {
+                if shards[s].engine.can_admit(prompt) {
+                    target = Some(s);
+                    break;
+                }
+                // Second chance for an *empty* shard sitting on reclaimable
+                // memory: warm KV orphaned by sessions that migrated away
+                // serves nobody once nothing is resident, but still counts
+                // against the free-block watermark — flush it so the
+                // shard's partition of the budget cannot stay blocked for
+                // the rest of the run. (A shard with resident sessions
+                // keeps its warm KV: its own commit/resume pressure paths
+                // reclaim lazily, and on a single shard resident == 0
+                // implies an empty cache, so behavior there is unchanged.)
+                if shards[s].resident() == 0
+                    && shards[s].engine.pressure().evictable_blocks > 0
+                {
+                    shards[s].engine.relieve_pressure(usize::MAX);
+                    if shards[s].engine.can_admit(prompt) {
+                        target = Some(s);
+                        break;
+                    }
+                }
+            }
+            let Some(target) = target else {
+                admission_blocked_rounds += 1;
+                break;
+            };
+            let (id, job) = queue.pop_front().expect("front checked above");
+            let session =
+                SearchSession::new(&mut shards[target].engine, job.lm, job.prm, job.policy, params);
+            shards[target].running.push(Slot { id, seq: admit_seq, stalled: 0, session });
+            shards[target].stats.admitted += 1;
+            admit_seq += 1;
+            progressed = true;
+        }
+        let total_resident: usize = shards.iter().map(|s| s.resident()).sum();
+        if total_resident == 0 && queue.is_empty() {
+            break;
+        }
+        max_concurrent = max_concurrent.max(total_resident);
+
+        // 4. run every shard that has work on its own thread (shared-
+        //    nothing, so embarrassingly parallel); merge in shard index
+        //    order so the run stays deterministic regardless of timing
+        let work: Vec<usize> = shards
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| !s.running.is_empty() || round_recompute[*i] > 0)
+            .map(|(i, _)| i)
+            .collect();
+        let mut results: Vec<(usize, RoundResult)> = Vec::new();
+        if work.len() <= 1 {
+            for &i in &work {
+                let r = shards[i].run_round(perf, model, round_recompute[i]);
+                results.push((i, r));
+            }
+        } else {
+            let collected: Mutex<Vec<(usize, RoundResult)>> = Mutex::new(Vec::new());
+            std::thread::scope(|scope| {
+                for (i, shard) in shards.iter_mut().enumerate() {
+                    if !work.contains(&i) {
+                        continue;
+                    }
+                    let recompute = round_recompute[i];
+                    let collected = &collected;
+                    scope.spawn(move || {
+                        let r = shard.run_round(perf, model, recompute);
+                        collected.lock().unwrap().push((i, r));
+                    });
+                }
+            });
+            results = collected.into_inner().expect("shard thread panicked");
+            results.sort_by_key(|&(i, _)| i);
+        }
+
+        // 5. merge the round: outcomes, telemetry, and the round's modeled
+        //    cost — its slowest shard (shards are parallel replicas)
+        let mut round_seconds = 0.0f64;
+        let mut round_step_problems = 0usize;
+        for (_, result) in results {
+            for (id, outcome) in result.finished {
+                outcomes[id] = Some(outcome);
+            }
+            progressed |= result.progressed;
+            deferred_commits += result.deferred_commits;
+            if let Some(rec) = result.record {
+                round_seconds = round_seconds.max(rec.seconds);
+                round_step_problems += rec.problems;
+                batches.push(rec);
+            }
+        }
+        modeled_seconds += round_seconds;
+        peak_step_concurrency = peak_step_concurrency.max(round_step_problems);
+        peak = peak.max(shards.iter().map(|s| s.engine.live_tokens()).sum());
+
         if progressed {
             stalled_rounds = 0;
         } else {
             stalled_rounds += 1;
             assert!(
                 stalled_rounds < 4,
-                "serve stalled: KV capacity ({} blocks x {} tokens) is below a \
-                 single problem's working set",
-                engine.total_blocks(),
-                engine.block_size()
+                "serve stalled: per-shard KV capacity ({} blocks x {} tokens, {} shard(s)) \
+                 is below a single problem's working set",
+                shards[0].engine.total_blocks(),
+                shards[0].engine.block_size(),
+                n_shards
             );
         }
     }
 
-    debug_assert_eq!(engine.live_tokens(), 0, "serve left pinned KV behind");
-    let modeled_seconds = batches.iter().map(|b| b.seconds).sum();
+    for shard in shards.iter_mut() {
+        // flush warm KV orphaned by sessions that migrated away (lazy
+        // suspend leaves it cached) so the all-pins-released invariant is
+        // meaningful per shard
+        shard.engine.relieve_pressure(usize::MAX);
+        debug_assert_eq!(
+            shard.engine.live_tokens(),
+            0,
+            "shard {} left pinned KV behind",
+            shard.index
+        );
+    }
+    let preemptions: u64 = shards.iter().map(|s| s.stats.preemptions).sum();
+    let resumes: u64 = shards.iter().map(|s| s.stats.resumes).sum();
+    let recompute_tokens: u64 = shards.iter().map(|s| s.stats.recompute_tokens).sum();
+    let peak_used_blocks: usize = shards.iter().map(|s| s.stats.peak_used_blocks).sum();
+    let total_blocks: usize = shards.iter().map(|s| s.engine.total_blocks()).sum();
     ServeReport {
         outcomes: outcomes
             .into_iter()
@@ -467,11 +831,14 @@ where
         peak_step_concurrency,
         preemptions,
         resumes,
-        recompute_tokens: recompute_total,
+        recompute_tokens,
         admission_blocked_rounds,
         deferred_commits,
         peak_used_blocks,
-        total_blocks: engine.total_blocks(),
+        total_blocks,
+        shards: n_shards,
+        migrations,
+        shard_stats: shards.into_iter().map(|s| s.stats).collect(),
     }
 }
 
@@ -488,11 +855,7 @@ pub struct CoordinatorStats {
 
 impl CoordinatorStats {
     pub fn throughput_problems_per_sec(&self) -> f64 {
-        if self.wall_seconds > 0.0 {
-            self.completed as f64 / self.wall_seconds
-        } else {
-            0.0
-        }
+        throughput_problems_per_sec(self.completed as usize, self.wall_seconds)
     }
 }
 
@@ -577,6 +940,40 @@ mod tests {
     }
 
     #[test]
+    fn serve_results_do_not_depend_on_shard_count() {
+        let params = SearchParams { width: 8, max_steps: 16 };
+        let perf = PerfModel::new(H100_NVL, true, 4);
+        let run = |shards: usize| {
+            let opts = ServeOptions::with_shards(4, shards);
+            serve(jobs(6, 7), &params, &opts, &perf, &LLEMMA_34B_SIM)
+        };
+        let base = run(1);
+        assert_eq!(base.shards, 1);
+        assert_eq!(base.migrations, 0);
+        assert_eq!(base.shard_stats.len(), 1);
+        for shards in [2usize, 4] {
+            let sharded = run(shards);
+            assert_eq!(
+                fingerprints(&base),
+                fingerprints(&sharded),
+                "shard count {shards} changed results"
+            );
+            assert_eq!(sharded.shards, shards);
+            assert_eq!(sharded.shard_stats.len(), shards);
+            // ample capacity: no pressure, hence no migration
+            assert_eq!(sharded.kv_pressure_events(), 0);
+            assert_eq!(sharded.migrations, 0);
+            // the deterministic router actually spread the load
+            let used: usize =
+                sharded.shard_stats.iter().filter(|s| s.admitted > 0).count();
+            assert!(used >= 2, "least-loaded routing left all jobs on one shard");
+            // every problem admitted exactly once across shards
+            let admitted: u64 = sharded.shard_stats.iter().map(|s| s.admitted).sum();
+            assert_eq!(admitted, 6);
+        }
+    }
+
+    #[test]
     fn serve_matches_run_search_per_problem() {
         // The batched path must report exactly what a solo run reports: the
         // cache views are per-ledger, so co-scheduling changes nothing.
@@ -629,6 +1026,7 @@ mod tests {
             concurrency: 6,
             capacity_tokens: 2 * solo_peak + 4096,
             block_size: 16,
+            shards: 1,
         };
         let capped = serve(jobs(6, 42), &params, &tight, &perf, &LLEMMA_34B_SIM);
         assert_eq!(
@@ -674,8 +1072,16 @@ mod tests {
             concurrency: 2,
             capacity_tokens: 512,
             block_size: 16,
+            shards: 1,
         };
         let _ = serve(jobs(2, 3), &params, &opts, &perf, &LLEMMA_34B_SIM);
+    }
+
+    #[test]
+    fn throughput_helper_guards_zero_seconds() {
+        assert_eq!(throughput_problems_per_sec(10, 0.0), 0.0);
+        assert_eq!(throughput_problems_per_sec(10, 2.0), 5.0);
+        assert_eq!(throughput_problems_per_sec(0, 1.0), 0.0);
     }
 
     #[test]

@@ -123,9 +123,14 @@ pub struct ResumeStats {
 #[derive(Clone, Debug)]
 pub struct BatchEngine {
     cache: RadixCache,
-    /// Next synthetic token id (ids are never reused, so distinct steps can
-    /// only share KV through genuine path-prefix sharing).
+    /// Next synthetic token id (ids are never reused — not even across the
+    /// engines of a sharded fleet, see [`BatchEngine::for_shard`] — so
+    /// distinct steps can only share KV through genuine path-prefix
+    /// sharing).
     next_token: u32,
+    /// Mint step: each engine of a fleet owns a disjoint residue class of
+    /// the id space (1 for a standalone engine).
+    id_stride: u32,
     /// Problems ever registered.
     pub problems_registered: u64,
     /// Expansion batches executed via [`BatchEngine::expand`].
@@ -150,9 +155,38 @@ impl BatchEngine {
     }
 
     pub fn with_block_size(capacity_tokens: usize, block_size: usize) -> Self {
+        Self::for_shard(capacity_tokens, block_size, 0, 1)
+    }
+
+    /// Build shard `shard` of a `shards`-engine fleet whose engines may
+    /// *exchange sessions* (the shard-per-core serve scheduler migrates
+    /// suspended sessions across shards).
+    ///
+    /// Each engine mints synthetic token ids from its own arithmetic
+    /// progression `shard + 1, shard + 1 + stride, …` where `stride` is
+    /// `shards` rounded up to a power of two: the residue classes are
+    /// disjoint and — because a power-of-two stride divides 2³² — stay
+    /// disjoint even across `u32` wrap-around, so two shards can *never*
+    /// mint the same id. A migrated session's re-inserted sequences can
+    /// therefore only share the target cache through genuine prefix
+    /// sharing: cross-problem dedup of unrelated prompts (physically
+    /// impossible on real hardware) cannot happen, and a migrated resume
+    /// is charged its honest recompute prefill. `for_shard(c, b, 0, 1)`
+    /// is the single-engine minting scheme (ids 1, 2, 3, …).
+    pub fn for_shard(
+        capacity_tokens: usize,
+        block_size: usize,
+        shard: u32,
+        shards: u32,
+    ) -> Self {
+        let stride = shards.max(1).next_power_of_two();
+        debug_assert!(shard < stride, "shard index outside the fleet");
         Self {
             cache: RadixCache::with_block_size(capacity_tokens, block_size),
-            next_token: 1, // 0 is the conventional padding id
+            id_stride: stride,
+            // + 1: 0 is the conventional padding id (skipped at mint time
+            // for the residue class that contains it)
+            next_token: shard.wrapping_add(1),
             problems_registered: 0,
             batches_executed: 0,
             tokens_admitted: 0,
@@ -167,8 +201,13 @@ impl BatchEngine {
     fn mint_tokens(&mut self, n: usize) -> Vec<u32> {
         (0..n)
             .map(|_| {
+                if self.next_token == 0 {
+                    // 0 is the padding id — skip it (stays in this shard's
+                    // residue class: the stride is a power of two)
+                    self.next_token = self.id_stride;
+                }
                 let t = self.next_token;
-                self.next_token = self.next_token.wrapping_add(1).max(1);
+                self.next_token = self.next_token.wrapping_add(self.id_stride);
                 t
             })
             .collect()
@@ -444,28 +483,38 @@ impl BatchEngine {
         unpinned
     }
 
-    /// Resume a suspended problem: reserve a worst-case block need, then
-    /// re-insert and re-pin the prompt and every suspended leaf's sequence.
-    /// Tokens the cache no longer holds are *recomputed* (re-prefilled) —
-    /// the latency cost the perf model charges resumed sessions; tokens
-    /// that survived eviction re-pin for free. `Err(KvPressure)` leaves
-    /// everything suspended.
+    /// Token sequences of a suspended ledger's leaves, in suspension order.
+    /// Engine-independent: the migration router computes them once per
+    /// stuck session and reuses them across every candidate-shard probe.
+    pub(crate) fn suspended_sequences(ledger: &KvLedger, tree: &SearchTree) -> Vec<Vec<u32>> {
+        ledger
+            .suspended_leaves
+            .iter()
+            .map(|&leaf| Self::sequence(ledger, tree, leaf))
+            .collect()
+    }
+
+    /// Worst-case blocks a [`BatchEngine::try_resume`] of this suspended
+    /// ledger would reserve *on this engine*, given the working-set
+    /// sequences from [`BatchEngine::suspended_sequences`]. A suspended
+    /// ledger holds no cache node indices — only tree leaves and token ids
+    /// — so this is callable against a *different* engine than the one the
+    /// session was suspended from: the sharded coordinator sizes a
+    /// cross-shard migration by asking each candidate target shard's
+    /// engine whether it could cover the resume reservation.
     ///
     /// The reservation is the min of two valid upper bounds: a *cold*
     /// estimate (prompt + the union of suspended tree paths, paged, plus
     /// split slack — tight when everything was evicted) and a *probe*
-    /// estimate from `match_prefix` misses (tight when the cache is still
-    /// warm). Residency can only shrink the actual draw below either bound.
-    pub fn try_resume(
-        &mut self,
-        ledger: &mut KvLedger,
+    /// estimate from read-only `peek_prefix` misses (tight when the cache
+    /// is still warm). Residency can only shrink the actual draw below
+    /// either bound.
+    pub(crate) fn resume_need_blocks_for(
+        &self,
+        ledger: &KvLedger,
         tree: &SearchTree,
-    ) -> Result<ResumeStats, KvPressure> {
-        let seqs: Vec<Vec<u32>> = ledger
-            .suspended_leaves
-            .iter()
-            .map(|&leaf| Self::sequence(ledger, tree, leaf))
-            .collect();
+        seqs: &[Vec<u32>],
+    ) -> usize {
         // Per-insert split slack is unconditional here, unlike admission:
         // even with minted ids a re-insert can SPLIT — a partially evicted
         // working set lets the first re-inserted leaf coalesce several
@@ -483,15 +532,43 @@ impl BatchEngine {
             }
             need_cold += 1;
         }
-        // probe bound: blocks for each insert's actual prefix miss
-        let (matched, _) = self.cache.match_prefix(&ledger.prompt_ids);
+        // probe bound: blocks for each insert's actual prefix miss. The
+        // probe is read-only (`peek_prefix`): sizing a resume — possibly
+        // against a migration candidate that is never chosen — must not
+        // touch LRU clocks and perturb that cache's eviction order.
+        let matched = self.cache.peek_prefix(&ledger.prompt_ids);
         let mut need_probe =
             self.cache.blocks_for(ledger.prompt_ids.len() - matched) + 1;
-        for seq in &seqs {
-            let (matched, _) = self.cache.match_prefix(seq);
+        for seq in seqs {
+            let matched = self.cache.peek_prefix(seq);
             need_probe += self.cache.blocks_for(seq.len() - matched) + 1;
         }
-        let need = need_cold.min(need_probe);
+        need_cold.min(need_probe)
+    }
+
+    /// Resume a suspended problem: reserve a worst-case block need
+    /// ([`BatchEngine::resume_need_blocks_for`]), then re-insert and re-pin the
+    /// prompt and every suspended leaf's sequence. Tokens the cache no
+    /// longer holds are *recomputed* (re-prefilled) — the latency cost the
+    /// perf model charges resumed sessions; tokens that survived eviction
+    /// re-pin for free. `Err(KvPressure)` leaves everything suspended.
+    pub fn try_resume(
+        &mut self,
+        ledger: &mut KvLedger,
+        tree: &SearchTree,
+    ) -> Result<ResumeStats, KvPressure> {
+        let seqs = Self::suspended_sequences(ledger, tree);
+        let need = self.resume_need_blocks_for(ledger, tree, &seqs);
+        // MRU-touch the still-cached parts of the working set this resume
+        // is about to re-pin: when the reservation below fails, the
+        // caller's relieve() pass must evict *other* warm data first, not
+        // the very prefix the retried resume wants to reuse. (The sizing
+        // probe itself is read-only — it also runs against migration
+        // candidates that must not be perturbed.)
+        self.cache.match_prefix(&ledger.prompt_ids);
+        for seq in &seqs {
+            self.cache.match_prefix(seq);
+        }
         self.try_reserve(need)?;
         self.cache.release_reservation(need);
         let mut stats = ResumeStats::default();

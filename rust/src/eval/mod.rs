@@ -6,11 +6,11 @@
 
 use crate::coordinator::{ServeJob, ServeOptions, ServeReport};
 use crate::embed::HashEmbedder;
-use crate::engine::PerfModel;
+use crate::engine::{PerfModel, DEFAULT_KV_CAPACITY, H100_NVL};
 use crate::lm::SynthLm;
 use crate::reward::OraclePrm;
 use crate::search::policy::{BeamPolicy, DvtsPolicy, EtsPolicy, RebasePolicy, SearchPolicy};
-use crate::search::{run_search, SearchOutcome, SearchParams};
+use crate::search::{SearchOutcome, SearchParams};
 use crate::workload::{ProblemSet, WorkloadSpec};
 
 /// Which search policy to instantiate (fresh per problem — policies carry
@@ -128,7 +128,10 @@ pub struct EvalConfig {
     pub max_steps: usize,
 }
 
-fn make_policy(spec: &PolicySpec, width: usize) -> Box<dyn SearchPolicy> {
+/// Instantiate a policy behind a `Send` trait object: the sharded serve
+/// scheduler moves sessions (and their policies) between worker threads and,
+/// under sustained memory pressure, migrates them across shards.
+fn make_policy(spec: &PolicySpec, width: usize) -> Box<dyn SearchPolicy + Send> {
     match spec {
         PolicySpec::Beam { keep } => Box::new(BeamPolicy { keep: *keep }),
         PolicySpec::BeamSqrt => Box::new(BeamPolicy { keep: isqrt(width) }),
@@ -141,25 +144,6 @@ fn make_policy(spec: &PolicySpec, width: usize) -> Box<dyn SearchPolicy> {
         PolicySpec::EtsKv { lambda_b } => {
             Box::new(EtsPolicy::new(*lambda_b, 0.0, HashEmbedder::default()))
         }
-    }
-}
-
-impl SearchPolicy for Box<dyn SearchPolicy> {
-    fn allocate(
-        &mut self,
-        tree: &crate::tree::SearchTree,
-        candidates: &[crate::tree::NodeId],
-        width: usize,
-    ) -> crate::search::Allocation {
-        (**self).allocate(tree, candidates, width)
-    }
-
-    fn name(&self) -> String {
-        (**self).name()
-    }
-
-    fn on_root_children(&mut self, children: &[crate::tree::NodeId]) {
-        (**self).on_root_children(children)
     }
 }
 
@@ -178,9 +162,9 @@ fn summarize(out: &SearchOutcome, truth: i64) -> ProblemSummary {
     )
 }
 
-/// Fold per-problem summaries into an [`EvalReport`] — shared by the
-/// `par_map` eval path and the batched serve path so the two can be compared
-/// field-for-field.
+/// Fold per-problem summaries into an [`EvalReport`]. Every eval shape
+/// (worker sweep, serve concurrency sweep, capacity sweep, shard sweep)
+/// folds through here so reports compare field-for-field.
 fn fold_report(cfg: &EvalConfig, results: Vec<ProblemSummary>) -> EvalReport {
     let mut report = EvalReport {
         policy: cfg.policy.name(cfg.width),
@@ -212,22 +196,28 @@ fn fold_report(cfg: &EvalConfig, results: Vec<ProblemSummary>) -> EvalReport {
     report
 }
 
-/// Run the evaluation in parallel over `workers` threads (problems are
-/// independent; per-problem determinism is seed-derived, so the report is
-/// identical regardless of worker count).
+/// Run the evaluation in parallel over `workers` threads.
+///
+/// Rebased onto the sharded [`crate::coordinator::serve`] engine: `workers`
+/// shards with one resident job per shard (`concurrency == shards`, routed
+/// by the deterministic least-loaded admission), each shard holding the
+/// default ample per-shard KV capacity. This replaces the old
+/// `par_map`-over-fresh-engines path so eval and serving share a single
+/// execution engine; because sessions are schedule-invariant, the folded
+/// report is identical for any worker count (and identical to what the old
+/// path produced — `tests/serve_determinism.rs` pins this).
 pub fn evaluate_with_workers(cfg: &EvalConfig, workers: usize) -> EvalReport {
-    let problems = ProblemSet::generate(&cfg.spec, cfg.n_problems, cfg.seed);
-    let params = SearchParams { width: cfg.width, max_steps: cfg.max_steps };
-    let results = crate::coordinator::par_map(problems.problems, workers, |_, p| {
-        let truth = p.answer;
-        let id = p.id;
-        let mut lm = SynthLm::new(p, cfg.seed ^ id);
-        let mut prm = OraclePrm::for_profile(&cfg.spec.model, cfg.seed ^ 0xBEEF ^ id);
-        let mut policy = make_policy(&cfg.policy, cfg.width);
-        let out = run_search(&mut lm, &mut prm, &mut policy, &params);
-        summarize(&out, truth)
-    });
-    fold_report(cfg, results)
+    let workers = workers.max(1).min(cfg.n_problems.max(1));
+    let opts = ServeOptions {
+        concurrency: workers,
+        // one full default-sized engine per shard, like the old per-worker
+        // fresh engines (the global budget is partitioned across shards)
+        capacity_tokens: DEFAULT_KV_CAPACITY.saturating_mul(workers),
+        shards: workers,
+        ..Default::default()
+    };
+    let perf = PerfModel::new(H100_NVL, true, workers);
+    evaluate_serve_with(cfg, &opts, &perf).report
 }
 
 /// Run the evaluation using all available cores.
@@ -269,7 +259,7 @@ pub fn evaluate_serve_with(
     let problems = ProblemSet::generate(&cfg.spec, cfg.n_problems, cfg.seed);
     let params = SearchParams { width: cfg.width, max_steps: cfg.max_steps };
     let mut truths = Vec::with_capacity(problems.problems.len());
-    let jobs: Vec<ServeJob<SynthLm, OraclePrm, Box<dyn SearchPolicy>>> = problems
+    let jobs: Vec<ServeJob<SynthLm, OraclePrm, Box<dyn SearchPolicy + Send>>> = problems
         .problems
         .into_iter()
         .map(|p| {

@@ -343,13 +343,16 @@ impl RadixCache {
         self.clock
     }
 
-    /// Longest cached prefix of `tokens`: (matched token count, end node).
-    /// Touches LRU clocks along the path.
-    pub fn match_prefix(&mut self, tokens: &[u32]) -> (usize, NodeIdx) {
-        let now = self.tick();
+    /// The one prefix traversal both lookup flavors share: (matched token
+    /// count, end node), calling `visit` on every node walked — including a
+    /// partially-matched edge's child. The resume-reservation probe bound
+    /// is only sound if the sizing walk and the insert-time walk agree
+    /// exactly, so any change to match granularity or edge handling lives
+    /// here and nowhere else.
+    fn prefix_walk(&self, tokens: &[u32], mut visit: impl FnMut(NodeIdx)) -> (usize, NodeIdx) {
         let mut cur = self.root;
         let mut matched = 0usize;
-        self.touch(cur, now);
+        visit(cur);
         while matched < tokens.len() {
             let Some(&child) = self.nodes[cur].children.get(&tokens[matched]) else {
                 break;
@@ -361,7 +364,7 @@ impl RadixCache {
                 .zip(&tokens[matched..])
                 .take_while(|(a, b)| a == b)
                 .count();
-            self.touch(child, now);
+            visit(child);
             matched += common;
             if common < klen {
                 break; // partial edge match: stop (match granularity = token)
@@ -369,6 +372,27 @@ impl RadixCache {
             cur = child;
         }
         (matched, cur)
+    }
+
+    /// Longest cached prefix of `tokens`, read-only and allocation-free:
+    /// like [`RadixCache::match_prefix`] but touches no LRU clock. For
+    /// sizing probes — e.g. a resume reservation estimated against a
+    /// migration *candidate* shard's cache — that must not perturb eviction
+    /// order on caches that end up not being used.
+    pub fn peek_prefix(&self, tokens: &[u32]) -> usize {
+        self.prefix_walk(tokens, |_| {}).0
+    }
+
+    /// Longest cached prefix of `tokens`: (matched token count, end node).
+    /// Touches LRU clocks along the path.
+    pub fn match_prefix(&mut self, tokens: &[u32]) -> (usize, NodeIdx) {
+        let mut visited: Vec<NodeIdx> = Vec::new();
+        let (matched, end) = self.prefix_walk(tokens, |idx| visited.push(idx));
+        let now = self.tick();
+        for idx in visited {
+            self.touch(idx, now);
+        }
+        (matched, end)
     }
 
     /// Insert `tokens`, sharing any existing prefix. Splits edges on partial

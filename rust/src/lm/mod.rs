@@ -40,6 +40,32 @@ pub trait StepGenerator {
     }
 }
 
+/// Boxed generators — heterogeneous backends behind one serve loop (covers
+/// `Box<dyn StepGenerator>` and `Box<dyn StepGenerator + Send>`; the `Send`
+/// variant is what lets the sharded coordinator hand sessions to worker
+/// threads and migrate them across shards).
+impl<G: StepGenerator + ?Sized> StepGenerator for Box<G> {
+    fn expand(&mut self, tree: &SearchTree, leaf: NodeId, n: usize) -> Vec<StepInfo> {
+        (**self).expand(tree, leaf, n)
+    }
+
+    fn expand_batch(
+        &mut self,
+        tree: &SearchTree,
+        requests: &[(NodeId, usize)],
+    ) -> Vec<Vec<StepInfo>> {
+        (**self).expand_batch(tree, requests)
+    }
+
+    fn prompt_tokens(&self) -> usize {
+        (**self).prompt_tokens()
+    }
+
+    fn prompt_token_ids(&self) -> Option<Vec<u32>> {
+        (**self).prompt_token_ids()
+    }
+}
+
 impl<G: StepGenerator + ?Sized> StepGenerator for &mut G {
     fn expand(&mut self, tree: &SearchTree, leaf: NodeId, n: usize) -> Vec<StepInfo> {
         (**self).expand(tree, leaf, n)

@@ -29,13 +29,16 @@ USAGE:
             [--problems K] [--seed S] [--workers W] [--json FILE]
   ets serve [--dataset D] [--model M] [--policy P] [--width N]
             [--problems K] [--concurrency C] [--capacity TOKENS]
-            [--block-size TOKENS] [--seed S] [--json FILE]
+            [--block-size TOKENS] [--shards N] [--seed S] [--json FILE]
             [--pjrt] [--requests K] [--artifacts DIR]
   ets info  [--artifacts DIR]
 
 `--capacity` makes the KV budget *hard*: the scheduler gates admission on
 free-block watermarks and preempts/resumes sessions under pressure
 (recomputing evicted prefixes), never exceeding the block budget.
+`--shards N` spawns N shard-per-core engines (each owning capacity/N) with
+deterministic least-loaded admission and cross-shard migration of stuck
+sessions; results are identical for every shard count at a fixed seed.
 
 POLICIES: rebase | beam-<k> | beam-sqrt | dvts-<k> | dvts-sqrt |
           ets[:<lambda_b>] | ets-kv[:<lambda_b>]
@@ -46,7 +49,7 @@ fn main() {
     let spec = Spec::new(&[
         "dataset", "model", "policy", "width", "problems", "seed", "workers",
         "json", "config", "requests", "lambda-b", "artifacts", "concurrency",
-        "capacity", "block-size",
+        "capacity", "block-size", "shards",
     ]);
     let args = match spec.parse(std::env::args()) {
         Ok(a) => a,
@@ -177,9 +180,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 cfg_doc.usize_or("serve.block_size", defaults.block_size),
             )
             .map_err(Error::msg)?,
+        shards: args
+            .get_usize("shards", cfg_doc.usize_or("serve.shards", defaults.shards))
+            .map_err(Error::msg)?,
     };
     if opts.capacity_tokens == 0 {
         bail!("--capacity must be a positive token budget");
+    }
+    if opts.shards == 0 {
+        bail!("--shards must be at least 1");
     }
     let perf = PerfModel::new(H100_NVL, true, concurrency);
     let t0 = std::time::Instant::now();
@@ -193,8 +202,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             / r.serve.batches.len() as f64
     };
     println!(
-        "served {} problems (width {}, policy {}) through one engine, concurrency {}",
-        cfg.n_problems, cfg.width, r.report.policy, concurrency
+        "served {} problems (width {}, policy {}) through {} shard engine(s), concurrency {}",
+        cfg.n_problems, cfg.width, r.report.policy, r.serve.shards, concurrency
     );
     println!(
         "  acc={:.1}%  kvΣ/problem={:.0}  peak resident kv={} tokens  max concurrent={}",
@@ -216,6 +225,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         r.serve.total_blocks,
         opts.block_size,
     );
+    if opts.shards > 1 {
+        println!(
+            "  {} shards ({} tokens each), {} cross-shard migrations",
+            r.serve.shards,
+            opts.capacity_tokens / opts.shards,
+            r.serve.migrations,
+        );
+        for st in &r.serve.shard_stats {
+            println!(
+                "    shard {}: admitted {}  peak {}/{} blocks  preempt {}  resume {}  mig in/out {}/{}  busy {:.2}s",
+                st.shard,
+                st.admitted,
+                st.peak_used_blocks,
+                st.total_blocks,
+                st.preemptions,
+                st.resumes,
+                st.migrations_in,
+                st.migrations_out,
+                st.busy_seconds,
+            );
+        }
+    }
     if r.serve.kv_pressure_events() > 0 {
         println!(
             "  memory pressure: {} preemptions, {} resumes ({} tokens recomputed), {} admission-blocked rounds, {} deferred commits",
@@ -241,6 +272,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("concurrency", Json::num(concurrency as f64)),
             ("capacity_tokens", Json::num(opts.capacity_tokens as f64)),
             ("block_size", Json::num(opts.block_size as f64)),
+            ("shards", Json::num(r.serve.shards as f64)),
+            ("migrations", Json::num(r.serve.migrations as f64)),
             ("accuracy", Json::num(r.report.accuracy())),
             ("mean_kv_tokens", Json::num(r.report.mean_kv_tokens)),
             ("batches", Json::num(r.serve.batches.len() as f64)),

@@ -23,6 +23,14 @@ impl<R: RewardModel + ?Sized> RewardModel for &mut R {
     }
 }
 
+/// Boxed reward models (covers the `+ Send` trait objects the sharded
+/// coordinator moves between worker threads).
+impl<R: RewardModel + ?Sized> RewardModel for Box<R> {
+    fn score(&mut self, tree: &SearchTree, nodes: &[NodeId]) -> Vec<f64> {
+        (**self).score(tree, nodes)
+    }
+}
+
 /// Noisy oracle: `sigmoid(margin * (alive ? 1 : -1) + path_bias + noise)`.
 ///
 /// Two noise components, both *deterministic per node path* (hash-seeded),

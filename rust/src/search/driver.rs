@@ -340,9 +340,36 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
         freed
     }
 
+    /// Engine-independent token sequences of this (suspended) session's
+    /// working set: compute once, then size several candidate engines via
+    /// [`SearchSession::resume_need_blocks_with`] without rebuilding them.
+    pub(crate) fn suspended_sequences(&self) -> Vec<Vec<u32>> {
+        debug_assert!(self.suspended, "sequences of a resident session");
+        BatchEngine::suspended_sequences(&self.ledger, &self.tree)
+    }
+
+    /// Worst-case blocks a resume of this (suspended) session would reserve
+    /// on `engine`, given the working-set sequences precomputed by
+    /// [`SearchSession::suspended_sequences`]. A suspended session holds no
+    /// cache node indices, so the estimate is valid against *any* engine —
+    /// the sharded coordinator sizes a cross-shard migration by probing
+    /// every candidate target shard's engine before moving the session.
+    pub(crate) fn resume_need_blocks_with(
+        &self,
+        engine: &BatchEngine,
+        seqs: &[Vec<u32>],
+    ) -> usize {
+        debug_assert!(self.suspended, "resume sizing on a resident session");
+        engine.resume_need_blocks_for(&self.ledger, &self.tree, seqs)
+    }
+
     /// Resume hook: reserve and rebuild the working set, recomputing
     /// whatever was evicted while suspended. Returns the recomputed token
-    /// count; `Err(KvPressure)` leaves the session suspended.
+    /// count; `Err(KvPressure)` leaves the session suspended. The engine
+    /// need not be the one the session was suspended from — resuming
+    /// through a *different* shard's cache simply recomputes the full
+    /// prefix there, which is what makes cross-shard migration correct by
+    /// construction.
     pub fn try_resume(&mut self, engine: &mut BatchEngine) -> Result<usize, KvPressure> {
         debug_assert!(self.suspended, "resume without suspend");
         let stats = engine.try_resume(&mut self.ledger, &self.tree)?;

@@ -42,6 +42,24 @@ impl<P: SearchPolicy + ?Sized> SearchPolicy for &mut P {
     }
 }
 
+/// Boxed policies — covers `Box<dyn SearchPolicy>` (heterogeneous eval
+/// sweeps on the solo `run_search` path) and `Box<dyn SearchPolicy + Send>`
+/// (the sharded serve path, where sessions and their policies move between
+/// worker threads and migrate across shards).
+impl<P: SearchPolicy + ?Sized> SearchPolicy for Box<P> {
+    fn allocate(&mut self, tree: &SearchTree, candidates: &[NodeId], width: usize) -> Allocation {
+        (**self).allocate(tree, candidates, width)
+    }
+
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn on_root_children(&mut self, children: &[NodeId]) {
+        (**self).on_root_children(children)
+    }
+}
+
 fn rewards_of(tree: &SearchTree, candidates: &[NodeId]) -> Vec<f64> {
     candidates.iter().map(|&c| tree.get(c).reward).collect()
 }

@@ -1,16 +1,23 @@
-//! Determinism across execution shapes: `coordinator::par_map` eval and the
-//! batched `serve` path must produce identical eval results for 1, 2, and 8
-//! workers / concurrent slots at a fixed seed. Per-problem RNG streams are
-//! seed-derived and the engine's KV accounting is per-ledger, so neither
-//! thread count nor co-scheduling may leak into results.
+//! Determinism across execution shapes: the (serve-backed) worker eval and
+//! the batched `serve` path must produce identical eval results for 1, 2,
+//! and 8 workers / concurrent slots at a fixed seed. Per-problem RNG
+//! streams are seed-derived and the engine's KV accounting is per-ledger,
+//! so neither thread count nor co-scheduling may leak into results.
 //!
 //! The same holds under *memory pressure*: a hard KV budget tight enough to
 //! force admission gating and preemption/resume must leave every answer and
 //! every per-problem KV/token count identical to the effectively-unbounded
 //! run at the same seed — scheduling must never change search outcomes.
+//!
+//! And it holds across *shard counts*: `--shards N` partitions the budget
+//! over N shared-nothing engines stepped on parallel threads, with
+//! deterministic least-loaded admission and cross-shard migration of stuck
+//! sessions — shards ∈ {1, 2, 4} must be byte-identical per problem, under
+//! both ample and tight capacity (and the tight multi-shard run must
+//! actually exercise migration).
 
 use ets::coordinator::ServeOptions;
-use ets::engine::{PerfModel, H100_NVL};
+use ets::engine::{PerfModel, DEFAULT_KV_CAPACITY, H100_NVL};
 use ets::eval::{evaluate_serve, evaluate_serve_with, evaluate_with_workers, EvalConfig, PolicySpec};
 use ets::workload::{WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
 
@@ -94,6 +101,7 @@ fn tight_capacity_preemption_cannot_change_results() {
             concurrency: 8,
             capacity_tokens: tight_tokens,
             block_size: 16,
+            shards: 1,
         };
         let capped = evaluate_serve_with(&cfg, &opts, &perf);
         // identical to the uncapped serve AND to the par_map baseline
@@ -128,6 +136,108 @@ fn tight_capacity_preemption_cannot_change_results() {
                 capped.serve.batches.iter().map(|b| b.recompute_tokens as u64).sum::<u64>(),
                 "recompute accounting must reconcile with the per-round records"
             );
+        }
+    }
+}
+
+#[test]
+fn shard_count_is_invisible_at_ample_capacity() {
+    let cfg = cfg(PolicySpec::Rebase);
+    let base = fingerprint(&evaluate_with_workers(&cfg, 2));
+    for shards in [1usize, 2, 4] {
+        // one full default-sized engine per shard: capacity never binds
+        let opts = ServeOptions {
+            concurrency: 8,
+            capacity_tokens: DEFAULT_KV_CAPACITY * shards,
+            shards,
+            ..Default::default()
+        };
+        let perf = PerfModel::new(H100_NVL, true, 8);
+        let served = evaluate_serve_with(&cfg, &opts, &perf);
+        assert_eq!(
+            base,
+            fingerprint(&served.report),
+            "shard count {shards} changed eval results"
+        );
+        assert_eq!(served.serve.shards, shards);
+        assert_eq!(served.serve.shard_stats.len(), shards);
+        assert!(served.serve.modeled_seconds > 0.0);
+        assert_eq!(
+            served.serve.kv_pressure_events(),
+            0,
+            "ample capacity must keep the pressure machinery dormant"
+        );
+        assert_eq!(served.serve.migrations, 0, "no pressure, no migration");
+        // every job admitted exactly once across shards
+        let admitted: u64 = served.serve.shard_stats.iter().map(|s| s.admitted).sum();
+        assert_eq!(admitted, cfg.n_problems as u64);
+    }
+}
+
+#[test]
+fn shard_count_is_invisible_under_pressure_and_tight_shards_migrate() {
+    // Fat working sets (width 24) so a per-shard budget sized to one peak
+    // working set puts a 3-resident shard under sustained pressure.
+    let mut cfg = cfg(PolicySpec::Rebase);
+    cfg.width = 24;
+    cfg.n_problems = 12;
+    let perf = PerfModel::new(H100_NVL, true, 12);
+    let uncapped = evaluate_serve_with(&cfg, &ServeOptions::with_concurrency(12), &perf);
+    let base = fingerprint(&uncapped.report);
+    let solo_peak = uncapped
+        .serve
+        .outcomes
+        .iter()
+        .map(|o| o.peak_kv_tokens())
+        .max()
+        .unwrap() as usize;
+    // Global budget = 4 partitions of (one peak working set + slack): at 4
+    // shards each shard comfortably fits one resident problem but not its
+    // ~3 admitted ones — sustained KvPressure while peers drain and free
+    // blocks, which is exactly the cross-shard migration trigger.
+    let global_budget = 4 * (solo_peak + 4096);
+    for shards in [1usize, 2, 4] {
+        let opts = ServeOptions {
+            concurrency: 12,
+            capacity_tokens: global_budget,
+            block_size: 16,
+            shards,
+        };
+        let capped = evaluate_serve_with(&cfg, &opts, &perf);
+        assert_eq!(
+            base,
+            fingerprint(&capped.report),
+            "shard count {shards} under a tight budget changed eval results"
+        );
+        assert!(
+            capped.serve.peak_used_blocks <= capped.serve.total_blocks,
+            "hard budget violated at shards={shards}: {} > {}",
+            capped.serve.peak_used_blocks,
+            capped.serve.total_blocks
+        );
+        match shards {
+            1 => assert_eq!(capped.serve.migrations, 0, "one shard cannot migrate"),
+            4 => {
+                assert!(
+                    capped.serve.kv_pressure_events() > 0,
+                    "a per-shard budget near one working set must pressure \
+                     a 3-resident shard"
+                );
+                assert!(
+                    capped.serve.migrations > 0,
+                    "sustained shard pressure with free peers must migrate \
+                     at least one suspended session"
+                );
+                assert!(capped.serve.resumes > 0, "migrated sessions must resume");
+                // per-shard ledgers reconcile with the global counter
+                let inbound: u64 =
+                    capped.serve.shard_stats.iter().map(|s| s.migrations_in).sum();
+                let outbound: u64 =
+                    capped.serve.shard_stats.iter().map(|s| s.migrations_out).sum();
+                assert_eq!(inbound, capped.serve.migrations);
+                assert_eq!(outbound, capped.serve.migrations);
+            }
+            _ => {}
         }
     }
 }
