@@ -1,5 +1,8 @@
 //! L3 coordinator: request routing, the generic parallel-map helper, and the
-//! sharded, memory-pressure-aware batched `serve` scheduler.
+//! sharded, memory-pressure-aware batched `serve` scheduler. This module
+//! holds the *policy* — admission, migration, and round merging; the
+//! *mechanism* (shard state, the plan → decode → commit round pipeline, and
+//! the persistent worker pool) lives in [`runtime`].
 //!
 //! Execution shapes:
 //!
@@ -8,10 +11,12 @@
 //!   utility; the eval path now rides [`serve`] instead so there is a single
 //!   execution engine.
 //! * [`serve`] — continuous batching at simulator scale, sharded
-//!   shard-per-core: [`ServeOptions::shards`] workers each own a
-//!   shared-nothing [`BatchEngine`] (radix cache) holding a
-//!   `capacity_tokens / shards` partition of the *hard* global block budget.
-//!   The scheduler runs deterministic lockstep rounds:
+//!   shard-per-core: [`ServeOptions::shards`] shards each own a
+//!   shared-nothing [`crate::engine::BatchEngine`] (radix cache) holding a
+//!   `capacity_tokens / shards` partition of the *hard* global block budget,
+//!   driven by N **persistent workers** (one per shard, spawned once per
+//!   `serve` call and fed [`runtime::RoundPlan`] messages over mpsc — no
+//!   per-round thread spawning). The scheduler runs deterministic rounds:
 //!
 //!   1. **resume** — each shard retries its preempted sessions (oldest
 //!      admission first), recomputing evicted prefixes through its cache;
@@ -30,33 +35,49 @@
 //!      then shard index — all deterministic units, so routing is
 //!      reproducible for a fixed seed regardless of thread timing), gated on
 //!      each shard's free-block watermark and the global concurrency cap;
-//!   4. **step** — every shard with work runs one engine round (prepare →
-//!      merged-batch commit with LRU-evict-then-preempt pressure handling →
-//!      telemetry) on its own OS thread. Shards are shared-nothing, so the
-//!      rounds are embarrassingly parallel; results merge in shard index
-//!      order, keeping the whole run deterministic.
+//!   4. **plan** — each busy shard builds its [`runtime::RoundPlan`] on its
+//!      own worker (shard-parallel: planning carries the policy allocation,
+//!      the expensive host-side part of a round): finished sessions retire,
+//!      frontiers are pruned (KV release only), and the round's expand
+//!      requests are laid out as plain data — no generator calls; the
+//!      coordinator merges plans and outcomes in shard index order;
+//!   5. **decode + commit** — every planned shard moves to its persistent
+//!      worker, which runs the only generator-touching phase (two-phase
+//!      `submit`/`poll` decode) followed by the reserve → commit KV
+//!      application with LRU-evict-then-preempt pressure handling. Shards
+//!      are shared-nothing, so rounds are embarrassingly parallel; the
+//!      coordinator receives shards back in index order (the round
+//!      barrier), so merging stays deterministic regardless of timing.
 //!
-//!   Each shard round is costed by [`PerfModel::batch_latency`] (including
-//!   resumed sessions' recompute prefill); a global round costs its
-//!   *slowest shard* ([`ServeReport::modeled_seconds`] sums the per-round
-//!   maxima — shards model parallel serving replicas).
+//!   Each shard round is costed by the perf model's
+//!   [`crate::engine::RoundCost`] decomposition — decode vs plan + commit.
+//!   With [`ServeOptions::pipeline`] off the phases serialize (sum); with
+//!   it on, shard *k+1*'s decode overlaps shard *k*'s commit on the modeled
+//!   accelerator timeline and a round costs `max(decode, plan + commit)`.
+//!   A global round costs its *slowest shard*
+//!   ([`ServeReport::modeled_seconds`] sums the per-round maxima — shards
+//!   model parallel serving replicas).
 //!
 //! All shapes are deterministic for a fixed seed, and — because sessions
-//! advance their RNG streams only in `prepare` and commit steps atomically —
-//! *scheduling cannot change search results*: worker count, concurrency,
-//! shard count, preemption, and cross-shard migration all leave every
-//! problem's answer and KV/token accounting identical
-//! (`tests/serve_determinism.rs` pins this for shards ∈ {1, 2, 4} under both
-//! ample and tight capacity).
+//! advance their RNG streams only at decode submit and in commit steps
+//! atomically — *scheduling cannot change search results*: worker count,
+//! concurrency, shard count, preemption, cross-shard migration, and
+//! pipelining on/off all leave every problem's answer and KV/token
+//! accounting identical (`tests/serve_determinism.rs` pins this for
+//! shards ∈ {1, 2, 4} × pipeline {on, off} under both ample and tight
+//! capacity).
 
-use crate::engine::batch::{BatchEngine, DEFAULT_KV_CAPACITY};
-use crate::engine::perfmodel::{BatchStats, PerfModel};
+pub(crate) mod runtime;
+
+use crate::engine::batch::DEFAULT_KV_CAPACITY;
+use crate::engine::perfmodel::PerfModel;
 use crate::kvcache::DEFAULT_BLOCK_SIZE;
 use crate::lm::StepGenerator;
 use crate::reward::RewardModel;
 use crate::search::driver::{SearchOutcome, SearchParams, SearchSession};
 use crate::search::policy::SearchPolicy;
 use crate::workload::ModelProfile;
+use runtime::{Shard, ShardSet, Slot, WorkerPool};
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Mutex;
@@ -149,10 +170,16 @@ pub struct ServeOptions {
     pub capacity_tokens: usize,
     /// Tokens per KV block (paged-allocator page size).
     pub block_size: usize,
-    /// Shard-per-core engines: `shards` workers, each owning a
-    /// shared-nothing radix cache and stepped on its own OS thread.
-    /// 1 (the default) is the single-engine scheduler.
+    /// Shard-per-core engines: `shards` persistent workers, each owning a
+    /// shared-nothing radix cache and stepped on its own long-lived OS
+    /// thread. 1 (the default) is the single-engine scheduler.
     pub shards: usize,
+    /// Pipeline the decode phase: model shard *k+1*'s decode overlapping
+    /// shard *k*'s plan + commit on the accelerator timeline, so a round
+    /// costs `max(decode, plan + commit)` instead of their sum. Purely a
+    /// costing choice — results are byte-identical either way (pinned by
+    /// `tests/serve_determinism.rs`).
+    pub pipeline: bool,
 }
 
 impl Default for ServeOptions {
@@ -162,6 +189,7 @@ impl Default for ServeOptions {
             capacity_tokens: DEFAULT_KV_CAPACITY,
             block_size: DEFAULT_BLOCK_SIZE,
             shards: 1,
+            pipeline: false,
         }
     }
 }
@@ -173,6 +201,11 @@ impl ServeOptions {
 
     pub fn with_shards(concurrency: usize, shards: usize) -> Self {
         Self { concurrency, shards, ..Default::default() }
+    }
+
+    pub fn pipelined(mut self, pipeline: bool) -> Self {
+        self.pipeline = pipeline;
+        self
     }
 }
 
@@ -204,7 +237,15 @@ pub struct BatchRecord {
     pub recompute_tokens: usize,
     /// Sessions preempted during this round's commits.
     pub preemptions: usize,
-    /// Modeled wall-clock of this round ([`PerfModel::batch_latency`]).
+    /// Modeled decode-phase seconds of this round (the generator-bound
+    /// side of the pipeline boundary, incl. backend-injected overhead).
+    pub decode_seconds: f64,
+    /// Modeled plan + commit seconds (recompute prefill + paged KV commit
+    /// writes).
+    pub overhead_seconds: f64,
+    /// Modeled wall-clock of this round: `decode + overhead` in lockstep
+    /// mode, `max(decode, overhead)` when [`ServeOptions::pipeline`] is on
+    /// ([`crate::engine::RoundCost`]).
     pub seconds: f64,
 }
 
@@ -277,6 +318,9 @@ pub struct ServeReport {
     pub total_blocks: usize,
     /// Shard count the run was scheduled with.
     pub shards: usize,
+    /// Whether rounds were costed pipelined (`max(decode, plan + commit)`)
+    /// rather than lockstep (sum).
+    pub pipeline: bool,
     /// Suspended sessions moved across shards under sustained pressure.
     pub migrations: u64,
     /// Per-shard telemetry, indexed by shard.
@@ -299,262 +343,15 @@ impl ServeReport {
     }
 }
 
-/// One admitted problem in the scheduler: its outcome slot and admission
-/// sequence number (lower = admitted earlier = higher priority; preemption
-/// victims are picked from the highest sequence numbers, vLLM-style).
-struct Slot<G, R, P> {
-    id: usize,
-    seq: u64,
-    /// Consecutive failed resume attempts while suspended — the per-session
-    /// sustained-pressure signal the migration policy keys on. Reset on any
-    /// successful resume and on migration (the new shard gets a fresh try).
-    stalled: u32,
-    session: SearchSession<G, R, P>,
-}
-
-/// One shard of the serve scheduler: a shared-nothing engine plus the
-/// sessions resident on it. Cross-shard state (the admission queue, the
-/// migration policy, round merging) lives in [`serve`]; everything here is
-/// touched by at most one thread per round.
-struct Shard<G, R, P> {
-    index: usize,
-    engine: BatchEngine,
-    running: Vec<Slot<G, R, P>>,
-    suspended: Vec<Slot<G, R, P>>,
-    stats: ShardStats,
-}
-
-/// What one shard produced in one round.
-struct RoundResult {
-    record: Option<BatchRecord>,
-    finished: Vec<(usize, SearchOutcome)>,
-    progressed: bool,
-    deferred_commits: u64,
-}
-
-impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
-    fn new(index: usize, n_shards: usize, capacity_tokens: usize, block_size: usize) -> Self {
-        // Disjoint minted-id residue classes per shard keep the "ids are
-        // never reused" invariant fleet-wide, so a migrated session can
-        // never falsely share cache with the target shard's unrelated
-        // problems (see BatchEngine::for_shard).
-        let engine = BatchEngine::for_shard(
-            capacity_tokens,
-            block_size,
-            index as u32,
-            n_shards as u32,
-        );
-        let stats = ShardStats {
-            shard: index,
-            total_blocks: engine.total_blocks(),
-            ..Default::default()
-        };
-        Self { index, engine, running: Vec::new(), suspended: Vec::new(), stats }
-    }
-
-    /// Problems resident on this shard (running + suspended) — the
-    /// deterministic load unit the admission router sorts by.
-    fn resident(&self) -> usize {
-        self.running.len() + self.suspended.len()
-    }
-
-    /// One resume attempt for `slot` on this shard's engine, with a single
-    /// relieve-and-retry on pressure. Returns the recomputed tokens on
-    /// success. The resume protocol lives only here — both the local
-    /// resume pass and the migration path go through it.
-    fn try_resume_slot(&mut self, slot: &mut Slot<G, R, P>) -> Option<usize> {
-        for attempt in 0..2 {
-            match slot.session.try_resume(&mut self.engine) {
-                Ok(recomputed) => {
-                    self.stats.resumes += 1;
-                    return Some(recomputed);
-                }
-                Err(p) => {
-                    if attempt == 0 && self.engine.relieve(&p) > 0 {
-                        continue;
-                    }
-                    break;
-                }
-            }
-        }
-        None
-    }
-
-    /// Round step 1: resume preempted sessions, oldest admission first
-    /// (FIFO — younger sessions never leapfrog a blocked elder). Returns
-    /// tokens recomputed; a failed attempt bumps that session's `stalled`
-    /// counter (the migration trigger), a success clears it.
-    fn resume_pass(&mut self) -> usize {
-        let mut pending = std::mem::take(&mut self.suspended);
-        pending.sort_by_key(|s| s.seq);
-        let mut recompute = 0usize;
-        for mut slot in pending {
-            // self.suspended doubles as the still-suspended list: attempt
-            // resumes only while it is empty (strict FIFO)
-            let resumed = if self.suspended.is_empty() {
-                match self.try_resume_slot(&mut slot) {
-                    Some(recomputed) => {
-                        recompute += recomputed;
-                        true
-                    }
-                    None => {
-                        slot.stalled += 1;
-                        false
-                    }
-                }
-            } else {
-                false
-            };
-            if resumed {
-                slot.stalled = 0;
-                self.running.push(slot);
-            } else {
-                self.suspended.push(slot);
-            }
-        }
-        recompute
-    }
-
-    /// Round steps 3–5 (thread-parallel across shards): finish drained
-    /// sessions, prepare the merged batch, commit it in priority order with
-    /// evict-then-preempt pressure handling, and close the round with
-    /// telemetry + the perf-model cost.
-    fn run_round(
-        &mut self,
-        perf: &PerfModel,
-        model: &ModelProfile,
-        round_recompute: usize,
-    ) -> RoundResult {
-        let mut progressed = false;
-        let mut finished: Vec<(usize, SearchOutcome)> = Vec::new();
-        let mut deferred_commits = 0u64;
-
-        // collect each resident session's next allocation and run the
-        // generator (prepare — no KV charged yet). Sessions with no work
-        // left finish *now* (release-on-complete) so their blocks refill
-        // slots on the next admission pass. Sessions that already hold a
-        // prepared step (deferred or preempted mid-commit) keep it.
-        let mut active: Vec<Slot<G, R, P>> = Vec::new();
-        for mut slot in self.running.drain(..) {
-            if slot.session.has_pending() {
-                active.push(slot);
-                continue;
-            }
-            let requests = slot.session.next_requests(&mut self.engine);
-            if requests.is_empty() {
-                finished.push((slot.id, slot.session.finish(&mut self.engine)));
-                progressed = true;
-            } else {
-                slot.session.prepare(&mut self.engine, &requests);
-                active.push(slot);
-            }
-        }
-        self.running = active;
-
-        // commit the merged batch in priority order; on reservation
-        // failure: evict unpinned branches, then preempt from the tail
-        // (never the committing slot), then defer to the next round
-        self.running.sort_by_key(|s| s.seq);
-        let mut rec = BatchRecord {
-            shard: self.index,
-            recompute_tokens: round_recompute,
-            ..Default::default()
-        };
-        let mut i = 0usize;
-        while i < self.running.len() {
-            let n_requests = self.running[i].session.pending_requests();
-            let committed = loop {
-                match self.running[i].session.try_commit(&mut self.engine) {
-                    Ok(m) => break Some(m),
-                    Err(p) => {
-                        // first remedy: reclaim unpinned branches (LRU),
-                        // evicting only the deficit so other suspended
-                        // sessions keep as much warm KV as possible
-                        if self.engine.relieve(&p) > 0 {
-                            continue;
-                        }
-                        // second remedy: preempt the lowest-priority
-                        // not-yet-committed session (sorted tail)
-                        if self.running.len() > i + 1 {
-                            let mut victim = self.running.pop().expect("len > i + 1");
-                            victim.session.suspend(&mut self.engine);
-                            self.stats.preemptions += 1;
-                            rec.preemptions += 1;
-                            self.suspended.push(victim);
-                            continue;
-                        }
-                        break None; // defer this step to the next round
-                    }
-                }
-            };
-            match committed {
-                Some(m) => {
-                    rec.problems += 1;
-                    rec.requests += n_requests;
-                    rec.model_calls += m.model_calls;
-                    rec.new_tokens += m.new_tokens;
-                    rec.pinned_kv_tokens += m.live_kv_tokens;
-                    rec.unshared_kv_tokens += m.unshared_kv_tokens;
-                    progressed = true;
-                    i += 1;
-                }
-                None => {
-                    // everything evictable is gone and no lower-priority
-                    // victim remains; later slots need even more room
-                    deferred_commits += 1;
-                    break;
-                }
-            }
-        }
-
-        // close the round: telemetry, hard-budget assertion, perf cost
-        rec.resident_kv_tokens = self.engine.live_tokens();
-        self.stats.peak_resident_kv_tokens =
-            self.stats.peak_resident_kv_tokens.max(rec.resident_kv_tokens);
-        self.stats.peak_used_blocks =
-            self.stats.peak_used_blocks.max(self.engine.used_blocks());
-        debug_assert!(
-            self.engine.used_blocks() <= self.engine.total_blocks(),
-            "shard {} exceeded the hard block budget: {} > {}",
-            self.index,
-            self.engine.used_blocks(),
-            self.engine.total_blocks()
-        );
-        let record = if rec.problems > 0 || rec.recompute_tokens > 0 {
-            // decode reads only what the committed sessions pin; wave
-            // fragmentation is driven by physical occupancy (which, under
-            // lazy suspend, may include warm suspended working sets)
-            let (read, resident) = if perf.shared_kv {
-                (rec.pinned_kv_tokens, rec.resident_kv_tokens)
-            } else {
-                (rec.unshared_kv_tokens, rec.unshared_kv_tokens)
-            };
-            let stats = BatchStats {
-                model_calls: rec.model_calls,
-                new_tokens: rec.new_tokens,
-                read_kv_tokens: read,
-                resident_kv_tokens: resident,
-                recompute_prefill_tokens: rec.recompute_tokens,
-                block_size: self.engine.block_size(),
-            };
-            rec.seconds = perf.batch_latency(&stats, model).seconds;
-            self.stats.busy_seconds += rec.seconds;
-            self.stats.recompute_tokens += rec.recompute_tokens as u64;
-            Some(rec)
-        } else {
-            None
-        };
-        RoundResult { record, finished, progressed, deferred_commits }
-    }
-}
-
 /// Serve `jobs` through `opts.shards` shared-nothing engines with
 /// continuous batching under a hard, partitioned KV block budget: at most
 /// `opts.concurrency` searches are admitted at a time across all shards, a
 /// deterministic router assigns each to the least-loaded shard, each global
-/// round advances every shard's resident sessions by one step (shards on
-/// parallel OS threads, one merged batch per shard), and finished searches
-/// hand their slot to the next queued job mid-flight.
+/// round advances every shard's resident sessions by one step — each busy
+/// shard *plans* its round on its persistent worker (no generator calls),
+/// then runs the decode and commit phases there (one merged batch per
+/// shard), with the coordinator merging at both phase boundaries — and
+/// finished searches hand their slot to the next queued job mid-flight.
 ///
 /// Memory pressure is handled in escalating order per shard: (1) admission
 /// is gated on a free-block watermark, (2) a failed step reservation
@@ -563,10 +360,10 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
 /// resumed later by recomputing the evicted prefix. Under *sustained*
 /// pressure ([`MIGRATION_PATIENCE`]), a stuck suspended session migrates to
 /// the shard with the most reclaimable headroom instead of thrashing
-/// preempt/resume locally. Because a session's RNG advances only in
-/// prepare/commit (both atomic w.r.t. preemption and migration), neither
-/// the schedule, the shard count, nor any migration can change search
-/// results.
+/// preempt/resume locally. Because a session's RNG advances only at decode
+/// submit and in commit (both atomic w.r.t. preemption and migration),
+/// neither the schedule, the shard count, pipelining, nor any migration can
+/// change search results.
 ///
 /// Panics when even a single session cannot advance alone at the per-shard
 /// budget — the partitioned capacity is below one problem's working set.
@@ -586,260 +383,270 @@ where
     let n_shards = opts.shards.max(1);
     let per_shard_capacity = (opts.capacity_tokens / n_shards).max(opts.block_size);
     let n = jobs.len();
-    let mut shards: Vec<Shard<G, R, P>> = (0..n_shards)
-        .map(|index| Shard::new(index, n_shards, per_shard_capacity, opts.block_size))
-        .collect();
-    let mut queue: VecDeque<(usize, ServeJob<G, R, P>)> =
-        jobs.into_iter().enumerate().collect();
-    let mut outcomes: Vec<Option<SearchOutcome>> = (0..n).map(|_| None).collect();
-    let mut batches: Vec<BatchRecord> = Vec::new();
-    let mut peak = 0usize;
-    let mut max_concurrent = 0usize;
-    let mut peak_step_concurrency = 0usize;
-    let mut modeled_seconds = 0.0f64;
-    let mut admit_seq = 0u64;
-    let mut migrations = 0u64;
-    let mut admission_blocked_rounds = 0u64;
-    let mut deferred_commits = 0u64;
-    // Livelock guard: rounds that neither commit, finish, nor admit make no
-    // real progress (a resume or migration alone does not count — resume →
-    // preempt can thrash); several in a row means the per-shard budget is
-    // below one working set.
-    let mut stalled_rounds = 0u32;
+    std::thread::scope(|scope| {
+        let mut set: ShardSet<G, R, P> = ShardSet::new(
+            (0..n_shards)
+                .map(|index| Shard::new(index, n_shards, per_shard_capacity, opts.block_size))
+                .collect(),
+        );
+        // N persistent workers, spawned once for the whole serve call and
+        // driven by RoundPlan messages (a single shard runs its rounds
+        // inline — there is nothing to overlap with).
+        let pool: Option<WorkerPool<G, R, P>> = if n_shards > 1 {
+            Some(WorkerPool::spawn(scope, n_shards, perf, model, opts.pipeline))
+        } else {
+            None
+        };
+        let mut queue: VecDeque<(usize, ServeJob<G, R, P>)> =
+            jobs.into_iter().enumerate().collect();
+        let mut outcomes: Vec<Option<SearchOutcome>> = (0..n).map(|_| None).collect();
+        let mut batches: Vec<BatchRecord> = Vec::new();
+        let mut peak = 0usize;
+        let mut max_concurrent = 0usize;
+        let mut peak_step_concurrency = 0usize;
+        let mut modeled_seconds = 0.0f64;
+        let mut admit_seq = 0u64;
+        let mut migrations = 0u64;
+        let mut admission_blocked_rounds = 0u64;
+        let mut deferred_commits = 0u64;
+        // Livelock guard: rounds that neither commit, finish, nor admit make
+        // no real progress (a resume or migration alone does not count —
+        // resume → preempt can thrash); several in a row means the per-shard
+        // budget is below one working set.
+        let mut stalled_rounds = 0u32;
 
-    loop {
-        let mut progressed = false;
-        let mut round_recompute = vec![0usize; n_shards];
-
-        // 1. per-shard resume pass, serial in shard index order (cheap:
-        //    cache bookkeeping only, no generator calls)
-        for shard in shards.iter_mut() {
-            round_recompute[shard.index] = shard.resume_pass();
-        }
-
-        // 2. cross-shard migration: a session whose resume failed
-        //    MIGRATION_PATIENCE times in a row (sustained pressure) is
-        //    handed to the best peer that can actually cover its worst-case
-        //    resume reservation — peers ranked by (no suspended backlog of
-        //    their own, reclaimable headroom, index), every viable one
-        //    considered. The move is a plain ownership transfer — a
-        //    suspended ledger holds no cache node indices — and the resume
-        //    recomputes the prefix through the target cache, charged to the
-        //    target's round recompute.
-        if n_shards > 1 {
-            for src in 0..n_shards {
-                let stuck = shards[src]
-                    .suspended
-                    .first()
-                    .map_or(false, |s| s.stalled >= MIGRATION_PATIENCE);
-                if !stuck {
-                    continue;
-                }
-                let mut candidates: Vec<usize> =
-                    (0..n_shards).filter(|&d| d != src).collect();
-                candidates.sort_by_key(|&d| {
-                    let sig = shards[d].engine.pressure();
-                    (
-                        !shards[d].suspended.is_empty(), // unloaded peers first
-                        std::cmp::Reverse(sig.free_blocks + sig.evictable_blocks),
-                        d,
-                    )
-                });
-                // the migrant's working-set sequences are engine-independent:
-                // build them once, size every candidate against them
-                let seqs = shards[src].suspended[0].session.suspended_sequences();
-                let dst = candidates.into_iter().find(|&d| {
-                    let need = shards[src].suspended[0]
-                        .session
-                        .resume_need_blocks_with(&shards[d].engine, &seqs);
-                    let sig = shards[d].engine.pressure();
-                    sig.free_blocks + sig.evictable_blocks >= need
-                });
-                let Some(dst) = dst else {
-                    continue; // genuinely no shard can host it — retry locally
-                };
-                let mut slot = shards[src].suspended.remove(0);
-                slot.stalled = 0; // fresh patience on the new shard
-                shards[src].stats.migrations_out += 1;
-                let dst_shard = &mut shards[dst];
-                dst_shard.stats.migrations_in += 1;
-                match dst_shard.try_resume_slot(&mut slot) {
-                    Some(recomputed) => {
-                        round_recompute[dst] += recomputed;
-                        dst_shard.running.push(slot);
-                    }
-                    None => dst_shard.suspended.push(slot),
-                }
-                migrations += 1;
-            }
-        }
-
-        // 3. deterministic global admission: route each queued job to the
-        //    least-loaded shard — (resident sessions, admissions so far,
-        //    shard index), all deterministic units — skipping shards whose
-        //    free-block watermark leaves no headroom. Continuous batching:
-        //    finished slots refill mid-flight.
         loop {
-            let resident_total: usize = shards.iter().map(|s| s.resident()).sum();
-            if resident_total >= concurrency {
-                break;
+            let mut progressed = false;
+            let mut round_recompute = vec![0usize; n_shards];
+
+            // 1. per-shard resume pass, serial in shard index order (cheap:
+            //    cache bookkeeping only, no generator calls)
+            for shard in set.iter_mut() {
+                round_recompute[shard.index] = shard.resume_pass();
             }
-            let prompt = match queue.front() {
-                Some((_, job)) => job.lm.prompt_tokens(),
-                None => break,
-            };
-            let mut order: Vec<usize> = (0..n_shards).collect();
-            order.sort_by_key(|&s| (shards[s].resident(), shards[s].stats.admitted, s));
-            let mut target: Option<usize> = None;
-            for &s in &order {
-                if shards[s].engine.can_admit(prompt) {
-                    target = Some(s);
+
+            // 2. cross-shard migration: a session whose resume failed
+            //    MIGRATION_PATIENCE times in a row (sustained pressure) is
+            //    handed to the best peer that can actually cover its
+            //    worst-case resume reservation — peers ranked by (no
+            //    suspended backlog of their own, reclaimable headroom,
+            //    index), every viable one considered. The move is a plain
+            //    ownership transfer — a suspended ledger holds no cache node
+            //    indices — and the resume recomputes the prefix through the
+            //    target cache, charged to the target's round recompute.
+            if n_shards > 1 {
+                for src in 0..n_shards {
+                    let stuck = set
+                        .get(src)
+                        .suspended
+                        .first()
+                        .map_or(false, |s| s.stalled >= MIGRATION_PATIENCE);
+                    if !stuck {
+                        continue;
+                    }
+                    let mut candidates: Vec<usize> =
+                        (0..n_shards).filter(|&d| d != src).collect();
+                    candidates.sort_by_key(|&d| {
+                        let sig = set.get(d).engine.pressure();
+                        (
+                            !set.get(d).suspended.is_empty(), // unloaded peers first
+                            std::cmp::Reverse(sig.free_blocks + sig.evictable_blocks),
+                            d,
+                        )
+                    });
+                    // the migrant's working-set sequences are engine-
+                    // independent: build them once, size every candidate
+                    // against them
+                    let seqs = set.get(src).suspended[0].session.suspended_sequences();
+                    let dst = candidates.into_iter().find(|&d| {
+                        let migrant = &set.get(src).suspended[0].session;
+                        let need = migrant.resume_need_blocks_with(&set.get(d).engine, &seqs);
+                        let sig = set.get(d).engine.pressure();
+                        sig.free_blocks + sig.evictable_blocks >= need
+                    });
+                    let Some(dst) = dst else {
+                        continue; // genuinely no shard can host it — retry locally
+                    };
+                    let mut slot = set.get_mut(src).suspended.remove(0);
+                    slot.stalled = 0; // fresh patience on the new shard
+                    set.get_mut(src).stats.migrations_out += 1;
+                    let dst_shard = set.get_mut(dst);
+                    dst_shard.stats.migrations_in += 1;
+                    match dst_shard.try_resume_slot(&mut slot) {
+                        Some(recomputed) => {
+                            round_recompute[dst] += recomputed;
+                            dst_shard.running.push(slot);
+                        }
+                        None => dst_shard.suspended.push(slot),
+                    }
+                    migrations += 1;
+                }
+            }
+
+            // 3. deterministic global admission: route each queued job to
+            //    the least-loaded shard — (resident sessions, admissions so
+            //    far, shard index), all deterministic units — skipping
+            //    shards whose free-block watermark leaves no headroom.
+            //    Continuous batching: finished slots refill mid-flight.
+            loop {
+                let resident_total: usize = set.iter().map(|s| s.resident()).sum();
+                if resident_total >= concurrency {
                     break;
                 }
-                // Second chance for an *empty* shard sitting on reclaimable
-                // memory: warm KV orphaned by sessions that migrated away
-                // serves nobody once nothing is resident, but still counts
-                // against the free-block watermark — flush it so the
-                // shard's partition of the budget cannot stay blocked for
-                // the rest of the run. (A shard with resident sessions
-                // keeps its warm KV: its own commit/resume pressure paths
-                // reclaim lazily, and on a single shard resident == 0
-                // implies an empty cache, so behavior there is unchanged.)
-                if shards[s].resident() == 0
-                    && shards[s].engine.pressure().evictable_blocks > 0
-                {
-                    shards[s].engine.relieve_pressure(usize::MAX);
-                    if shards[s].engine.can_admit(prompt) {
+                let prompt = match queue.front() {
+                    Some((_, job)) => job.lm.prompt_tokens(),
+                    None => break,
+                };
+                let mut order: Vec<usize> = (0..n_shards).collect();
+                order.sort_by_key(|&s| (set.get(s).resident(), set.get(s).stats.admitted, s));
+                let mut target: Option<usize> = None;
+                for &s in &order {
+                    if set.get(s).engine.can_admit(prompt) {
                         target = Some(s);
                         break;
                     }
-                }
-            }
-            let Some(target) = target else {
-                admission_blocked_rounds += 1;
-                break;
-            };
-            let (id, job) = queue.pop_front().expect("front checked above");
-            let session =
-                SearchSession::new(&mut shards[target].engine, job.lm, job.prm, job.policy, params);
-            shards[target].running.push(Slot { id, seq: admit_seq, stalled: 0, session });
-            shards[target].stats.admitted += 1;
-            admit_seq += 1;
-            progressed = true;
-        }
-        let total_resident: usize = shards.iter().map(|s| s.resident()).sum();
-        if total_resident == 0 && queue.is_empty() {
-            break;
-        }
-        max_concurrent = max_concurrent.max(total_resident);
-
-        // 4. run every shard that has work on its own thread (shared-
-        //    nothing, so embarrassingly parallel); merge in shard index
-        //    order so the run stays deterministic regardless of timing
-        let work: Vec<usize> = shards
-            .iter()
-            .enumerate()
-            .filter(|(i, s)| !s.running.is_empty() || round_recompute[*i] > 0)
-            .map(|(i, _)| i)
-            .collect();
-        let mut results: Vec<(usize, RoundResult)> = Vec::new();
-        if work.len() <= 1 {
-            for &i in &work {
-                let r = shards[i].run_round(perf, model, round_recompute[i]);
-                results.push((i, r));
-            }
-        } else {
-            let collected: Mutex<Vec<(usize, RoundResult)>> = Mutex::new(Vec::new());
-            std::thread::scope(|scope| {
-                for (i, shard) in shards.iter_mut().enumerate() {
-                    if !work.contains(&i) {
-                        continue;
+                    // Second chance for an *empty* shard sitting on
+                    // reclaimable memory: warm KV orphaned by sessions that
+                    // migrated away serves nobody once nothing is resident,
+                    // but still counts against the free-block watermark —
+                    // flush it so the shard's partition of the budget cannot
+                    // stay blocked for the rest of the run. (A shard with
+                    // resident sessions keeps its warm KV: its own
+                    // commit/resume pressure paths reclaim lazily, and on a
+                    // single shard resident == 0 implies an empty cache, so
+                    // behavior there is unchanged.)
+                    if set.get(s).resident() == 0
+                        && set.get(s).engine.pressure().evictable_blocks > 0
+                    {
+                        set.get_mut(s).engine.relieve_pressure(usize::MAX);
+                        if set.get(s).engine.can_admit(prompt) {
+                            target = Some(s);
+                            break;
+                        }
                     }
-                    let recompute = round_recompute[i];
-                    let collected = &collected;
-                    scope.spawn(move || {
-                        let r = shard.run_round(perf, model, recompute);
-                        collected.lock().unwrap().push((i, r));
-                    });
                 }
-            });
-            results = collected.into_inner().expect("shard thread panicked");
-            results.sort_by_key(|&(i, _)| i);
-        }
-
-        // 5. merge the round: outcomes, telemetry, and the round's modeled
-        //    cost — its slowest shard (shards are parallel replicas)
-        let mut round_seconds = 0.0f64;
-        let mut round_step_problems = 0usize;
-        for (_, result) in results {
-            for (id, outcome) in result.finished {
-                outcomes[id] = Some(outcome);
+                let Some(target) = target else {
+                    admission_blocked_rounds += 1;
+                    break;
+                };
+                let (id, job) = queue.pop_front().expect("front checked above");
+                let session = SearchSession::new(
+                    &mut set.get_mut(target).engine,
+                    job.lm,
+                    job.prm,
+                    job.policy,
+                    params,
+                );
+                set.get_mut(target).running.push(Slot { id, seq: admit_seq, stalled: 0, session });
+                set.get_mut(target).stats.admitted += 1;
+                admit_seq += 1;
+                progressed = true;
             }
-            progressed |= result.progressed;
-            deferred_commits += result.deferred_commits;
-            if let Some(rec) = result.record {
-                round_seconds = round_seconds.max(rec.seconds);
-                round_step_problems += rec.problems;
-                batches.push(rec);
+            let total_resident: usize = set.iter().map(|s| s.resident()).sum();
+            if total_resident == 0 && queue.is_empty() {
+                break;
+            }
+            max_concurrent = max_concurrent.max(total_resident);
+
+            // 4. plan every busy shard's round on its worker (frontier
+            //    pruning + policy allocation + expand-request build — no
+            //    generator calls, no KV charge), shard-parallel; the
+            //    coordinator merges the plans and finished outcomes
+            let planned = runtime::plan_rounds(&mut set, pool.as_ref(), &round_recompute);
+            let mut plans: Vec<Option<runtime::RoundPlan>> = Vec::with_capacity(n_shards);
+            for p in planned {
+                let Some(p) = p else {
+                    plans.push(None);
+                    continue;
+                };
+                for (id, outcome) in p.finished {
+                    outcomes[id] = Some(outcome);
+                }
+                progressed |= p.progressed;
+                plans.push(Some(p.plan));
+            }
+
+            // 5. decode + commit on the persistent workers (inline for a
+            //    single shard); results come back in pre-sized per-shard
+            //    slots, in index order — the round barrier
+            let results =
+                runtime::execute_round(&mut set, pool.as_ref(), plans, perf, model, opts.pipeline);
+
+            // 6. merge the round: telemetry and the round's modeled cost —
+            //    its slowest shard (shards are parallel replicas)
+            let mut round_seconds = 0.0f64;
+            let mut round_step_problems = 0usize;
+            for result in results.into_iter().flatten() {
+                progressed |= result.progressed;
+                deferred_commits += result.deferred_commits;
+                if let Some(rec) = result.record {
+                    round_seconds = round_seconds.max(rec.seconds);
+                    round_step_problems += rec.problems;
+                    batches.push(rec);
+                }
+            }
+            modeled_seconds += round_seconds;
+            peak_step_concurrency = peak_step_concurrency.max(round_step_problems);
+            peak = peak.max(set.iter().map(|s| s.engine.live_tokens()).sum());
+
+            if progressed {
+                stalled_rounds = 0;
+            } else {
+                stalled_rounds += 1;
+                assert!(
+                    stalled_rounds < 4,
+                    "serve stalled: per-shard KV capacity ({} blocks x {} tokens, {} shard(s)) \
+                     is below a single problem's working set",
+                    set.get(0).engine.total_blocks(),
+                    set.get(0).engine.block_size(),
+                    n_shards
+                );
             }
         }
-        modeled_seconds += round_seconds;
-        peak_step_concurrency = peak_step_concurrency.max(round_step_problems);
-        peak = peak.max(shards.iter().map(|s| s.engine.live_tokens()).sum());
+        // retire the worker pool before folding the report (the enclosing
+        // scope joins the exited workers)
+        drop(pool);
 
-        if progressed {
-            stalled_rounds = 0;
-        } else {
-            stalled_rounds += 1;
-            assert!(
-                stalled_rounds < 4,
-                "serve stalled: per-shard KV capacity ({} blocks x {} tokens, {} shard(s)) \
-                 is below a single problem's working set",
-                shards[0].engine.total_blocks(),
-                shards[0].engine.block_size(),
-                n_shards
+        for shard in set.iter_mut() {
+            // flush warm KV orphaned by sessions that migrated away (lazy
+            // suspend leaves it cached) so the all-pins-released invariant
+            // is meaningful per shard
+            shard.engine.relieve_pressure(usize::MAX);
+            debug_assert_eq!(
+                shard.engine.live_tokens(),
+                0,
+                "shard {} left pinned KV behind",
+                shard.index
             );
         }
-    }
-
-    for shard in shards.iter_mut() {
-        // flush warm KV orphaned by sessions that migrated away (lazy
-        // suspend leaves it cached) so the all-pins-released invariant is
-        // meaningful per shard
-        shard.engine.relieve_pressure(usize::MAX);
-        debug_assert_eq!(
-            shard.engine.live_tokens(),
-            0,
-            "shard {} left pinned KV behind",
-            shard.index
-        );
-    }
-    let preemptions: u64 = shards.iter().map(|s| s.stats.preemptions).sum();
-    let resumes: u64 = shards.iter().map(|s| s.stats.resumes).sum();
-    let recompute_tokens: u64 = shards.iter().map(|s| s.stats.recompute_tokens).sum();
-    let peak_used_blocks: usize = shards.iter().map(|s| s.stats.peak_used_blocks).sum();
-    let total_blocks: usize = shards.iter().map(|s| s.engine.total_blocks()).sum();
-    ServeReport {
-        outcomes: outcomes
-            .into_iter()
-            .map(|o| o.expect("every job produces an outcome"))
-            .collect(),
-        batches,
-        modeled_seconds,
-        peak_resident_kv_tokens: peak,
-        max_concurrent,
-        peak_step_concurrency,
-        preemptions,
-        resumes,
-        recompute_tokens,
-        admission_blocked_rounds,
-        deferred_commits,
-        peak_used_blocks,
-        total_blocks,
-        shards: n_shards,
-        migrations,
-        shard_stats: shards.into_iter().map(|s| s.stats).collect(),
-    }
+        let preemptions: u64 = set.iter().map(|s| s.stats.preemptions).sum();
+        let resumes: u64 = set.iter().map(|s| s.stats.resumes).sum();
+        let recompute_tokens: u64 = set.iter().map(|s| s.stats.recompute_tokens).sum();
+        let peak_used_blocks: usize = set.iter().map(|s| s.stats.peak_used_blocks).sum();
+        let total_blocks: usize = set.iter().map(|s| s.engine.total_blocks()).sum();
+        ServeReport {
+            outcomes: outcomes
+                .into_iter()
+                .map(|o| o.expect("every job produces an outcome"))
+                .collect(),
+            batches,
+            modeled_seconds,
+            peak_resident_kv_tokens: peak,
+            max_concurrent,
+            peak_step_concurrency,
+            preemptions,
+            resumes,
+            recompute_tokens,
+            admission_blocked_rounds,
+            deferred_commits,
+            peak_used_blocks,
+            total_blocks,
+            shards: n_shards,
+            pipeline: opts.pipeline,
+            migrations,
+            shard_stats: set.into_inner().into_iter().map(|s| s.stats).collect(),
+        }
+    })
 }
 
 /// Aggregated coordinator statistics.
@@ -974,6 +781,35 @@ mod tests {
     }
 
     #[test]
+    fn pipelining_changes_cost_but_never_results() {
+        let params = SearchParams { width: 8, max_steps: 16 };
+        let perf = PerfModel::new(H100_NVL, true, 4);
+        let run = |pipeline: bool| {
+            let opts = ServeOptions::with_shards(4, 2).pipelined(pipeline);
+            serve(jobs(6, 7), &params, &opts, &perf, &LLEMMA_34B_SIM)
+        };
+        let lockstep = run(false);
+        let pipelined = run(true);
+        assert!(!lockstep.pipeline);
+        assert!(pipelined.pipeline);
+        assert_eq!(
+            fingerprints(&lockstep),
+            fingerprints(&pipelined),
+            "pipelining changed search results"
+        );
+        // same rounds, same phase decomposition — only the fold differs
+        assert_eq!(lockstep.batches.len(), pipelined.batches.len());
+        for (l, p) in lockstep.batches.iter().zip(&pipelined.batches) {
+            assert_eq!(l.decode_seconds, p.decode_seconds);
+            assert_eq!(l.overhead_seconds, p.overhead_seconds);
+            assert_eq!(l.seconds, l.decode_seconds + l.overhead_seconds);
+            assert_eq!(p.seconds, p.decode_seconds.max(p.overhead_seconds));
+        }
+        assert!(pipelined.modeled_seconds <= lockstep.modeled_seconds);
+        assert!(pipelined.modeled_seconds > 0.0);
+    }
+
+    #[test]
     fn serve_matches_run_search_per_problem() {
         // The batched path must report exactly what a solo run reports: the
         // cache views are per-ledger, so co-scheduling changes nothing.
@@ -1026,7 +862,7 @@ mod tests {
             concurrency: 6,
             capacity_tokens: 2 * solo_peak + 4096,
             block_size: 16,
-            shards: 1,
+            ..Default::default()
         };
         let capped = serve(jobs(6, 42), &params, &tight, &perf, &LLEMMA_34B_SIM);
         assert_eq!(
@@ -1072,7 +908,7 @@ mod tests {
             concurrency: 2,
             capacity_tokens: 512,
             block_size: 16,
-            shards: 1,
+            ..Default::default()
         };
         let _ = serve(jobs(2, 3), &params, &opts, &perf, &LLEMMA_34B_SIM);
     }

@@ -1,0 +1,629 @@
+//! The persistent worker runtime behind [`super::serve`]: shard state, the
+//! three-phase round pipeline, and the long-lived worker pool.
+//!
+//! A serve round used to be one opaque `run_round` call per shard that
+//! interleaved scheduling, generator calls, and KV commits. It is now three
+//! phases with a serializable boundary between them:
+//!
+//! 1. **plan** ([`Shard::plan_round`], parallel on the shard's worker) —
+//!    retire finished sessions, prune frontiers (KV *release* only — plan
+//!    never allocates), and build the round's [`RoundPlan`]: plain
+//!    expand-request data, no generator calls. Planning includes the
+//!    policy's allocation (for ETS: embedding + clustering + the ILP
+//!    solve — the dominant host-side cost per `micro_substrates`), so it
+//!    runs shard-parallel exactly like decode and commit; the coordinator
+//!    only merges the resulting plans and finished outcomes.
+//! 2. **decode** ([`Shard::decode`], worker thread) — the *only* phase that
+//!    touches the [`StepGenerator`]: every planned session's batch is
+//!    submitted through the two-phase `submit_batch`/`poll_batch` surface
+//!    (all submits first, then all polls, so a pipelined backend keeps
+//!    several decodes in flight), and the backend's modeled decode-overhead
+//!    hint is folded into the round telemetry.
+//! 3. **commit** ([`Shard::commit_round`], worker thread) — the reserve →
+//!    commit KV application in admission-priority order with the
+//!    evict → preempt → defer pressure ladder, closed out by the perf
+//!    model's [`crate::engine::RoundCost`] decode/overhead decomposition.
+//!
+//! Workers are **persistent**: [`WorkerPool::spawn`] starts one per shard
+//! when a `serve` call begins, and each round the coordinator *moves* a
+//! shard to its worker over an mpsc channel twice — once to plan (getting
+//! back the shard plus its [`RoundPlan`]) and once, [`RoundPlan`] message
+//! in hand, to decode + commit (getting back the shard plus a
+//! [`RoundResult`]). The in-shard-index-order receive loop after each
+//! dispatch is the round barrier, and because every reply lands in its own
+//! pre-sized slot there is no lock and no post-hoc sort — merge order is
+//! deterministic by construction, so results are byte-identical to the
+//! single-threaded schedule for any worker count, pipelined or not.
+
+use super::{BatchRecord, ShardStats};
+use crate::engine::batch::{BatchEngine, ExpandRequest};
+use crate::engine::perfmodel::{BatchStats, PerfModel};
+use crate::lm::StepGenerator;
+use crate::reward::RewardModel;
+use crate::search::driver::{SearchOutcome, SearchSession};
+use crate::search::policy::SearchPolicy;
+use crate::workload::ModelProfile;
+use std::sync::mpsc;
+use std::thread;
+
+/// One admitted problem in the scheduler: its outcome slot and admission
+/// sequence number (lower = admitted earlier = higher priority; preemption
+/// victims are picked from the highest sequence numbers, vLLM-style).
+pub(crate) struct Slot<G, R, P> {
+    pub(crate) id: usize,
+    pub(crate) seq: u64,
+    /// Consecutive failed resume attempts while suspended — the per-session
+    /// sustained-pressure signal the migration policy keys on. Reset on any
+    /// successful resume and on migration (the new shard gets a fresh try).
+    pub(crate) stalled: u32,
+    pub(crate) session: SearchSession<G, R, P>,
+}
+
+/// One shard of the serve scheduler: a shared-nothing engine plus the
+/// sessions resident on it. Cross-shard state (the admission queue, the
+/// migration policy, round merging) lives in [`super::serve`]; everything
+/// here is touched by at most one thread per round.
+pub(crate) struct Shard<G, R, P> {
+    pub(crate) index: usize,
+    pub(crate) engine: BatchEngine,
+    pub(crate) running: Vec<Slot<G, R, P>>,
+    pub(crate) suspended: Vec<Slot<G, R, P>>,
+    pub(crate) stats: ShardStats,
+}
+
+/// The serializable plan → decode/commit boundary: one shard round's expand
+/// work as plain data. Built by [`Shard::plan_round`] (no generator calls,
+/// no KV allocation); handed back to the coordinator, which drives the
+/// worker's decode + commit phases with it.
+#[derive(Clone, Debug)]
+pub(crate) struct RoundPlan {
+    /// Shard (and worker) this plan belongs to.
+    pub(crate) shard: usize,
+    /// Expand requests per running slot, parallel to `Shard::running` at
+    /// plan time. An empty entry marks a slot that already holds a prepared
+    /// step (deferred or preempted mid-commit) and only needs recommit.
+    pub(crate) expands: Vec<Vec<ExpandRequest>>,
+    /// Tokens recomputed by this shard's resume pass (and migrated-in
+    /// resumes) ahead of this round — charged to the round's commit cost.
+    pub(crate) recompute_tokens: usize,
+}
+
+/// What [`Shard::plan_round`] produced: the plan plus the outcomes of
+/// sessions that finished during planning (merged into the report by the
+/// coordinator; they take no part in decode or commit).
+pub(crate) struct PlannedRound {
+    pub(crate) plan: RoundPlan,
+    pub(crate) finished: Vec<(usize, SearchOutcome)>,
+    /// Finishing a session is real progress (the livelock guard counts it).
+    pub(crate) progressed: bool,
+}
+
+/// What one shard produced in one decode + commit execution.
+pub(crate) struct RoundResult {
+    pub(crate) record: Option<BatchRecord>,
+    pub(crate) progressed: bool,
+    pub(crate) deferred_commits: u64,
+}
+
+impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
+    pub(crate) fn new(
+        index: usize,
+        n_shards: usize,
+        capacity_tokens: usize,
+        block_size: usize,
+    ) -> Self {
+        // Disjoint minted-id residue classes per shard keep the "ids are
+        // never reused" invariant fleet-wide, so a migrated session can
+        // never falsely share cache with the target shard's unrelated
+        // problems (see BatchEngine::for_shard).
+        let engine = BatchEngine::for_shard(
+            capacity_tokens,
+            block_size,
+            index as u32,
+            n_shards as u32,
+        );
+        let stats = ShardStats {
+            shard: index,
+            total_blocks: engine.total_blocks(),
+            ..Default::default()
+        };
+        Self { index, engine, running: Vec::new(), suspended: Vec::new(), stats }
+    }
+
+    /// Problems resident on this shard (running + suspended) — the
+    /// deterministic load unit the admission router sorts by.
+    pub(crate) fn resident(&self) -> usize {
+        self.running.len() + self.suspended.len()
+    }
+
+    /// One resume attempt for `slot` on this shard's engine, with a single
+    /// relieve-and-retry on pressure. Returns the recomputed tokens on
+    /// success. The resume protocol lives only here — both the local
+    /// resume pass and the migration path go through it.
+    pub(crate) fn try_resume_slot(&mut self, slot: &mut Slot<G, R, P>) -> Option<usize> {
+        for attempt in 0..2 {
+            match slot.session.try_resume(&mut self.engine) {
+                Ok(recomputed) => {
+                    self.stats.resumes += 1;
+                    return Some(recomputed);
+                }
+                Err(p) => {
+                    if attempt == 0 && self.engine.relieve(&p) > 0 {
+                        continue;
+                    }
+                    break;
+                }
+            }
+        }
+        None
+    }
+
+    /// Round step 1: resume preempted sessions, oldest admission first
+    /// (FIFO — younger sessions never leapfrog a blocked elder). Returns
+    /// tokens recomputed; a failed attempt bumps that session's `stalled`
+    /// counter (the migration trigger), a success clears it.
+    pub(crate) fn resume_pass(&mut self) -> usize {
+        let mut pending = std::mem::take(&mut self.suspended);
+        pending.sort_by_key(|s| s.seq);
+        let mut recompute = 0usize;
+        for mut slot in pending {
+            // self.suspended doubles as the still-suspended list: attempt
+            // resumes only while it is empty (strict FIFO)
+            let resumed = if self.suspended.is_empty() {
+                match self.try_resume_slot(&mut slot) {
+                    Some(recomputed) => {
+                        recompute += recomputed;
+                        true
+                    }
+                    None => {
+                        slot.stalled += 1;
+                        false
+                    }
+                }
+            } else {
+                false
+            };
+            if resumed {
+                slot.stalled = 0;
+                self.running.push(slot);
+            } else {
+                self.suspended.push(slot);
+            }
+        }
+        recompute
+    }
+
+    /// Phase 1 (worker thread, shard-parallel): finish drained sessions and
+    /// build the round's expand plan — including the policy's allocation,
+    /// the expensive host-side part of a round. Prunes retired trajectories
+    /// — releasing their KV — but never calls the generator and never
+    /// *allocates* KV: everything the execute phase needs is in the
+    /// returned [`RoundPlan`]'s plain data.
+    pub(crate) fn plan_round(&mut self, recompute_tokens: usize) -> PlannedRound {
+        let mut finished: Vec<(usize, SearchOutcome)> = Vec::new();
+        let mut progressed = false;
+        let mut active: Vec<Slot<G, R, P>> = Vec::new();
+        let mut expands: Vec<Vec<ExpandRequest>> = Vec::new();
+        for mut slot in self.running.drain(..) {
+            if slot.session.has_pending() {
+                // deferred or preempted mid-commit: recommit only
+                active.push(slot);
+                expands.push(Vec::new());
+                continue;
+            }
+            let requests = slot.session.next_requests(&mut self.engine);
+            if requests.is_empty() {
+                // release-on-complete so this session's blocks refill
+                // slots on the next admission pass
+                finished.push((slot.id, slot.session.finish(&mut self.engine)));
+                progressed = true;
+            } else {
+                active.push(slot);
+                expands.push(requests);
+            }
+        }
+        self.running = active;
+        PlannedRound {
+            plan: RoundPlan { shard: self.index, expands, recompute_tokens },
+            finished,
+            progressed,
+        }
+    }
+
+    /// Phase 2 (worker thread): the only phase that touches the generator.
+    /// Submits every planned slot's batch first, then polls them — the
+    /// two-phase surface that lets a pipelined backend overlap the decodes
+    /// — and returns the largest modeled decode-overhead hint among the
+    /// decoding sessions (the lockstep-fused decode is bounded by its
+    /// slowest backend).
+    pub(crate) fn decode(&mut self, plan: &RoundPlan) -> f64 {
+        debug_assert_eq!(
+            plan.expands.len(),
+            self.running.len(),
+            "round plan out of sync with shard {}",
+            self.index
+        );
+        for (slot, requests) in self.running.iter_mut().zip(&plan.expands) {
+            if !requests.is_empty() {
+                slot.session.submit(&mut self.engine, requests);
+            }
+        }
+        let mut injected = 0.0f64;
+        for (slot, requests) in self.running.iter_mut().zip(&plan.expands) {
+            if !requests.is_empty() {
+                slot.session.collect(&mut self.engine);
+                injected = injected.max(slot.session.lm.decode_overhead_seconds());
+            }
+        }
+        injected
+    }
+
+    /// Phase 3 (worker thread): commit the decoded batch in priority order
+    /// with the evict → preempt → defer pressure ladder, then close the
+    /// round with telemetry and the perf model's decode/overhead cost
+    /// split. `pipeline` picks how the two phases combine into the round's
+    /// modeled seconds (`max` vs sum) — it cannot affect anything else.
+    pub(crate) fn commit_round(
+        &mut self,
+        perf: &PerfModel,
+        model: &ModelProfile,
+        recompute_tokens: usize,
+        injected_decode_seconds: f64,
+        pipeline: bool,
+    ) -> RoundResult {
+        let mut progressed = false;
+        let mut deferred_commits = 0u64;
+
+        // commit the merged batch in priority order; on reservation
+        // failure: evict unpinned branches, then preempt from the tail
+        // (never the committing slot), then defer to the next round
+        self.running.sort_by_key(|s| s.seq);
+        let mut rec = BatchRecord { shard: self.index, recompute_tokens, ..Default::default() };
+        let mut i = 0usize;
+        while i < self.running.len() {
+            let n_requests = self.running[i].session.pending_requests();
+            let committed = loop {
+                match self.running[i].session.try_commit(&mut self.engine) {
+                    Ok(m) => break Some(m),
+                    Err(p) => {
+                        // first remedy: reclaim unpinned branches (LRU),
+                        // evicting only the deficit so other suspended
+                        // sessions keep as much warm KV as possible
+                        if self.engine.relieve(&p) > 0 {
+                            continue;
+                        }
+                        // second remedy: preempt the lowest-priority
+                        // not-yet-committed session (sorted tail)
+                        if self.running.len() > i + 1 {
+                            let mut victim = self.running.pop().expect("len > i + 1");
+                            victim.session.suspend(&mut self.engine);
+                            self.stats.preemptions += 1;
+                            rec.preemptions += 1;
+                            self.suspended.push(victim);
+                            continue;
+                        }
+                        break None; // defer this step to the next round
+                    }
+                }
+            };
+            match committed {
+                Some(m) => {
+                    rec.problems += 1;
+                    rec.requests += n_requests;
+                    rec.model_calls += m.model_calls;
+                    rec.new_tokens += m.new_tokens;
+                    rec.pinned_kv_tokens += m.live_kv_tokens;
+                    rec.unshared_kv_tokens += m.unshared_kv_tokens;
+                    progressed = true;
+                    i += 1;
+                }
+                None => {
+                    // everything evictable is gone and no lower-priority
+                    // victim remains; later slots need even more room
+                    deferred_commits += 1;
+                    break;
+                }
+            }
+        }
+
+        // close the round: telemetry, hard-budget assertion, perf cost
+        rec.resident_kv_tokens = self.engine.live_tokens();
+        self.stats.peak_resident_kv_tokens =
+            self.stats.peak_resident_kv_tokens.max(rec.resident_kv_tokens);
+        self.stats.peak_used_blocks =
+            self.stats.peak_used_blocks.max(self.engine.used_blocks());
+        debug_assert!(
+            self.engine.used_blocks() <= self.engine.total_blocks(),
+            "shard {} exceeded the hard block budget: {} > {}",
+            self.index,
+            self.engine.used_blocks(),
+            self.engine.total_blocks()
+        );
+        // A record exists when the round did costed work: commits, resume
+        // recompute, or backend decode time spent on steps whose commits
+        // all deferred under pressure (the device ran either way).
+        let record = if rec.problems > 0
+            || rec.recompute_tokens > 0
+            || injected_decode_seconds > 0.0
+        {
+            // decode reads only what the committed sessions pin; wave
+            // fragmentation is driven by physical occupancy (which, under
+            // lazy suspend, may include warm suspended working sets)
+            let (read, resident) = if perf.shared_kv {
+                (rec.pinned_kv_tokens, rec.resident_kv_tokens)
+            } else {
+                (rec.unshared_kv_tokens, rec.unshared_kv_tokens)
+            };
+            let stats = BatchStats {
+                model_calls: rec.model_calls,
+                new_tokens: rec.new_tokens,
+                read_kv_tokens: read,
+                resident_kv_tokens: resident,
+                recompute_prefill_tokens: rec.recompute_tokens,
+                block_size: self.engine.block_size(),
+                injected_decode_seconds,
+            };
+            let cost = perf.round_cost(&stats, model);
+            rec.decode_seconds = cost.decode_seconds;
+            rec.overhead_seconds = cost.overhead_seconds;
+            rec.seconds = cost.seconds(pipeline);
+            self.stats.busy_seconds += rec.seconds;
+            self.stats.recompute_tokens += rec.recompute_tokens as u64;
+            Some(rec)
+        } else {
+            None
+        };
+        RoundResult { record, progressed, deferred_commits }
+    }
+
+    /// Phases 2 + 3 back to back — what a worker runs per [`RoundPlan`].
+    pub(crate) fn run_round(
+        &mut self,
+        plan: RoundPlan,
+        perf: &PerfModel,
+        model: &ModelProfile,
+        pipeline: bool,
+    ) -> RoundResult {
+        let injected = self.decode(&plan);
+        self.commit_round(perf, model, plan.recompute_tokens, injected, pipeline)
+    }
+}
+
+/// The coordinator's shard store. Between rounds every shard is resident
+/// and borrowable; during the execute window a shard is *moved* to its
+/// worker and back (`take`/`put`), which is what makes the worker protocol
+/// lock-free: ownership, not sharing.
+pub(crate) struct ShardSet<G, R, P> {
+    slots: Vec<Option<Shard<G, R, P>>>,
+}
+
+impl<G, R, P> ShardSet<G, R, P> {
+    pub(crate) fn new(shards: Vec<Shard<G, R, P>>) -> Self {
+        Self { slots: shards.into_iter().map(Some).collect() }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub(crate) fn get(&self, i: usize) -> &Shard<G, R, P> {
+        self.slots[i].as_ref().expect("shard is out with its worker")
+    }
+
+    pub(crate) fn get_mut(&mut self, i: usize) -> &mut Shard<G, R, P> {
+        self.slots[i].as_mut().expect("shard is out with its worker")
+    }
+
+    pub(crate) fn take(&mut self, i: usize) -> Shard<G, R, P> {
+        self.slots[i].take().expect("shard already out with its worker")
+    }
+
+    pub(crate) fn put(&mut self, i: usize, shard: Shard<G, R, P>) {
+        debug_assert!(self.slots[i].is_none(), "shard slot {i} already occupied");
+        self.slots[i] = Some(shard);
+    }
+
+    pub(crate) fn iter(&self) -> impl Iterator<Item = &Shard<G, R, P>> {
+        self.slots.iter().map(|s| s.as_ref().expect("shard is out with its worker"))
+    }
+
+    pub(crate) fn iter_mut(&mut self) -> impl Iterator<Item = &mut Shard<G, R, P>> {
+        self.slots.iter_mut().map(|s| s.as_mut().expect("shard is out with its worker"))
+    }
+
+    /// Tear down the set, returning every shard (all must be resident).
+    pub(crate) fn into_inner(self) -> Vec<Shard<G, R, P>> {
+        self.slots.into_iter().map(|s| s.expect("shard is out with its worker")).collect()
+    }
+}
+
+/// A unit of round work moving coordinator → worker.
+enum RoundMsg<G, R, P> {
+    /// Run [`Shard::plan_round`] (frontier pruning + policy allocation).
+    Plan { shard: Shard<G, R, P>, recompute_tokens: usize },
+    /// Run decode + commit for an already-built [`RoundPlan`].
+    Execute { shard: Shard<G, R, P>, plan: RoundPlan },
+}
+
+/// A finished unit moving worker → coordinator.
+enum RoundReply<G, R, P> {
+    Planned { shard: Shard<G, R, P>, planned: PlannedRound },
+    Executed { shard: Shard<G, R, P>, result: RoundResult },
+}
+
+/// N long-lived workers, one per shard, spawned once per `serve` call
+/// (replacing the per-round `std::thread::scope` re-spawn). Each worker
+/// loops on its own mpsc channel, serving two message kinds per round:
+/// plan (shard in, shard + [`RoundPlan`] out) and execute (shard + plan in,
+/// shard + [`RoundResult`] out). Dropping the pool closes the channels and
+/// the workers exit; the enclosing `thread::scope` then joins them.
+pub(crate) struct WorkerPool<G, R, P> {
+    to_workers: Vec<mpsc::Sender<RoundMsg<G, R, P>>>,
+    from_workers: Vec<mpsc::Receiver<RoundReply<G, R, P>>>,
+}
+
+impl<G, R, P> WorkerPool<G, R, P>
+where
+    G: StepGenerator + Send,
+    R: RewardModel + Send,
+    P: SearchPolicy + Send,
+{
+    /// Spawn `workers` persistent round workers inside `scope`.
+    pub(crate) fn spawn<'scope, 'env>(
+        scope: &'scope thread::Scope<'scope, 'env>,
+        workers: usize,
+        perf: &'env PerfModel,
+        model: &'env ModelProfile,
+        pipeline: bool,
+    ) -> Self
+    where
+        G: 'scope,
+        R: 'scope,
+        P: 'scope,
+    {
+        let mut to_workers = Vec::with_capacity(workers);
+        let mut from_workers = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = mpsc::channel::<RoundMsg<G, R, P>>();
+            let (reply_tx, reply_rx) = mpsc::channel::<RoundReply<G, R, P>>();
+            scope.spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    let reply = match msg {
+                        RoundMsg::Plan { mut shard, recompute_tokens } => {
+                            let planned = shard.plan_round(recompute_tokens);
+                            RoundReply::Planned { shard, planned }
+                        }
+                        RoundMsg::Execute { mut shard, plan } => {
+                            let result = shard.run_round(plan, perf, model, pipeline);
+                            RoundReply::Executed { shard, result }
+                        }
+                    };
+                    if reply_tx.send(reply).is_err() {
+                        return; // coordinator gone
+                    }
+                }
+            });
+            to_workers.push(tx);
+            from_workers.push(reply_rx);
+        }
+        Self { to_workers, from_workers }
+    }
+
+    fn send(&self, worker: usize, msg: RoundMsg<G, R, P>) {
+        self.to_workers[worker].send(msg).expect("round worker died");
+    }
+
+    fn recv(&self, worker: usize) -> RoundReply<G, R, P> {
+        self.from_workers[worker].recv().expect("round worker died")
+    }
+
+    fn collect_planned(&self, worker: usize) -> (Shard<G, R, P>, PlannedRound) {
+        match self.recv(worker) {
+            RoundReply::Planned { shard, planned } => (shard, planned),
+            RoundReply::Executed { .. } => unreachable!("worker replied out of phase"),
+        }
+    }
+
+    fn collect_executed(&self, worker: usize) -> (Shard<G, R, P>, RoundResult) {
+        match self.recv(worker) {
+            RoundReply::Executed { shard, result } => (shard, result),
+            RoundReply::Planned { .. } => unreachable!("worker replied out of phase"),
+        }
+    }
+}
+
+/// Plan one global round: every busy shard (running sessions, or resume
+/// recompute to bill) plans **on its own worker** — planning carries the
+/// policy's allocation, the expensive host-side part of a round — and the
+/// coordinator receives shards back in index order. Inline when no pool
+/// exists (the single-shard scheduler).
+pub(crate) fn plan_rounds<G, R, P>(
+    set: &mut ShardSet<G, R, P>,
+    pool: Option<&WorkerPool<G, R, P>>,
+    round_recompute: &[usize],
+) -> Vec<Option<PlannedRound>>
+where
+    G: StepGenerator + Send,
+    R: RewardModel + Send,
+    P: SearchPolicy + Send,
+{
+    debug_assert_eq!(round_recompute.len(), set.len());
+    let n = set.len();
+    let busy = |set: &ShardSet<G, R, P>, i: usize| {
+        !set.get(i).running.is_empty() || round_recompute[i] > 0
+    };
+    let mut planned: Vec<Option<PlannedRound>> = (0..n).map(|_| None).collect();
+    match pool {
+        Some(pool) => {
+            let mut dispatched: Vec<usize> = Vec::new();
+            for i in 0..n {
+                if busy(set, i) {
+                    let shard = set.take(i);
+                    pool.send(i, RoundMsg::Plan { shard, recompute_tokens: round_recompute[i] });
+                    dispatched.push(i);
+                }
+            }
+            for i in dispatched {
+                let (shard, p) = pool.collect_planned(i);
+                set.put(i, shard);
+                planned[i] = Some(p);
+            }
+        }
+        None => {
+            for i in 0..n {
+                if busy(set, i) {
+                    planned[i] = Some(set.get_mut(i).plan_round(round_recompute[i]));
+                }
+            }
+        }
+    }
+    planned
+}
+
+/// Execute one global round: hand every planned shard to its worker (or run
+/// inline when no pool exists — the single-shard scheduler), then receive
+/// the shards back **in shard index order**. The in-order receive is the
+/// round barrier, and each result lands in its own pre-sized slot — no
+/// lock, no post-hoc sort — so the merge the coordinator performs next is
+/// deterministic regardless of worker timing.
+pub(crate) fn execute_round<G, R, P>(
+    set: &mut ShardSet<G, R, P>,
+    pool: Option<&WorkerPool<G, R, P>>,
+    plans: Vec<Option<RoundPlan>>,
+    perf: &PerfModel,
+    model: &ModelProfile,
+    pipeline: bool,
+) -> Vec<Option<RoundResult>>
+where
+    G: StepGenerator + Send,
+    R: RewardModel + Send,
+    P: SearchPolicy + Send,
+{
+    debug_assert_eq!(plans.len(), set.len());
+    let mut results: Vec<Option<RoundResult>> = (0..set.len()).map(|_| None).collect();
+    match pool {
+        Some(pool) => {
+            let mut dispatched: Vec<usize> = Vec::new();
+            for (i, plan) in plans.into_iter().enumerate() {
+                if let Some(plan) = plan {
+                    let shard = set.take(i);
+                    pool.send(i, RoundMsg::Execute { shard, plan });
+                    dispatched.push(i);
+                }
+            }
+            for i in dispatched {
+                let (shard, result) = pool.collect_executed(i);
+                set.put(i, shard);
+                results[i] = Some(result);
+            }
+        }
+        None => {
+            for (i, plan) in plans.into_iter().enumerate() {
+                if let Some(plan) = plan {
+                    results[i] = Some(set.get_mut(i).run_round(plan, perf, model, pipeline));
+                }
+            }
+        }
+    }
+    results
+}

@@ -342,15 +342,41 @@ impl BatchEngine {
 
     /// Run one step's allocation through the generator as a single batched
     /// call. Returns per-request continuations (request order preserved).
+    /// Equivalent to [`BatchEngine::submit`] immediately followed by
+    /// [`BatchEngine::poll`].
     pub fn expand<G: crate::lm::StepGenerator>(
         &mut self,
         lm: &mut G,
         tree: &SearchTree,
         requests: &[ExpandRequest],
     ) -> Vec<Vec<crate::tree::StepInfo>> {
+        let batch = self.submit(lm, tree, requests);
+        self.poll(lm, batch)
+    }
+
+    /// Phase 1 of the two-phase decode: dispatch one step's allocation to
+    /// the generator without waiting for the results. The generator's RNG
+    /// advances here (sync backends resolve eagerly inside the handle), so
+    /// when the scheduler polls cannot change what was sampled. A batch is
+    /// counted as executed at submit time.
+    pub fn submit<G: crate::lm::StepGenerator>(
+        &mut self,
+        lm: &mut G,
+        tree: &SearchTree,
+        requests: &[ExpandRequest],
+    ) -> crate::lm::PendingBatch {
         let reqs: Vec<(NodeId, usize)> = requests.iter().map(|r| (r.leaf, r.n)).collect();
         self.batches_executed += 1;
-        lm.expand_batch(tree, &reqs)
+        lm.submit_batch(tree, &reqs)
+    }
+
+    /// Phase 2 of the two-phase decode: wait for a submitted batch.
+    pub fn poll<G: crate::lm::StepGenerator>(
+        &mut self,
+        lm: &mut G,
+        batch: crate::lm::PendingBatch,
+    ) -> Vec<Vec<crate::tree::StepInfo>> {
+        lm.poll_batch(batch)
     }
 
     // -- admission (reserve → commit) --------------------------------------

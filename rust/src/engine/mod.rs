@@ -12,4 +12,4 @@ pub mod pjrt_lm;
 pub use batch::{
     BatchEngine, ExpandRequest, KvLedger, PressureSignals, ResumeStats, DEFAULT_KV_CAPACITY,
 };
-pub use perfmodel::{BatchStats, Hardware, LatencyEstimate, PerfModel, H100_NVL};
+pub use perfmodel::{BatchStats, Hardware, LatencyEstimate, PerfModel, RoundCost, H100_NVL};

@@ -82,6 +82,56 @@ pub struct BatchStats {
     /// per *block*, not per token: a partially filled page still moves and
     /// occupies the whole page. 0 is treated as 1 (token granularity).
     pub block_size: usize,
+    /// Modeled decode-side seconds the round's generator backend adds on
+    /// top of the roofline ([`crate::lm::StepGenerator::decode_overhead_seconds`]:
+    /// network hops, kernel-launch tails, injected test latency). Charged
+    /// once per round, on the decode side of the pipeline boundary.
+    pub injected_decode_seconds: f64,
+}
+
+/// Cost of one serve round on one shard, decomposed at the *pipeline
+/// boundary* the plan → decode → commit split creates:
+///
+/// * `decode_seconds` — the generator-bound part: lockstep decode
+///   iterations on the accelerator, plus any backend-injected decode
+///   overhead. This is the only phase that touches the [`crate::lm::StepGenerator`].
+/// * `overhead_seconds` — plan + commit: the recompute-prefill pass for
+///   sessions resumed this round, plus the paged KV *write* traffic of the
+///   round's newly committed tokens (the commit phase materializes the
+///   decode's KV into the radix cache's blocks).
+///
+/// A lockstep round pays the phases back to back; a pipelined round
+/// overlaps shard *k+1*'s decode with shard *k*'s plan + commit on the
+/// same accelerator timeline, so it pays only its slower phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundCost {
+    pub decode_seconds: f64,
+    pub overhead_seconds: f64,
+    /// Total bytes moved by both phases (reads + commit writes).
+    pub bytes_moved: f64,
+    /// Batch fragmentation waves beyond 1 across the decode iterations.
+    pub extra_waves: u64,
+}
+
+impl RoundCost {
+    /// Lockstep round: plan + commit then decode, serialized.
+    pub fn lockstep_seconds(&self) -> f64 {
+        self.decode_seconds + self.overhead_seconds
+    }
+
+    /// Pipelined round: decode overlaps the neighbouring shard's
+    /// plan + commit — the round costs `max(decode, plan + commit)`.
+    pub fn pipelined_seconds(&self) -> f64 {
+        self.decode_seconds.max(self.overhead_seconds)
+    }
+
+    pub fn seconds(&self, pipelined: bool) -> f64 {
+        if pipelined {
+            self.pipelined_seconds()
+        } else {
+            self.lockstep_seconds()
+        }
+    }
 }
 
 impl PerfModel {
@@ -132,39 +182,69 @@ impl PerfModel {
         LatencyEstimate { seconds: total_s, bytes_moved: bytes, extra_waves }
     }
 
-    /// Wall-clock of one *merged* engine batch: every co-scheduled problem's
-    /// continuations decode in lockstep, so the weights are read once per
-    /// iteration for the whole batch (that is the amortization continuous
-    /// batching buys) and the full resident KV working set is streamed each
-    /// iteration. Fragmentation waves re-read the weights exactly as in
-    /// [`PerfModel::latency`].
-    ///
-    /// KV bytes are charged at *block* granularity (`b.block_size`): the
-    /// paged allocator moves whole pages, so a partially filled tail block
-    /// costs as much as a full one. Rounds that resumed preempted sessions
-    /// additionally pay a recompute-prefill pass
-    /// (`b.recompute_prefill_tokens`): a compute-bound forward over the
-    /// evicted prefix plus one weight read and the KV write traffic, run
-    /// before the decode iterations.
+    /// Wall-clock of one *merged* engine batch, lockstep (phases run back
+    /// to back — [`RoundCost::lockstep_seconds`] of
+    /// [`PerfModel::round_cost`]). Kept as the single-number entry point for
+    /// per-problem replays and non-pipelined callers.
     pub fn batch_latency(&self, b: &BatchStats, model: &ModelProfile) -> LatencyEstimate {
+        let cost = self.round_cost(b, model);
+        LatencyEstimate {
+            seconds: cost.lockstep_seconds(),
+            bytes_moved: cost.bytes_moved,
+            extra_waves: cost.extra_waves,
+        }
+    }
+
+    /// Cost one *merged* engine round, decomposed at the pipeline boundary
+    /// ([`RoundCost`]).
+    ///
+    /// **Decode phase** — every co-scheduled problem's continuations decode
+    /// in lockstep, so the weights are read once per iteration for the
+    /// whole batch (the amortization continuous batching buys) and the full
+    /// resident KV working set is streamed each iteration; if the resident
+    /// set exceeds free HBM the batch fragments into waves, each re-reading
+    /// the weights, exactly as in [`PerfModel::latency`]. Backend-injected
+    /// decode overhead (`b.injected_decode_seconds`) lands here.
+    ///
+    /// **Plan + commit phase** — rounds that resumed preempted sessions pay
+    /// a recompute-prefill pass (`b.recompute_prefill_tokens`): a
+    /// compute-bound forward over the evicted prefix plus one weight read
+    /// and that prefix's KV write traffic. Committing the round's decode
+    /// output then writes `b.new_tokens` of fresh KV into the paged cache.
+    ///
+    /// KV bytes are charged at *block* granularity (`b.block_size`)
+    /// throughout: the paged allocator moves whole pages, so a partially
+    /// filled tail block costs as much as a full one.
+    pub fn round_cost(&self, b: &BatchStats, model: &ModelProfile) -> RoundCost {
         let bs = b.block_size.max(1) as f64;
         let page = |tokens: usize| (tokens as f64 / bs).ceil() * bs;
         let kv_b = model.kv_bytes_per_token as f64;
-        // recompute-prefill for resumed sessions (possibly the whole round)
-        let mut seconds = 0.0;
-        let mut bytes = 0.0;
+        let mut cost = RoundCost::default();
+        // plan + commit: recompute-prefill for resumed sessions
         if b.recompute_prefill_tokens > 0 {
             let prefill_comp =
                 model.weight_bytes as f64 * b.recompute_prefill_tokens as f64
                     / self.hw.peak_flops;
             let prefill_bytes =
                 model.weight_bytes as f64 + page(b.recompute_prefill_tokens) * kv_b;
-            seconds += prefill_comp.max(prefill_bytes / self.hw.mem_bw);
-            bytes += prefill_bytes;
+            cost.overhead_seconds += prefill_comp.max(prefill_bytes / self.hw.mem_bw);
+            cost.bytes_moved += prefill_bytes;
         }
+        // plan + commit: paged KV writes of the round's new tokens
+        if b.new_tokens > 0 {
+            let commit_bytes = page(b.new_tokens) * kv_b;
+            cost.overhead_seconds += commit_bytes / self.hw.mem_bw;
+            cost.bytes_moved += commit_bytes;
+        }
+        // Backend-injected decode latency is billed whenever the backend
+        // decoded this round, even when every commit then deferred under
+        // pressure (model_calls == 0): the device time was spent regardless
+        // of whether the scheduler could admit the results.
+        cost.decode_seconds = b.injected_decode_seconds;
         if b.model_calls == 0 || b.new_tokens == 0 {
-            return LatencyEstimate { seconds, bytes_moved: bytes, extra_waves: 0 };
+            return cost;
         }
+        // decode: lockstep iterations over the merged batch
         let batch = b.model_calls as f64;
         let iters = (b.new_tokens as f64 / batch).max(1.0);
         let kv_read = page(b.read_kv_tokens) * kv_b;
@@ -174,11 +254,10 @@ impl PerfModel {
         let bytes_per_iter = model.weight_bytes as f64 * waves + kv_read;
         let mem_s = bytes_per_iter / self.hw.mem_bw;
         let comp_s = model.weight_bytes as f64 * batch / self.hw.peak_flops;
-        LatencyEstimate {
-            seconds: seconds + iters * mem_s.max(comp_s),
-            bytes_moved: bytes + iters * bytes_per_iter,
-            extra_waves: (waves as u64).saturating_sub(1) * iters as u64,
-        }
+        cost.decode_seconds += iters * mem_s.max(comp_s);
+        cost.bytes_moved += iters * bytes_per_iter;
+        cost.extra_waves = (waves as u64).saturating_sub(1) * iters as u64;
+        cost
     }
 
     /// Aggregate throughput (problems/s) for a set of per-problem outcomes
@@ -356,10 +435,12 @@ mod tests {
     #[test]
     fn kv_is_charged_per_block_not_per_token() {
         let pm = PerfModel::new(H100_NVL, true, 1);
-        // 1 token into a 16-token page: the whole page moves
+        // 1 token into a 16-token page: the whole page moves. new_tokens is
+        // block-aligned so the commit-write charge (also paged) cancels in
+        // the aligned comparison below.
         let tiny = BatchStats {
             model_calls: 8,
-            new_tokens: 8,
+            new_tokens: 16,
             read_kv_tokens: 33, // 3 pages of 16
             resident_kv_tokens: 33,
             block_size: 16,
@@ -385,6 +466,64 @@ mod tests {
             pm.batch_latency(&aligned, &LLEMMA_34B_SIM).bytes_moved,
             pm.batch_latency(&aligned_exact, &LLEMMA_34B_SIM).bytes_moved
         );
+    }
+
+    #[test]
+    fn round_cost_decomposes_batch_latency_at_the_pipeline_boundary() {
+        let pm = PerfModel::new(H100_NVL, true, 1);
+        let b = BatchStats {
+            model_calls: 64,
+            new_tokens: 64 * 50,
+            read_kv_tokens: 30_000,
+            resident_kv_tokens: 30_000,
+            recompute_prefill_tokens: 10_000,
+            block_size: 16,
+            ..Default::default()
+        };
+        let cost = pm.round_cost(&b, &LLEMMA_34B_SIM);
+        assert!(cost.decode_seconds > 0.0);
+        assert!(cost.overhead_seconds > 0.0, "recompute + commit writes must cost");
+        // lockstep is exactly the sum; batch_latency folds through it
+        let est = pm.batch_latency(&b, &LLEMMA_34B_SIM);
+        assert_eq!(est.seconds, cost.lockstep_seconds());
+        assert_eq!(est.bytes_moved, cost.bytes_moved);
+        // the pipelined round hides the smaller phase entirely
+        assert_eq!(cost.pipelined_seconds(), cost.decode_seconds.max(cost.overhead_seconds));
+        assert!(cost.pipelined_seconds() < cost.lockstep_seconds());
+        assert_eq!(cost.seconds(false), cost.lockstep_seconds());
+        assert_eq!(cost.seconds(true), cost.pipelined_seconds());
+    }
+
+    #[test]
+    fn injected_decode_overhead_lands_on_the_decode_side() {
+        let pm = PerfModel::new(H100_NVL, true, 1);
+        let plain = BatchStats {
+            model_calls: 64,
+            new_tokens: 64 * 50,
+            read_kv_tokens: 30_000,
+            resident_kv_tokens: 30_000,
+            ..Default::default()
+        };
+        let injected = BatchStats { injected_decode_seconds: 0.5, ..plain.clone() };
+        let (cp, ci) = (
+            pm.round_cost(&plain, &LLEMMA_34B_SIM),
+            pm.round_cost(&injected, &LLEMMA_34B_SIM),
+        );
+        assert_eq!(ci.decode_seconds, cp.decode_seconds + 0.5);
+        assert_eq!(ci.overhead_seconds, cp.overhead_seconds);
+        // a decode-bound pipelined round costs only its decode phase
+        assert_eq!(ci.pipelined_seconds(), ci.decode_seconds);
+        // a round whose commits all deferred (no model calls recorded) still
+        // bills the backend's decode time — the device ran regardless
+        let deferred = BatchStats {
+            recompute_prefill_tokens: 5_000,
+            injected_decode_seconds: 0.5,
+            ..Default::default()
+        };
+        assert_eq!(pm.round_cost(&deferred, &LLEMMA_34B_SIM).decode_seconds, 0.5);
+        // and with no backend hint, no decode work means zero decode cost
+        let idle = BatchStats { recompute_prefill_tokens: 5_000, ..Default::default() };
+        assert_eq!(pm.round_cost(&idle, &LLEMMA_34B_SIM).decode_seconds, 0.0);
     }
 
     #[test]

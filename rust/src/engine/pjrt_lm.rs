@@ -11,14 +11,14 @@
 //! benefit, at step granularity).
 
 use crate::kvcache::RadixCache;
-use crate::lm::StepGenerator;
+use crate::lm::{PendingBatch, StepGenerator};
 use crate::reward::RewardModel;
 use crate::embed::Embedder;
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Artifacts};
 use crate::tree::{NodeId, SearchTree, StepInfo};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 
 /// Step separator token id (ends a reasoning step).
@@ -64,6 +64,12 @@ pub struct PjrtLm {
     pending: HashMap<(NodeId, u64), KvState>,
     /// Radix accounting of unique cached tokens (SGLang-style bookkeeping).
     pub radix: RadixCache,
+    /// Double buffer for the two-phase submit/poll surface: results of
+    /// in-flight batches keyed by ticket, in submission order. Capacity 2
+    /// (the classic double buffer): one batch being committed by the
+    /// scheduler while the next one decodes.
+    in_flight: VecDeque<(u64, Vec<Vec<StepInfo>>)>,
+    next_ticket: u64,
     /// Telemetry.
     pub decode_calls: u64,
     pub prefill_calls: u64,
@@ -85,6 +91,8 @@ impl PjrtLm {
             node_kv: HashMap::new(),
             pending: HashMap::new(),
             radix: RadixCache::new(1 << 22),
+            in_flight: VecDeque::new(),
+            next_ticket: 0,
             decode_calls: 0,
             prefill_calls: 0,
         }
@@ -252,6 +260,40 @@ impl StepGenerator for PjrtLm {
             }
         }
         out
+    }
+
+    /// Two-phase submit: decode the batch into the double buffer and hand
+    /// back a ticket. PJRT executions in the shim are host-synchronous, so
+    /// the work runs eagerly here; the *surface* is what matters — the serve
+    /// scheduler submits shard *k+1*'s decode before polling shard *k*'s,
+    /// and a backend with truly async PJRT donation (or a network hop) slots in
+    /// behind the same ticket protocol with no scheduler change. The buffer
+    /// holds at most two batches (double buffering): submitting a third
+    /// while two are un-polled is a scheduler bug and panics.
+    fn submit_batch(&mut self, tree: &SearchTree, requests: &[(NodeId, usize)]) -> PendingBatch {
+        assert!(
+            self.in_flight.len() < 2,
+            "PjrtLm double buffer overflow: poll before submitting a third batch"
+        );
+        let results = self.expand_batch(tree, requests);
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.in_flight.push_back((ticket, results));
+        PendingBatch::Ticket(ticket)
+    }
+
+    /// Two-phase poll: redeem a ticket from the double buffer. Tickets must
+    /// be polled in submission order (the buffer is a FIFO).
+    fn poll_batch(&mut self, batch: PendingBatch) -> Vec<Vec<StepInfo>> {
+        match batch {
+            PendingBatch::Ready(results) => results,
+            PendingBatch::Ticket(id) => {
+                let (front, results) =
+                    self.in_flight.pop_front().expect("poll_batch: no batch in flight");
+                assert_eq!(front, id, "PjrtLm tickets must be polled in order");
+                results
+            }
+        }
     }
 
     fn prompt_tokens(&self) -> usize {

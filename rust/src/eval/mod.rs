@@ -201,11 +201,13 @@ fn fold_report(cfg: &EvalConfig, results: Vec<ProblemSummary>) -> EvalReport {
 /// Rebased onto the sharded [`crate::coordinator::serve`] engine: `workers`
 /// shards with one resident job per shard (`concurrency == shards`, routed
 /// by the deterministic least-loaded admission), each shard holding the
-/// default ample per-shard KV capacity. This replaces the old
-/// `par_map`-over-fresh-engines path so eval and serving share a single
-/// execution engine; because sessions are schedule-invariant, the folded
-/// report is identical for any worker count (and identical to what the old
-/// path produced — `tests/serve_determinism.rs` pins this).
+/// default ample per-shard KV capacity and stepped by `serve`'s persistent
+/// worker pool (spawned once per call, not per round). This replaces the
+/// old `par_map`-over-fresh-engines path so eval and serving share a single
+/// execution engine — the plan → decode → commit round pipeline included;
+/// because sessions are schedule-invariant, the folded report is identical
+/// for any worker count (and identical to what the old path produced —
+/// `tests/serve_determinism.rs` pins this).
 pub fn evaluate_with_workers(cfg: &EvalConfig, workers: usize) -> EvalReport {
     let workers = workers.max(1).min(cfg.n_problems.max(1));
     let opts = ServeOptions {

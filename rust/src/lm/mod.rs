@@ -11,6 +11,38 @@ use crate::tree::{NodeId, SearchTree, StepInfo};
 use crate::util::rng::Rng;
 use crate::workload::{extend_path_id, Problem};
 
+/// Handle to a decode batch submitted through the two-phase
+/// [`StepGenerator::submit_batch`] / [`StepGenerator::poll_batch`] surface.
+///
+/// Backends fall into two shapes:
+///
+/// * synchronous generators (everything built on the blanket adapter)
+///   resolve the batch *at submit time* and carry the results inside the
+///   handle — `poll_batch` just unwraps them;
+/// * pipelined backends ([`crate::engine::pjrt_lm::PjrtLm`] and, later, any
+///   network-backed generator) return a [`PendingBatch::Ticket`] at submit
+///   time and redeem it in `poll_batch`, which is what lets a scheduler
+///   keep one shard's decode in flight while it commits another shard's
+///   results.
+///
+/// Handles are not interchangeable across generators: polling a ticket on a
+/// generator that did not issue it is a logic error (panics).
+#[derive(Debug)]
+pub enum PendingBatch {
+    /// Results computed eagerly at submit time (blanket sync adapter).
+    Ready(Vec<Vec<StepInfo>>),
+    /// Backend-issued ticket; redeem via [`StepGenerator::poll_batch`].
+    Ticket(u64),
+}
+
+impl PendingBatch {
+    /// True when the backend deferred the work behind a ticket (a genuinely
+    /// pipelined submit) rather than resolving it eagerly.
+    pub fn is_ticket(&self) -> bool {
+        matches!(self, PendingBatch::Ticket(_))
+    }
+}
+
 /// Samples step continuations for frontier leaves.
 pub trait StepGenerator {
     /// Sample `n` continuations of the trajectory ending at `leaf`.
@@ -27,6 +59,45 @@ pub trait StepGenerator {
         requests: &[(NodeId, usize)],
     ) -> Vec<Vec<StepInfo>> {
         requests.iter().map(|&(leaf, n)| self.expand(tree, leaf, n)).collect()
+    }
+
+    /// Phase 1 of the two-phase decode surface: dispatch a whole step's
+    /// allocation and return a handle without waiting for the results. The
+    /// blanket adapter runs [`StepGenerator::expand_batch`] eagerly and
+    /// stores the results in the handle, so every existing synchronous
+    /// generator is automatically a (degenerate) two-phase backend.
+    /// Pipelined backends override both phases to genuinely decouple
+    /// dispatch from completion.
+    ///
+    /// The per-generator RNG advances at *submit* time in either shape, so
+    /// when a scheduler polls — immediately, or a round later — cannot
+    /// change what was sampled.
+    fn submit_batch(&mut self, tree: &SearchTree, requests: &[(NodeId, usize)]) -> PendingBatch {
+        PendingBatch::Ready(self.expand_batch(tree, requests))
+    }
+
+    /// Phase 2: wait for a submitted batch and return its per-request
+    /// continuations (request order preserved). The blanket adapter only
+    /// understands [`PendingBatch::Ready`]; a backend that issues tickets
+    /// must override this to redeem them.
+    fn poll_batch(&mut self, batch: PendingBatch) -> Vec<Vec<StepInfo>> {
+        match batch {
+            PendingBatch::Ready(results) => results,
+            PendingBatch::Ticket(id) => panic!(
+                "poll_batch: ticket {id} polled on a generator that never \
+                 issues tickets (handle crossed generators?)"
+            ),
+        }
+    }
+
+    /// Modeled decode-side latency this backend adds per *round* on top of
+    /// the roofline (network round trips, kernel-launch tails, injected
+    /// test latency). The serve scheduler folds the maximum hint across a
+    /// round's decoding sessions into the round's modeled decode cost —
+    /// which is exactly the part a pipelined round hides behind
+    /// plan + commit. 0.0 (the default) means the roofline alone.
+    fn decode_overhead_seconds(&self) -> f64 {
+        0.0
     }
 
     /// Tokens in the problem prompt (root node size).
@@ -57,6 +128,18 @@ impl<G: StepGenerator + ?Sized> StepGenerator for Box<G> {
         (**self).expand_batch(tree, requests)
     }
 
+    fn submit_batch(&mut self, tree: &SearchTree, requests: &[(NodeId, usize)]) -> PendingBatch {
+        (**self).submit_batch(tree, requests)
+    }
+
+    fn poll_batch(&mut self, batch: PendingBatch) -> Vec<Vec<StepInfo>> {
+        (**self).poll_batch(batch)
+    }
+
+    fn decode_overhead_seconds(&self) -> f64 {
+        (**self).decode_overhead_seconds()
+    }
+
     fn prompt_tokens(&self) -> usize {
         (**self).prompt_tokens()
     }
@@ -77,6 +160,18 @@ impl<G: StepGenerator + ?Sized> StepGenerator for &mut G {
         requests: &[(NodeId, usize)],
     ) -> Vec<Vec<StepInfo>> {
         (**self).expand_batch(tree, requests)
+    }
+
+    fn submit_batch(&mut self, tree: &SearchTree, requests: &[(NodeId, usize)]) -> PendingBatch {
+        (**self).submit_batch(tree, requests)
+    }
+
+    fn poll_batch(&mut self, batch: PendingBatch) -> Vec<Vec<StepInfo>> {
+        (**self).poll_batch(batch)
+    }
+
+    fn decode_overhead_seconds(&self) -> f64 {
+        (**self).decode_overhead_seconds()
     }
 
     fn prompt_tokens(&self) -> usize {
@@ -176,6 +271,59 @@ impl StepGenerator for SynthLm {
     }
 }
 
+/// Wrapper that makes any generator report a fixed modeled decode latency
+/// per round ([`StepGenerator::decode_overhead_seconds`]) without changing
+/// what it samples. This is the stand-in for a slow real-model backend
+/// (PJRT device time, a network hop): the serve scheduler's pipelined mode
+/// hides plan + commit behind exactly this kind of decode-bound round, and
+/// `benches/table2_throughput.rs` uses the wrapper to measure the modeled
+/// overlap savings.
+pub struct InjectedLatency<G> {
+    pub inner: G,
+    /// Modeled decode seconds added per round.
+    pub seconds_per_round: f64,
+}
+
+impl<G> InjectedLatency<G> {
+    pub fn new(inner: G, seconds_per_round: f64) -> Self {
+        Self { inner, seconds_per_round }
+    }
+}
+
+impl<G: StepGenerator> StepGenerator for InjectedLatency<G> {
+    fn expand(&mut self, tree: &SearchTree, leaf: NodeId, n: usize) -> Vec<StepInfo> {
+        self.inner.expand(tree, leaf, n)
+    }
+
+    fn expand_batch(
+        &mut self,
+        tree: &SearchTree,
+        requests: &[(NodeId, usize)],
+    ) -> Vec<Vec<StepInfo>> {
+        self.inner.expand_batch(tree, requests)
+    }
+
+    fn submit_batch(&mut self, tree: &SearchTree, requests: &[(NodeId, usize)]) -> PendingBatch {
+        self.inner.submit_batch(tree, requests)
+    }
+
+    fn poll_batch(&mut self, batch: PendingBatch) -> Vec<Vec<StepInfo>> {
+        self.inner.poll_batch(batch)
+    }
+
+    fn decode_overhead_seconds(&self) -> f64 {
+        self.seconds_per_round + self.inner.decode_overhead_seconds()
+    }
+
+    fn prompt_tokens(&self) -> usize {
+        self.inner.prompt_tokens()
+    }
+
+    fn prompt_token_ids(&self) -> Option<Vec<u32>> {
+        self.inner.prompt_token_ids()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,6 +367,56 @@ mod tests {
         );
         for s in lm.expand(&tree, doomed, 16) {
             assert!(!s.alive);
+        }
+    }
+
+    #[test]
+    fn submit_poll_matches_expand_batch() {
+        // The blanket sync adapter must be invisible: submit + poll on one
+        // generator samples exactly what expand_batch samples on a clone
+        // seeded identically, and the handle carries the results (Ready).
+        let mut direct = make();
+        let mut phased = make();
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(direct.prompt_tokens());
+        let requests = [(root, 4usize), (root, 3usize)];
+        let expected = direct.expand_batch(&tree, &requests);
+        let handle = phased.submit_batch(&tree, &requests);
+        assert!(!handle.is_ticket(), "sync adapter resolves at submit time");
+        let got = phased.poll_batch(handle);
+        assert_eq!(expected.len(), got.len());
+        for (e, g) in expected.iter().zip(&got) {
+            assert_eq!(e.len(), g.len());
+            for (a, b) in e.iter().zip(g) {
+                assert_eq!(a.path_id, b.path_id);
+                assert_eq!(a.sem, b.sem);
+                assert_eq!(a.tokens, b.tokens);
+                assert_eq!(a.paraphrase, b.paraphrase);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "never issues tickets")]
+    fn sync_adapter_rejects_foreign_tickets() {
+        let mut lm = make();
+        let _ = lm.poll_batch(PendingBatch::Ticket(7));
+    }
+
+    #[test]
+    fn injected_latency_is_transparent_except_for_the_hint() {
+        let mut plain = make();
+        let mut wrapped = InjectedLatency::new(make(), 0.25);
+        assert_eq!(plain.decode_overhead_seconds(), 0.0);
+        assert_eq!(wrapped.decode_overhead_seconds(), 0.25);
+        assert_eq!(plain.prompt_tokens(), wrapped.prompt_tokens());
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(plain.prompt_tokens());
+        let a = plain.expand(&tree, root, 8);
+        let b = wrapped.expand(&tree, root, 8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.path_id, y.path_id);
+            assert_eq!(x.tokens, y.tokens);
         }
     }
 

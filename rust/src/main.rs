@@ -29,16 +29,21 @@ USAGE:
             [--problems K] [--seed S] [--workers W] [--json FILE]
   ets serve [--dataset D] [--model M] [--policy P] [--width N]
             [--problems K] [--concurrency C] [--capacity TOKENS]
-            [--block-size TOKENS] [--shards N] [--seed S] [--json FILE]
-            [--pjrt] [--requests K] [--artifacts DIR]
+            [--block-size TOKENS] [--shards N] [--pipeline] [--seed S]
+            [--json FILE] [--pjrt] [--requests K] [--artifacts DIR]
   ets info  [--artifacts DIR]
 
 `--capacity` makes the KV budget *hard*: the scheduler gates admission on
 free-block watermarks and preempts/resumes sessions under pressure
 (recomputing evicted prefixes), never exceeding the block budget.
-`--shards N` spawns N shard-per-core engines (each owning capacity/N) with
-deterministic least-loaded admission and cross-shard migration of stuck
-sessions; results are identical for every shard count at a fixed seed.
+`--shards N` runs N shard-per-core engines (each owning capacity/N) on N
+persistent workers, with deterministic least-loaded admission and
+cross-shard migration of stuck sessions; results are identical for every
+shard count at a fixed seed.
+`--pipeline` costs each round as max(decode, plan+commit) — shard k+1's
+decode overlapping shard k's commit — instead of their sum; results are
+byte-identical with it on or off. `--pipeline=0` forces lockstep,
+overriding a `serve.pipeline` config value.
 
 POLICIES: rebase | beam-<k> | beam-sqrt | dvts-<k> | dvts-sqrt |
           ets[:<lambda_b>] | ets-kv[:<lambda_b>]
@@ -58,6 +63,13 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Subcommands take no positional arguments: a stray one is almost
+    // always a flag typo (`--pipeline 0` instead of `--pipeline=0`) and
+    // silently ignoring it would silently change what runs.
+    if args.positional.len() > 1 {
+        eprintln!("error: unexpected argument '{}'\n\n{USAGE}", args.positional[1]);
+        std::process::exit(2);
+    }
     let result = match args.subcommand() {
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
@@ -183,6 +195,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shards: args
             .get_usize("shards", cfg_doc.usize_or("serve.shards", defaults.shards))
             .map_err(Error::msg)?,
+        // bare `--pipeline` turns it on; `--pipeline=0|false` forces it off
+        // (overriding a `serve.pipeline` config value, like every other
+        // serve option the CLI takes precedence). The config accepts both
+        // `serve.pipeline = true` and `= 1`.
+        pipeline: match args.get("pipeline") {
+            Some(v) => v != "0" && v != "false",
+            None => {
+                args.flag("pipeline")
+                    || cfg_doc.bool_or("serve.pipeline", false)
+                    || cfg_doc.usize_or("serve.pipeline", 0) != 0
+            }
+        },
     };
     if opts.capacity_tokens == 0 {
         bail!("--capacity must be a positive token budget");
@@ -202,8 +226,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             / r.serve.batches.len() as f64
     };
     println!(
-        "served {} problems (width {}, policy {}) through {} shard engine(s), concurrency {}",
-        cfg.n_problems, cfg.width, r.report.policy, r.serve.shards, concurrency
+        "served {} problems (width {}, policy {}) through {} shard engine(s), concurrency {}, {} rounds",
+        cfg.n_problems,
+        cfg.width,
+        r.report.policy,
+        r.serve.shards,
+        concurrency,
+        if r.serve.pipeline { "pipelined" } else { "lockstep" }
     );
     println!(
         "  acc={:.1}%  kvΣ/problem={:.0}  peak resident kv={} tokens  max concurrent={}",
@@ -273,6 +302,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("capacity_tokens", Json::num(opts.capacity_tokens as f64)),
             ("block_size", Json::num(opts.block_size as f64)),
             ("shards", Json::num(r.serve.shards as f64)),
+            ("pipeline", Json::num(if r.serve.pipeline { 1.0 } else { 0.0 })),
             ("migrations", Json::num(r.serve.migrations as f64)),
             ("accuracy", Json::num(r.report.accuracy())),
             ("mean_kv_tokens", Json::num(r.report.mean_kv_tokens)),

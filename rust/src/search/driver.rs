@@ -23,7 +23,7 @@
 
 use crate::engine::batch::{BatchEngine, ExpandRequest, KvLedger, DEFAULT_KV_CAPACITY};
 use crate::kvcache::KvPressure;
-use crate::lm::StepGenerator;
+use crate::lm::{PendingBatch, StepGenerator};
 use crate::reward::RewardModel;
 use crate::search::policy::SearchPolicy;
 use crate::search::voting::{weighted_majority, Completion};
@@ -135,6 +135,8 @@ pub struct SearchSession<G, R, P> {
     completions: Vec<Completion>,
     completed_leaves: Vec<NodeId>,
     started: bool,
+    /// A decode batch submitted but not yet collected (phase 1a → 1b).
+    in_flight: Option<(Vec<ExpandRequest>, PendingBatch)>,
     pending: Option<PendingStep>,
     suspended: bool,
     recompute_tokens: u64,
@@ -163,6 +165,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
             completions: Vec::new(),
             completed_leaves: Vec::new(),
             started: false,
+            in_flight: None,
             pending: None,
             suspended: false,
             recompute_tokens: 0,
@@ -207,6 +210,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
     /// the engine's cache. Empty when the search is over.
     pub fn next_requests(&mut self, engine: &mut BatchEngine) -> Vec<ExpandRequest> {
         debug_assert!(self.pending.is_none(), "next_requests with a step pending");
+        debug_assert!(self.in_flight.is_none(), "next_requests with a batch in flight");
         debug_assert!(!self.suspended, "next_requests on a suspended session");
         if !self.started {
             self.started = true;
@@ -228,15 +232,40 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
         alloc.into_iter().map(|(leaf, n)| ExpandRequest { leaf, n }).collect()
     }
 
-    /// Phase 1 of a step: run the allocation through the generator as one
-    /// batched call and hold the results. Advances the per-problem RNG
-    /// exactly once — committing later (or after a preemption round trip)
-    /// cannot change what was sampled.
+    /// Phase 1 of a step ([`SearchSession::submit`] + immediate
+    /// [`SearchSession::collect`]): run the allocation through the generator
+    /// as one batched call and hold the results. Advances the per-problem
+    /// RNG exactly once — committing later (or after a preemption round
+    /// trip) cannot change what was sampled.
     pub fn prepare(&mut self, engine: &mut BatchEngine, requests: &[ExpandRequest]) {
-        debug_assert!(self.pending.is_none(), "prepare with a step already pending");
-        debug_assert!(!self.suspended, "prepare on a suspended session");
-        let expansions = engine.expand(&mut self.lm, &self.tree, requests);
-        self.pending = Some(PendingStep { requests: requests.to_vec(), expansions });
+        self.submit(engine, requests);
+        self.collect(engine);
+    }
+
+    /// Phase 1a: dispatch the allocation to the generator without waiting
+    /// for the results (two-phase decode). The per-problem RNG advances
+    /// *here* — a sync backend resolves the batch inside the returned
+    /// handle, a pipelined backend starts decoding — so the schedule of the
+    /// matching [`SearchSession::collect`] cannot change what was sampled.
+    pub fn submit(&mut self, engine: &mut BatchEngine, requests: &[ExpandRequest]) {
+        debug_assert!(self.pending.is_none(), "submit with a step already pending");
+        debug_assert!(self.in_flight.is_none(), "submit with a batch in flight");
+        debug_assert!(!self.suspended, "submit on a suspended session");
+        let batch = engine.submit(&mut self.lm, &self.tree, requests);
+        self.in_flight = Some((requests.to_vec(), batch));
+    }
+
+    /// Phase 1b: wait for the submitted batch and store it as the prepared
+    /// step, ready for [`SearchSession::try_commit`].
+    pub fn collect(&mut self, engine: &mut BatchEngine) {
+        let (requests, batch) = self.in_flight.take().expect("collect without submit");
+        let expansions = engine.poll(&mut self.lm, batch);
+        self.pending = Some(PendingStep { requests, expansions });
+    }
+
+    /// A submitted decode batch awaits [`SearchSession::collect`].
+    pub fn has_in_flight(&self) -> bool {
+        self.in_flight.is_some()
     }
 
     /// Phase 2: reserve the worst-case block need of the prepared step and,
@@ -335,6 +364,10 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
     /// tokens whose pins were dropped.
     pub fn suspend(&mut self, engine: &mut BatchEngine) -> usize {
         debug_assert!(!self.suspended, "double suspend");
+        debug_assert!(
+            self.in_flight.is_none(),
+            "suspend with a decode batch in flight: collect first"
+        );
         let freed = engine.suspend(&mut self.ledger);
         self.suspended = true;
         freed
@@ -568,6 +601,44 @@ mod tests {
         assert!(out.recompute_tokens > 0, "resumes must have recomputed KV");
         assert_eq!(engine.live_tokens(), 0);
         engine.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn split_submit_collect_matches_prepare() {
+        // Driving a session through the explicit two-phase decode surface
+        // (submit … collect … commit) must be byte-identical to the fused
+        // prepare path — the RNG advances at submit time in both.
+        let params = SearchParams { width: 8, max_steps: 16 };
+        let fused = {
+            let (mut lm, mut prm) = setup(17);
+            let mut pol = RebasePolicy::default();
+            let out = run_search(&mut lm, &mut prm, &mut pol, &params);
+            (out.answer, out.total_kv_tokens(), out.total_new_tokens(), out.steps.len())
+        };
+        let mut engine = BatchEngine::new(DEFAULT_KV_CAPACITY);
+        let (lm, prm) = setup(17);
+        let mut session =
+            SearchSession::new(&mut engine, lm, prm, RebasePolicy::default(), &params);
+        loop {
+            let requests = session.next_requests(&mut engine);
+            if requests.is_empty() {
+                break;
+            }
+            session.submit(&mut engine, &requests);
+            assert!(session.has_in_flight());
+            assert!(!session.has_pending());
+            session.collect(&mut engine);
+            assert!(!session.has_in_flight());
+            assert!(session.has_pending());
+            session.try_commit(&mut engine).unwrap();
+        }
+        let out = session.finish(&mut engine);
+        assert_eq!(
+            fused,
+            (out.answer, out.total_kv_tokens(), out.total_new_tokens(), out.steps.len()),
+            "two-phase decode changed search results"
+        );
+        assert_eq!(engine.live_tokens(), 0);
     }
 
     #[test]

@@ -9,12 +9,15 @@
 //! every per-problem KV/token count identical to the effectively-unbounded
 //! run at the same seed — scheduling must never change search outcomes.
 //!
-//! And it holds across *shard counts*: `--shards N` partitions the budget
-//! over N shared-nothing engines stepped on parallel threads, with
+//! And it holds across *shard counts* and *execution modes*: `--shards N`
+//! partitions the budget over N shared-nothing engines stepped by N
+//! persistent workers (plan → decode → commit rounds over mpsc), with
 //! deterministic least-loaded admission and cross-shard migration of stuck
-//! sessions — shards ∈ {1, 2, 4} must be byte-identical per problem, under
-//! both ample and tight capacity (and the tight multi-shard run must
-//! actually exercise migration).
+//! sessions — shards ∈ {1, 2, 4} × pipeline {on, off} must be
+//! byte-identical per problem, under both ample and tight capacity (and
+//! the tight multi-shard runs must actually exercise migration).
+//! Pipelining may only change the *modeled cost fold* of a round
+//! (`max(decode, plan + commit)` vs their sum), never its contents.
 
 use ets::coordinator::ServeOptions;
 use ets::engine::{PerfModel, DEFAULT_KV_CAPACITY, H100_NVL};
@@ -101,7 +104,7 @@ fn tight_capacity_preemption_cannot_change_results() {
             concurrency: 8,
             capacity_tokens: tight_tokens,
             block_size: 16,
-            shards: 1,
+            ..Default::default()
         };
         let capped = evaluate_serve_with(&cfg, &opts, &perf);
         // identical to the uncapped serve AND to the par_map baseline
@@ -141,41 +144,68 @@ fn tight_capacity_preemption_cannot_change_results() {
 }
 
 #[test]
-fn shard_count_is_invisible_at_ample_capacity() {
+fn shard_and_pipeline_matrix_is_invisible_at_ample_capacity() {
+    // The persistent-worker identity matrix: shards ∈ {1, 2, 4} × pipeline
+    // {off, on} must all fold to the same per-problem results as the
+    // worker-eval baseline (which itself pins the pre-runtime behavior via
+    // the solo run_search identity in the coordinator tests).
     let cfg = cfg(PolicySpec::Rebase);
     let base = fingerprint(&evaluate_with_workers(&cfg, 2));
     for shards in [1usize, 2, 4] {
-        // one full default-sized engine per shard: capacity never binds
-        let opts = ServeOptions {
-            concurrency: 8,
-            capacity_tokens: DEFAULT_KV_CAPACITY * shards,
-            shards,
-            ..Default::default()
-        };
-        let perf = PerfModel::new(H100_NVL, true, 8);
-        let served = evaluate_serve_with(&cfg, &opts, &perf);
-        assert_eq!(
-            base,
-            fingerprint(&served.report),
-            "shard count {shards} changed eval results"
+        let mut modeled = Vec::new();
+        for pipeline in [false, true] {
+            // one full default-sized engine per shard: capacity never binds
+            let opts = ServeOptions {
+                concurrency: 8,
+                capacity_tokens: DEFAULT_KV_CAPACITY * shards,
+                shards,
+                pipeline,
+                ..Default::default()
+            };
+            let perf = PerfModel::new(H100_NVL, true, 8);
+            let served = evaluate_serve_with(&cfg, &opts, &perf);
+            assert_eq!(
+                base,
+                fingerprint(&served.report),
+                "shards={shards} pipeline={pipeline} changed eval results"
+            );
+            assert_eq!(served.serve.shards, shards);
+            assert_eq!(served.serve.pipeline, pipeline);
+            assert_eq!(served.serve.shard_stats.len(), shards);
+            assert!(served.serve.modeled_seconds > 0.0);
+            assert_eq!(
+                served.serve.kv_pressure_events(),
+                0,
+                "ample capacity must keep the pressure machinery dormant"
+            );
+            assert_eq!(served.serve.migrations, 0, "no pressure, no migration");
+            // every job admitted exactly once across shards
+            let admitted: u64 = served.serve.shard_stats.iter().map(|s| s.admitted).sum();
+            assert_eq!(admitted, cfg.n_problems as u64);
+            // every round's modeled seconds folds its phase decomposition
+            // exactly as the mode dictates
+            for b in &served.serve.batches {
+                let expect = if pipeline {
+                    b.decode_seconds.max(b.overhead_seconds)
+                } else {
+                    b.decode_seconds + b.overhead_seconds
+                };
+                assert_eq!(b.seconds, expect, "round cost fold mismatch: {b:?}");
+            }
+            modeled.push(served.serve.modeled_seconds);
+        }
+        // pipelining can only hide work, never add it
+        assert!(
+            modeled[1] <= modeled[0],
+            "pipelined modeled time {} exceeded lockstep {} at shards={shards}",
+            modeled[1],
+            modeled[0]
         );
-        assert_eq!(served.serve.shards, shards);
-        assert_eq!(served.serve.shard_stats.len(), shards);
-        assert!(served.serve.modeled_seconds > 0.0);
-        assert_eq!(
-            served.serve.kv_pressure_events(),
-            0,
-            "ample capacity must keep the pressure machinery dormant"
-        );
-        assert_eq!(served.serve.migrations, 0, "no pressure, no migration");
-        // every job admitted exactly once across shards
-        let admitted: u64 = served.serve.shard_stats.iter().map(|s| s.admitted).sum();
-        assert_eq!(admitted, cfg.n_problems as u64);
     }
 }
 
 #[test]
-fn shard_count_is_invisible_under_pressure_and_tight_shards_migrate() {
+fn shard_and_pipeline_matrix_is_invisible_under_pressure_and_tight_shards_migrate() {
     // Fat working sets (width 24) so a per-shard budget sized to one peak
     // working set puts a 3-resident shard under sustained pressure.
     let mut cfg = cfg(PolicySpec::Rebase);
@@ -197,47 +227,51 @@ fn shard_count_is_invisible_under_pressure_and_tight_shards_migrate() {
     // blocks, which is exactly the cross-shard migration trigger.
     let global_budget = 4 * (solo_peak + 4096);
     for shards in [1usize, 2, 4] {
-        let opts = ServeOptions {
-            concurrency: 12,
-            capacity_tokens: global_budget,
-            block_size: 16,
-            shards,
-        };
-        let capped = evaluate_serve_with(&cfg, &opts, &perf);
-        assert_eq!(
-            base,
-            fingerprint(&capped.report),
-            "shard count {shards} under a tight budget changed eval results"
-        );
-        assert!(
-            capped.serve.peak_used_blocks <= capped.serve.total_blocks,
-            "hard budget violated at shards={shards}: {} > {}",
-            capped.serve.peak_used_blocks,
-            capped.serve.total_blocks
-        );
-        match shards {
-            1 => assert_eq!(capped.serve.migrations, 0, "one shard cannot migrate"),
-            4 => {
-                assert!(
-                    capped.serve.kv_pressure_events() > 0,
-                    "a per-shard budget near one working set must pressure \
-                     a 3-resident shard"
-                );
-                assert!(
-                    capped.serve.migrations > 0,
-                    "sustained shard pressure with free peers must migrate \
-                     at least one suspended session"
-                );
-                assert!(capped.serve.resumes > 0, "migrated sessions must resume");
-                // per-shard ledgers reconcile with the global counter
-                let inbound: u64 =
-                    capped.serve.shard_stats.iter().map(|s| s.migrations_in).sum();
-                let outbound: u64 =
-                    capped.serve.shard_stats.iter().map(|s| s.migrations_out).sum();
-                assert_eq!(inbound, capped.serve.migrations);
-                assert_eq!(outbound, capped.serve.migrations);
+        for pipeline in [false, true] {
+            let opts = ServeOptions {
+                concurrency: 12,
+                capacity_tokens: global_budget,
+                block_size: 16,
+                shards,
+                pipeline,
+            };
+            let capped = evaluate_serve_with(&cfg, &opts, &perf);
+            assert_eq!(
+                base,
+                fingerprint(&capped.report),
+                "shards={shards} pipeline={pipeline} under a tight budget \
+                 changed eval results"
+            );
+            assert!(
+                capped.serve.peak_used_blocks <= capped.serve.total_blocks,
+                "hard budget violated at shards={shards}: {} > {}",
+                capped.serve.peak_used_blocks,
+                capped.serve.total_blocks
+            );
+            match shards {
+                1 => assert_eq!(capped.serve.migrations, 0, "one shard cannot migrate"),
+                4 => {
+                    assert!(
+                        capped.serve.kv_pressure_events() > 0,
+                        "a per-shard budget near one working set must pressure \
+                         a 3-resident shard"
+                    );
+                    assert!(
+                        capped.serve.migrations > 0,
+                        "sustained shard pressure with free peers must migrate \
+                         at least one suspended session (pipeline={pipeline})"
+                    );
+                    assert!(capped.serve.resumes > 0, "migrated sessions must resume");
+                    // per-shard ledgers reconcile with the global counter
+                    let inbound: u64 =
+                        capped.serve.shard_stats.iter().map(|s| s.migrations_in).sum();
+                    let outbound: u64 =
+                        capped.serve.shard_stats.iter().map(|s| s.migrations_out).sum();
+                    assert_eq!(inbound, capped.serve.migrations);
+                    assert_eq!(outbound, capped.serve.migrations);
+                }
+                _ => {}
             }
-            _ => {}
         }
     }
 }
