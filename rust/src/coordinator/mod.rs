@@ -18,8 +18,18 @@
 //!   `serve` call and fed [`runtime::RoundPlan`] messages over mpsc — no
 //!   per-round thread spawning). The scheduler runs deterministic rounds:
 //!
+//!   0. **publish** (with [`ServeOptions::prefix_share`]) — the round
+//!      barrier audits and rebuilds the **global prefix hub**
+//!      ([`crate::kvcache::prefixhub::PrefixHub`]): each shard's
+//!      committed prompt prefixes are fingerprinted (token-block hash
+//!      chains, sized by the read-only `peek_prefix` walk) into one
+//!      versioned snapshot that everything later in the round reads —
+//!      shards stay shared-nothing, the hub is a read-only directory;
 //!   1. **resume** — each shard retries its preempted sessions (oldest
 //!      admission first), recomputing evicted prefixes through its cache;
+//!      spans a *peer* shard published in the hub are importable instead,
+//!      billed `min(block transfer over the interconnect, recompute
+//!      prefill)` ([`crate::engine::TransferDecision`]);
 //!   2. **migrate** — a suspended session whose resume failed
 //!      [`MIGRATION_PATIENCE`] times in a row (sustained pressure) is handed
 //!      to the best peer shard that can cover its worst-case resume
@@ -29,12 +39,20 @@
 //!      recomputes the prefix through whichever cache it lands in — and
 //!      per-shard minted-id bases keep the "ids are never reused" invariant
 //!      fleet-wide, so a migrant can never falsely share cache with the
-//!      target's unrelated problems;
-//!   3. **admit** — a deterministic global queue routes each job to the
-//!      least-loaded shard (load = resident sessions, then total admissions,
-//!      then shard index — all deterministic units, so routing is
-//!      reproducible for a fixed seed regardless of thread timing), gated on
-//!      each shard's free-block watermark and the global concurrency cap;
+//!      target's unrelated problems. The rebuild is billed by the
+//!      **migration cost model**: the source's still-warm spans (probed
+//!      read-only) may arrive as an interconnect block copy instead of a
+//!      recompute prefill, whichever the perf model prices cheaper, with
+//!      the per-migration choice recorded in [`ShardStats`];
+//!   3. **admit** — a deterministic global queue routes each job by
+//!      **prompt affinity** first (the shard holding the request's longest
+//!      hub-published prefix — sharing recovered by placement, no copying
+//!      needed), falling back to the least-loaded shard by **predicted KV
+//!      footprint** (Σ policy-estimated blocks of resident sessions, then
+//!      total admissions, then shard index — all deterministic units, so
+//!      routing is reproducible for a fixed seed regardless of thread
+//!      timing), gated on each shard's free-block watermark and the global
+//!      concurrency cap;
 //!   4. **plan** — each busy shard builds its [`runtime::RoundPlan`] on its
 //!      own worker (shard-parallel: planning carries the policy allocation,
 //!      the expensive host-side part of a round): finished sessions retire,
@@ -69,15 +87,16 @@
 
 pub(crate) mod runtime;
 
-use crate::engine::batch::DEFAULT_KV_CAPACITY;
+use crate::engine::batch::{ImportSource, DEFAULT_KV_CAPACITY};
 use crate::engine::perfmodel::PerfModel;
+use crate::kvcache::prefixhub::PrefixHub;
 use crate::kvcache::DEFAULT_BLOCK_SIZE;
 use crate::lm::StepGenerator;
 use crate::reward::RewardModel;
 use crate::search::driver::{SearchOutcome, SearchParams, SearchSession};
 use crate::search::policy::SearchPolicy;
 use crate::workload::ModelProfile;
-use runtime::{Shard, ShardSet, Slot, WorkerPool};
+use runtime::{ResumeBill, Shard, ShardSet, Slot, WorkerPool};
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Mutex;
@@ -180,6 +199,16 @@ pub struct ServeOptions {
     /// costing choice — results are byte-identical either way (pinned by
     /// `tests/serve_determinism.rs`).
     pub pipeline: bool,
+    /// Cross-shard prefix sharing through the global prefix hub
+    /// ([`crate::kvcache::prefixhub::PrefixHub`]): shards publish
+    /// committed-prefix fingerprints at round barriers, admission gains
+    /// prompt-affinity routing (a request lands on the shard holding its
+    /// longest published prefix), and resumes may *import* published spans
+    /// from peers with `min(transfer, recompute)` costing. A
+    /// placement/costing feature only — per-problem results are
+    /// byte-identical with it on or off (pinned by
+    /// `tests/serve_determinism.rs`).
+    pub prefix_share: bool,
 }
 
 impl Default for ServeOptions {
@@ -190,6 +219,7 @@ impl Default for ServeOptions {
             block_size: DEFAULT_BLOCK_SIZE,
             shards: 1,
             pipeline: false,
+            prefix_share: false,
         }
     }
 }
@@ -205,6 +235,11 @@ impl ServeOptions {
 
     pub fn pipelined(mut self, pipeline: bool) -> Self {
         self.pipeline = pipeline;
+        self
+    }
+
+    pub fn prefix_shared(mut self, prefix_share: bool) -> Self {
+        self.prefix_share = prefix_share;
         self
     }
 }
@@ -235,6 +270,15 @@ pub struct BatchRecord {
     pub unshared_kv_tokens: usize,
     /// Tokens re-prefilled by sessions resumed (or migrated in) this round.
     pub recompute_tokens: usize,
+    /// Tokens whose KV arrived as cross-shard block transfers this round
+    /// (the `min(transfer, recompute)` import decision chose the copy) —
+    /// charged over the interconnect instead of as recompute prefill.
+    pub transfer_kv_tokens: usize,
+    /// Blocks allocated in this shard's cache after the round — per-shard
+    /// occupancy telemetry. (The duplicate-prompt sweeps' headline number,
+    /// [`ServeReport::mean_used_blocks`], is summed coordinator-side per
+    /// global round instead, so it also sees shards idle that round.)
+    pub used_blocks: usize,
     /// Sessions preempted during this round's commits.
     pub preemptions: usize,
     /// Modeled decode-phase seconds of this round (the generator-bound
@@ -266,6 +310,29 @@ pub struct ShardStats {
     pub migrations_in: u64,
     /// Suspended sessions this shard handed to peers with free blocks.
     pub migrations_out: u64,
+    /// Admissions routed here by prompt-affinity (longest published prefix
+    /// in the hub) rather than the least-loaded fallback.
+    pub hub_hits: u64,
+    /// KV tokens imported into this shard as cross-shard block transfers.
+    pub imported_kv_tokens: u64,
+    /// Resumes whose `min(transfer, recompute)` decision chose the block
+    /// transfer (the importable span arrived over the interconnect).
+    /// Migrated-in resumes are included — `migration_transfers` is the
+    /// migration-only sub-count.
+    pub import_transfers: u64,
+    /// Resumes that had an importable span but recomputed anyway (the
+    /// prefill was modeled cheaper than the link copy). Includes
+    /// migrated-in resumes, like `import_transfers`.
+    pub import_recomputes: u64,
+    /// Migrated-in resumes whose cost-model choice picked the transfer…
+    pub migration_transfers: u64,
+    /// …or the recompute (an importable span existed but the prefill was
+    /// modeled cheaper)…
+    pub migration_recomputes: u64,
+    /// …or that had *nothing importable* — the source had already evicted
+    /// the migrant's spans, so no transfer-vs-recompute decision ran and
+    /// the rebuild is plain recompute prefill.
+    pub migration_cold: u64,
     /// High-water mark of this shard's cache (unique tokens).
     pub peak_resident_kv_tokens: usize,
     /// High-water mark of this shard's allocated blocks.
@@ -323,6 +390,35 @@ pub struct ServeReport {
     pub pipeline: bool,
     /// Suspended sessions moved across shards under sustained pressure.
     pub migrations: u64,
+    /// Whether the global prefix hub was on ([`ServeOptions::prefix_share`]).
+    pub prefix_share: bool,
+    /// Admissions routed by prompt-affinity (Σ over shards).
+    pub hub_hits: u64,
+    /// Committed-prefix fingerprints published across all round barriers.
+    pub hub_published: u64,
+    /// Hub-consistency audit, accumulated over barriers: entries of the
+    /// previous snapshot still fully resident on their owner…
+    pub hub_live_entries: u64,
+    /// …and entries the owner evicted mid-round (accounted, never lost).
+    /// `hub_published == hub_live_entries + hub_evicted_entries` whenever a
+    /// final audit ran for every snapshot.
+    pub hub_evicted_entries: u64,
+    /// KV tokens imported as cross-shard block transfers (Σ over shards).
+    pub imported_kv_tokens: u64,
+    /// Import decisions that chose the transfer vs the recompute prefill.
+    pub import_transfers: u64,
+    pub import_recomputes: u64,
+    /// Migrated-in resumes billed as transfer vs recompute (the migration
+    /// cost model's per-migration choice, Σ over shards), plus the ones
+    /// with nothing importable (source already evicted — no choice ran).
+    pub migration_transfers: u64,
+    pub migration_recomputes: u64,
+    pub migration_cold: u64,
+    /// Global scheduler rounds executed.
+    pub rounds: u64,
+    /// Σ over rounds of the fleet-wide allocated blocks after the round —
+    /// `mean_used_blocks` is the duplicate-prompt sweeps' headline number.
+    pub sum_round_used_blocks: u64,
     /// Per-shard telemetry, indexed by shard.
     pub shard_stats: Vec<ShardStats>,
 }
@@ -340,6 +436,27 @@ impl ServeReport {
     /// admissions, and deferred commits. 0 means the budget never bound.
     pub fn kv_pressure_events(&self) -> u64 {
         self.preemptions + self.admission_blocked_rounds + self.deferred_commits
+    }
+
+    /// Fraction of admissions the prompt-affinity router placed via the
+    /// hub (0 with the hub off or a duplicate-free workload).
+    pub fn hub_hit_rate(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            0.0
+        } else {
+            self.hub_hits as f64 / self.outcomes.len() as f64
+        }
+    }
+
+    /// Mean fleet-wide allocated KV blocks per round — strictly lower with
+    /// `--prefix-share` on a duplicate-heavy workload (affinity colocates
+    /// identical prompts, so the radix caches deduplicate them).
+    pub fn mean_used_blocks(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.sum_round_used_blocks as f64 / self.rounds as f64
+        }
     }
 }
 
@@ -386,7 +503,15 @@ where
     std::thread::scope(|scope| {
         let mut set: ShardSet<G, R, P> = ShardSet::new(
             (0..n_shards)
-                .map(|index| Shard::new(index, n_shards, per_shard_capacity, opts.block_size))
+                .map(|index| {
+                    Shard::new(
+                        index,
+                        n_shards,
+                        per_shard_capacity,
+                        opts.block_size,
+                        opts.prefix_share,
+                    )
+                })
                 .collect(),
         );
         // N persistent workers, spawned once for the whole serve call and
@@ -409,6 +534,16 @@ where
         let mut migrations = 0u64;
         let mut admission_blocked_rounds = 0u64;
         let mut deferred_commits = 0u64;
+        let mut hub_hits = 0u64;
+        let mut hub_published = 0u64;
+        let mut hub_live_entries = 0u64;
+        let mut hub_evicted_entries = 0u64;
+        let mut rounds = 0u64;
+        let mut sum_round_used_blocks = 0u64;
+        // The global prefix hub: rebuilt once per round at the barrier
+        // below, read-only everywhere else.
+        let mut hub: Option<PrefixHub> =
+            opts.prefix_share.then(|| PrefixHub::new(opts.block_size));
         // Livelock guard: rounds that neither commit, finish, nor admit make
         // no real progress (a resume or migration alone does not count —
         // resume → preempt can thrash); several in a row means the per-shard
@@ -417,12 +552,54 @@ where
 
         loop {
             let mut progressed = false;
-            let mut round_recompute = vec![0usize; n_shards];
+            let mut round_bills = vec![ResumeBill::default(); n_shards];
+
+            // 0. prefix-hub barrier: this is the deterministic merge point
+            //    between rounds — first audit the previous snapshot (every
+            //    fingerprint must still resolve on its owner or be counted
+            //    as evicted mid-round), then rebuild it from each shard's
+            //    committed prompt prefixes, in shard/slot order. Sizing
+            //    uses the read-only peek_prefix walk, so publication never
+            //    perturbs any cache's LRU order; everything later in the
+            //    round reads this one fixed, versioned snapshot.
+            if let Some(hub) = hub.as_mut() {
+                let audit =
+                    hub.audit(|s, span| set.get(s).engine.cache().peek_prefix(span));
+                hub_live_entries += audit.live;
+                hub_evicted_entries += audit.evicted;
+                hub.begin_round();
+                for shard in set.iter_mut() {
+                    for slot in shard.running.iter().chain(shard.suspended.iter()) {
+                        // engine-minted ids are globally unique — a peer can
+                        // never hold them, so publishing them is dead weight
+                        if slot.session.ledger().exact_accounting() {
+                            continue;
+                        }
+                        let ids = slot.session.prompt_ids();
+                        let cached = shard.engine.cache().peek_prefix(ids);
+                        hub.publish(shard.index, ids, cached);
+                    }
+                    // retired-but-warm prompts (lazy close): advertise what
+                    // the cache still holds; prune spans LRU pressure has
+                    // fully reclaimed since the last barrier
+                    let retired = std::mem::take(&mut shard.retired_prompts);
+                    for ids in retired {
+                        let cached = shard.engine.cache().peek_prefix(&ids);
+                        if cached >= hub.block_size() {
+                            hub.publish(shard.index, &ids, cached);
+                            shard.retired_prompts.push(ids);
+                        }
+                    }
+                }
+                hub_published += hub.published();
+            }
 
             // 1. per-shard resume pass, serial in shard index order (cheap:
-            //    cache bookkeeping only, no generator calls)
+            //    cache bookkeeping only, no generator calls); with the hub
+            //    on, spans published by peers are importable — each resume
+            //    is billed min(block transfer, recompute prefill)
             for shard in set.iter_mut() {
-                round_recompute[shard.index] = shard.resume_pass();
+                round_bills[shard.index] = shard.resume_pass(hub.as_ref(), perf, model);
             }
 
             // 2. cross-shard migration: a session whose resume failed
@@ -470,11 +647,27 @@ where
                     let mut slot = set.get_mut(src).suspended.remove(0);
                     slot.stalled = 0; // fresh patience on the new shard
                     set.get_mut(src).stats.migrations_out += 1;
-                    let dst_shard = set.get_mut(dst);
+                    // The migration cost model: the source shard's cache is
+                    // probed read-only for the migrant's still-warm spans —
+                    // whatever the target must rebuild and the source still
+                    // holds is billed min(NVLink block copy, recompute
+                    // prefill), and the per-migration choice lands in the
+                    // target's ShardStats.
+                    let (dst_shard, src_shard) = set.pair_mut(dst, src);
                     dst_shard.stats.migrations_in += 1;
-                    match dst_shard.try_resume_slot(&mut slot) {
-                        Some(recomputed) => {
-                            round_recompute[dst] += recomputed;
+                    let import =
+                        Some(ImportSource::Peer { cache: src_shard.engine.cache() });
+                    match dst_shard.try_resume_slot(&mut slot, import, perf, model) {
+                        Some(bill) => {
+                            if bill.transfer_tokens > 0 {
+                                dst_shard.stats.migration_transfers += 1;
+                            } else if bill.import_decided {
+                                dst_shard.stats.migration_recomputes += 1;
+                            } else {
+                                // the source had nothing warm left to ship
+                                dst_shard.stats.migration_cold += 1;
+                            }
+                            round_bills[dst].add(bill);
                             dst_shard.running.push(slot);
                         }
                         None => dst_shard.suspended.push(slot),
@@ -483,45 +676,93 @@ where
                 }
             }
 
-            // 3. deterministic global admission: route each queued job to
-            //    the least-loaded shard — (resident sessions, admissions so
-            //    far, shard index), all deterministic units — skipping
-            //    shards whose free-block watermark leaves no headroom.
-            //    Continuous batching: finished slots refill mid-flight.
+            // 3. deterministic global admission. Prompt-affinity first: a
+            //    request whose prompt has a published prefix in the hub is
+            //    routed to the shard holding the longest one — sharing is
+            //    recovered by *placement*, before any copying is needed.
+            //    Fallback: the least-loaded shard by *predicted KV
+            //    footprint* — Σ policy-estimated blocks of the resident
+            //    sessions (then admissions so far, then shard index; all
+            //    deterministic units) — skipping shards whose free-block
+            //    watermark leaves no headroom. Balancing footprints instead
+            //    of session counts packs shards to what their sessions will
+            //    actually hold, cutting downstream migrations. Continuous
+            //    batching: finished slots refill mid-flight.
             loop {
                 let resident_total: usize = set.iter().map(|s| s.resident()).sum();
                 if resident_total >= concurrency {
                     break;
                 }
-                let prompt = match queue.front() {
-                    Some((_, job)) => job.lm.prompt_tokens(),
+                let (prompt, prompt_ids) = match queue.front() {
+                    Some((_, job)) => (job.lm.prompt_tokens(), job.lm.prompt_token_ids()),
                     None => break,
                 };
-                let mut order: Vec<usize> = (0..n_shards).collect();
-                order.sort_by_key(|&s| (set.get(s).resident(), set.get(s).stats.admitted, s));
                 let mut target: Option<usize> = None;
-                for &s in &order {
-                    if set.get(s).engine.can_admit(prompt) {
-                        target = Some(s);
-                        break;
+                let mut via_hub = false;
+                if let (Some(hub), Some(ids)) = (hub.as_ref(), prompt_ids.as_ref()) {
+                    if let Some(m) = hub.lookup(ids) {
+                        if set.get(m.shard).engine.can_admit(prompt) {
+                            target = Some(m.shard);
+                            via_hub = true;
+                        }
                     }
-                    // Second chance for an *empty* shard sitting on
-                    // reclaimable memory: warm KV orphaned by sessions that
-                    // migrated away serves nobody once nothing is resident,
-                    // but still counts against the free-block watermark —
-                    // flush it so the shard's partition of the budget cannot
-                    // stay blocked for the rest of the run. (A shard with
-                    // resident sessions keeps its warm KV: its own
-                    // commit/resume pressure paths reclaim lazily, and on a
-                    // single shard resident == 0 implies an empty cache, so
-                    // behavior there is unchanged.)
-                    if set.get(s).resident() == 0
-                        && set.get(s).engine.pressure().evictable_blocks > 0
-                    {
-                        set.get_mut(s).engine.relieve_pressure(usize::MAX);
+                }
+                if target.is_none() {
+                    let mut order: Vec<usize> = (0..n_shards).collect();
+                    order.sort_by_key(|&s| {
+                        (set.get(s).predicted_load(), set.get(s).stats.admitted, s)
+                    });
+                    for &s in &order {
                         if set.get(s).engine.can_admit(prompt) {
                             target = Some(s);
                             break;
+                        }
+                        // Second chance for an *empty* shard sitting on
+                        // reclaimable memory: warm KV orphaned by sessions
+                        // that migrated away serves nobody once nothing is
+                        // resident, but still counts against the free-block
+                        // watermark — flush it so the shard's partition of
+                        // the budget cannot stay blocked for the rest of
+                        // the run. (A shard with resident sessions keeps
+                        // its warm KV: its own commit/resume pressure paths
+                        // reclaim lazily, and on a single shard
+                        // resident == 0 implies an empty cache, so behavior
+                        // there is unchanged.)
+                        if set.get(s).resident() == 0
+                            && set.get(s).engine.pressure().evictable_blocks > 0
+                        {
+                            set.get_mut(s).engine.relieve_pressure(usize::MAX);
+                            if set.get(s).engine.can_admit(prompt) {
+                                target = Some(s);
+                                break;
+                            }
+                        }
+                        // Third chance for a *busy* shard whose evictable
+                        // surplus is retired-but-warm KV from lazily closed
+                        // real-id sessions (no suspended session of its own
+                        // — running sessions keep their working sets
+                        // pinned, so the surplus belongs to nobody who can
+                        // resume here): trim exactly the admission deficit,
+                        // LRU-first. The warm cache exists to help future
+                        // requests, never to starve admission — without
+                        // this, lazy close would wedge a tight-budget
+                        // real-id shard for the rest of the run. Gated on
+                        // lazy_closed so minted-id scheduling is untouched.
+                        if set.get(s).resident() > 0
+                            && set.get(s).lazy_closed > 0
+                            && set.get(s).suspended.is_empty()
+                        {
+                            let sig = set.get(s).engine.pressure();
+                            let need = set.get(s).engine.blocks_for_step(prompt)
+                                + sig.low_watermark_blocks;
+                            let deficit = need.saturating_sub(sig.free_blocks);
+                            if deficit > 0 && deficit <= sig.evictable_blocks {
+                                set.get_mut(s).engine.relieve_pressure(deficit);
+                                if set.get(s).engine.can_admit(prompt) {
+                                    target = Some(s);
+                                    break;
+                                }
+                            }
                         }
                     }
                 }
@@ -530,6 +771,12 @@ where
                     break;
                 };
                 let (id, job) = queue.pop_front().expect("front checked above");
+                // predicted footprint: prompt blocks + the policy's
+                // retained-frontier estimate (one block per retained
+                // trajectory) — a routing unit, never a reservation
+                let predicted_blocks = set.get(target).engine.blocks_for(prompt)
+                    + (params.width as f64 * job.policy.kv_retention(params.width)).ceil()
+                        as usize;
                 let session = SearchSession::new(
                     &mut set.get_mut(target).engine,
                     job.lm,
@@ -537,8 +784,18 @@ where
                     job.policy,
                     params,
                 );
-                set.get_mut(target).running.push(Slot { id, seq: admit_seq, stalled: 0, session });
+                set.get_mut(target).running.push(Slot {
+                    id,
+                    seq: admit_seq,
+                    stalled: 0,
+                    predicted_blocks,
+                    session,
+                });
                 set.get_mut(target).stats.admitted += 1;
+                if via_hub {
+                    set.get_mut(target).stats.hub_hits += 1;
+                    hub_hits += 1;
+                }
                 admit_seq += 1;
                 progressed = true;
             }
@@ -552,7 +809,7 @@ where
             //    pruning + policy allocation + expand-request build — no
             //    generator calls, no KV charge), shard-parallel; the
             //    coordinator merges the plans and finished outcomes
-            let planned = runtime::plan_rounds(&mut set, pool.as_ref(), &round_recompute);
+            let planned = runtime::plan_rounds(&mut set, pool.as_ref(), &round_bills);
             let mut plans: Vec<Option<runtime::RoundPlan>> = Vec::with_capacity(n_shards);
             for p in planned {
                 let Some(p) = p else {
@@ -588,6 +845,9 @@ where
             modeled_seconds += round_seconds;
             peak_step_concurrency = peak_step_concurrency.max(round_step_problems);
             peak = peak.max(set.iter().map(|s| s.engine.live_tokens()).sum());
+            rounds += 1;
+            sum_round_used_blocks +=
+                set.iter().map(|s| s.engine.used_blocks() as u64).sum::<u64>();
 
             if progressed {
                 stalled_rounds = 0;
@@ -602,6 +862,13 @@ where
                     n_shards
                 );
             }
+        }
+        // final hub audit: the last snapshot's fingerprints are classified
+        // too, so published == live + evicted holds over the whole run
+        if let Some(hub) = hub.as_ref() {
+            let audit = hub.audit(|s, span| set.get(s).engine.cache().peek_prefix(span));
+            hub_live_entries += audit.live;
+            hub_evicted_entries += audit.evicted;
         }
         // retire the worker pool before folding the report (the enclosing
         // scope joins the exited workers)
@@ -624,6 +891,14 @@ where
         let recompute_tokens: u64 = set.iter().map(|s| s.stats.recompute_tokens).sum();
         let peak_used_blocks: usize = set.iter().map(|s| s.stats.peak_used_blocks).sum();
         let total_blocks: usize = set.iter().map(|s| s.engine.total_blocks()).sum();
+        let imported_kv_tokens: u64 = set.iter().map(|s| s.stats.imported_kv_tokens).sum();
+        let import_transfers: u64 = set.iter().map(|s| s.stats.import_transfers).sum();
+        let import_recomputes: u64 = set.iter().map(|s| s.stats.import_recomputes).sum();
+        let migration_transfers: u64 =
+            set.iter().map(|s| s.stats.migration_transfers).sum();
+        let migration_recomputes: u64 =
+            set.iter().map(|s| s.stats.migration_recomputes).sum();
+        let migration_cold: u64 = set.iter().map(|s| s.stats.migration_cold).sum();
         ServeReport {
             outcomes: outcomes
                 .into_iter()
@@ -644,6 +919,19 @@ where
             shards: n_shards,
             pipeline: opts.pipeline,
             migrations,
+            prefix_share: opts.prefix_share,
+            hub_hits,
+            hub_published,
+            hub_live_entries,
+            hub_evicted_entries,
+            imported_kv_tokens,
+            import_transfers,
+            import_recomputes,
+            migration_transfers,
+            migration_recomputes,
+            migration_cold,
+            rounds,
+            sum_round_used_blocks,
             shard_stats: set.into_inner().into_iter().map(|s| s.stats).collect(),
         }
     })

@@ -36,8 +36,9 @@
 //! single-threaded schedule for any worker count, pipelined or not.
 
 use super::{BatchRecord, ShardStats};
-use crate::engine::batch::{BatchEngine, ExpandRequest};
+use crate::engine::batch::{BatchEngine, ExpandRequest, ImportSource};
 use crate::engine::perfmodel::{BatchStats, PerfModel};
+use crate::kvcache::prefixhub::PrefixHub;
 use crate::lm::StepGenerator;
 use crate::reward::RewardModel;
 use crate::search::driver::{SearchOutcome, SearchSession};
@@ -56,7 +57,40 @@ pub(crate) struct Slot<G, R, P> {
     /// sustained-pressure signal the migration policy keys on. Reset on any
     /// successful resume and on migration (the new shard gets a fresh try).
     pub(crate) stalled: u32,
+    /// Policy-estimated KV footprint of this session, in blocks
+    /// (prompt blocks + retained-frontier estimate) — the workload-aware
+    /// load unit the admission router balances instead of raw session
+    /// counts. Travels with the session on migration.
+    pub(crate) predicted_blocks: usize,
     pub(crate) session: SearchSession<G, R, P>,
+}
+
+/// What one round's resume pass (local resumes plus migrated-in resumes)
+/// costs a shard, split by the `min(transfer, recompute)` import decision:
+/// `recompute_tokens` are re-prefilled locally, `transfer_tokens` arrive as
+/// cross-shard block copies over the interconnect. Purely a costing split —
+/// the cache ends up identical either way.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct ResumeBill {
+    pub(crate) recompute_tokens: usize,
+    pub(crate) transfer_tokens: usize,
+    /// Whether a `min(transfer, recompute)` decision actually ran — i.e.
+    /// the import source held a non-empty span. A resume with nothing
+    /// importable is billed plain recompute without any "choice" having
+    /// been made, and telemetry must not pretend otherwise.
+    pub(crate) import_decided: bool,
+}
+
+impl ResumeBill {
+    pub(crate) fn add(&mut self, other: ResumeBill) {
+        self.recompute_tokens += other.recompute_tokens;
+        self.transfer_tokens += other.transfer_tokens;
+        self.import_decided |= other.import_decided;
+    }
+
+    pub(crate) fn any(&self) -> bool {
+        self.recompute_tokens > 0 || self.transfer_tokens > 0
+    }
 }
 
 /// One shard of the serve scheduler: a shared-nothing engine plus the
@@ -68,6 +102,24 @@ pub(crate) struct Shard<G, R, P> {
     pub(crate) engine: BatchEngine,
     pub(crate) running: Vec<Slot<G, R, P>>,
     pub(crate) suspended: Vec<Slot<G, R, P>>,
+    /// Whether the serve run publishes to the global prefix hub. Gates the
+    /// `retired_prompts` bookkeeping: with sharing off nothing ever drains
+    /// that list, so recording into it would only leak.
+    pub(crate) prefix_share: bool,
+    /// Prompts of finished real-surface-id sessions, whose prompt KV was
+    /// kept *warm* (unpinned, evictable — see
+    /// `BatchEngine::close_keep_cached`; decode branches were released).
+    /// The publication barrier fingerprints whatever of them is still
+    /// cached into the prefix hub, so future duplicate requests route here
+    /// and re-pin the warm prefix for free; entries fully evicted by LRU
+    /// pressure are pruned at the barrier. Only maintained when
+    /// `prefix_share` is on.
+    pub(crate) retired_prompts: Vec<Vec<u32>>,
+    /// Real-surface-id sessions that finished here with a lazy close —
+    /// i.e. this shard may hold retired-but-warm KV that no resident
+    /// session owns. The admission router uses this (hub on or off) to
+    /// know the shard's evictable surplus is safe to trim for admission.
+    pub(crate) lazy_closed: u64,
     pub(crate) stats: ShardStats,
 }
 
@@ -83,9 +135,10 @@ pub(crate) struct RoundPlan {
     /// plan time. An empty entry marks a slot that already holds a prepared
     /// step (deferred or preempted mid-commit) and only needs recommit.
     pub(crate) expands: Vec<Vec<ExpandRequest>>,
-    /// Tokens recomputed by this shard's resume pass (and migrated-in
-    /// resumes) ahead of this round — charged to the round's commit cost.
-    pub(crate) recompute_tokens: usize,
+    /// What this shard's resume pass (and migrated-in resumes) ahead of
+    /// this round costs — recompute prefill vs imported block transfers —
+    /// charged to the round's commit cost.
+    pub(crate) bill: ResumeBill,
 }
 
 /// What [`Shard::plan_round`] produced: the plan plus the outcomes of
@@ -111,6 +164,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
         n_shards: usize,
         capacity_tokens: usize,
         block_size: usize,
+        prefix_share: bool,
     ) -> Self {
         // Disjoint minted-id residue classes per shard keep the "ids are
         // never reused" invariant fleet-wide, so a migrated session can
@@ -127,7 +181,16 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
             total_blocks: engine.total_blocks(),
             ..Default::default()
         };
-        Self { index, engine, running: Vec::new(), suspended: Vec::new(), stats }
+        Self {
+            index,
+            engine,
+            running: Vec::new(),
+            suspended: Vec::new(),
+            prefix_share,
+            retired_prompts: Vec::new(),
+            lazy_closed: 0,
+            stats,
+        }
     }
 
     /// Problems resident on this shard (running + suspended) — the
@@ -136,16 +199,52 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
         self.running.len() + self.suspended.len()
     }
 
+    /// Σ policy-predicted KV blocks of the sessions resident here — the
+    /// workload-aware tiebreak the admission router balances (ETS policies
+    /// predict smaller footprints, so footprint balancing packs more of
+    /// them before pressure — and migrations — start).
+    pub(crate) fn predicted_load(&self) -> usize {
+        self.running.iter().chain(self.suspended.iter()).map(|s| s.predicted_blocks).sum()
+    }
+
     /// One resume attempt for `slot` on this shard's engine, with a single
-    /// relieve-and-retry on pressure. Returns the recomputed tokens on
-    /// success. The resume protocol lives only here — both the local
-    /// resume pass and the migration path go through it.
-    pub(crate) fn try_resume_slot(&mut self, slot: &mut Slot<G, R, P>) -> Option<usize> {
+    /// relieve-and-retry on pressure. On success the resume is billed
+    /// through the `min(transfer, recompute)` import decision (`import`
+    /// names where missing spans could be copied from: the prefix hub for
+    /// local resumes, the source shard's cache for migrations). The resume
+    /// protocol lives only here — both paths go through it.
+    pub(crate) fn try_resume_slot(
+        &mut self,
+        slot: &mut Slot<G, R, P>,
+        import: Option<ImportSource<'_>>,
+        perf: &PerfModel,
+        model: &ModelProfile,
+    ) -> Option<ResumeBill> {
         for attempt in 0..2 {
-            match slot.session.try_resume(&mut self.engine) {
-                Ok(recomputed) => {
+            match slot.session.try_resume_imported(&mut self.engine, import) {
+                Ok(stats) => {
                     self.stats.resumes += 1;
-                    return Some(recomputed);
+                    let mut bill = ResumeBill {
+                        recompute_tokens: stats.recomputed_tokens,
+                        transfer_tokens: 0,
+                        import_decided: stats.imported_tokens > 0,
+                    };
+                    if stats.imported_tokens > 0 {
+                        let d = perf.import_choice(
+                            stats.imported_tokens,
+                            self.engine.block_size(),
+                            model,
+                        );
+                        if d.use_transfer() {
+                            bill.transfer_tokens = stats.imported_tokens;
+                            bill.recompute_tokens -= stats.imported_tokens;
+                            self.stats.import_transfers += 1;
+                            self.stats.imported_kv_tokens += stats.imported_tokens as u64;
+                        } else {
+                            self.stats.import_recomputes += 1;
+                        }
+                    }
+                    return Some(bill);
                 }
                 Err(p) => {
                     if attempt == 0 && self.engine.relieve(&p) > 0 {
@@ -160,19 +259,28 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
 
     /// Round step 1: resume preempted sessions, oldest admission first
     /// (FIFO — younger sessions never leapfrog a blocked elder). Returns
-    /// tokens recomputed; a failed attempt bumps that session's `stalled`
-    /// counter (the migration trigger), a success clears it.
-    pub(crate) fn resume_pass(&mut self) -> usize {
+    /// the round's resume bill; a failed attempt bumps that session's
+    /// `stalled` counter (the migration trigger), a success clears it.
+    /// With the prefix hub on, spans a peer shard published are importable
+    /// instead of recomputed.
+    pub(crate) fn resume_pass(
+        &mut self,
+        hub: Option<&PrefixHub>,
+        perf: &PerfModel,
+        model: &ModelProfile,
+    ) -> ResumeBill {
         let mut pending = std::mem::take(&mut self.suspended);
         pending.sort_by_key(|s| s.seq);
-        let mut recompute = 0usize;
+        let mut bill = ResumeBill::default();
         for mut slot in pending {
             // self.suspended doubles as the still-suspended list: attempt
             // resumes only while it is empty (strict FIFO)
             let resumed = if self.suspended.is_empty() {
-                match self.try_resume_slot(&mut slot) {
-                    Some(recomputed) => {
-                        recompute += recomputed;
+                let import =
+                    hub.map(|hub| ImportSource::Hub { hub, local_shard: self.index });
+                match self.try_resume_slot(&mut slot, import, perf, model) {
+                    Some(b) => {
+                        bill.add(b);
                         true
                     }
                     None => {
@@ -190,7 +298,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
                 self.suspended.push(slot);
             }
         }
-        recompute
+        bill
     }
 
     /// Phase 1 (worker thread, shard-parallel): finish drained sessions and
@@ -199,7 +307,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
     /// — releasing their KV — but never calls the generator and never
     /// *allocates* KV: everything the execute phase needs is in the
     /// returned [`RoundPlan`]'s plain data.
-    pub(crate) fn plan_round(&mut self, recompute_tokens: usize) -> PlannedRound {
+    pub(crate) fn plan_round(&mut self, bill: ResumeBill) -> PlannedRound {
         let mut finished: Vec<(usize, SearchOutcome)> = Vec::new();
         let mut progressed = false;
         let mut active: Vec<Slot<G, R, P>> = Vec::new();
@@ -213,8 +321,20 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
             }
             let requests = slot.session.next_requests(&mut self.engine);
             if requests.is_empty() {
-                // release-on-complete so this session's blocks refill
-                // slots on the next admission pass
+                // real-surface-id sessions finish with a *lazy* close (KV
+                // stays warm and evictable): remember the prompt so the
+                // publication barrier can advertise the retired span for
+                // cross-request reuse. Minted-id sessions release eagerly
+                // so their blocks refill slots on the next admission pass.
+                if !slot.session.ledger().exact_accounting() {
+                    self.lazy_closed += 1;
+                    if self.prefix_share {
+                        let ids = slot.session.prompt_ids();
+                        if !self.retired_prompts.iter().any(|p| p == ids) {
+                            self.retired_prompts.push(ids.to_vec());
+                        }
+                    }
+                }
                 finished.push((slot.id, slot.session.finish(&mut self.engine)));
                 progressed = true;
             } else {
@@ -224,7 +344,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
         }
         self.running = active;
         PlannedRound {
-            plan: RoundPlan { shard: self.index, expands, recompute_tokens },
+            plan: RoundPlan { shard: self.index, expands, bill },
             finished,
             progressed,
         }
@@ -267,7 +387,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
         &mut self,
         perf: &PerfModel,
         model: &ModelProfile,
-        recompute_tokens: usize,
+        bill: ResumeBill,
         injected_decode_seconds: f64,
         pipeline: bool,
     ) -> RoundResult {
@@ -278,7 +398,12 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
         // failure: evict unpinned branches, then preempt from the tail
         // (never the committing slot), then defer to the next round
         self.running.sort_by_key(|s| s.seq);
-        let mut rec = BatchRecord { shard: self.index, recompute_tokens, ..Default::default() };
+        let mut rec = BatchRecord {
+            shard: self.index,
+            recompute_tokens: bill.recompute_tokens,
+            transfer_kv_tokens: bill.transfer_tokens,
+            ..Default::default()
+        };
         let mut i = 0usize;
         while i < self.running.len() {
             let n_requests = self.running[i].session.pending_requests();
@@ -328,6 +453,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
 
         // close the round: telemetry, hard-budget assertion, perf cost
         rec.resident_kv_tokens = self.engine.live_tokens();
+        rec.used_blocks = self.engine.used_blocks();
         self.stats.peak_resident_kv_tokens =
             self.stats.peak_resident_kv_tokens.max(rec.resident_kv_tokens);
         self.stats.peak_used_blocks =
@@ -340,10 +466,12 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
             self.engine.total_blocks()
         );
         // A record exists when the round did costed work: commits, resume
-        // recompute, or backend decode time spent on steps whose commits
-        // all deferred under pressure (the device ran either way).
+        // recompute or imported transfers, or backend decode time spent on
+        // steps whose commits all deferred under pressure (the device ran
+        // either way).
         let record = if rec.problems > 0
             || rec.recompute_tokens > 0
+            || rec.transfer_kv_tokens > 0
             || injected_decode_seconds > 0.0
         {
             // decode reads only what the committed sessions pin; wave
@@ -360,6 +488,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
                 read_kv_tokens: read,
                 resident_kv_tokens: resident,
                 recompute_prefill_tokens: rec.recompute_tokens,
+                transfer_kv_tokens: rec.transfer_kv_tokens,
                 block_size: self.engine.block_size(),
                 injected_decode_seconds,
             };
@@ -385,7 +514,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
         pipeline: bool,
     ) -> RoundResult {
         let injected = self.decode(&plan);
-        self.commit_round(perf, model, plan.recompute_tokens, injected, pipeline)
+        self.commit_round(perf, model, plan.bill, injected, pipeline)
     }
 }
 
@@ -423,6 +552,25 @@ impl<G, R, P> ShardSet<G, R, P> {
         self.slots[i] = Some(shard);
     }
 
+    /// Borrow shard `a` mutably and shard `b` immutably at once — the
+    /// migration path resumes on the target while probing the *source*
+    /// shard's cache read-only for transferable warm spans.
+    pub(crate) fn pair_mut(
+        &mut self,
+        a: usize,
+        b: usize,
+    ) -> (&mut Shard<G, R, P>, &Shard<G, R, P>) {
+        assert_ne!(a, b, "pair_mut of a shard with itself");
+        let expect_a = "shard is out with its worker";
+        if a < b {
+            let (lo, hi) = self.slots.split_at_mut(b);
+            (lo[a].as_mut().expect(expect_a), hi[0].as_ref().expect(expect_a))
+        } else {
+            let (lo, hi) = self.slots.split_at_mut(a);
+            (hi[0].as_mut().expect(expect_a), lo[b].as_ref().expect(expect_a))
+        }
+    }
+
     pub(crate) fn iter(&self) -> impl Iterator<Item = &Shard<G, R, P>> {
         self.slots.iter().map(|s| s.as_ref().expect("shard is out with its worker"))
     }
@@ -440,7 +588,7 @@ impl<G, R, P> ShardSet<G, R, P> {
 /// A unit of round work moving coordinator → worker.
 enum RoundMsg<G, R, P> {
     /// Run [`Shard::plan_round`] (frontier pruning + policy allocation).
-    Plan { shard: Shard<G, R, P>, recompute_tokens: usize },
+    Plan { shard: Shard<G, R, P>, bill: ResumeBill },
     /// Run decode + commit for an already-built [`RoundPlan`].
     Execute { shard: Shard<G, R, P>, plan: RoundPlan },
 }
@@ -489,8 +637,8 @@ where
             scope.spawn(move || {
                 while let Ok(msg) = rx.recv() {
                     let reply = match msg {
-                        RoundMsg::Plan { mut shard, recompute_tokens } => {
-                            let planned = shard.plan_round(recompute_tokens);
+                        RoundMsg::Plan { mut shard, bill } => {
+                            let planned = shard.plan_round(bill);
                             RoundReply::Planned { shard, planned }
                         }
                         RoundMsg::Execute { mut shard, plan } => {
@@ -540,17 +688,17 @@ where
 pub(crate) fn plan_rounds<G, R, P>(
     set: &mut ShardSet<G, R, P>,
     pool: Option<&WorkerPool<G, R, P>>,
-    round_recompute: &[usize],
+    round_bills: &[ResumeBill],
 ) -> Vec<Option<PlannedRound>>
 where
     G: StepGenerator + Send,
     R: RewardModel + Send,
     P: SearchPolicy + Send,
 {
-    debug_assert_eq!(round_recompute.len(), set.len());
+    debug_assert_eq!(round_bills.len(), set.len());
     let n = set.len();
     let busy = |set: &ShardSet<G, R, P>, i: usize| {
-        !set.get(i).running.is_empty() || round_recompute[i] > 0
+        !set.get(i).running.is_empty() || round_bills[i].any()
     };
     let mut planned: Vec<Option<PlannedRound>> = (0..n).map(|_| None).collect();
     match pool {
@@ -559,7 +707,7 @@ where
             for i in 0..n {
                 if busy(set, i) {
                     let shard = set.take(i);
-                    pool.send(i, RoundMsg::Plan { shard, recompute_tokens: round_recompute[i] });
+                    pool.send(i, RoundMsg::Plan { shard, bill: round_bills[i] });
                     dispatched.push(i);
                 }
             }
@@ -572,7 +720,7 @@ where
         None => {
             for i in 0..n {
                 if busy(set, i) {
-                    planned[i] = Some(set.get_mut(i).plan_round(round_recompute[i]));
+                    planned[i] = Some(set.get_mut(i).plan_round(round_bills[i]));
                 }
             }
         }

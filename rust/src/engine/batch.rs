@@ -35,6 +35,7 @@
 //! which is what makes the multi-problem `serve` path's resident-set numbers
 //! and the per-problem search metrics mutually consistent by construction.
 
+use crate::kvcache::prefixhub::PrefixHub;
 use crate::kvcache::{KvPressure, NodeIdx, RadixCache, DEFAULT_BLOCK_SIZE};
 use crate::tree::{NodeId, SearchTree};
 use std::collections::{HashMap, HashSet};
@@ -92,6 +93,13 @@ impl KvLedger {
         self.locked.values().copied().chain(self.prompt_node)
     }
 
+    /// Token ids of the problem's prompt — what the coordinator fingerprints
+    /// into the global prefix hub at round barriers (and what prompt-affinity
+    /// routing matches admissions against).
+    pub fn prompt_ids(&self) -> &[u32] {
+        &self.prompt_ids
+    }
+
     /// Whether cache accounting is exactly the tree accounting (engine-minted
     /// ids only; real-token generators can legitimately dedup further).
     pub fn exact_accounting(&self) -> bool {
@@ -117,6 +125,43 @@ pub struct ResumeStats {
     pub recomputed_tokens: usize,
     /// Tokens still resident (survived eviction, re-pinned for free).
     pub retained_tokens: usize,
+    /// Of `recomputed_tokens`, the span an [`ImportSource`] peer still holds
+    /// — *importable* as a cross-shard block transfer instead of a local
+    /// recompute prefill. Always `<= recomputed_tokens`; purely a costing
+    /// signal (the cache state transition is the same insert either way),
+    /// so the scheduler's `min(transfer, recompute)` choice can never
+    /// change search results.
+    pub imported_tokens: usize,
+}
+
+/// Where a resume may *import* a missing KV span from instead of
+/// recomputing it. Read-only against every cache it touches — sizing an
+/// import must not perturb anyone's LRU order.
+#[derive(Clone, Copy)]
+pub enum ImportSource<'a> {
+    /// The coordinator's global prefix directory: spans published by peer
+    /// shards at the last round barrier. Entries owned by `local_shard`
+    /// itself are ignored (importing from yourself is a no-op).
+    Hub { hub: &'a PrefixHub, local_shard: usize },
+    /// A specific peer's cache, probed directly with the read-only
+    /// `peek_prefix` walk — the migration path, where the source shard is
+    /// known and its warm (unpinned, not-yet-evicted) copy of the migrant's
+    /// working set is the transferable span.
+    Peer { cache: &'a RadixCache },
+}
+
+impl ImportSource<'_> {
+    /// Tokens of `seq`'s prefix the import source holds (whole-block
+    /// granularity for the hub; token granularity for a direct peer probe).
+    fn available(&self, seq: &[u32]) -> usize {
+        match self {
+            ImportSource::Hub { hub, local_shard } => hub
+                .lookup(seq)
+                .filter(|m| m.shard != *local_shard)
+                .map_or(0, |m| m.tokens),
+            ImportSource::Peer { cache } => cache.peek_prefix(seq),
+        }
+    }
 }
 
 /// Shared batched engine: radix cache + token-id mint + batch telemetry.
@@ -583,6 +628,23 @@ impl BatchEngine {
         ledger: &mut KvLedger,
         tree: &SearchTree,
     ) -> Result<ResumeStats, KvPressure> {
+        self.try_resume_with(ledger, tree, None)
+    }
+
+    /// [`BatchEngine::try_resume`] with an optional [`ImportSource`]: each
+    /// re-inserted sequence's *missing* span is intersected with what the
+    /// source holds, and the overlap is reported as
+    /// [`ResumeStats::imported_tokens`] for the scheduler's
+    /// `min(transfer, recompute)` costing. Per-insert capping by that
+    /// insert's own `new_tokens` makes the sum exact (inserts dedup against
+    /// each other through the cache, so no span is counted twice). The
+    /// cache mutation is identical with or without a source.
+    pub fn try_resume_with(
+        &mut self,
+        ledger: &mut KvLedger,
+        tree: &SearchTree,
+        import: Option<ImportSource<'_>>,
+    ) -> Result<ResumeStats, KvPressure> {
         let seqs = Self::suspended_sequences(ledger, tree);
         let need = self.resume_need_blocks_for(ledger, tree, &seqs);
         // MRU-touch the still-cached parts of the working set this resume
@@ -598,9 +660,25 @@ impl BatchEngine {
         self.try_reserve(need)?;
         self.cache.release_reservation(need);
         let mut stats = ResumeStats::default();
+        // The portion of one insert's recomputed suffix a peer could have
+        // shipped instead: the peer's prefix coverage beyond what was
+        // already resident locally, capped by what this insert actually
+        // added (`new_tokens` are disjoint across the resume's inserts).
+        fn importable(
+            import: &Option<ImportSource<'_>>,
+            seq: &[u32],
+            out: &crate::kvcache::InsertOutcome,
+        ) -> usize {
+            import
+                .as_ref()
+                .map_or(0, |src| src.available(seq))
+                .saturating_sub(out.shared_tokens)
+                .min(out.new_tokens)
+        }
         let out = self.cache.insert(&ledger.prompt_ids);
         stats.recomputed_tokens += out.new_tokens;
         stats.retained_tokens += out.shared_tokens;
+        stats.imported_tokens += importable(&import, &ledger.prompt_ids, &out);
         self.cache.lock(out.node);
         ledger.prompt_node = Some(out.node);
         let leaves = std::mem::take(&mut ledger.suspended_leaves);
@@ -608,13 +686,40 @@ impl BatchEngine {
             let out = self.cache.insert(seq);
             stats.recomputed_tokens += out.new_tokens;
             stats.retained_tokens += out.shared_tokens;
+            stats.imported_tokens += importable(&import, seq, &out);
             self.cache.lock(out.node);
             ledger.locked.insert(leaf, out.node);
         }
+        debug_assert!(stats.imported_tokens <= stats.recomputed_tokens);
         self.tokens_admitted += stats.recomputed_tokens as u64;
         self.tokens_recomputed += stats.recomputed_tokens as u64;
         self.resumes += 1;
         Ok(stats)
+    }
+
+    /// Close a problem but keep its *prompt* KV cached: decode branches are
+    /// released exactly as in [`BatchEngine::close`] (step spans are not
+    /// reusable across requests — minted ids never, sampled continuations
+    /// practically never — so keeping them warm would only dilute the
+    /// cache), while the prompt path is merely unpinned — warm and evictable, like
+    /// a suspend that will never resume. This is the SGLang/vLLM
+    /// cross-*request* reuse semantic: a future request with the same
+    /// prompt re-pins the span for free instead of re-prefilling, which is
+    /// what the global prefix hub advertises across shards. LRU eviction
+    /// reclaims the warm span under actual pressure. Idempotent.
+    pub fn close_keep_cached(&mut self, ledger: &mut KvLedger) {
+        let mut freed = 0usize;
+        // release decode branches first: the walk-up stops at the prompt
+        // path, which is still pinned until the unlock below
+        for (_, idx) in ledger.locked.drain() {
+            self.cache.unlock(idx);
+            freed += self.cache.release_branch(idx);
+        }
+        ledger.suspended_leaves.clear();
+        if let Some(p) = ledger.prompt_node.take() {
+            self.cache.unlock(p); // warm, not released — future prompts re-pin it
+        }
+        self.tokens_reclaimed += freed as u64;
     }
 
     /// Close a problem: unpin everything it holds (including the prompt) and
@@ -910,6 +1015,77 @@ mod tests {
         eng.close(&mut hog);
         let stats = eng.try_resume(&mut ledger, &tree).unwrap();
         assert_eq!(stats.recomputed_tokens, 78, "full working set recomputed");
+        eng.close(&mut ledger);
+        eng.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn resume_reports_importable_span_from_a_peer_cache() {
+        // Suspend on engine A, evict, then resume on engine B while A still
+        // holds the working set warm: everything B recomputes is importable
+        // from A — and the import signal changes no accounting.
+        let mut src = BatchEngine::for_shard(1 << 16, 16, 0, 2);
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(32);
+        let mut ledger = src.register(32);
+        let a = child(&mut tree, root, 20);
+        src.admit(&mut ledger, &mut tree, &[a]);
+        src.suspend(&mut ledger);
+        // resume on a different shard's engine, importing from the source
+        let mut dst = BatchEngine::for_shard(1 << 16, 16, 1, 2);
+        let stats = dst
+            .try_resume_with(
+                &mut ledger,
+                &tree,
+                Some(ImportSource::Peer { cache: src.cache() }),
+            )
+            .unwrap();
+        assert_eq!(stats.recomputed_tokens, 52, "cold target recomputes everything");
+        assert_eq!(
+            stats.imported_tokens, 52,
+            "the warm source covers the full recomputed span"
+        );
+        assert_eq!(dst.live_kv(&ledger), 52);
+        dst.close(&mut ledger);
+        dst.check_invariants().unwrap();
+        src.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hub_import_skips_own_shard_and_respects_block_granularity() {
+        use crate::kvcache::prefixhub::PrefixHub;
+        let mut eng = BatchEngine::with_block_size(1 << 16, 16);
+        let mut tree = SearchTree::new();
+        tree.init_root(32);
+        let prompt_ids: Vec<u32> = (0..32).map(|t| 500_000 + t).collect();
+        let mut ledger = eng.register_with_prompt(prompt_ids.clone());
+        eng.suspend(&mut ledger);
+        eng.relieve_pressure(usize::MAX); // cold resume
+        let mut hub = PrefixHub::new(16);
+        hub.begin_round();
+        hub.publish(3, &prompt_ids, 32);
+        // entries owned by the local shard are not importable
+        let stats = eng
+            .try_resume_with(
+                &mut ledger,
+                &tree,
+                Some(ImportSource::Hub { hub: &hub, local_shard: 3 }),
+            )
+            .unwrap();
+        assert_eq!(stats.recomputed_tokens, 32);
+        assert_eq!(stats.imported_tokens, 0, "own-shard entries never import");
+        // a peer's entry imports the whole-block overlap of the recompute
+        eng.suspend(&mut ledger);
+        eng.relieve_pressure(usize::MAX);
+        let stats = eng
+            .try_resume_with(
+                &mut ledger,
+                &tree,
+                Some(ImportSource::Hub { hub: &hub, local_shard: 1 }),
+            )
+            .unwrap();
+        assert_eq!(stats.imported_tokens, 32);
+        assert!(stats.imported_tokens <= stats.recomputed_tokens);
         eng.close(&mut ledger);
         eng.check_invariants().unwrap();
     }

@@ -10,6 +10,9 @@ pub mod perfmodel;
 pub mod pjrt_lm;
 
 pub use batch::{
-    BatchEngine, ExpandRequest, KvLedger, PressureSignals, ResumeStats, DEFAULT_KV_CAPACITY,
+    BatchEngine, ExpandRequest, ImportSource, KvLedger, PressureSignals, ResumeStats,
+    DEFAULT_KV_CAPACITY,
 };
-pub use perfmodel::{BatchStats, Hardware, LatencyEstimate, PerfModel, RoundCost, H100_NVL};
+pub use perfmodel::{
+    BatchStats, Hardware, LatencyEstimate, PerfModel, RoundCost, TransferDecision, H100_NVL,
+};

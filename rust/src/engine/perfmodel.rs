@@ -28,14 +28,19 @@ pub struct Hardware {
     pub mem_cap: f64,
     /// Peak dense compute, FLOP/s (bf16).
     pub peak_flops: f64,
+    /// Inter-device interconnect bandwidth, bytes/s (NVLink-class): what a
+    /// cross-shard KV block transfer pays per byte instead of a recompute
+    /// prefill. Serving replicas modeled by shards are assumed link-peers.
+    pub link_bw: f64,
 }
 
-/// NVIDIA H100 NVL (the paper's testbed GPU).
+/// NVIDIA H100 NVL (the paper's testbed GPU; NVLink 4 pairs).
 pub const H100_NVL: Hardware = Hardware {
     name: "h100-nvl",
     mem_bw: 3.35e12,
     mem_cap: 94.0e9,
     peak_flops: 1.6e15,
+    link_bw: 0.9e12,
 };
 
 /// Performance-model configuration for one serving setup.
@@ -78,6 +83,13 @@ pub struct BatchStats {
     /// after preemption (recompute-for-resume; charged as a compute-bound
     /// prefill pass plus the KV write traffic, ahead of the decode).
     pub recompute_prefill_tokens: usize,
+    /// Tokens whose KV was *imported* from a peer shard this round instead
+    /// of recomputed: the prefix-hub resume/migration path found the span
+    /// resident on a peer and the `min(transfer, recompute)` decision chose
+    /// the block copy. Charged as paged KV bytes over the interconnect
+    /// ([`Hardware::link_bw`]) plus the local HBM write, on the plan+commit
+    /// side of the pipeline boundary.
+    pub transfer_kv_tokens: usize,
     /// KV block size of the paged allocator, in tokens. Memory is charged
     /// per *block*, not per token: a partially filled page still moves and
     /// occupies the whole page. 0 is treated as 1 (token granularity).
@@ -134,9 +146,72 @@ impl RoundCost {
     }
 }
 
+/// The two modeled ways to rebuild an evicted-or-absent KV span that a peer
+/// shard still holds, costed by [`PerfModel::import_choice`]: copy the
+/// blocks over the interconnect, or recompute the prefill locally. The serve
+/// scheduler picks the cheaper one per import and records the choice.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TransferDecision {
+    /// Paged KV bytes over [`Hardware::link_bw`] plus the local HBM write.
+    pub transfer_seconds: f64,
+    /// A local recompute prefill of the same span (one weight read, the
+    /// span's compute, its paged KV write) — the pre-hub charge.
+    pub recompute_seconds: f64,
+}
+
+impl TransferDecision {
+    /// True when the block copy beats recomputing the prefill.
+    pub fn use_transfer(&self) -> bool {
+        self.transfer_seconds < self.recompute_seconds
+    }
+
+    /// Seconds of the chosen (cheaper) path.
+    pub fn chosen_seconds(&self) -> f64 {
+        self.transfer_seconds.min(self.recompute_seconds)
+    }
+}
+
 impl PerfModel {
     pub fn new(hw: Hardware, shared_kv: bool, threads: usize) -> Self {
         Self { hw, shared_kv, threads: threads.max(1) }
+    }
+
+    /// The recompute-prefill roofline for a `tokens`-long span: a
+    /// compute-bound forward pass plus one weight read and the span's paged
+    /// KV write. Returns (seconds, bytes). The single formula behind both
+    /// [`PerfModel::round_cost`]'s resumed-session charge and
+    /// [`PerfModel::import_choice`]'s recompute side — keeping the billed
+    /// cost and the transfer-vs-recompute decision in lockstep by
+    /// construction.
+    fn prefill_cost(&self, tokens: usize, block_size: usize, model: &ModelProfile) -> (f64, f64) {
+        let bs = block_size.max(1) as f64;
+        let paged = (tokens as f64 / bs).ceil() * bs;
+        let comp = model.weight_bytes as f64 * tokens as f64 / self.hw.peak_flops;
+        let bytes = model.weight_bytes as f64 + paged * model.kv_bytes_per_token as f64;
+        (comp.max(bytes / self.hw.mem_bw), bytes)
+    }
+
+    /// Cost both ways to materialize a `tokens`-long KV span a peer shard
+    /// holds: transfer (paged bytes over the interconnect + local write) vs
+    /// recompute (the same prefill formula [`PerfModel::round_cost`] charges
+    /// resumed sessions — both fold through [`PerfModel::prefill_cost`]).
+    /// The caller applies `min` — this is the transfer-aware costing behind
+    /// cross-shard imports and the migration cost model.
+    pub fn import_choice(
+        &self,
+        tokens: usize,
+        block_size: usize,
+        model: &ModelProfile,
+    ) -> TransferDecision {
+        if tokens == 0 {
+            return TransferDecision::default();
+        }
+        let bs = block_size.max(1) as f64;
+        let paged = (tokens as f64 / bs).ceil() * bs;
+        let kv_bytes = paged * model.kv_bytes_per_token as f64;
+        let transfer_seconds = kv_bytes / self.hw.link_bw + kv_bytes / self.hw.mem_bw;
+        let (recompute_seconds, _) = self.prefill_cost(tokens, block_size, model);
+        TransferDecision { transfer_seconds, recompute_seconds }
     }
 
     /// Estimate the wall-clock of one problem's search on this setup.
@@ -220,15 +295,21 @@ impl PerfModel {
         let page = |tokens: usize| (tokens as f64 / bs).ceil() * bs;
         let kv_b = model.kv_bytes_per_token as f64;
         let mut cost = RoundCost::default();
-        // plan + commit: recompute-prefill for resumed sessions
+        // plan + commit: recompute-prefill for resumed sessions (the same
+        // formula import_choice prices the recompute alternative with)
         if b.recompute_prefill_tokens > 0 {
-            let prefill_comp =
-                model.weight_bytes as f64 * b.recompute_prefill_tokens as f64
-                    / self.hw.peak_flops;
-            let prefill_bytes =
-                model.weight_bytes as f64 + page(b.recompute_prefill_tokens) * kv_b;
-            cost.overhead_seconds += prefill_comp.max(prefill_bytes / self.hw.mem_bw);
+            let (prefill_s, prefill_bytes) =
+                self.prefill_cost(b.recompute_prefill_tokens, b.block_size, model);
+            cost.overhead_seconds += prefill_s;
             cost.bytes_moved += prefill_bytes;
+        }
+        // plan + commit: KV imported from peer shards — paged bytes over
+        // the interconnect, then written into the local paged cache
+        if b.transfer_kv_tokens > 0 {
+            let link_bytes = page(b.transfer_kv_tokens) * kv_b;
+            cost.overhead_seconds +=
+                link_bytes / self.hw.link_bw + link_bytes / self.hw.mem_bw;
+            cost.bytes_moved += link_bytes;
         }
         // plan + commit: paged KV writes of the round's new tokens
         if b.new_tokens > 0 {
@@ -524,6 +605,51 @@ mod tests {
         // and with no backend hint, no decode work means zero decode cost
         let idle = BatchStats { recompute_prefill_tokens: 5_000, ..Default::default() };
         assert_eq!(pm.round_cost(&idle, &LLEMMA_34B_SIM).decode_seconds, 0.0);
+    }
+
+    #[test]
+    fn transferred_kv_lands_on_the_overhead_side() {
+        let pm = PerfModel::new(H100_NVL, true, 1);
+        let plain = BatchStats {
+            model_calls: 64,
+            new_tokens: 64 * 50,
+            read_kv_tokens: 30_000,
+            resident_kv_tokens: 30_000,
+            block_size: 16,
+            ..Default::default()
+        };
+        let imported = BatchStats { transfer_kv_tokens: 4_000, ..plain.clone() };
+        let (cp, ci) = (
+            pm.round_cost(&plain, &LLEMMA_34B_SIM),
+            pm.round_cost(&imported, &LLEMMA_34B_SIM),
+        );
+        assert_eq!(ci.decode_seconds, cp.decode_seconds, "imports never touch decode");
+        assert!(ci.overhead_seconds > cp.overhead_seconds, "transfers must cost");
+        assert!(ci.bytes_moved > cp.bytes_moved);
+        // the transfer bill matches the import_choice transfer estimate
+        let d = pm.import_choice(4_000, 16, &LLEMMA_34B_SIM);
+        let delta = ci.overhead_seconds - cp.overhead_seconds;
+        assert!((delta - d.transfer_seconds).abs() < 1e-12, "{delta} vs {d:?}");
+    }
+
+    #[test]
+    fn import_choice_prefers_nvlink_transfer_but_flips_on_a_slow_link() {
+        let pm = PerfModel::new(H100_NVL, true, 1);
+        let d = pm.import_choice(2_000, 16, &LLEMMA_34B_SIM);
+        assert!(d.transfer_seconds > 0.0 && d.recompute_seconds > 0.0);
+        assert!(
+            d.use_transfer(),
+            "an NVLink-class block copy must beat a weight-read-floored \
+             recompute prefill: {d:?}"
+        );
+        assert_eq!(d.chosen_seconds(), d.transfer_seconds);
+        // a commodity-network link (1 GB/s) makes recompute the cheaper path
+        let slow = Hardware { link_bw: 1.0e9, ..H100_NVL };
+        let d = PerfModel::new(slow, true, 1).import_choice(2_000, 16, &LLEMMA_34B_SIM);
+        assert!(!d.use_transfer(), "{d:?}");
+        assert_eq!(d.chosen_seconds(), d.recompute_seconds);
+        // nothing to import, nothing to charge
+        assert_eq!(pm.import_choice(0, 16, &LLEMMA_34B_SIM), TransferDecision::default());
     }
 
     #[test]

@@ -258,21 +258,58 @@ pub fn evaluate_serve_with(
     opts: &ServeOptions,
     perf: &PerfModel,
 ) -> ServeEvalReport {
+    serve_problem_set(cfg, opts, perf, None)
+}
+
+/// Deterministic real token ids for pool prompt `g` of a duplicate-heavy
+/// workload: `prompt_tokens` ids per prompt, disjoint across pool entries
+/// (distinct prompts differ at token 0, so their radix paths never
+/// partially overlap). Problems sharing a pool prompt share their prompt KV
+/// honestly through the radix cache — the sharing the cross-shard prefix
+/// hub recovers at fleet scale.
+pub fn pool_prompt_ids(spec: &WorkloadSpec, g: usize) -> Vec<u32> {
+    let n = spec.dataset.prompt_tokens;
+    (0..n).map(|t| 0x4000_0000 + (g * n + t) as u32).collect()
+}
+
+/// [`evaluate_serve_with`] over a **duplicate-heavy prompt workload**:
+/// problem `i` is given the real prompt ids of pool entry
+/// `i % distinct_prompts`, so `distinct_prompts < n_problems` makes
+/// identical prompts recur — the workload where `--prefix-share`'s
+/// prompt-affinity routing and cross-shard imports pay. Sampling (and so
+/// every per-problem outcome) is identical to the plain minted-id run; only
+/// KV placement and sharing telemetry change.
+pub fn evaluate_serve_duplicate_prompts(
+    cfg: &EvalConfig,
+    opts: &ServeOptions,
+    perf: &PerfModel,
+    distinct_prompts: usize,
+) -> ServeEvalReport {
+    serve_problem_set(cfg, opts, perf, Some(distinct_prompts.max(1)))
+}
+
+fn serve_problem_set(
+    cfg: &EvalConfig,
+    opts: &ServeOptions,
+    perf: &PerfModel,
+    distinct_prompts: Option<usize>,
+) -> ServeEvalReport {
     let problems = ProblemSet::generate(&cfg.spec, cfg.n_problems, cfg.seed);
     let params = SearchParams { width: cfg.width, max_steps: cfg.max_steps };
     let mut truths = Vec::with_capacity(problems.problems.len());
     let jobs: Vec<ServeJob<SynthLm, OraclePrm, Box<dyn SearchPolicy + Send>>> = problems
         .problems
         .into_iter()
-        .map(|p| {
+        .enumerate()
+        .map(|(i, p)| {
             truths.push(p.answer);
             let id = p.id;
             let prm = OraclePrm::for_profile(&cfg.spec.model, cfg.seed ^ 0xBEEF ^ id);
-            ServeJob {
-                lm: SynthLm::new(p, cfg.seed ^ id),
-                prm,
-                policy: make_policy(&cfg.policy, cfg.width),
+            let mut lm = SynthLm::new(p, cfg.seed ^ id);
+            if let Some(k) = distinct_prompts {
+                lm = lm.with_prompt_ids(pool_prompt_ids(&cfg.spec, i % k));
             }
+            ServeJob { lm, prm, policy: make_policy(&cfg.policy, cfg.width) }
         })
         .collect();
     let serve = crate::coordinator::serve(jobs, &params, opts, perf, &cfg.spec.model);

@@ -24,6 +24,8 @@
 //! evictable leaves keyed by `(last_access, node)` replaces the full-arena
 //! rescan the seed implementation did per block.
 
+pub mod prefixhub;
+
 use std::collections::{BTreeSet, HashMap, HashSet};
 
 /// Handle to a node in the radix tree.

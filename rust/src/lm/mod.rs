@@ -203,12 +203,30 @@ pub struct SynthLm {
     /// Proposal concentration: P(rank r) ∝ zeta^r. Lower = more peaked.
     pub zeta: f64,
     rng: Rng,
+    /// Real surface token ids for the prompt, when set: the engine registers
+    /// them instead of minting unique ids, so two problems given the *same*
+    /// ids honestly share prompt KV — the duplicate-heavy workloads the
+    /// cross-shard prefix hub exists for. Sampling is untouched: prompt ids
+    /// feed only the KV accounting, never the fate model.
+    prompt_ids: Option<Vec<u32>>,
 }
 
 impl SynthLm {
     pub fn new(problem: Problem, seed: u64) -> Self {
         let rng = Rng::new(seed ^ problem.seed);
-        Self { problem, zeta: 0.6, rng }
+        Self { problem, zeta: 0.6, rng, prompt_ids: None }
+    }
+
+    /// Give the prompt real surface token ids (must cover exactly the
+    /// dataset's `prompt_tokens`). See the `prompt_ids` field.
+    pub fn with_prompt_ids(mut self, ids: Vec<u32>) -> Self {
+        debug_assert_eq!(
+            ids.len(),
+            self.problem.spec.dataset.prompt_tokens,
+            "prompt ids must cover the dataset's prompt length"
+        );
+        self.prompt_ids = Some(ids);
+        self
     }
 
     /// Sample a semantic group for a node: deterministic per-context
@@ -268,6 +286,10 @@ impl StepGenerator for SynthLm {
 
     fn prompt_tokens(&self) -> usize {
         self.problem.spec.dataset.prompt_tokens
+    }
+
+    fn prompt_token_ids(&self) -> Option<Vec<u32>> {
+        self.prompt_ids.clone()
     }
 }
 

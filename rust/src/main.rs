@@ -29,8 +29,9 @@ USAGE:
             [--problems K] [--seed S] [--workers W] [--json FILE]
   ets serve [--dataset D] [--model M] [--policy P] [--width N]
             [--problems K] [--concurrency C] [--capacity TOKENS]
-            [--block-size TOKENS] [--shards N] [--pipeline] [--seed S]
-            [--json FILE] [--pjrt] [--requests K] [--artifacts DIR]
+            [--block-size TOKENS] [--shards N] [--pipeline]
+            [--prefix-share] [--seed S] [--json FILE] [--pjrt]
+            [--requests K] [--artifacts DIR]
   ets info  [--artifacts DIR]
 
 `--capacity` makes the KV budget *hard*: the scheduler gates admission on
@@ -44,6 +45,13 @@ shard count at a fixed seed.
 decode overlapping shard k's commit — instead of their sum; results are
 byte-identical with it on or off. `--pipeline=0` forces lockstep,
 overriding a `serve.pipeline` config value.
+`--prefix-share` turns on the global prefix hub: shards publish
+committed-prefix fingerprints at round barriers, admission routes requests
+to the shard holding their longest published prefix, and resumes may import
+peer-held spans billed min(NVLink transfer, recompute prefill). Placement
+and costing only — results are byte-identical with it on or off.
+`--prefix-share=0` forces it off, overriding a `serve.prefix_share` config
+value.
 
 POLICIES: rebase | beam-<k> | beam-sqrt | dvts-<k> | dvts-sqrt |
           ets[:<lambda_b>] | ets-kv[:<lambda_b>]
@@ -207,6 +215,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     || cfg_doc.usize_or("serve.pipeline", 0) != 0
             }
         },
+        // same on/off grammar as --pipeline
+        prefix_share: match args.get("prefix-share") {
+            Some(v) => v != "0" && v != "false",
+            None => {
+                args.flag("prefix-share")
+                    || cfg_doc.bool_or("serve.prefix_share", false)
+                    || cfg_doc.usize_or("serve.prefix_share", 0) != 0
+            }
+        },
     };
     if opts.capacity_tokens == 0 {
         bail!("--capacity must be a positive token budget");
@@ -276,6 +293,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
+    if r.serve.prefix_share {
+        println!(
+            "  prefix hub: {} hits ({:.0}% of admissions), {} fingerprints published ({} live / {} evicted at audit)",
+            r.serve.hub_hits,
+            100.0 * r.serve.hub_hit_rate(),
+            r.serve.hub_published,
+            r.serve.hub_live_entries,
+            r.serve.hub_evicted_entries,
+        );
+    }
+    if r.serve.import_transfers + r.serve.import_recomputes + r.serve.migration_cold > 0 {
+        println!(
+            "  kv imports: {} tokens transferred over the link ({} transfers vs {} recomputes; migrations {}T/{}R/{} cold)",
+            r.serve.imported_kv_tokens,
+            r.serve.import_transfers,
+            r.serve.import_recomputes,
+            r.serve.migration_transfers,
+            r.serve.migration_recomputes,
+            r.serve.migration_cold,
+        );
+    }
     if r.serve.kv_pressure_events() > 0 {
         println!(
             "  memory pressure: {} preemptions, {} resumes ({} tokens recomputed), {} admission-blocked rounds, {} deferred commits",
@@ -303,6 +341,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("block_size", Json::num(opts.block_size as f64)),
             ("shards", Json::num(r.serve.shards as f64)),
             ("pipeline", Json::num(if r.serve.pipeline { 1.0 } else { 0.0 })),
+            ("prefix_share", Json::num(if r.serve.prefix_share { 1.0 } else { 0.0 })),
+            ("hub_hits", Json::num(r.serve.hub_hits as f64)),
+            ("hub_hit_rate", Json::num(r.serve.hub_hit_rate())),
+            ("hub_published", Json::num(r.serve.hub_published as f64)),
+            ("imported_kv_tokens", Json::num(r.serve.imported_kv_tokens as f64)),
+            ("import_transfers", Json::num(r.serve.import_transfers as f64)),
+            ("import_recomputes", Json::num(r.serve.import_recomputes as f64)),
+            ("mean_used_blocks", Json::num(r.serve.mean_used_blocks())),
             ("migrations", Json::num(r.serve.migrations as f64)),
             ("accuracy", Json::num(r.report.accuracy())),
             ("mean_kv_tokens", Json::num(r.report.mean_kv_tokens)),

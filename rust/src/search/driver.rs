@@ -21,7 +21,9 @@
 //! every KV block (keeping the tree), resume recomputes the evicted prefix
 //! through the radix cache.
 
-use crate::engine::batch::{BatchEngine, ExpandRequest, KvLedger, DEFAULT_KV_CAPACITY};
+use crate::engine::batch::{
+    BatchEngine, ExpandRequest, ImportSource, KvLedger, ResumeStats, DEFAULT_KV_CAPACITY,
+};
 use crate::kvcache::KvPressure;
 use crate::lm::{PendingBatch, StepGenerator};
 use crate::reward::RewardModel;
@@ -404,11 +406,32 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
     /// prefix there, which is what makes cross-shard migration correct by
     /// construction.
     pub fn try_resume(&mut self, engine: &mut BatchEngine) -> Result<usize, KvPressure> {
+        self.try_resume_imported(engine, None).map(|s| s.recomputed_tokens)
+    }
+
+    /// [`SearchSession::try_resume`] with an optional cross-shard
+    /// [`ImportSource`]: the returned [`ResumeStats`] additionally reports
+    /// how much of the recomputed span a peer held (importable as a block
+    /// transfer — the scheduler's `min(transfer, recompute)` input). The
+    /// session's own `recompute_tokens` ledger always counts the *full*
+    /// recompute, import or not: search-level accounting must not depend on
+    /// how the fleet happened to bill the rebuild.
+    pub fn try_resume_imported(
+        &mut self,
+        engine: &mut BatchEngine,
+        import: Option<ImportSource<'_>>,
+    ) -> Result<ResumeStats, KvPressure> {
         debug_assert!(self.suspended, "resume without suspend");
-        let stats = engine.try_resume(&mut self.ledger, &self.tree)?;
+        let stats = engine.try_resume_with(&mut self.ledger, &self.tree, import)?;
         self.suspended = false;
         self.recompute_tokens += stats.recomputed_tokens as u64;
-        Ok(stats.recomputed_tokens)
+        Ok(stats)
+    }
+
+    /// Token ids of this problem's prompt — what the coordinator publishes
+    /// to the prefix hub and what prompt-affinity routing matches against.
+    pub fn prompt_ids(&self) -> &[u32] {
+        self.ledger.prompt_ids()
     }
 
     /// Step-level invariant (debug builds): when every token id was minted
@@ -434,8 +457,18 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
     }
 
     /// Release every KV pin the session still holds and fold the outcome.
+    /// Sessions with real surface token ids close *lazily*
+    /// ([`BatchEngine::close_keep_cached`]): their prompt KV stays warm and
+    /// evictable so a later request with the same prompt re-pins it for
+    /// free — the cross-request prefix reuse the serve scheduler's hub
+    /// advertises. Minted-id sessions release eagerly (globally unique ids
+    /// can never be shared, so warm retention would be pure garbage).
     pub fn finish(mut self, engine: &mut BatchEngine) -> SearchOutcome {
-        engine.close(&mut self.ledger);
+        if self.ledger.exact_accounting() {
+            engine.close(&mut self.ledger);
+        } else {
+            engine.close_keep_cached(&mut self.ledger);
+        }
         SearchOutcome {
             answer: weighted_majority(&self.completions),
             completions: self.completions,

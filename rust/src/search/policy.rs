@@ -26,6 +26,18 @@ pub trait SearchPolicy {
 
     /// DVTS-style policies need to tag root expansions with subtree ids.
     fn on_root_children(&mut self, _children: &[NodeId]) {}
+
+    /// Fraction of the full `width`-trajectory frontier working set this
+    /// policy is expected to keep resident per step — the *predicted KV
+    /// footprint* unit the serve admission router balances across shards
+    /// instead of raw resident-session counts (ETS policies shrink it, so
+    /// footprint-aware placement cuts downstream migrations). A relative
+    /// load estimate, not a reservation: it never gates capacity, only
+    /// breaks routing ties, so a misestimate costs placement quality —
+    /// never correctness. Default: 1.0 (REBASE keeps everything).
+    fn kv_retention(&self, _width: usize) -> f64 {
+        1.0
+    }
 }
 
 impl<P: SearchPolicy + ?Sized> SearchPolicy for &mut P {
@@ -39,6 +51,10 @@ impl<P: SearchPolicy + ?Sized> SearchPolicy for &mut P {
 
     fn on_root_children(&mut self, children: &[NodeId]) {
         (**self).on_root_children(children)
+    }
+
+    fn kv_retention(&self, width: usize) -> f64 {
+        (**self).kv_retention(width)
     }
 }
 
@@ -57,6 +73,10 @@ impl<P: SearchPolicy + ?Sized> SearchPolicy for Box<P> {
 
     fn on_root_children(&mut self, children: &[NodeId]) {
         (**self).on_root_children(children)
+    }
+
+    fn kv_retention(&self, width: usize) -> f64 {
+        (**self).kv_retention(width)
     }
 }
 
@@ -89,6 +109,10 @@ impl SearchPolicy for BeamPolicy {
 
     fn name(&self) -> String {
         format!("beam-{}", self.keep)
+    }
+
+    fn kv_retention(&self, width: usize) -> f64 {
+        (self.keep.max(1) as f64 / width.max(1) as f64).min(1.0)
     }
 }
 
@@ -155,6 +179,11 @@ impl SearchPolicy for DvtsPolicy {
 
     fn name(&self) -> String {
         format!("dvts-{}", self.subtrees)
+    }
+
+    fn kv_retention(&self, width: usize) -> f64 {
+        // one retained trajectory per subtree
+        (self.subtrees as f64 / width.max(1) as f64).min(1.0)
     }
 }
 
@@ -277,6 +306,13 @@ impl<E: Embedder> SearchPolicy for EtsPolicy<E> {
         } else {
             format!("ets(b={},d={})", self.lambda_b, self.lambda_d)
         }
+    }
+
+    fn kv_retention(&self, _width: usize) -> f64 {
+        // The KV-budget term prunes harder as λ_b grows; at λ_b = 0 the
+        // policy reduces to REBASE (retention 1). A calibration heuristic,
+        // used only as the router's relative load unit.
+        1.0 / (1.0 + self.lambda_b.max(0.0))
     }
 }
 

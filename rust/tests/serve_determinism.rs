@@ -21,7 +21,10 @@
 
 use ets::coordinator::ServeOptions;
 use ets::engine::{PerfModel, DEFAULT_KV_CAPACITY, H100_NVL};
-use ets::eval::{evaluate_serve, evaluate_serve_with, evaluate_with_workers, EvalConfig, PolicySpec};
+use ets::eval::{
+    evaluate_serve, evaluate_serve_duplicate_prompts, evaluate_serve_with,
+    evaluate_with_workers, EvalConfig, PolicySpec,
+};
 use ets::workload::{WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
 
 fn cfg(policy: PolicySpec) -> EvalConfig {
@@ -205,6 +208,162 @@ fn shard_and_pipeline_matrix_is_invisible_at_ample_capacity() {
 }
 
 #[test]
+fn prefix_share_matrix_is_invisible_under_ample_and_tight_capacity() {
+    // The prefix hub is a placement/costing layer only: shards ∈ {1, 2, 4}
+    // × prefix-share {off, on} must fold to byte-identical per-problem
+    // results, under ample capacity and under a tight budget that forces
+    // preemption and migration.
+    let cfg = cfg(PolicySpec::Rebase);
+    let base = fingerprint(&evaluate_with_workers(&cfg, 2));
+    for shards in [1usize, 2, 4] {
+        for share in [false, true] {
+            let opts = ServeOptions {
+                concurrency: 8,
+                capacity_tokens: DEFAULT_KV_CAPACITY * shards,
+                shards,
+                prefix_share: share,
+                ..Default::default()
+            };
+            let perf = PerfModel::new(H100_NVL, true, 8);
+            let served = evaluate_serve_with(&cfg, &opts, &perf);
+            assert_eq!(
+                base,
+                fingerprint(&served.report),
+                "shards={shards} prefix-share={share} changed eval results"
+            );
+            assert_eq!(served.serve.prefix_share, share);
+            if !share {
+                assert_eq!(served.serve.hub_published, 0, "hub must stay off");
+                assert_eq!(served.serve.hub_hits, 0);
+            }
+            // minted prompt ids are globally unique: the hub publishes
+            // nothing for them, so affinity can never fire here
+            assert_eq!(served.serve.hub_hits, 0);
+        }
+    }
+    // tight: per-shard budgets near one working set, so the 4-shard runs
+    // migrate — and the migration cost model must bill each successful
+    // migrated-in resume through the min(transfer, recompute) choice
+    let mut cfg = cfg;
+    cfg.width = 24;
+    cfg.n_problems = 12;
+    let perf = PerfModel::new(H100_NVL, true, 12);
+    let uncapped = evaluate_serve_with(&cfg, &ServeOptions::with_concurrency(12), &perf);
+    let tight_base = fingerprint(&uncapped.report);
+    let solo_peak = uncapped
+        .serve
+        .outcomes
+        .iter()
+        .map(|o| o.peak_kv_tokens())
+        .max()
+        .unwrap() as usize;
+    let global_budget = 4 * (solo_peak + 4096);
+    for shards in [1usize, 4] {
+        for share in [false, true] {
+            let opts = ServeOptions {
+                concurrency: 12,
+                capacity_tokens: global_budget,
+                block_size: 16,
+                shards,
+                prefix_share: share,
+                ..Default::default()
+            };
+            let capped = evaluate_serve_with(&cfg, &opts, &perf);
+            assert_eq!(
+                tight_base,
+                fingerprint(&capped.report),
+                "shards={shards} prefix-share={share} under a tight budget \
+                 changed eval results"
+            );
+            if shards == 4 {
+                assert!(capped.serve.migrations > 0, "tight 4-shard runs must migrate");
+                let billed = capped.serve.migration_transfers
+                    + capped.serve.migration_recomputes
+                    + capped.serve.migration_cold;
+                assert!(
+                    billed >= 1,
+                    "every successful migrated-in resume must record how it \
+                     was billed (migrations {})",
+                    capped.serve.migrations
+                );
+                assert!(
+                    billed <= capped.serve.migrations,
+                    "more migration bills than migrations"
+                );
+                if capped.serve.migration_transfers > 0 {
+                    assert!(
+                        capped.serve.imported_kv_tokens > 0,
+                        "a transfer choice must move tokens over the link"
+                    );
+                    assert!(
+                        capped.serve.batches.iter().any(|b| b.transfer_kv_tokens > 0),
+                        "transferred tokens must be billed to a round"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn duplicate_prompts_hit_the_hub_and_shrink_resident_blocks() {
+    // The workload the hub exists for: 12 problems drawing real prompt ids
+    // from a pool of 3, so identical prompts recur. Placement must never
+    // change results (shards {1, 4} × share {off, on} all byte-identical),
+    // and at 4 shards prompt-affinity must actually fire (hub hit rate > 0)
+    // and colocate duplicates so the fleet's mean resident KV blocks drop
+    // strictly below the sharing-off run.
+    let mut cfg = cfg(PolicySpec::Rebase);
+    cfg.n_problems = 12;
+    let perf = PerfModel::new(H100_NVL, true, 4);
+    let run = |shards: usize, share: bool| {
+        let opts = ServeOptions {
+            // concurrency below n_problems so later admissions see a
+            // populated hub snapshot (everything admitted in round 0 would
+            // trivially bypass affinity)
+            concurrency: 4,
+            shards,
+            prefix_share: share,
+            ..Default::default()
+        };
+        evaluate_serve_duplicate_prompts(&cfg, &opts, &perf, 3)
+    };
+    let base = run(1, false);
+    let base_fp = fingerprint(&base.report);
+    for (shards, share) in [(1usize, true), (4, false), (4, true)] {
+        let r = run(shards, share);
+        assert_eq!(
+            base_fp,
+            fingerprint(&r.report),
+            "shards={shards} prefix-share={share} changed duplicate-prompt results"
+        );
+    }
+    let off = run(4, false);
+    let on = run(4, true);
+    // affinity fired: admissions after the first wave routed by the hub
+    assert!(on.serve.hub_hits > 0, "duplicate prompts must produce hub hits");
+    assert!(on.serve.hub_hit_rate() > 0.0);
+    assert!(on.serve.hub_published > 0);
+    // hub consistency: every published fingerprint was resolvable at audit
+    // time — still live on its owner, or evicted-but-accounted
+    assert_eq!(
+        on.serve.hub_published,
+        on.serve.hub_live_entries + on.serve.hub_evicted_entries,
+        "published fingerprints must all be audited live or evicted"
+    );
+    assert!(on.serve.hub_live_entries > 0, "resident prompts must audit live");
+    // colocated duplicates deduplicate in the radix caches: strictly fewer
+    // resident blocks on average than the spread-out sharing-off run
+    assert!(
+        on.serve.mean_used_blocks() < off.serve.mean_used_blocks(),
+        "prefix sharing must shrink mean resident blocks: on {} vs off {}",
+        on.serve.mean_used_blocks(),
+        off.serve.mean_used_blocks()
+    );
+    assert_eq!(off.serve.hub_hits, 0, "sharing off must never consult the hub");
+}
+
+#[test]
 fn shard_and_pipeline_matrix_is_invisible_under_pressure_and_tight_shards_migrate() {
     // Fat working sets (width 24) so a per-shard budget sized to one peak
     // working set puts a 3-resident shard under sustained pressure.
@@ -234,6 +393,7 @@ fn shard_and_pipeline_matrix_is_invisible_under_pressure_and_tight_shards_migrat
                 block_size: 16,
                 shards,
                 pipeline,
+                ..Default::default()
             };
             let capped = evaluate_serve_with(&cfg, &opts, &perf);
             assert_eq!(
