@@ -1,0 +1,27 @@
+//! Helpers shared by the bench targets (each bench is its own crate, so
+//! this module is wired in with `#[path = "common/mod.rs"]`).
+
+use std::time::{Duration, Instant};
+
+/// Mean wall time of `f` over `iters` runs, after one warmup run — the
+/// timing loop every bench target used to copy-paste.
+pub fn bench<F: FnMut()>(iters: usize, mut f: F) -> Duration {
+    // warmup
+    f();
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed() / iters as u32
+}
+
+/// `a / b` as a speedup factor (0.0 when `b` is zero).
+pub fn speedup(baseline: Duration, new: Duration) -> f64 {
+    let b = baseline.as_secs_f64();
+    let n = new.as_secs_f64();
+    if n > 0.0 {
+        b / n
+    } else {
+        0.0
+    }
+}

@@ -2,24 +2,427 @@
 //! solver (ILP / tree B&B), agglomerative clustering, the radix KV cache,
 //! and REBASE allocation. These are the per-step costs the coordinator adds
 //! on top of model execution — §Perf in EXPERIMENTS.md tracks them.
+//!
+//! Besides the absolute timings, the bench carries **before/after** cases
+//! for the mechanical-sympathy substrates: each pits the shipped
+//! implementation against an in-bench reference that preserves the old data
+//! layout (HashMap radix edges, sequential-scalar distance reduction,
+//! `Vec<Vec<f64>>` simplex tableau). Both sides run in the same process and
+//! build, so one invocation yields the comparison without checking out the
+//! old tree. `--json PATH` dumps the comparison rows machine-readably
+//! (`-` for stdout); CI uses it for the scalar/SIMD identity smoke.
 
 use ets::cluster::agglomerative;
 use ets::ilp::select::{solve_tree, Candidate, SelectionProblem};
+use ets::ilp::simplex::{solve, Lp, LpOutcome};
 use ets::kvcache::RadixCache;
 use ets::metrics::Table;
 use ets::search::sampling::rebase_allocate;
+use ets::util::json::Json;
 use ets::util::rng::Rng;
-use std::time::{Duration, Instant};
+use ets::util::simd;
+use ets::util::stats::cosine;
+use std::collections::{BTreeSet, HashMap};
+use std::time::Duration;
 
-fn bench<F: FnMut()>(iters: usize, mut f: F) -> Duration {
-    // warmup
-    f();
-    let t = Instant::now();
-    for _ in 0..iters {
-        f();
-    }
-    t.elapsed() / iters as u32
+#[path = "common/mod.rs"]
+mod common;
+use common::{bench, speedup};
+
+// ---------------------------------------------------------------------------
+// Reference substrates (the "before" layouts).
+// ---------------------------------------------------------------------------
+
+/// Radix tree with per-node `HashMap` child edges — the edge layout the
+/// flat [`EdgeArena`] replaced. Same algorithm as `RadixCache` (walk /
+/// split / LRU-ordered leaf eviction); only the edge store differs, so the
+/// timing delta isolates the data-layout change. Block accounting is
+/// mirrored as token counting (identical on both sides, cancels out).
+struct RefNode {
+    key: Vec<u32>,
+    parent: Option<usize>,
+    children: HashMap<u32, usize>,
+    last_access: u64,
 }
+
+struct RefRadix {
+    nodes: Vec<RefNode>,
+    free: Vec<usize>,
+    clock: u64,
+    live_tokens: usize,
+    evictable: BTreeSet<(u64, usize)>,
+}
+
+impl RefRadix {
+    fn new() -> Self {
+        let root = RefNode {
+            key: vec![],
+            parent: None,
+            children: HashMap::new(),
+            last_access: 0,
+        };
+        Self {
+            nodes: vec![root],
+            free: vec![],
+            clock: 0,
+            live_tokens: 0,
+            evictable: BTreeSet::new(),
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn touch(&mut self, idx: usize) {
+        let now = self.clock;
+        let last = self.nodes[idx].last_access;
+        let leaf = self.nodes[idx].children.is_empty() && self.nodes[idx].parent.is_some();
+        if leaf {
+            self.evictable.remove(&(last, idx));
+            self.evictable.insert((now, idx));
+        }
+        self.nodes[idx].last_access = now;
+    }
+
+    fn alloc_node(&mut self, n: RefNode) -> usize {
+        if let Some(idx) = self.free.pop() {
+            self.nodes[idx] = n;
+            idx
+        } else {
+            self.nodes.push(n);
+            self.nodes.len() - 1
+        }
+    }
+
+    /// Longest cached prefix of `tokens` (read-only walk).
+    fn peek_prefix(&self, tokens: &[u32]) -> usize {
+        let mut cur = 0usize;
+        let mut matched = 0usize;
+        while matched < tokens.len() {
+            let Some(&child) = self.nodes[cur].children.get(&tokens[matched]) else {
+                break;
+            };
+            let key = &self.nodes[child].key;
+            let lim = key.len().min(tokens.len() - matched);
+            let mut k = 0;
+            while k < lim && key[k] == tokens[matched + k] {
+                k += 1;
+            }
+            matched += k;
+            if k < key.len() {
+                break;
+            }
+            cur = child;
+        }
+        matched
+    }
+
+    fn split(&mut self, node: usize, at: usize) -> usize {
+        let lower_key = self.nodes[node].key.split_off(at);
+        let upper_key = std::mem::take(&mut self.nodes[node].key);
+        let parent = self.nodes[node].parent.unwrap();
+        let now = self.nodes[node].last_access;
+        let upper = self.alloc_node(RefNode {
+            key: upper_key,
+            parent: Some(parent),
+            children: HashMap::new(),
+            last_access: now,
+        });
+        let first_upper = self.nodes[upper].key[0];
+        self.nodes[parent].children.insert(first_upper, upper); // relabel
+        self.nodes[node].key = lower_key;
+        self.nodes[node].parent = Some(upper);
+        let first_lower = self.nodes[node].key[0];
+        self.nodes[upper].children.insert(first_lower, node);
+        upper
+    }
+
+    fn insert(&mut self, tokens: &[u32]) -> usize {
+        self.tick();
+        let mut cur = 0usize;
+        let mut pos = 0usize;
+        let mut new_tokens = 0usize;
+        while pos < tokens.len() {
+            match self.nodes[cur].children.get(&tokens[pos]).copied() {
+                Some(child) => {
+                    let key_len = self.nodes[child].key.len();
+                    let lim = key_len.min(tokens.len() - pos);
+                    let mut k = 0;
+                    while k < lim && self.nodes[child].key[k] == tokens[pos + k] {
+                        k += 1;
+                    }
+                    if k < key_len {
+                        let upper = self.split(child, k);
+                        self.touch(upper);
+                        pos += k;
+                        cur = upper;
+                        if pos == tokens.len() {
+                            break;
+                        }
+                        continue;
+                    }
+                    pos += key_len;
+                    self.touch(child);
+                    cur = child;
+                }
+                None => {
+                    let key: Vec<u32> = tokens[pos..].to_vec();
+                    new_tokens += key.len();
+                    let first = key[0];
+                    let now = self.clock;
+                    let idx = self.alloc_node(RefNode {
+                        key,
+                        parent: Some(cur),
+                        children: HashMap::new(),
+                        last_access: now,
+                    });
+                    // `cur` gains a child: no longer evictable.
+                    self.evictable.remove(&(self.nodes[cur].last_access, cur));
+                    self.nodes[cur].children.insert(first, idx);
+                    self.evictable.insert((now, idx));
+                    pos = tokens.len();
+                }
+            }
+        }
+        self.live_tokens += new_tokens;
+        new_tokens
+    }
+
+    /// Evict LRU leaves until the tree is empty; returns tokens freed.
+    fn evict_all(&mut self) -> usize {
+        let mut freed = 0usize;
+        loop {
+            let Some(&(stamp, idx)) = self.evictable.iter().next() else { break };
+            self.evictable.remove(&(stamp, idx));
+            let parent = self.nodes[idx].parent.unwrap();
+            let first = self.nodes[idx].key[0];
+            self.nodes[parent].children.remove(&first);
+            freed += self.nodes[idx].key.len();
+            self.live_tokens -= self.nodes[idx].key.len();
+            self.nodes[idx] = RefNode {
+                key: vec![],
+                parent: None,
+                children: HashMap::new(),
+                last_access: 0,
+            };
+            self.free.push(idx);
+            if self.nodes[parent].children.is_empty() && self.nodes[parent].parent.is_some() {
+                self.evictable.insert((self.nodes[parent].last_access, parent));
+            }
+        }
+        freed
+    }
+}
+
+/// Sequential-scalar cosine — the reduction the blocked 8-lane kernel in
+/// `util::simd` replaced (one accumulator per statistic, strict order).
+fn ref_cosine(a: &[f32], b: &[f32]) -> f64 {
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&xa, &xb) in a.iter().zip(b) {
+        let (x, y) = (xa as f64, xb as f64);
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference simplex: the pre-flattening `Vec<Vec<f64>>` tableau with scalar
+// row operations. Same pivoting rules as `ilp::simplex`, so iteration counts
+// match and the timing delta isolates layout + vectorized row kernels.
+// ---------------------------------------------------------------------------
+
+mod ref_simplex {
+    use ets::ilp::simplex::{Lp, LpOutcome};
+
+    const EPS: f64 = 1e-9;
+    const MAX_ITERS: usize = 50_000;
+
+    enum Status {
+        Ok,
+        Unbounded,
+        IterLimit,
+    }
+
+    pub fn solve(lp: &Lp) -> LpOutcome {
+        let n = lp.c.len();
+        let mut rows: Vec<Vec<f64>> = lp.a.clone();
+        let mut rhs: Vec<f64> = lp.b.clone();
+        for (i, &u) in lp.ub.iter().enumerate() {
+            if u.is_finite() {
+                let mut row = vec![0.0; n];
+                row[i] = 1.0;
+                rows.push(row);
+                rhs.push(u);
+            }
+        }
+        let m = rows.len();
+        let mut needs_artificial = vec![false; m];
+        for i in 0..m {
+            if rhs[i] < 0.0 {
+                for v in rows[i].iter_mut() {
+                    *v = -*v;
+                }
+                rhs[i] = -rhs[i];
+                needs_artificial[i] = true;
+            }
+        }
+        let k: usize = needs_artificial.iter().filter(|&&x| x).count();
+        let total = n + m + k;
+
+        let mut t = vec![vec![0.0f64; total + 1]; m + 1];
+        let mut basis = vec![0usize; m];
+        let mut art_col = n + m;
+        for i in 0..m {
+            t[i][..n].copy_from_slice(&rows[i]);
+            t[i][total] = rhs[i];
+            if needs_artificial[i] {
+                t[i][n + i] = -1.0;
+                t[i][art_col] = 1.0;
+                basis[i] = art_col;
+                art_col += 1;
+            } else {
+                t[i][n + i] = 1.0;
+                basis[i] = n + i;
+            }
+        }
+
+        if k > 0 {
+            t[m][n + m..total].fill(-1.0);
+            for i in 0..m {
+                if basis[i] >= n + m {
+                    for j in 0..=total {
+                        t[m][j] += t[i][j];
+                    }
+                }
+            }
+            match run(&mut t, &mut basis, total, m) {
+                Status::Ok => {}
+                Status::Unbounded | Status::IterLimit => return LpOutcome::Infeasible,
+            }
+            if t[m][total] > 1e-6 {
+                return LpOutcome::Infeasible;
+            }
+            for i in 0..m {
+                if basis[i] >= n + m {
+                    let mut found = None;
+                    for j in 0..n + m {
+                        if t[i][j].abs() > EPS {
+                            found = Some(j);
+                            break;
+                        }
+                    }
+                    if let Some(j) = found {
+                        pivot(&mut t, i, j, total, m);
+                        basis[i] = j;
+                    }
+                }
+            }
+            for row in t.iter_mut() {
+                row[n + m..total].fill(0.0);
+            }
+        }
+
+        t[m].fill(0.0);
+        t[m][..n].copy_from_slice(&lp.c);
+        for i in 0..m {
+            let coef = t[m][basis[i]];
+            if coef.abs() > EPS {
+                for j in 0..=total {
+                    t[m][j] -= coef * t[i][j];
+                }
+            }
+        }
+        match run(&mut t, &mut basis, total, m) {
+            Status::Ok => {}
+            Status::Unbounded => return LpOutcome::Unbounded,
+            Status::IterLimit => return LpOutcome::Infeasible,
+        }
+
+        let mut x = vec![0.0; n];
+        for i in 0..m {
+            if basis[i] < n {
+                x[basis[i]] = t[i][total];
+            }
+        }
+        let objective: f64 = lp.c.iter().zip(&x).map(|(c, v)| c * v).sum();
+        LpOutcome::Optimal { objective, x }
+    }
+
+    fn run(t: &mut [Vec<f64>], basis: &mut [usize], total: usize, m: usize) -> Status {
+        let mut iters = 0usize;
+        loop {
+            iters += 1;
+            if iters > MAX_ITERS {
+                return Status::IterLimit;
+            }
+            let bland = iters > 10_000;
+            let mut enter = None;
+            let mut best = EPS;
+            for (j, &rc) in t[m][..total].iter().enumerate() {
+                if rc > EPS {
+                    if bland {
+                        enter = Some(j);
+                        break;
+                    }
+                    if rc > best {
+                        best = rc;
+                        enter = Some(j);
+                    }
+                }
+            }
+            let Some(j) = enter else { return Status::Ok };
+            let mut leave = None;
+            let mut best_ratio = f64::INFINITY;
+            for i in 0..m {
+                if t[i][j] > EPS {
+                    let ratio = t[i][total] / t[i][j];
+                    if ratio < best_ratio - EPS
+                        || (bland
+                            && (ratio - best_ratio).abs() <= EPS
+                            && leave.map(|l| basis[l] > basis[i]).unwrap_or(false))
+                    {
+                        best_ratio = ratio;
+                        leave = Some(i);
+                    }
+                }
+            }
+            let Some(i) = leave else { return Status::Unbounded };
+            pivot(t, i, j, total, m);
+            basis[i] = j;
+        }
+    }
+
+    fn pivot(t: &mut [Vec<f64>], pr: usize, pc: usize, total: usize, m: usize) {
+        let inv = 1.0 / t[pr][pc];
+        for v in t[pr].iter_mut() {
+            *v *= inv;
+        }
+        for i in 0..=m {
+            if i == pr {
+                continue;
+            }
+            let factor = t[i][pc];
+            if factor.abs() > EPS {
+                for j in 0..=total {
+                    let s = t[pr][j];
+                    t[i][j] -= factor * s;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workload builders.
+// ---------------------------------------------------------------------------
 
 fn selection_problem(rng: &mut Rng, n_leaves: usize, depth: usize) -> SelectionProblem {
     // chain-ish shared tree with n_leaves fresh leaves
@@ -47,12 +450,101 @@ fn selection_problem(rng: &mut Rng, n_leaves: usize, depth: usize) -> SelectionP
     }
 }
 
+/// Branching radix workload: many short sequences over a small alphabet so
+/// the tree fragments into lots of internal nodes — per-node child lookup
+/// (the substrate under test) dominates the walk.
+fn radix_workload(rng: &mut Rng, n_seqs: usize, len: usize, alphabet: u32) -> Vec<Vec<u32>> {
+    (0..n_seqs)
+        .map(|_| (0..len).map(|_| rng.index(alphabet as usize) as u32).collect())
+        .collect()
+}
+
+/// Feasible, bounded LP with a few `>=` rows (exercises phase 1).
+fn bench_lp(rng: &mut Rng, n: usize, m: usize) -> Lp {
+    let mut lp = Lp::new(n);
+    lp.c = (0..n).map(|_| rng.f64()).collect();
+    lp.ub = vec![1.0; n];
+    for _ in 0..m {
+        let row: Vec<f64> =
+            (0..n).map(|_| if rng.index(3) == 0 { rng.f64() } else { 0.0 }).collect();
+        let budget = 1.0 + rng.f64() * n as f64 * 0.05;
+        lp.leq(row, budget);
+    }
+    lp.geq(vec![1.0; n], 1.0);
+    lp
+}
+
+fn objective_of(out: &LpOutcome) -> f64 {
+    match out {
+        LpOutcome::Optimal { objective, .. } => *objective,
+        other => panic!("bench LP should be optimal, got {other:?}"),
+    }
+}
+
+/// Check that the vectorized kernels are byte-identical to their forced
+/// scalar duals — the contract CI smoke-tests via this bench.
+fn assert_simd_identity(rng: &mut Rng) {
+    let a: Vec<f32> = (0..1021).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..1021).map(|_| rng.normal() as f32).collect();
+    let xs: Vec<f64> = (0..517).map(|_| rng.normal()).collect();
+    let ys: Vec<f64> = (0..517).map(|_| rng.normal()).collect();
+
+    let fast = (simd::dot_norms(&a, &b), simd::sum_sq(&a));
+    let mut sc = xs.clone();
+    simd::scale(&mut sc, 1.7);
+    let mut ss = xs.clone();
+    simd::sub_scaled(&mut ss, &ys, 0.3);
+    let mut lw = xs.clone();
+    simd::lw_merge(&mut lw, &ys, 3.0, 5.0);
+
+    simd::force_scalar(true);
+    let slow = (simd::dot_norms(&a, &b), simd::sum_sq(&a));
+    let mut sc2 = xs.clone();
+    simd::scale(&mut sc2, 1.7);
+    let mut ss2 = xs.clone();
+    simd::sub_scaled(&mut ss2, &ys, 0.3);
+    let mut lw2 = xs.clone();
+    simd::lw_merge(&mut lw2, &ys, 3.0, 5.0);
+    simd::force_scalar(false);
+
+    let bits = |x: f64| x.to_bits();
+    assert_eq!(bits(fast.0 .0), bits(slow.0 .0), "dot mismatch simd vs scalar");
+    assert_eq!(bits(fast.0 .1), bits(slow.0 .1), "norm-a mismatch simd vs scalar");
+    assert_eq!(bits(fast.0 .2), bits(slow.0 .2), "norm-b mismatch simd vs scalar");
+    assert_eq!(bits(fast.1), bits(slow.1), "sum_sq mismatch simd vs scalar");
+    assert_eq!(sc, sc2, "scale mismatch simd vs scalar");
+    assert_eq!(ss, ss2, "sub_scaled mismatch simd vs scalar");
+    assert_eq!(lw, lw2, "lw_merge mismatch simd vs scalar");
+}
+
+struct CompareCase {
+    name: &'static str,
+    size: String,
+    new: Duration,
+    reference: Duration,
+}
+
 fn main() {
+    let mut json_path: Option<String> = None;
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        if a == "--json" {
+            json_path = Some(argv.next().expect("--json needs a path (or `-` for stdout)"));
+        }
+        // anything else (e.g. cargo's --bench) is ignored
+    }
+
+    let mut rng = Rng::new(7);
+    assert_simd_identity(&mut rng);
+    println!(
+        "simd identity: OK (runtime dispatch: {})",
+        if simd::simd_active() { "avx" } else { "scalar" }
+    );
+
     let mut table = Table::new(
         "Microbenchmarks — per-step coordinator costs",
         &["op", "size", "time"],
     );
-    let mut rng = Rng::new(7);
 
     for &n in &[16usize, 64, 256] {
         let p = selection_problem(&mut rng, n, 10);
@@ -131,5 +623,171 @@ fn main() {
         table.row(vec!["rebase allocation".into(), format!("{n} cands"), format!("{d:?}")]);
     }
 
+    // -----------------------------------------------------------------------
+    // Before/after: shipped substrate vs old-layout reference.
+    // -----------------------------------------------------------------------
+    let mut cases: Vec<CompareCase> = vec![];
+
+    // (1) Radix prefix-walk: flat sorted edge spans vs per-node HashMap.
+    {
+        let seqs = radix_workload(&mut rng, 1024, 32, 5);
+        let probes = radix_workload(&mut rng, 512, 32, 5);
+        let mut flat = RadixCache::new(1 << 24);
+        let mut reference = RefRadix::new();
+        for s in &seqs {
+            flat.insert(s);
+            reference.insert(s);
+        }
+        // Same bytes cached on both sides — walks must agree before timing.
+        assert_eq!(flat.live_tokens(), reference.live_tokens, "cached-token divergence");
+        for p in seqs.iter().chain(&probes) {
+            assert_eq!(flat.peek_prefix(p), reference.peek_prefix(p), "walk divergence");
+        }
+        let new = bench(20, || {
+            let mut total = 0usize;
+            for p in seqs.iter().chain(&probes) {
+                total += flat.peek_prefix(p);
+            }
+            std::hint::black_box(total);
+        });
+        let old = bench(20, || {
+            let mut total = 0usize;
+            for p in seqs.iter().chain(&probes) {
+                total += reference.peek_prefix(p);
+            }
+            std::hint::black_box(total);
+        });
+        cases.push(CompareCase {
+            name: "radix prefix-walk (flat edges vs hashmap)",
+            size: "1024 cached + 1536 probes × 32 tok".into(),
+            new,
+            reference: old,
+        });
+    }
+
+    // (2) Radix eviction sweep: span recycling vs HashMap removal + realloc.
+    {
+        let seqs = radix_workload(&mut rng, 512, 32, 5);
+        let new = bench(10, || {
+            let mut c = RadixCache::new(1 << 24);
+            for s in &seqs {
+                c.insert(s);
+            }
+            std::hint::black_box(c.evict(usize::MAX));
+        });
+        let old = bench(10, || {
+            let mut c = RefRadix::new();
+            for s in &seqs {
+                c.insert(s);
+            }
+            std::hint::black_box(c.evict_all());
+        });
+        cases.push(CompareCase {
+            name: "radix insert + eviction sweep (flat edges vs hashmap)",
+            size: "512 × 32 tok, branchy".into(),
+            new,
+            reference: old,
+        });
+    }
+
+    // (3) Embed distance kernel: blocked 8-lane reduction vs sequential scalar.
+    {
+        let dim = 512usize;
+        let vecs: Vec<Vec<f32>> = (0..128)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        // Numerical sanity (reduction order differs, so approximate).
+        for w in vecs.windows(2).take(8) {
+            let d = (cosine(&w[0], &w[1]) - ref_cosine(&w[0], &w[1])).abs();
+            assert!(d < 1e-9, "cosine kernel drifted from reference: {d}");
+        }
+        let new = bench(50, || {
+            let mut acc = 0.0f64;
+            for w in vecs.windows(2) {
+                acc += cosine(&w[0], &w[1]);
+            }
+            std::hint::black_box(acc);
+        });
+        let old = bench(50, || {
+            let mut acc = 0.0f64;
+            for w in vecs.windows(2) {
+                acc += ref_cosine(&w[0], &w[1]);
+            }
+            std::hint::black_box(acc);
+        });
+        cases.push(CompareCase {
+            name: "embed cosine kernel (blocked/simd vs scalar)",
+            size: format!("127 pairs × {dim}d"),
+            new,
+            reference: old,
+        });
+    }
+
+    // (4) Simplex: flat row-major tableau + vectorized pivots vs Vec<Vec>.
+    {
+        for &(n, m) in &[(24usize, 32usize), (56, 72)] {
+            let lp = bench_lp(&mut rng, n, m);
+            let z_new = objective_of(&solve(&lp));
+            let z_old = objective_of(&ref_simplex::solve(&lp));
+            assert!(
+                (z_new - z_old).abs() < 1e-6,
+                "simplex drifted from reference: {z_new} vs {z_old}"
+            );
+            let new = bench(10, || {
+                std::hint::black_box(solve(&lp));
+            });
+            let old = bench(10, || {
+                std::hint::black_box(ref_simplex::solve(&lp));
+            });
+            cases.push(CompareCase {
+                name: "simplex solve (flat tableau vs vec-of-vec)",
+                size: format!("{n} vars × {m} rows"),
+                new,
+                reference: old,
+            });
+        }
+    }
+
+    let mut cmp = Table::new(
+        "Substrate before/after — shipped vs old-layout reference",
+        &["substrate", "size", "new", "reference", "speedup"],
+    );
+    for c in &cases {
+        cmp.row(vec![
+            c.name.into(),
+            c.size.clone(),
+            format!("{:?}", c.new),
+            format!("{:?}", c.reference),
+            format!("{:.2}×", speedup(c.reference, c.new)),
+        ]);
+    }
+
     table.emit();
+    cmp.emit();
+
+    if let Some(path) = json_path {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("micro_substrates")),
+            ("simd_active", Json::num(if simd::simd_active() { 1.0 } else { 0.0 })),
+            (
+                "cases",
+                Json::arr(cases.iter().map(|c| {
+                    Json::obj(vec![
+                        ("name", Json::str(c.name)),
+                        ("size", Json::str(c.size.clone())),
+                        ("new_ns", Json::num(c.new.as_nanos() as f64)),
+                        ("ref_ns", Json::num(c.reference.as_nanos() as f64)),
+                        ("speedup", Json::num(speedup(c.reference, c.new))),
+                    ])
+                })),
+            ),
+        ]);
+        let text = doc.to_string_compact();
+        if path == "-" {
+            println!("{text}");
+        } else {
+            std::fs::write(&path, text + "\n").expect("write --json output");
+            println!("wrote {path}");
+        }
+    }
 }

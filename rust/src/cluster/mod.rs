@@ -6,6 +6,7 @@
 //! (paper §4.2). Average linkage over cosine distance `1 − cos(a, b)`,
 //! threshold cut, exactly as the paper configures scipy.
 
+use crate::util::simd;
 use crate::util::stats::cosine;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -78,14 +79,17 @@ pub fn agglomerative(embeddings: &[Vec<f32>], distance_threshold: f64) -> Cluste
         return Clustering { assignment: vec![], num_clusters: 0 };
     }
     // Pairwise cosine distances + the initial heap of candidate merges.
-    let mut dist = vec![vec![0.0f64; n]; n];
+    // The matrix is one flat row-major allocation (row k at `k*n..k*n+n`)
+    // so the Lance–Williams row merges below stream two contiguous rows
+    // instead of chasing per-row heap pointers.
+    let mut dist = vec![0.0f64; n * n];
     let mut heap: BinaryHeap<PairEntry> =
         BinaryHeap::with_capacity(n * n.saturating_sub(1) / 2);
     for i in 0..n {
         for j in (i + 1)..n {
             let d = 1.0 - cosine(&embeddings[i], &embeddings[j]);
-            dist[i][j] = d;
-            dist[j][i] = d;
+            dist[i * n + j] = d;
+            dist[j * n + i] = d;
             heap.push(PairEntry { d, a: i, b: j, va: 0, vb: 0 });
         }
     }
@@ -107,11 +111,25 @@ pub fn agglomerative(embeddings: &[Vec<f32>], distance_threshold: f64) -> Cluste
         let (na, nb) = (clusters[a].len() as f64, clusters[b].len() as f64);
         alive[b] = false;
         version[a] += 1;
+        // Vectorized over the *whole* row a (dead slots and the diagonal
+        // included — they are never read again: merges only ever read
+        // `dist[live][live≠diag]` entries). The per-element arithmetic is
+        // exactly the former `(na·d_ak + nb·d_bk) / (na+nb)` expression, so
+        // merge order and distances are unchanged.
+        {
+            let (row_a, row_b) = if a < b {
+                let (lo, hi) = dist.split_at_mut(b * n);
+                (&mut lo[a * n..a * n + n], &hi[..n])
+            } else {
+                let (lo, hi) = dist.split_at_mut(a * n);
+                (&mut hi[..n], &lo[b * n..b * n + n])
+            };
+            simd::lw_merge(row_a, row_b, na, nb);
+        }
         for k in 0..n {
             if alive[k] && k != a {
-                let dk = (na * dist[a][k] + nb * dist[b][k]) / (na + nb);
-                dist[a][k] = dk;
-                dist[k][a] = dk;
+                let dk = dist[a * n + k];
+                dist[k * n + a] = dk;
                 let (x, y) = if a < k { (a, k) } else { (k, a) };
                 heap.push(PairEntry { d: dk, a: x, b: y, va: version[x], vb: version[y] });
             }

@@ -209,6 +209,15 @@ pub struct ServeOptions {
     /// byte-identical with it on or off (pinned by
     /// `tests/serve_determinism.rs`).
     pub prefix_share: bool,
+    /// Pin each persistent worker thread to a CPU core (worker *i* → core
+    /// `i % num_cores` via [`crate::util::affinity`]). The pinned thread is
+    /// the only one that touches its shard's engine — including the
+    /// [`crate::kvcache::BlockAllocator`] free-list arena — so first-touch
+    /// page locality follows the pin. Placement only: results are
+    /// byte-identical with pinning on or off (pinned by
+    /// `tests/serve_determinism.rs`); a core the kernel refuses degrades to
+    /// OS placement for that worker.
+    pub pin_cores: bool,
 }
 
 impl Default for ServeOptions {
@@ -220,6 +229,7 @@ impl Default for ServeOptions {
             shards: 1,
             pipeline: false,
             prefix_share: false,
+            pin_cores: false,
         }
     }
 }
@@ -240,6 +250,11 @@ impl ServeOptions {
 
     pub fn prefix_shared(mut self, prefix_share: bool) -> Self {
         self.prefix_share = prefix_share;
+        self
+    }
+
+    pub fn core_pinned(mut self, pin_cores: bool) -> Self {
+        self.pin_cores = pin_cores;
         self
     }
 }
@@ -421,6 +436,10 @@ pub struct ServeReport {
     pub sum_round_used_blocks: u64,
     /// Per-shard telemetry, indexed by shard.
     pub shard_stats: Vec<ShardStats>,
+    /// Core each persistent worker was pinned to, indexed by shard. `None`
+    /// per worker when pinning was off, refused by the kernel, or the run
+    /// used the inline single-shard scheduler (no worker threads).
+    pub worker_cores: Vec<Option<usize>>,
 }
 
 impl ServeReport {
@@ -518,9 +537,20 @@ where
         // driven by RoundPlan messages (a single shard runs its rounds
         // inline — there is nothing to overlap with).
         let pool: Option<WorkerPool<G, R, P>> = if n_shards > 1 {
-            Some(WorkerPool::spawn(scope, n_shards, perf, model, opts.pipeline))
+            Some(WorkerPool::spawn(
+                scope,
+                n_shards,
+                perf,
+                model,
+                opts.pipeline,
+                opts.pin_cores,
+            ))
         } else {
             None
+        };
+        let worker_cores: Vec<Option<usize>> = match pool.as_ref() {
+            Some(pool) => pool.worker_cores().to_vec(),
+            None => vec![None; n_shards],
         };
         let mut queue: VecDeque<(usize, ServeJob<G, R, P>)> =
             jobs.into_iter().enumerate().collect();
@@ -933,6 +963,7 @@ where
             rounds,
             sum_round_used_blocks,
             shard_stats: set.into_inner().into_iter().map(|s| s.stats).collect(),
+            worker_cores,
         }
     })
 }

@@ -608,6 +608,9 @@ enum RoundReply<G, R, P> {
 pub(crate) struct WorkerPool<G, R, P> {
     to_workers: Vec<mpsc::Sender<RoundMsg<G, R, P>>>,
     from_workers: Vec<mpsc::Receiver<RoundReply<G, R, P>>>,
+    /// Core worker *i* pinned itself to at spawn (`None`: pinning off or
+    /// the kernel refused the mask — the worker runs under OS placement).
+    worker_cores: Vec<Option<usize>>,
 }
 
 impl<G, R, P> WorkerPool<G, R, P>
@@ -616,13 +619,20 @@ where
     R: RewardModel + Send,
     P: SearchPolicy + Send,
 {
-    /// Spawn `workers` persistent round workers inside `scope`.
+    /// Spawn `workers` persistent round workers inside `scope`. With
+    /// `pin_cores` on, worker *i* pins its own thread to core
+    /// `i % num_cores` before serving any round — every touch of the
+    /// shard's engine (its radix nodes, its [`crate::kvcache::BlockAllocator`]
+    /// free-list arena) then happens from that core, so first-touch page
+    /// locality follows the pin. The spawn barrier below collects each
+    /// worker's actual assignment before any work is dispatched.
     pub(crate) fn spawn<'scope, 'env>(
         scope: &'scope thread::Scope<'scope, 'env>,
         workers: usize,
         perf: &'env PerfModel,
         model: &'env ModelProfile,
         pipeline: bool,
+        pin_cores: bool,
     ) -> Self
     where
         G: 'scope,
@@ -631,10 +641,20 @@ where
     {
         let mut to_workers = Vec::with_capacity(workers);
         let mut from_workers = Vec::with_capacity(workers);
-        for _ in 0..workers {
+        let (pin_tx, pin_rx) = mpsc::channel::<(usize, Option<usize>)>();
+        for index in 0..workers {
             let (tx, rx) = mpsc::channel::<RoundMsg<G, R, P>>();
             let (reply_tx, reply_rx) = mpsc::channel::<RoundReply<G, R, P>>();
+            let pin_tx = pin_tx.clone();
             scope.spawn(move || {
+                let pinned = if pin_cores {
+                    let core = index % crate::util::affinity::num_cores();
+                    crate::util::affinity::pin_to_core(core).then_some(core)
+                } else {
+                    None
+                };
+                let _ = pin_tx.send((index, pinned));
+                drop(pin_tx);
                 while let Ok(msg) = rx.recv() {
                     let reply = match msg {
                         RoundMsg::Plan { mut shard, bill } => {
@@ -654,7 +674,20 @@ where
             to_workers.push(tx);
             from_workers.push(reply_rx);
         }
-        Self { to_workers, from_workers }
+        drop(pin_tx);
+        // spawn barrier: every worker reports its placement before the
+        // first round is dispatched
+        let mut worker_cores: Vec<Option<usize>> = vec![None; workers];
+        for _ in 0..workers {
+            let (index, core) = pin_rx.recv().expect("round worker died during spawn");
+            worker_cores[index] = core;
+        }
+        Self { to_workers, from_workers, worker_cores }
+    }
+
+    /// Core each worker pinned itself to (index = shard).
+    pub(crate) fn worker_cores(&self) -> &[Option<usize>] {
+        &self.worker_cores
     }
 
     fn send(&self, worker: usize, msg: RoundMsg<G, R, P>) {

@@ -10,6 +10,14 @@
 
 use crate::tree::{NodeId, SearchTree};
 use crate::util::rng::Rng;
+use crate::util::simd;
+
+/// Normalize `v` to unit length in place (8-lane blocked sum of squares,
+/// f64 accumulation — same bytes with SIMD on or off).
+fn normalize(v: &mut [f32]) {
+    let norm = (simd::sum_sq(v).sqrt() as f32).max(1e-6);
+    simd::div_scalar_f32(v, norm);
+}
 
 /// Embeds the *latest step* of trajectories (what ETS clusters).
 pub trait Embedder {
@@ -34,10 +42,7 @@ impl HashEmbedder {
     fn unit_from_seed(&self, seed: u64) -> Vec<f32> {
         let mut r = Rng::new(seed);
         let mut v: Vec<f32> = (0..self.dim).map(|_| r.normal() as f32).collect();
-        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
-        for x in v.iter_mut() {
-            *x /= norm;
-        }
+        normalize(&mut v);
         v
     }
 }
@@ -47,7 +52,7 @@ impl Embedder for HashEmbedder {
         nodes
             .iter()
             .map(|&id| {
-                let step = &tree.get(id).step;
+                let step = tree.get(id).step;
                 let base = self.unit_from_seed(step.path_id.wrapping_mul(0xD134_2543_DE82_EF95) ^ 0xE7);
                 let noise =
                     self.unit_from_seed(step.paraphrase.wrapping_mul(0xA24B_AED4_963E_E407) ^ 0x51);
@@ -56,10 +61,7 @@ impl Embedder for HashEmbedder {
                     .zip(&noise)
                     .map(|(b, n)| b + self.jitter * n)
                     .collect();
-                let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
-                for x in v.iter_mut() {
-                    *x /= norm;
-                }
+                normalize(&mut v);
                 v
             })
             .collect()

@@ -441,7 +441,7 @@ impl BatchEngine {
         let need: usize = children
             .iter()
             .map(|&c| {
-                let step = &tree.get(c).step;
+                let step = tree.get(c).step;
                 self.blocks_for_insert(ledger, step.tokens, !step.token_ids.is_empty())
             })
             .sum();
@@ -476,12 +476,12 @@ impl BatchEngine {
         self.cache.release_reservation(reserved);
         for &c in children {
             let (needs_ids, tokens) = {
-                let step = &tree.get(c).step;
+                let step = tree.get(c).step;
                 (step.token_ids.is_empty(), step.tokens)
             };
             if needs_ids && tokens > 0 {
                 let ids = self.mint_tokens(tokens);
-                tree.get_mut(c).step.token_ids = ids;
+                tree.set_token_ids(c, ids);
             } else if !needs_ids {
                 // real surface ids: radix dedup may exceed tree-level sharing
                 ledger.exact_accounting = false;

@@ -5,6 +5,13 @@
 //! [`super::bnb`], replacing the paper's PuLP + CBC stack. A dense tableau is
 //! plenty for the ETS selection problems (hundreds of variables/rows) and is
 //! simple enough to verify exhaustively in tests.
+//!
+//! The tableau is a single flat row-major allocation (row `i` at
+//! `i*(total+1)`), and pivot row operations (scale / eliminate) go through
+//! the [`crate::util::simd`] kernels — element-wise, so vectorization
+//! cannot change a single bit of any solve.
+
+use crate::util::simd;
 
 /// Outcome of an LP solve.
 #[derive(Clone, Debug, PartialEq)]
@@ -84,20 +91,22 @@ pub fn solve(lp: &Lp) -> LpOutcome {
     let k: usize = needs_artificial.iter().filter(|&&x| x).count();
     let total = n + m + k;
 
-    // Build tableau: m constraint rows + 1 objective row.
-    let mut t = vec![vec![0.0f64; total + 1]; m + 1];
+    // Build tableau: m constraint rows + 1 objective row, flat row-major
+    // (row i at i*w, w = total + 1).
+    let w = total + 1;
+    let mut t = vec![0.0f64; (m + 1) * w];
     let mut basis = vec![0usize; m];
     let mut art_col = n + m;
     for i in 0..m {
-        t[i][..n].copy_from_slice(&rows[i]);
-        t[i][total] = rhs[i];
+        t[i * w..i * w + n].copy_from_slice(&rows[i]);
+        t[i * w + total] = rhs[i];
         if needs_artificial[i] {
-            t[i][n + i] = -1.0; // surplus
-            t[i][art_col] = 1.0;
+            t[i * w + n + i] = -1.0; // surplus
+            t[i * w + art_col] = 1.0;
             basis[i] = art_col;
             art_col += 1;
         } else {
-            t[i][n + i] = 1.0; // slack
+            t[i * w + n + i] = 1.0; // slack
             basis[i] = n + i;
         }
     }
@@ -107,15 +116,13 @@ pub fn solve(lp: &Lp) -> LpOutcome {
         // Objective row: +1 for each artificial in "minimize sum" form; we
         // maximize the negation, i.e. obj coefficients -1 on artificials.
         for j in n + m..total {
-            t[m][j] = -1.0;
+            t[m * w + j] = -1.0;
         }
-        // Price out artificial basics.
+        // Price out artificial basics (objective row += basic row).
         for i in 0..m {
             if basis[i] >= n + m {
-                let pivot_row: Vec<f64> = t[i].clone();
-                for j in 0..=total {
-                    t[m][j] += pivot_row[j];
-                }
+                let (head, tail) = t.split_at_mut(m * w);
+                simd::add_assign(&mut tail[..w], &head[i * w..(i + 1) * w]);
             }
         }
         match run_simplex(&mut t, &mut basis, total, m) {
@@ -126,7 +133,7 @@ pub fn solve(lp: &Lp) -> LpOutcome {
         // Objective row is stored in "+c" (enter-if-positive) form, so the
         // rhs cell accumulates the *negated* objective value: after phase 1,
         // t[m][total] == Σ artificials. Nonzero ⇒ infeasible.
-        let phase1_obj = t[m][total];
+        let phase1_obj = t[m * w + total];
         if phase1_obj > 1e-6 {
             return LpOutcome::Infeasible;
         }
@@ -136,7 +143,7 @@ pub fn solve(lp: &Lp) -> LpOutcome {
                 // find a non-artificial column with nonzero coefficient
                 let mut found = None;
                 for j in 0..n + m {
-                    if t[i][j].abs() > EPS {
+                    if t[i * w + j].abs() > EPS {
                         found = Some(j);
                         break;
                     }
@@ -149,30 +156,22 @@ pub fn solve(lp: &Lp) -> LpOutcome {
             }
         }
         // Zero-out artificial columns so phase 2 never re-enters them.
-        for row in t.iter_mut() {
-            for j in n + m..total {
-                row[j] = 0.0;
-            }
+        for row in t.chunks_exact_mut(w) {
+            row[n + m..total].fill(0.0);
         }
     }
 
     // ---- Phase 2: maximize c·x ----
     // Rebuild objective row: z - c·x = 0, expressed with reduced costs.
-    for j in 0..=total {
-        t[m][j] = 0.0;
-    }
-    for j in 0..n {
-        t[m][j] = lp.c[j];
-    }
-    // Price out basic variables.
+    t[m * w..].fill(0.0);
+    t[m * w..m * w + n].copy_from_slice(&lp.c);
+    // Price out basic variables (objective row -= coef * basic row).
     for i in 0..m {
         let bj = basis[i];
-        let coef = t[m][bj];
+        let coef = t[m * w + bj];
         if coef.abs() > EPS {
-            let pivot_row = t[i].clone();
-            for j in 0..=total {
-                t[m][j] -= coef * pivot_row[j];
-            }
+            let (head, tail) = t.split_at_mut(m * w);
+            simd::sub_scaled(&mut tail[..w], &head[i * w..(i + 1) * w], coef);
         }
     }
     match run_simplex(&mut t, &mut basis, total, m) {
@@ -187,7 +186,7 @@ pub fn solve(lp: &Lp) -> LpOutcome {
     let mut x = vec![0.0; n];
     for i in 0..m {
         if basis[i] < n {
-            x[basis[i]] = t[i][total];
+            x[basis[i]] = t[i * w + total];
         }
     }
     let objective: f64 = lp.c.iter().zip(&x).map(|(c, v)| c * v).sum();
@@ -204,7 +203,8 @@ enum SimplexStatus {
 /// `m`, stored so that a column with *positive* reduced cost improves the
 /// (maximization) objective... we store the negated convention: entering
 /// column j has t[m][j] > 0.
-fn run_simplex(t: &mut [Vec<f64>], basis: &mut [usize], total: usize, m: usize) -> SimplexStatus {
+fn run_simplex(t: &mut [f64], basis: &mut [usize], total: usize, m: usize) -> SimplexStatus {
+    let w = total + 1;
     let mut iters = 0usize;
     loop {
         iters += 1;
@@ -212,11 +212,11 @@ fn run_simplex(t: &mut [Vec<f64>], basis: &mut [usize], total: usize, m: usize) 
             return SimplexStatus::IterLimit;
         }
         let bland = iters > 10_000; // anti-cycling fallback
-        // Entering column: most positive reduced cost (or Bland: first).
+        // Entering column: most positive reduced cost (or Bland: first) —
+        // a contiguous scan of the flat objective row.
         let mut enter = None;
         let mut best = EPS;
-        for j in 0..total {
-            let rc = t[m][j];
+        for (j, &rc) in t[m * w..m * w + total].iter().enumerate() {
             if rc > EPS {
                 if bland {
                     enter = Some(j);
@@ -233,8 +233,8 @@ fn run_simplex(t: &mut [Vec<f64>], basis: &mut [usize], total: usize, m: usize) 
         let mut leave = None;
         let mut best_ratio = f64::INFINITY;
         for i in 0..m {
-            if t[i][j] > EPS {
-                let ratio = t[i][total] / t[i][j];
+            if t[i * w + j] > EPS {
+                let ratio = t[i * w + total] / t[i * w + j];
                 if ratio < best_ratio - EPS
                     || (bland
                         && (ratio - best_ratio).abs() <= EPS
@@ -251,30 +251,27 @@ fn run_simplex(t: &mut [Vec<f64>], basis: &mut [usize], total: usize, m: usize) 
     }
 }
 
-fn pivot(t: &mut [Vec<f64>], pr: usize, pc: usize, total: usize, m: usize) {
-    let pv = t[pr][pc];
+fn pivot(t: &mut [f64], pr: usize, pc: usize, total: usize, m: usize) {
+    let w = total + 1;
+    let pv = t[pr * w + pc];
     debug_assert!(pv.abs() > EPS);
     let inv = 1.0 / pv;
-    for v in t[pr].iter_mut() {
-        *v *= inv;
-    }
+    simd::scale(&mut t[pr * w..(pr + 1) * w], inv);
     for i in 0..=m {
         if i == pr {
             continue;
         }
-        let factor = t[i][pc];
+        let factor = t[i * w + pc];
         if factor.abs() > EPS {
             // row_i -= factor * row_pr
             let (head, tail) = if i < pr {
-                let (a, b) = t.split_at_mut(pr);
-                (&mut a[i], &b[0])
+                let (a, b) = t.split_at_mut(pr * w);
+                (&mut a[i * w..(i + 1) * w], &b[..w])
             } else {
-                let (a, b) = t.split_at_mut(i);
-                (&mut b[0], &a[pr])
+                let (a, b) = t.split_at_mut(i * w);
+                (&mut b[..w], &a[pr * w..(pr + 1) * w])
             };
-            for j in 0..=total {
-                head[j] -= factor * tail[j];
-            }
+            simd::sub_scaled(head, tail, factor);
         }
     }
 }

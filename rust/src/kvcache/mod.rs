@@ -23,10 +23,139 @@
 //! Eviction is O(log n) per freed leaf: an ordered set of currently
 //! evictable leaves keyed by `(last_access, node)` replaces the full-arena
 //! rescan the seed implementation did per block.
+//!
+//! Node edges live in a single flat, sorted, arena-backed store
+//! ([`EdgeArena`]): each node owns a contiguous `(first-token, child)` span
+//! looked up by binary search, so prefix walks stream one allocation
+//! instead of chasing a per-node `HashMap` — and removing a node recycles
+//! its span through a size-classed free list instead of reallocating.
 
 pub mod prefixhub;
 
-use std::collections::{BTreeSet, HashMap, HashSet};
+use std::collections::{BTreeSet, HashSet};
+
+/// Flat, sorted edge store shared by every node of one [`RadixCache`].
+///
+/// Each node owns a contiguous span of `(first-token, child)` pairs, kept
+/// sorted by token so lookups are binary searches over one cache line (or
+/// two) rather than a hash probe into a per-node allocation. Spans have
+/// power-of-two capacities; outgrown or cleared spans go onto a
+/// size-classed free list and are reused by later nodes, so steady-state
+/// insert/evict churn allocates nothing.
+#[derive(Clone, Debug, Default)]
+struct EdgeArena {
+    /// All spans back to back; a node's edges at `off..off+len`.
+    edges: Vec<(u32, NodeIdx)>,
+    /// Freed span offsets by capacity class: `free[k]` holds offsets of
+    /// spans with capacity `1 << k`.
+    free: Vec<Vec<u32>>,
+}
+
+/// A node's handle into the [`EdgeArena`]: offset, live length, capacity
+/// (capacity 0 = no span allocated).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct EdgeSpan {
+    off: u32,
+    len: u32,
+    cap: u32,
+}
+
+impl EdgeSpan {
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl EdgeArena {
+    /// The sorted `(first-token, child)` pairs of one span.
+    fn slice(&self, s: EdgeSpan) -> &[(u32, NodeIdx)] {
+        &self.edges[s.off as usize..(s.off + s.len) as usize]
+    }
+
+    /// Child reached over the edge whose label starts with `token`.
+    fn get(&self, s: EdgeSpan, token: u32) -> Option<NodeIdx> {
+        let span = self.slice(s);
+        span.binary_search_by_key(&token, |e| e.0).ok().map(|i| span[i].1)
+    }
+
+    /// Allocate a fresh span of capacity `1 << class` (freelist first).
+    fn alloc_span(&mut self, class: u32) -> u32 {
+        while self.free.len() <= class as usize {
+            self.free.push(Vec::new());
+        }
+        if let Some(off) = self.free[class as usize].pop() {
+            return off;
+        }
+        let off = self.edges.len() as u32;
+        self.edges.resize(self.edges.len() + (1usize << class), (0, 0));
+        off
+    }
+
+    /// Return a span's storage to its size-class free list.
+    fn release_span(&mut self, s: &mut EdgeSpan) {
+        if s.cap > 0 {
+            let class = s.cap.trailing_zeros();
+            while self.free.len() <= class as usize {
+                self.free.push(Vec::new());
+            }
+            self.free[class as usize].push(s.off);
+        }
+        *s = EdgeSpan::default();
+    }
+
+    /// Insert (or replace, matching `HashMap::insert` semantics) the edge
+    /// for `token`, keeping the span sorted.
+    fn insert(&mut self, s: &mut EdgeSpan, token: u32, child: NodeIdx) {
+        let pos = {
+            let span = self.slice(*s);
+            match span.binary_search_by_key(&token, |e| e.0) {
+                Ok(i) => {
+                    // existing edge relabeled (split path): replace in place
+                    self.edges[s.off as usize + i] = (token, child);
+                    return;
+                }
+                Err(i) => i,
+            }
+        };
+        if s.len == s.cap {
+            // grow: move to a span of the next capacity class
+            let new_cap = (s.cap * 2).max(1);
+            let new_off = self.alloc_span(new_cap.trailing_zeros());
+            for i in 0..s.len as usize {
+                self.edges[new_off as usize + i] = self.edges[s.off as usize + i];
+            }
+            let mut old = *s;
+            self.release_span(&mut old);
+            *s = EdgeSpan { off: new_off, len: s.len, cap: new_cap };
+        }
+        let base = s.off as usize;
+        let mut i = s.len as usize;
+        while i > pos {
+            self.edges[base + i] = self.edges[base + i - 1];
+            i -= 1;
+        }
+        self.edges[base + pos] = (token, child);
+        s.len += 1;
+    }
+
+    /// Remove the edge for `token` (present by contract); an emptied span
+    /// is recycled immediately.
+    fn remove(&mut self, s: &mut EdgeSpan, token: u32) {
+        let pos = {
+            let span = self.slice(*s);
+            span.binary_search_by_key(&token, |e| e.0)
+                .expect("removing a missing edge")
+        };
+        let base = s.off as usize;
+        for i in pos..s.len as usize - 1 {
+            self.edges[base + i] = self.edges[base + i + 1];
+        }
+        s.len -= 1;
+        if s.len == 0 {
+            self.release_span(s);
+        }
+    }
+}
 
 /// Handle to a node in the radix tree.
 pub type NodeIdx = usize;
@@ -148,8 +277,9 @@ struct RNode {
     /// Token span stored at this node (edge label).
     key: Vec<u32>,
     parent: Option<NodeIdx>,
-    /// child-first-token → node index.
-    children: HashMap<u32, NodeIdx>,
+    /// This node's sorted `(child-first-token, child)` span in the cache's
+    /// shared [`EdgeArena`].
+    edges: EdgeSpan,
     /// Number of active sequences pinning this node (and its ancestors).
     refcount: usize,
     /// LRU clock of the last match/insert touching this node.
@@ -177,6 +307,8 @@ pub struct InsertOutcome {
 #[derive(Clone, Debug)]
 pub struct RadixCache {
     nodes: Vec<RNode>,
+    /// Flat sorted edge store all nodes' child spans live in.
+    edge_store: EdgeArena,
     free: Vec<NodeIdx>,
     root: NodeIdx,
     clock: u64,
@@ -204,7 +336,7 @@ impl RadixCache {
         let root = RNode {
             key: vec![],
             parent: None,
-            children: HashMap::new(),
+            edges: EdgeSpan::default(),
             refcount: 1, // root is never evictable
             last_access: 0,
             dead: false,
@@ -214,6 +346,7 @@ impl RadixCache {
         let total_blocks = capacity_tokens.div_ceil(bs);
         Self {
             nodes: vec![root],
+            edge_store: EdgeArena::default(),
             free: vec![],
             root: 0,
             clock: 0,
@@ -303,7 +436,7 @@ impl RadixCache {
         let n = &self.nodes[idx];
         let key = (n.last_access, idx);
         let span = n.blocks.len();
-        if !n.dead && idx != self.root && n.children.is_empty() && n.refcount == 0 {
+        if !n.dead && idx != self.root && n.edges.is_empty() && n.refcount == 0 {
             if self.evictable.insert(key) {
                 self.evictable_block_count += span;
             }
@@ -345,6 +478,22 @@ impl RadixCache {
         self.clock
     }
 
+    /// Add (or relabel) `node`'s edge for `token` in the shared arena.
+    /// `EdgeSpan` is `Copy`: the span is copied out, mutated against the
+    /// arena, and written back — the borrow split the flat store needs.
+    fn add_edge(&mut self, node: NodeIdx, token: u32, child: NodeIdx) {
+        let mut span = self.nodes[node].edges;
+        self.edge_store.insert(&mut span, token, child);
+        self.nodes[node].edges = span;
+    }
+
+    /// Drop `node`'s edge for `token`; an emptied span is recycled.
+    fn del_edge(&mut self, node: NodeIdx, token: u32) {
+        let mut span = self.nodes[node].edges;
+        self.edge_store.remove(&mut span, token);
+        self.nodes[node].edges = span;
+    }
+
     /// The one prefix traversal both lookup flavors share: (matched token
     /// count, end node), calling `visit` on every node walked — including a
     /// partially-matched edge's child. The resume-reservation probe bound
@@ -356,7 +505,7 @@ impl RadixCache {
         let mut matched = 0usize;
         visit(cur);
         while matched < tokens.len() {
-            let Some(&child) = self.nodes[cur].children.get(&tokens[matched]) else {
+            let Some(child) = self.edge_store.get(self.nodes[cur].edges, tokens[matched]) else {
                 break;
             };
             let klen = self.nodes[child].key.len();
@@ -410,21 +559,21 @@ impl RadixCache {
         let mut shared = 0usize;
         self.touch(cur, now);
         while pos < tokens.len() {
-            match self.nodes[cur].children.get(&tokens[pos]).copied() {
+            match self.edge_store.get(self.nodes[cur].edges, tokens[pos]) {
                 None => {
                     // Append the remaining tokens as a fresh child.
                     let span = self.alloc_span(tokens.len() - pos);
                     let node = RNode {
                         key: tokens[pos..].to_vec(),
                         parent: Some(cur),
-                        children: HashMap::new(),
+                        edges: EdgeSpan::default(),
                         refcount: 0,
                         last_access: now,
                         dead: false,
                         blocks: span,
                     };
                     let idx = self.alloc(node);
-                    self.nodes[cur].children.insert(tokens[pos], idx);
+                    self.add_edge(cur, tokens[pos], idx);
                     self.refresh_evictable(cur); // gained a child
                     return InsertOutcome {
                         new_tokens: tokens.len() - pos,
@@ -479,7 +628,7 @@ impl RadixCache {
         let upper = RNode {
             key: upper_key,
             parent: Some(parent),
-            children: HashMap::new(),
+            edges: EdgeSpan::default(),
             // the upper part inherits pins: any sequence pinning the lower
             // node transitively pins its prefix (unlock walks through here)
             refcount: self.nodes[node].refcount,
@@ -493,11 +642,11 @@ impl RadixCache {
         self.live_tokens -= at; // conserve: split moves tokens, not adds
         let first_upper = self.nodes[upper_idx].key[0];
         let first_lower = lower_key[0];
-        self.nodes[parent].children.insert(first_upper, upper_idx);
+        self.add_edge(parent, first_upper, upper_idx); // relabels node → upper
         self.nodes[node].key = lower_key;
         self.nodes[node].blocks = lower_span;
         self.nodes[node].parent = Some(upper_idx);
-        self.nodes[upper_idx].children.insert(first_lower, node);
+        self.add_edge(upper_idx, first_lower, node);
         self.refresh_evictable(upper_idx); // gained a child: not evictable
         self.refresh_evictable(node); // re-add with the re-paged span
         upper_idx
@@ -577,7 +726,7 @@ impl RadixCache {
                 break;
             }
             let n = &self.nodes[idx];
-            if !n.children.is_empty() || n.refcount > 0 {
+            if !n.edges.is_empty() || n.refcount > 0 {
                 break;
             }
             let parent = n.parent;
@@ -616,11 +765,11 @@ impl RadixCache {
     }
 
     fn remove_leaf(&mut self, idx: NodeIdx) -> usize {
-        debug_assert!(self.nodes[idx].children.is_empty());
+        debug_assert!(self.nodes[idx].edges.is_empty());
         debug_assert_eq!(self.nodes[idx].refcount, 0, "removing a pinned leaf");
         let parent = self.nodes[idx].parent.expect("removing root");
         let first = self.nodes[idx].key[0];
-        self.nodes[parent].children.remove(&first);
+        self.del_edge(parent, first);
         let tokens = self.nodes[idx].key.len();
         self.live_tokens -= tokens;
         self.drop_evictable(idx);
@@ -628,7 +777,11 @@ impl RadixCache {
         self.allocator.release_span(span);
         self.nodes[idx].dead = true;
         self.nodes[idx].key = vec![];
-        self.nodes[idx].children = HashMap::new();
+        // recycle this node's edge-span capacity instead of the old
+        // `children = HashMap::new()` reallocation
+        let mut edges = self.nodes[idx].edges;
+        self.edge_store.release_span(&mut edges);
+        self.nodes[idx].edges = edges;
         self.free.push(idx);
         self.refresh_evictable(parent); // may have become a childless leaf
         tokens
@@ -644,6 +797,9 @@ impl RadixCache {
             if n.dead {
                 if !n.blocks.is_empty() {
                     return Err(format!("dead node {idx} still holds blocks"));
+                }
+                if n.edges != EdgeSpan::default() {
+                    return Err(format!("dead node {idx} still holds an edge span"));
                 }
                 continue;
             }
@@ -668,10 +824,16 @@ impl RadixCache {
             if idx != self.root && n.key.is_empty() {
                 return Err(format!("non-root node {idx} with empty key"));
             }
-            if idx != self.root && n.children.is_empty() && n.refcount == 0 {
+            if idx != self.root && n.edges.is_empty() && n.refcount == 0 {
                 expect_evictable.insert((n.last_access, idx));
             }
-            for (&first, &child) in &n.children {
+            let span = self.edge_store.slice(n.edges);
+            for w in span.windows(2) {
+                if w[0].0 >= w[1].0 {
+                    return Err(format!("edge span of {idx} not strictly sorted"));
+                }
+            }
+            for &(first, child) in span {
                 let c = &self.nodes[child];
                 if c.dead {
                     return Err(format!("child {child} of {idx} is dead"));
@@ -1092,6 +1254,351 @@ mod tests {
             crate::prop_check!(c.live_tokens() == 0, "full evict left tokens");
             crate::prop_check!(c.used_blocks() == 0, "full evict left blocks");
             c.check_invariants().map_err(|e| e)?;
+            Ok(())
+        });
+    }
+
+    /// Faithful port of the pre-flat-edge cache: per-node `HashMap` children,
+    /// same node arena + LIFO free list, same clock/LRU discipline. Because
+    /// allocation order and access stamps are replicated exactly, node
+    /// indices and eviction order must agree with [`RadixCache`] op-for-op —
+    /// the only difference is the edge store under test.
+    struct ModelNode {
+        key: Vec<u32>,
+        parent: Option<usize>,
+        children: std::collections::HashMap<u32, usize>,
+        refcount: usize,
+        last_access: u64,
+        dead: bool,
+    }
+
+    struct ModelRadix {
+        nodes: Vec<ModelNode>,
+        free: Vec<usize>,
+        clock: u64,
+        live_tokens: usize,
+        evictable: BTreeSet<(u64, usize)>,
+    }
+
+    impl ModelRadix {
+        fn new() -> Self {
+            let root = ModelNode {
+                key: vec![],
+                parent: None,
+                children: Default::default(),
+                refcount: 1,
+                last_access: 0,
+                dead: false,
+            };
+            Self {
+                nodes: vec![root],
+                free: vec![],
+                clock: 0,
+                live_tokens: 0,
+                evictable: BTreeSet::new(),
+            }
+        }
+
+        fn refresh(&mut self, idx: usize) {
+            let n = &self.nodes[idx];
+            let key = (n.last_access, idx);
+            if !n.dead && idx != 0 && n.children.is_empty() && n.refcount == 0 {
+                self.evictable.insert(key);
+            } else {
+                self.evictable.remove(&key);
+            }
+        }
+
+        fn touch(&mut self, idx: usize, now: u64) {
+            self.evictable.remove(&(self.nodes[idx].last_access, idx));
+            self.nodes[idx].last_access = now;
+            self.refresh(idx);
+        }
+
+        fn alloc(&mut self, node: ModelNode) -> usize {
+            self.live_tokens += node.key.len();
+            let idx = if let Some(idx) = self.free.pop() {
+                self.nodes[idx] = node;
+                idx
+            } else {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            };
+            self.refresh(idx);
+            idx
+        }
+
+        fn walk(&self, tokens: &[u32]) -> (usize, usize, Vec<usize>) {
+            let mut cur = 0usize;
+            let mut matched = 0usize;
+            let mut visited = vec![cur];
+            while matched < tokens.len() {
+                let Some(&child) = self.nodes[cur].children.get(&tokens[matched]) else {
+                    break;
+                };
+                let klen = self.nodes[child].key.len();
+                let common = self.nodes[child]
+                    .key
+                    .iter()
+                    .zip(&tokens[matched..])
+                    .take_while(|(a, b)| a == b)
+                    .count();
+                visited.push(child);
+                matched += common;
+                if common < klen {
+                    break;
+                }
+                cur = child;
+            }
+            (matched, cur, visited)
+        }
+
+        fn match_prefix(&mut self, tokens: &[u32]) -> (usize, usize) {
+            let (matched, end, visited) = self.walk(tokens);
+            self.clock += 1;
+            let now = self.clock;
+            for idx in visited {
+                self.touch(idx, now);
+            }
+            (matched, end)
+        }
+
+        fn insert(&mut self, tokens: &[u32]) -> (usize, usize, usize) {
+            self.clock += 1;
+            let now = self.clock;
+            let mut cur = 0usize;
+            let mut pos = 0usize;
+            let mut shared = 0usize;
+            self.touch(cur, now);
+            while pos < tokens.len() {
+                match self.nodes[cur].children.get(&tokens[pos]).copied() {
+                    None => {
+                        let node = ModelNode {
+                            key: tokens[pos..].to_vec(),
+                            parent: Some(cur),
+                            children: Default::default(),
+                            refcount: 0,
+                            last_access: now,
+                            dead: false,
+                        };
+                        let idx = self.alloc(node);
+                        self.nodes[cur].children.insert(tokens[pos], idx);
+                        self.refresh(cur);
+                        return (tokens.len() - pos, shared, idx);
+                    }
+                    Some(child) => {
+                        let klen = self.nodes[child].key.len();
+                        let common = self.nodes[child]
+                            .key
+                            .iter()
+                            .zip(&tokens[pos..])
+                            .take_while(|(a, b)| a == b)
+                            .count();
+                        self.touch(child, now);
+                        if common == klen {
+                            shared += common;
+                            pos += common;
+                            cur = child;
+                        } else {
+                            let split = self.split(child, common, now);
+                            shared += common;
+                            pos += common;
+                            cur = split;
+                        }
+                    }
+                }
+            }
+            (0, shared, cur)
+        }
+
+        fn split(&mut self, node: usize, at: usize, now: u64) -> usize {
+            let parent = self.nodes[node].parent.unwrap();
+            let upper_key = self.nodes[node].key[..at].to_vec();
+            let lower_key = self.nodes[node].key[at..].to_vec();
+            let upper = ModelNode {
+                key: upper_key,
+                parent: Some(parent),
+                children: Default::default(),
+                refcount: self.nodes[node].refcount,
+                last_access: now,
+                dead: false,
+            };
+            let upper_idx = self.alloc(upper);
+            self.live_tokens -= at;
+            let first_upper = self.nodes[upper_idx].key[0];
+            let first_lower = lower_key[0];
+            self.nodes[parent].children.insert(first_upper, upper_idx);
+            self.nodes[node].key = lower_key;
+            self.nodes[node].parent = Some(upper_idx);
+            self.nodes[upper_idx].children.insert(first_lower, node);
+            self.refresh(upper_idx);
+            self.refresh(node);
+            upper_idx
+        }
+
+        fn lock(&mut self, node: usize) {
+            let mut cur = Some(node);
+            while let Some(idx) = cur {
+                self.nodes[idx].refcount += 1;
+                self.refresh(idx);
+                cur = self.nodes[idx].parent;
+            }
+        }
+
+        fn unlock(&mut self, node: usize) {
+            let mut cur = Some(node);
+            while let Some(idx) = cur {
+                self.nodes[idx].refcount -= 1;
+                self.refresh(idx);
+                cur = self.nodes[idx].parent;
+            }
+        }
+
+        fn remove_leaf(&mut self, idx: usize) -> usize {
+            let parent = self.nodes[idx].parent.unwrap();
+            let first = self.nodes[idx].key[0];
+            self.nodes[parent].children.remove(&first);
+            let tokens = self.nodes[idx].key.len();
+            self.live_tokens -= tokens;
+            self.evictable.remove(&(self.nodes[idx].last_access, idx));
+            self.nodes[idx].dead = true;
+            self.nodes[idx].key = vec![];
+            self.nodes[idx].children = Default::default();
+            self.free.push(idx);
+            self.refresh(parent);
+            tokens
+        }
+
+        fn evict(&mut self, target_tokens: usize) -> usize {
+            let mut freed = 0usize;
+            while freed < target_tokens {
+                let Some(&(_, idx)) = self.evictable.iter().next() else { break };
+                freed += self.remove_leaf(idx);
+            }
+            freed
+        }
+
+        fn evict_unpinned(&mut self) -> usize {
+            let mut freed = 0usize;
+            loop {
+                let Some(&(_, idx)) = self.evictable.iter().next() else { break };
+                freed += self.remove_leaf(idx);
+            }
+            freed
+        }
+
+        fn release_branch(&mut self, node: usize) -> usize {
+            let mut freed = 0usize;
+            let mut cur = Some(node);
+            while let Some(idx) = cur {
+                if idx == 0 || self.nodes[idx].dead {
+                    break;
+                }
+                let n = &self.nodes[idx];
+                if !n.children.is_empty() || n.refcount > 0 {
+                    break;
+                }
+                let parent = n.parent;
+                freed += self.remove_leaf(idx);
+                cur = parent;
+            }
+            freed
+        }
+    }
+
+    #[test]
+    fn prop_flat_edges_match_hashmap_reference_model() {
+        // Drive the flat-edge cache and the HashMap-edge reference through
+        // identical random insert / match / pin / evict / release sequences
+        // and demand identical observable behavior at every step: insert
+        // accounting, node indices, match lengths, freed-token counts, and
+        // live-token totals.
+        property(60, |rng: &mut Rng| {
+            let mut real = RadixCache::with_block_size(1 << 20, 1 + rng.index(8));
+            let mut model = ModelRadix::new();
+            let vocab = 4u64;
+            let mut seqs: Vec<Vec<u32>> = vec![];
+            let mut locked: Vec<NodeIdx> = vec![];
+            let mk_seq = |rng: &mut Rng, seqs: &[Vec<u32>]| -> Vec<u32> {
+                let len = 1 + rng.index(10);
+                if !seqs.is_empty() && rng.chance(0.5) {
+                    let base = &seqs[rng.index(seqs.len())];
+                    let cut = rng.index(base.len() + 1);
+                    let mut s = base[..cut].to_vec();
+                    for _ in 0..len {
+                        s.push(rng.below(vocab) as u32);
+                    }
+                    s
+                } else {
+                    (0..len).map(|_| rng.below(vocab) as u32).collect()
+                }
+            };
+            for _ in 0..(10 + rng.index(30)) {
+                match rng.index(6) {
+                    0 | 1 => {
+                        let s = mk_seq(rng, &seqs);
+                        let out = real.insert(&s);
+                        let got = (out.new_tokens, out.shared_tokens, out.node);
+                        let want = model.insert(&s);
+                        crate::prop_check!(
+                            got == want,
+                            "insert diverged: real {got:?} vs model {want:?}"
+                        );
+                        if rng.chance(0.3) {
+                            real.lock(out.node);
+                            model.lock(out.node);
+                            locked.push(out.node);
+                        }
+                        seqs.push(s);
+                    }
+                    2 => {
+                        let s = mk_seq(rng, &seqs);
+                        let got = real.match_prefix(&s);
+                        let want = model.match_prefix(&s);
+                        crate::prop_check!(
+                            got == want,
+                            "match diverged: real {got:?} vs model {want:?}"
+                        );
+                    }
+                    3 => {
+                        let target = rng.index(30);
+                        let a = real.evict(target);
+                        let b = model.evict(target);
+                        crate::prop_check!(a == b, "evict freed {a} vs model {b}");
+                    }
+                    4 => {
+                        if let Some(i) = (!locked.is_empty()).then(|| rng.index(locked.len())) {
+                            let n = locked.swap_remove(i);
+                            real.unlock(n);
+                            model.unlock(n);
+                            let a = real.release_branch(n);
+                            let b = model.release_branch(n);
+                            crate::prop_check!(a == b, "release freed {a} vs model {b}");
+                        }
+                    }
+                    _ => {
+                        let a = real.evict_unpinned();
+                        let b = model.evict_unpinned();
+                        crate::prop_check!(a == b, "evict_unpinned freed {a} vs model {b}");
+                    }
+                }
+                crate::prop_check!(
+                    real.live_tokens() == model.live_tokens,
+                    "live tokens drift: real {} vs model {}",
+                    real.live_tokens(),
+                    model.live_tokens
+                );
+                real.check_invariants().map_err(|e| e)?;
+            }
+            for &n in &locked {
+                real.unlock(n);
+                model.unlock(n);
+            }
+            let a = real.evict_unpinned();
+            let b = model.evict_unpinned();
+            crate::prop_check!(a == b, "final drain freed {a} vs model {b}");
+            crate::prop_check!(real.live_tokens() == 0, "final drain left tokens");
+            real.check_invariants().map_err(|e| e)?;
             Ok(())
         });
     }

@@ -30,8 +30,8 @@ USAGE:
   ets serve [--dataset D] [--model M] [--policy P] [--width N]
             [--problems K] [--concurrency C] [--capacity TOKENS]
             [--block-size TOKENS] [--shards N] [--pipeline]
-            [--prefix-share] [--seed S] [--json FILE] [--pjrt]
-            [--requests K] [--artifacts DIR]
+            [--prefix-share] [--pin-cores] [--seed S] [--json FILE]
+            [--pjrt] [--requests K] [--artifacts DIR]
   ets info  [--artifacts DIR]
 
 `--capacity` makes the KV budget *hard*: the scheduler gates admission on
@@ -52,6 +52,11 @@ peer-held spans billed min(NVLink transfer, recompute prefill). Placement
 and costing only — results are byte-identical with it on or off.
 `--prefix-share=0` forces it off, overriding a `serve.prefix_share` config
 value.
+`--pin-cores` pins each persistent shard worker to a CPU core (worker i →
+core i mod num_cores), so the thread that owns a shard's radix cache and
+block-allocator arena stays put. Placement only — results are
+byte-identical with it on or off. `--pin-cores=0` forces it off,
+overriding a `serve.pin_cores` config value.
 
 POLICIES: rebase | beam-<k> | beam-sqrt | dvts-<k> | dvts-sqrt |
           ets[:<lambda_b>] | ets-kv[:<lambda_b>]
@@ -224,6 +229,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     || cfg_doc.usize_or("serve.prefix_share", 0) != 0
             }
         },
+        // same on/off grammar as --pipeline
+        pin_cores: match args.get("pin-cores") {
+            Some(v) => v != "0" && v != "false",
+            None => {
+                args.flag("pin-cores")
+                    || cfg_doc.bool_or("serve.pin_cores", false)
+                    || cfg_doc.usize_or("serve.pin_cores", 0) != 0
+            }
+        },
     };
     if opts.capacity_tokens == 0 {
         bail!("--capacity must be a positive token budget");
@@ -271,6 +285,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         r.serve.total_blocks,
         opts.block_size,
     );
+    if opts.pin_cores {
+        let pins: Vec<String> = r
+            .serve
+            .worker_cores
+            .iter()
+            .enumerate()
+            .map(|(w, c)| match c {
+                Some(core) => format!("{w}→{core}"),
+                None => format!("{w}→os"),
+            })
+            .collect();
+        println!("  core pinning: {}", pins.join("  "));
+    }
     if opts.shards > 1 {
         println!(
             "  {} shards ({} tokens each), {} cross-shard migrations",
@@ -342,6 +369,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("shards", Json::num(r.serve.shards as f64)),
             ("pipeline", Json::num(if r.serve.pipeline { 1.0 } else { 0.0 })),
             ("prefix_share", Json::num(if r.serve.prefix_share { 1.0 } else { 0.0 })),
+            ("pin_cores", Json::num(if opts.pin_cores { 1.0 } else { 0.0 })),
+            (
+                "worker_cores",
+                Json::Arr(
+                    r.serve
+                        .worker_cores
+                        .iter()
+                        .map(|c| match c {
+                            Some(core) => Json::num(*core as f64),
+                            None => Json::Null,
+                        })
+                        .collect(),
+                ),
+            ),
             ("hub_hits", Json::num(r.serve.hub_hits as f64)),
             ("hub_hit_rate", Json::num(r.serve.hub_hit_rate())),
             ("hub_published", Json::num(r.serve.hub_published as f64)),

@@ -311,7 +311,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
         let rewards = self.prm.score(&self.tree, &new_nodes);
         m.prm_calls = new_nodes.len();
         for (&n, &r) in new_nodes.iter().zip(&rewards) {
-            self.tree.get_mut(n).reward = r;
+            self.tree.set_reward(n, r);
         }
         if self.steps_taken == 0 {
             self.policy.on_root_children(&new_nodes);

@@ -6,13 +6,18 @@
 //! descendants. Node bookkeeping (token counts, live/pruned state) feeds the
 //! ETS cost model (`|V_S|`, `|V_A|`).
 //!
+//! Storage is struct-of-arrays: parents, rewards, live flags, and per-step
+//! token counts live in parallel `Vec`s so the hot sweeps — `retain_paths`,
+//! `spanned_subtree`, frontier scans — stream linearly over dense arrays
+//! instead of hopping between per-node structs. Reads go through the
+//! [`NodeRef`] view (`tree.get(id).step / .parent / .reward / .live /
+//! .children`), writes through targeted setters.
+//!
 //! KV accounting does *not* live here: the serving KV numbers (live /
 //! unshared footprints) are views over the shared
 //! [`crate::kvcache::RadixCache`], maintained by
 //! [`crate::engine::BatchEngine`] as trajectories are expanded, pruned, and
 //! completed. The tree only knows per-step token counts.
-
-use std::collections::HashSet;
 
 /// Node id within a [`SearchTree`].
 pub type NodeId = usize;
@@ -41,23 +46,33 @@ pub struct StepInfo {
     pub alive: bool,
 }
 
-/// One step of a partial trajectory.
-#[derive(Clone, Debug)]
-pub struct Node {
+/// Read view of one step of a partial trajectory (the column slice of the
+/// struct-of-arrays store at one node id).
+#[derive(Clone, Copy, Debug)]
+pub struct NodeRef<'a> {
     pub parent: Option<NodeId>,
-    pub children: Vec<NodeId>,
+    pub children: &'a [NodeId],
     /// Step payload.
-    pub step: StepInfo,
+    pub step: &'a StepInfo,
     /// PRM reward of the trajectory prefix ending at this node.
     pub reward: f64,
     /// True while the node is part of a live (unpruned) trajectory path.
     pub live: bool,
 }
 
-/// Partial-trajectory tree for one search problem.
+/// Partial-trajectory tree for one search problem (struct-of-arrays).
 #[derive(Clone, Debug, Default)]
 pub struct SearchTree {
-    nodes: Vec<Node>,
+    parents: Vec<Option<NodeId>>,
+    children: Vec<Vec<NodeId>>,
+    /// PRM reward of the trajectory prefix ending at each node.
+    rewards: Vec<f64>,
+    /// Live (unpruned) flag per node — the `retain_paths` sweep column.
+    live: Vec<bool>,
+    /// Hot mirror of `steps[i].tokens` so token sweeps stay in one dense
+    /// array (`StepInfo.tokens` is set at creation and never mutated).
+    step_tokens: Vec<usize>,
+    steps: Vec<StepInfo>,
     root: Option<NodeId>,
 }
 
@@ -66,18 +81,23 @@ impl SearchTree {
         Self::default()
     }
 
+    fn push_node(&mut self, parent: Option<NodeId>, step: StepInfo, reward: f64) -> NodeId {
+        let id = self.steps.len();
+        self.parents.push(parent);
+        self.children.push(vec![]);
+        self.rewards.push(reward);
+        self.live.push(true);
+        self.step_tokens.push(step.tokens);
+        self.steps.push(step);
+        id
+    }
+
     /// Create the root (the problem prompt), with `tokens` prompt tokens.
     pub fn init_root(&mut self, tokens: usize) -> NodeId {
         assert!(self.root.is_none(), "root already set");
-        self.nodes.push(Node {
-            parent: None,
-            children: vec![],
-            step: StepInfo { tokens, alive: true, ..Default::default() },
-            reward: 0.0,
-            live: true,
-        });
-        self.root = Some(0);
-        0
+        let id = self.push_node(None, StepInfo { tokens, alive: true, ..Default::default() }, 0.0);
+        self.root = Some(id);
+        id
     }
 
     pub fn root(&self) -> NodeId {
@@ -85,32 +105,37 @@ impl SearchTree {
     }
 
     pub fn len(&self) -> usize {
-        self.nodes.len()
+        self.steps.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.nodes.is_empty()
+        self.steps.is_empty()
     }
 
-    pub fn get(&self, id: NodeId) -> &Node {
-        &self.nodes[id]
+    pub fn get(&self, id: NodeId) -> NodeRef<'_> {
+        NodeRef {
+            parent: self.parents[id],
+            children: &self.children[id],
+            step: &self.steps[id],
+            reward: self.rewards[id],
+            live: self.live[id],
+        }
     }
 
-    pub fn get_mut(&mut self, id: NodeId) -> &mut Node {
-        &mut self.nodes[id]
+    /// Overwrite the PRM reward of `id` (reward-model rescoring).
+    pub fn set_reward(&mut self, id: NodeId, reward: f64) {
+        self.rewards[id] = reward;
+    }
+
+    /// Attach minted surface token ids to `id` (PJRT commit path).
+    pub fn set_token_ids(&mut self, id: NodeId, token_ids: Vec<u32>) {
+        self.steps[id].token_ids = token_ids;
     }
 
     /// Append a child step under `parent`.
     pub fn add_child(&mut self, parent: NodeId, step: StepInfo, reward: f64) -> NodeId {
-        let id = self.nodes.len();
-        self.nodes.push(Node {
-            parent: Some(parent),
-            children: vec![],
-            step,
-            reward,
-            live: true,
-        });
-        self.nodes[parent].children.push(id);
+        let id = self.push_node(Some(parent), step, reward);
+        self.children[parent].push(id);
         id
     }
 
@@ -118,7 +143,7 @@ impl SearchTree {
     pub fn path(&self, id: NodeId) -> Vec<NodeId> {
         let mut p = vec![id];
         let mut cur = id;
-        while let Some(parent) = self.nodes[cur].parent {
+        while let Some(parent) = self.parents[cur] {
             p.push(parent);
             cur = parent;
         }
@@ -133,22 +158,40 @@ impl SearchTree {
 
     /// Total tokens along the path root..=id (the sequence length at `id`).
     pub fn seq_len(&self, id: NodeId) -> usize {
-        self.path(id).iter().map(|&n| self.nodes[n].step.tokens).sum()
+        let mut total = self.step_tokens[id];
+        let mut cur = id;
+        while let Some(parent) = self.parents[cur] {
+            total += self.step_tokens[parent];
+            cur = parent;
+        }
+        total
+    }
+
+    /// Mark ancestors of each of `leaves` in `mark`, stopping each upward
+    /// walk at the first already-marked node (shared prefixes walked once).
+    fn mark_paths(&self, leaves: &[NodeId], mark: &mut [bool]) {
+        for &leaf in leaves {
+            let mut cur = leaf;
+            while !mark[cur] {
+                mark[cur] = true;
+                match self.parents[cur] {
+                    Some(p) => cur = p,
+                    None => break,
+                }
+            }
+        }
     }
 
     /// Mark the paths of `keep` live and prune every other previously-live
     /// leaf path. Returns the number of nodes that transitioned live→pruned.
     pub fn retain_paths(&mut self, keep: &[NodeId]) -> usize {
-        let mut keep_set: HashSet<NodeId> = HashSet::new();
-        for &leaf in keep {
-            for n in self.path(leaf) {
-                keep_set.insert(n);
-            }
-        }
+        let mut mark = vec![false; self.steps.len()];
+        self.mark_paths(keep, &mut mark);
         let mut pruned = 0;
-        for id in 0..self.nodes.len() {
-            if self.nodes[id].live && !keep_set.contains(&id) {
-                self.nodes[id].live = false;
+        // linear sweep over the dense live column
+        for (id, &keep_it) in mark.iter().enumerate() {
+            if self.live[id] && !keep_it {
+                self.live[id] = false;
                 pruned += 1;
             }
         }
@@ -157,7 +200,7 @@ impl SearchTree {
 
     /// Unique live nodes (`|V|` over the live tree).
     pub fn live_nodes(&self) -> usize {
-        self.nodes.iter().filter(|n| n.live).count()
+        self.live.iter().filter(|&&l| l).count()
     }
 
     /// Build the ETS selection sub-problem over `candidates` (current
@@ -169,28 +212,24 @@ impl SearchTree {
         &self,
         candidates: &[NodeId],
     ) -> (Vec<Option<usize>>, Vec<usize>, Vec<usize>) {
-        // Collect spanned nodes (dedup), keep stable order by node id so the
-        // parent always precedes the child (ids are allocation-ordered).
-        let mut in_span: HashSet<NodeId> = HashSet::new();
-        for &leaf in candidates {
-            for n in self.path(leaf) {
-                in_span.insert(n);
+        // Mark spanned nodes, then renumber by one linear id scan: ids are
+        // allocation-ordered, so the scan yields the same parent-precedes-
+        // child dense order the old sort-based implementation produced.
+        let n = self.steps.len();
+        let mut in_span = vec![false; n];
+        self.mark_paths(candidates, &mut in_span);
+        let mut dense = vec![usize::MAX; n];
+        let mut parents: Vec<Option<usize>> = Vec::new();
+        let mut tokens: Vec<usize> = Vec::new();
+        for id in 0..n {
+            if !in_span[id] {
+                continue;
             }
+            dense[id] = parents.len();
+            parents.push(self.parents[id].filter(|&p| in_span[p]).map(|p| dense[p]));
+            tokens.push(self.step_tokens[id]);
         }
-        let mut span: Vec<NodeId> = in_span.iter().copied().collect();
-        span.sort_unstable();
-        let index_of = |id: NodeId| span.binary_search(&id).unwrap();
-        let parents: Vec<Option<usize>> = span
-            .iter()
-            .map(|&id| {
-                self.nodes[id]
-                    .parent
-                    .filter(|p| in_span.contains(p))
-                    .map(index_of)
-            })
-            .collect();
-        let leaf_idx: Vec<usize> = candidates.iter().map(|&c| index_of(c)).collect();
-        let tokens: Vec<usize> = span.iter().map(|&id| self.nodes[id].step.tokens).collect();
+        let leaf_idx: Vec<usize> = candidates.iter().map(|&c| dense[c]).collect();
         (parents, leaf_idx, tokens)
     }
 }
@@ -237,6 +276,19 @@ mod tests {
         assert_eq!(t.live_nodes(), 3);
         assert!(!t.get(b).live);
         assert_eq!(live_step_tokens(&t), 4 + 6);
+    }
+
+    #[test]
+    fn setters_update_the_read_view() {
+        let mut t = SearchTree::new();
+        let root = t.init_root(1);
+        let a = t.add_child(root, StepInfo { tokens: 2, ..Default::default() }, 0.25);
+        t.set_reward(a, 0.75);
+        t.set_token_ids(a, vec![7, 8, 9]);
+        assert_eq!(t.get(a).reward, 0.75);
+        assert_eq!(t.get(a).step.token_ids, vec![7, 8, 9]);
+        assert_eq!(t.get(a).step.tokens, 2, "token count untouched by setters");
+        assert_eq!(t.seq_len(a), 3);
     }
 
     #[test]
@@ -329,6 +381,50 @@ mod tests {
                 }
             }
             crate::prop_check!(t.live_nodes() == expect.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_spanned_subtree_matches_reference() {
+        // The bitmap + linear-scan renumbering must equal the reference
+        // HashSet + sort implementation node for node.
+        property(80, |rng: &mut Rng| {
+            let mut t = SearchTree::new();
+            let root = t.init_root(1);
+            let mut all = vec![root];
+            for _ in 0..rng.index(40) {
+                let parent = all[rng.index(all.len())];
+                all.push(t.add_child(
+                    parent,
+                    StepInfo { tokens: 1 + rng.index(9), ..Default::default() },
+                    0.5,
+                ));
+            }
+            let k = 1 + rng.index(all.len());
+            let cands: Vec<NodeId> = rng.sample_indices(all.len(), k);
+            let (parents, leaf_idx, tokens) = t.spanned_subtree(&cands);
+            // reference: HashSet + sorted ids + binary-search renumbering
+            let mut in_span: std::collections::HashSet<NodeId> =
+                std::collections::HashSet::new();
+            for &leaf in &cands {
+                for n in t.path(leaf) {
+                    in_span.insert(n);
+                }
+            }
+            let mut span: Vec<NodeId> = in_span.iter().copied().collect();
+            span.sort_unstable();
+            let index_of = |id: NodeId| span.binary_search(&id).unwrap();
+            let ref_parents: Vec<Option<usize>> = span
+                .iter()
+                .map(|&id| t.get(id).parent.filter(|p| in_span.contains(p)).map(index_of))
+                .collect();
+            let ref_leaf: Vec<usize> = cands.iter().map(|&c| index_of(c)).collect();
+            let ref_tokens: Vec<usize> =
+                span.iter().map(|&id| t.get(id).step.tokens).collect();
+            crate::prop_check!(parents == ref_parents, "parents mismatch");
+            crate::prop_check!(leaf_idx == ref_leaf, "leaf indices mismatch");
+            crate::prop_check!(tokens == ref_tokens, "tokens mismatch");
             Ok(())
         });
     }

@@ -1,0 +1,67 @@
+//! Zero-dependency CPU-affinity shim.
+//!
+//! Linux: raw `sched_setaffinity(2)` against the libc that std already
+//! links — no `libc` crate. Everywhere else: a no-op that reports failure,
+//! so callers degrade to OS placement. Pinning is purely a *placement*
+//! knob: it changes where work runs, never what it computes, so
+//! `--pin-cores` on/off must (and does, per the determinism suite) produce
+//! identical serve results.
+
+/// Worker threads available to this process (fallback 1).
+pub fn num_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Pin the *calling thread* to `core` (wrapped into the available range by
+/// the caller if desired). Returns `true` when the kernel accepted the
+/// mask; `false` on failure or on non-Linux targets.
+#[cfg(target_os = "linux")]
+pub fn pin_to_core(core: usize) -> bool {
+    // Matches glibc/musl: cpu_set_t is a 1024-bit mask; pid 0 = this thread
+    // (the raw syscall semantics sched_setaffinity forwards to).
+    const SET_WORDS: usize = 1024 / 64;
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    if core >= 1024 {
+        return false;
+    }
+    let mut mask = [0u64; SET_WORDS];
+    mask[core / 64] = 1u64 << (core % 64);
+    // SAFETY: the mask buffer outlives the call and its size is passed.
+    unsafe { sched_setaffinity(0, SET_WORDS * 8, mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to_core(_core: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_cores_positive() {
+        assert!(num_cores() >= 1);
+    }
+
+    #[test]
+    fn pin_to_core_zero_is_accepted_on_linux() {
+        let ok = pin_to_core(0);
+        if cfg!(target_os = "linux") {
+            // core 0 exists on any Linux box this test runs on; do not
+            // leave the test thread pinned afterwards
+            assert!(ok, "sched_setaffinity(0) failed");
+            let all: Vec<bool> = (0..num_cores()).map(pin_to_core).collect();
+            assert!(all.iter().any(|&b| b));
+        } else {
+            assert!(!ok);
+        }
+    }
+
+    #[test]
+    fn out_of_range_core_is_rejected() {
+        assert!(!pin_to_core(1 << 20));
+    }
+}

@@ -3,10 +3,12 @@
 //! external crates that are unreachable in the offline build environment
 //! (rand, serde, clap, toml, proptest, anyhow).
 
+pub mod affinity;
 pub mod argparse;
 pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod toml;

@@ -1,0 +1,488 @@
+//! Fixed-width vectorized kernels for the host-side hot loops (embed
+//! cosine/distance, Lance–Williams cluster merges, simplex pivots).
+//!
+//! Every kernel has two implementations — a runtime-dispatched AVX path
+//! (`std::arch` intrinsics behind `is_x86_feature_detected!`) and a scalar
+//! fallback — that are **bit-identical by construction**:
+//!
+//! * Reductions use a fixed 8-lane blocked accumulation: element `i` always
+//!   lands in lane `i % 8`, and the lanes collapse through the same pairwise
+//!   tree (`l[i] + l[i+4]`, then `+2`, then `+1`) in both paths. f64 adds are
+//!   deterministic for a fixed association order, so SIMD-on and SIMD-off
+//!   produce the same bytes. No FMA anywhere: the scalar path's separate
+//!   mul-then-add rounding must match `_mm256_mul_pd` + `_mm256_add_pd`.
+//! * Element-wise kernels (merge arithmetic, pivot row updates) perform the
+//!   identical per-element operation sequence; lane width cannot reassociate
+//!   anything.
+//!
+//! The `ETS_NO_SIMD=1` environment variable (or [`force_scalar`], for
+//! in-process tests) pins every kernel to the scalar path; the determinism
+//! suite asserts byte-identical serve output across the two modes.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: OnceLock<()> = OnceLock::new();
+
+fn env_init() {
+    ENV_INIT.get_or_init(|| {
+        let off = std::env::var("ETS_NO_SIMD")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        if off {
+            FORCE_SCALAR.store(true, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Pin every kernel to the scalar path (equivalent to `ETS_NO_SIMD=1`),
+/// or release the pin again. For tests that compare both modes in-process.
+pub fn force_scalar(on: bool) {
+    env_init();
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn have_avx() -> bool {
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| is_x86_feature_detected!("avx"))
+}
+
+/// Whether the vectorized paths are active (AVX present and not killed by
+/// `ETS_NO_SIMD` / [`force_scalar`]).
+pub fn simd_active() -> bool {
+    env_init();
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        return false;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        have_avx()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Collapse the 8 accumulator lanes through the fixed pairwise tree. Shared
+/// verbatim by both paths — the reduction order *is* the determinism
+/// contract of this module.
+#[inline]
+fn reduce8(l: [f64; 8]) -> f64 {
+    let q = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+    let p = [q[0] + q[2], q[1] + q[3]];
+    p[0] + p[1]
+}
+
+// ---------------------------------------------------------------------------
+// Blocked reductions over f32 slices (f64 accumulation)
+// ---------------------------------------------------------------------------
+
+/// `(a·b, a·a, b·b)` in one pass — the cosine kernel. Panics on length
+/// mismatch.
+pub fn dot_norms(a: &[f32], b: &[f32]) -> (f64, f64, f64) {
+    assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX availability checked by `simd_active`.
+        return unsafe { avx::dot_norms(a, b) };
+    }
+    dot_norms_scalar(a, b)
+}
+
+fn dot_norms_scalar(a: &[f32], b: &[f32]) -> (f64, f64, f64) {
+    let mut dot = [0.0f64; 8];
+    let mut na = [0.0f64; 8];
+    let mut nb = [0.0f64; 8];
+    let full = a.len() / 8 * 8;
+    let mut i = 0;
+    while i < full {
+        for l in 0..8 {
+            let x = a[i + l] as f64;
+            let y = b[i + l] as f64;
+            dot[l] += x * y;
+            na[l] += x * x;
+            nb[l] += y * y;
+        }
+        i += 8;
+    }
+    for l in 0..a.len() - full {
+        let x = a[full + l] as f64;
+        let y = b[full + l] as f64;
+        dot[l] += x * y;
+        na[l] += x * x;
+        nb[l] += y * y;
+    }
+    (reduce8(dot), reduce8(na), reduce8(nb))
+}
+
+/// Σ x², accumulated in f64 — the embed normalization kernel.
+pub fn sum_sq(a: &[f32]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX availability checked by `simd_active`.
+        return unsafe { avx::sum_sq(a) };
+    }
+    sum_sq_scalar(a)
+}
+
+fn sum_sq_scalar(a: &[f32]) -> f64 {
+    let mut acc = [0.0f64; 8];
+    let full = a.len() / 8 * 8;
+    let mut i = 0;
+    while i < full {
+        for l in 0..8 {
+            let x = a[i + l] as f64;
+            acc[l] += x * x;
+        }
+        i += 8;
+    }
+    for l in 0..a.len() - full {
+        let x = a[full + l] as f64;
+        acc[l] += x * x;
+    }
+    reduce8(acc)
+}
+
+// ---------------------------------------------------------------------------
+// Element-wise kernels (trivially order-preserving)
+// ---------------------------------------------------------------------------
+
+/// `xs[i] /= d` — embed unit normalization (division kept: `* (1/d)` would
+/// round differently).
+pub fn div_scalar_f32(xs: &mut [f32], d: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX availability checked by `simd_active`.
+        unsafe { avx::div_scalar_f32(xs, d) };
+        return;
+    }
+    for x in xs.iter_mut() {
+        *x /= d;
+    }
+}
+
+/// Lance–Williams average-linkage row merge:
+/// `acc[k] = (na * acc[k] + nb * other[k]) / (na + nb)`.
+pub fn lw_merge(acc: &mut [f64], other: &[f64], na: f64, nb: f64) {
+    assert_eq!(acc.len(), other.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX availability checked by `simd_active`.
+        unsafe { avx::lw_merge(acc, other, na, nb) };
+        return;
+    }
+    let den = na + nb;
+    for (x, &o) in acc.iter_mut().zip(other) {
+        *x = (na * *x + nb * o) / den;
+    }
+}
+
+/// `xs[i] *= factor` — pivot-row scaling.
+pub fn scale(xs: &mut [f64], factor: f64) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX availability checked by `simd_active`.
+        unsafe { avx::scale(xs, factor) };
+        return;
+    }
+    for x in xs.iter_mut() {
+        *x *= factor;
+    }
+}
+
+/// `dst[i] -= factor * src[i]` — the tableau row elimination (axpy).
+pub fn sub_scaled(dst: &mut [f64], src: &[f64], factor: f64) {
+    assert_eq!(dst.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX availability checked by `simd_active`.
+        unsafe { avx::sub_scaled(dst, src, factor) };
+        return;
+    }
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d -= factor * s;
+    }
+}
+
+/// `dst[i] += src[i]` — phase-1 pricing of artificial basics.
+pub fn add_assign(dst: &mut [f64], src: &[f64]) {
+    assert_eq!(dst.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX availability checked by `simd_active`.
+        unsafe { avx::add_assign(dst, src) };
+        return;
+    }
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX implementations
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx {
+    use super::reduce8;
+    use std::arch::x86_64::*;
+
+    /// Widen 8 f32 lanes to two f64 quads (lanes 0..4, 4..8).
+    #[inline]
+    unsafe fn widen(v: __m256) -> (__m256d, __m256d) {
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps(v, 1));
+        (lo, hi)
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn dot_norms(a: &[f32], b: &[f32]) -> (f64, f64, f64) {
+        let mut dot_lo = _mm256_setzero_pd();
+        let mut dot_hi = _mm256_setzero_pd();
+        let mut na_lo = _mm256_setzero_pd();
+        let mut na_hi = _mm256_setzero_pd();
+        let mut nb_lo = _mm256_setzero_pd();
+        let mut nb_hi = _mm256_setzero_pd();
+        let full = a.len() / 8 * 8;
+        let mut i = 0;
+        while i < full {
+            let (a_lo, a_hi) = widen(_mm256_loadu_ps(a.as_ptr().add(i)));
+            let (b_lo, b_hi) = widen(_mm256_loadu_ps(b.as_ptr().add(i)));
+            dot_lo = _mm256_add_pd(dot_lo, _mm256_mul_pd(a_lo, b_lo));
+            dot_hi = _mm256_add_pd(dot_hi, _mm256_mul_pd(a_hi, b_hi));
+            na_lo = _mm256_add_pd(na_lo, _mm256_mul_pd(a_lo, a_lo));
+            na_hi = _mm256_add_pd(na_hi, _mm256_mul_pd(a_hi, a_hi));
+            nb_lo = _mm256_add_pd(nb_lo, _mm256_mul_pd(b_lo, b_lo));
+            nb_hi = _mm256_add_pd(nb_hi, _mm256_mul_pd(b_hi, b_hi));
+            i += 8;
+        }
+        let mut dot = [0.0f64; 8];
+        let mut na = [0.0f64; 8];
+        let mut nb = [0.0f64; 8];
+        _mm256_storeu_pd(dot.as_mut_ptr(), dot_lo);
+        _mm256_storeu_pd(dot.as_mut_ptr().add(4), dot_hi);
+        _mm256_storeu_pd(na.as_mut_ptr(), na_lo);
+        _mm256_storeu_pd(na.as_mut_ptr().add(4), na_hi);
+        _mm256_storeu_pd(nb.as_mut_ptr(), nb_lo);
+        _mm256_storeu_pd(nb.as_mut_ptr().add(4), nb_hi);
+        // tail elements land in lanes 0..rem, exactly as in the scalar path
+        for l in 0..a.len() - full {
+            let x = a[full + l] as f64;
+            let y = b[full + l] as f64;
+            dot[l] += x * y;
+            na[l] += x * x;
+            nb[l] += y * y;
+        }
+        (reduce8(dot), reduce8(na), reduce8(nb))
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn sum_sq(a: &[f32]) -> f64 {
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let full = a.len() / 8 * 8;
+        let mut i = 0;
+        while i < full {
+            let (a_lo, a_hi) = widen(_mm256_loadu_ps(a.as_ptr().add(i)));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(a_lo, a_lo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(a_hi, a_hi));
+            i += 8;
+        }
+        let mut acc = [0.0f64; 8];
+        _mm256_storeu_pd(acc.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), acc_hi);
+        for l in 0..a.len() - full {
+            let x = a[full + l] as f64;
+            acc[l] += x * x;
+        }
+        reduce8(acc)
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn div_scalar_f32(xs: &mut [f32], d: f32) {
+        let dv = _mm256_set1_ps(d);
+        let full = xs.len() / 8 * 8;
+        let mut i = 0;
+        while i < full {
+            let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+            _mm256_storeu_ps(xs.as_mut_ptr().add(i), _mm256_div_ps(v, dv));
+            i += 8;
+        }
+        for x in &mut xs[full..] {
+            *x /= d;
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn lw_merge(acc: &mut [f64], other: &[f64], na: f64, nb: f64) {
+        let vna = _mm256_set1_pd(na);
+        let vnb = _mm256_set1_pd(nb);
+        let vden = _mm256_set1_pd(na + nb);
+        let full = acc.len() / 4 * 4;
+        let mut i = 0;
+        while i < full {
+            let x = _mm256_loadu_pd(acc.as_ptr().add(i));
+            let o = _mm256_loadu_pd(other.as_ptr().add(i));
+            let num = _mm256_add_pd(_mm256_mul_pd(vna, x), _mm256_mul_pd(vnb, o));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(i), _mm256_div_pd(num, vden));
+            i += 4;
+        }
+        let den = na + nb;
+        for l in full..acc.len() {
+            acc[l] = (na * acc[l] + nb * other[l]) / den;
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn scale(xs: &mut [f64], factor: f64) {
+        let f = _mm256_set1_pd(factor);
+        let full = xs.len() / 4 * 4;
+        let mut i = 0;
+        while i < full {
+            let v = _mm256_loadu_pd(xs.as_ptr().add(i));
+            _mm256_storeu_pd(xs.as_mut_ptr().add(i), _mm256_mul_pd(v, f));
+            i += 4;
+        }
+        for x in &mut xs[full..] {
+            *x *= factor;
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn sub_scaled(dst: &mut [f64], src: &[f64], factor: f64) {
+        let f = _mm256_set1_pd(factor);
+        let full = dst.len() / 4 * 4;
+        let mut i = 0;
+        while i < full {
+            let d = _mm256_loadu_pd(dst.as_ptr().add(i));
+            let s = _mm256_loadu_pd(src.as_ptr().add(i));
+            _mm256_storeu_pd(
+                dst.as_mut_ptr().add(i),
+                _mm256_sub_pd(d, _mm256_mul_pd(f, s)),
+            );
+            i += 4;
+        }
+        for l in full..dst.len() {
+            dst[l] -= factor * src[l];
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn add_assign(dst: &mut [f64], src: &[f64]) {
+        let full = dst.len() / 4 * 4;
+        let mut i = 0;
+        while i < full {
+            let d = _mm256_loadu_pd(dst.as_ptr().add(i));
+            let s = _mm256_loadu_pd(src.as_ptr().add(i));
+            _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_add_pd(d, s));
+            i += 4;
+        }
+        for l in full..dst.len() {
+            dst[l] += src[l];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vec_f32(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn vec_f64(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Run `f` once with SIMD allowed and once forced scalar; restore state.
+    fn both_modes<T>(f: impl Fn() -> T) -> (T, T) {
+        force_scalar(false);
+        let fast = f();
+        force_scalar(true);
+        let slow = f();
+        force_scalar(false);
+        (fast, slow)
+    }
+
+    #[test]
+    fn reductions_bit_identical_across_modes() {
+        let mut rng = Rng::new(0xD07);
+        for n in [0, 1, 3, 7, 8, 9, 15, 16, 31, 32, 33, 100, 257] {
+            let a = vec_f32(&mut rng, n);
+            let b = vec_f32(&mut rng, n);
+            let (fast, slow) = both_modes(|| dot_norms(&a, &b));
+            assert_eq!(fast.0.to_bits(), slow.0.to_bits(), "dot n={n}");
+            assert_eq!(fast.1.to_bits(), slow.1.to_bits(), "na n={n}");
+            assert_eq!(fast.2.to_bits(), slow.2.to_bits(), "nb n={n}");
+            let (fast, slow) = both_modes(|| sum_sq(&a));
+            assert_eq!(fast.to_bits(), slow.to_bits(), "sum_sq n={n}");
+        }
+    }
+
+    #[test]
+    fn elementwise_bit_identical_across_modes() {
+        let mut rng = Rng::new(0xE1E);
+        for n in [0, 1, 2, 3, 4, 5, 7, 8, 13, 64, 101] {
+            let base = vec_f64(&mut rng, n);
+            let other = vec_f64(&mut rng, n);
+            let basef: Vec<f32> = base.iter().map(|&x| x as f32).collect();
+            let (na, nb) = (1.0 + rng.f64() * 5.0, 1.0 + rng.f64() * 5.0);
+            let factor = rng.normal();
+
+            let (fast, slow) = both_modes(|| {
+                let mut v = base.clone();
+                lw_merge(&mut v, &other, na, nb);
+                v
+            });
+            assert!(fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+            let (fast, slow) = both_modes(|| {
+                let mut v = base.clone();
+                scale(&mut v, factor);
+                v
+            });
+            assert!(fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+            let (fast, slow) = both_modes(|| {
+                let mut v = base.clone();
+                sub_scaled(&mut v, &other, factor);
+                v
+            });
+            assert!(fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+            let (fast, slow) = both_modes(|| {
+                let mut v = base.clone();
+                add_assign(&mut v, &other);
+                v
+            });
+            assert!(fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+            let (fast, slow) = both_modes(|| {
+                let mut v = basef.clone();
+                div_scalar_f32(&mut v, 3.7);
+                v
+            });
+            assert!(fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn dot_norms_matches_plain_math() {
+        // The lane-tree result equals a plain sum within fp tolerance.
+        let mut rng = Rng::new(0x5EED);
+        let a = vec_f32(&mut rng, 67);
+        let b = vec_f32(&mut rng, 67);
+        let (dot, na, nb) = dot_norms(&a, &b);
+        let refdot: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let refna: f64 = a.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let refnb: f64 = b.iter().map(|&y| (y as f64) * (y as f64)).sum();
+        assert!((dot - refdot).abs() < 1e-9);
+        assert!((na - refna).abs() < 1e-9);
+        assert!((nb - refnb).abs() < 1e-9);
+    }
+}

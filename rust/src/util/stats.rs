@@ -53,14 +53,10 @@ pub fn softmax(xs: &[f64]) -> Vec<f64> {
 }
 
 /// Cosine similarity between two equal-length vectors; 0.0 if either is zero.
+/// One pass through the blocked-reduction kernel (same bytes with SIMD on
+/// or off — see [`crate::util::simd`]).
 pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
-    assert_eq!(a.len(), b.len());
-    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
-    for i in 0..a.len() {
-        dot += a[i] as f64 * b[i] as f64;
-        na += a[i] as f64 * a[i] as f64;
-        nb += b[i] as f64 * b[i] as f64;
-    }
+    let (dot, na, nb) = crate::util::simd::dot_norms(a, b);
     if na == 0.0 || nb == 0.0 {
         0.0
     } else {

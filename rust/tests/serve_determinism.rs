@@ -25,6 +25,7 @@ use ets::eval::{
     evaluate_serve, evaluate_serve_duplicate_prompts, evaluate_serve_with,
     evaluate_with_workers, EvalConfig, PolicySpec,
 };
+use ets::util::simd;
 use ets::workload::{WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
 
 fn cfg(policy: PolicySpec) -> EvalConfig {
@@ -361,6 +362,65 @@ fn duplicate_prompts_hit_the_hub_and_shrink_resident_blocks() {
         off.serve.mean_used_blocks()
     );
     assert_eq!(off.serve.hub_hits, 0, "sharing off must never consult the hub");
+}
+
+#[test]
+fn simd_dispatch_is_invisible() {
+    // The vectorized substrates (embed cosine, Lance–Williams merges,
+    // simplex pivots) contract to perform the *same* 8-lane blocked
+    // reduction whether the AVX path or the scalar fallback runs, so
+    // forcing scalar execution must reproduce every fingerprint byte for
+    // byte — the `ETS_NO_SIMD=1` kill switch can never change results.
+    // (force_scalar flips a process-global; the bit-identity contract means
+    // concurrently running tests cannot observe the difference either.)
+    for policy in [PolicySpec::Rebase, PolicySpec::Ets { lambda_b: 1.5, lambda_d: 1.0 }] {
+        let cfg = cfg(policy);
+        let perf = PerfModel::new(H100_NVL, true, 8);
+        let opts = ServeOptions { concurrency: 8, shards: 2, ..Default::default() };
+        let vectorized = fingerprint(&evaluate_serve_with(&cfg, &opts, &perf).report);
+        simd::force_scalar(true);
+        let scalar = fingerprint(&evaluate_serve_with(&cfg, &opts, &perf).report);
+        simd::force_scalar(false);
+        assert_eq!(vectorized, scalar, "scalar fallback diverged from vector path");
+    }
+}
+
+#[test]
+fn core_pinning_is_placement_only() {
+    // --pin-cores moves worker threads onto fixed cores; it must be
+    // invisible in every eval byte. The report records where each worker
+    // landed; the inline single-shard scheduler never pins (it would pin
+    // the caller's thread for the rest of the process).
+    let cfg = cfg(PolicySpec::Rebase);
+    let perf = PerfModel::new(H100_NVL, true, 8);
+    let run = |shards: usize, pin: bool| {
+        let opts = ServeOptions { concurrency: 8, shards, pin_cores: pin, ..Default::default() };
+        evaluate_serve_with(&cfg, &opts, &perf)
+    };
+    let unpinned = run(2, false);
+    let pinned = run(2, true);
+    assert_eq!(
+        fingerprint(&unpinned.report),
+        fingerprint(&pinned.report),
+        "core pinning changed eval results"
+    );
+    assert_eq!(unpinned.serve.worker_cores, vec![None, None]);
+    assert_eq!(pinned.serve.worker_cores.len(), 2);
+    if cfg!(target_os = "linux") {
+        assert!(
+            pinned.serve.worker_cores.iter().all(|c| c.is_some()),
+            "pinning refused on linux: {:?}",
+            pinned.serve.worker_cores
+        );
+    }
+    // single shard runs inline on the caller: pinning must be a no-op
+    let inline = run(1, true);
+    assert_eq!(
+        fingerprint(&unpinned.report),
+        fingerprint(&inline.report),
+        "single-shard run diverged"
+    );
+    assert_eq!(inline.serve.worker_cores, vec![None], "inline scheduler must never pin");
 }
 
 #[test]
