@@ -90,7 +90,7 @@ pub(crate) mod runtime;
 use crate::engine::batch::{ImportSource, DEFAULT_KV_CAPACITY};
 use crate::engine::perfmodel::PerfModel;
 use crate::kvcache::prefixhub::PrefixHub;
-use crate::kvcache::DEFAULT_BLOCK_SIZE;
+use crate::kvcache::{RadixCache, DEFAULT_BLOCK_SIZE};
 use crate::lm::StepGenerator;
 use crate::reward::RewardModel;
 use crate::search::driver::{SearchOutcome, SearchParams, SearchSession};
@@ -218,6 +218,15 @@ pub struct ServeOptions {
     /// `tests/serve_determinism.rs`); a core the kernel refuses degrades to
     /// OS placement for that worker.
     pub pin_cores: bool,
+    /// True-async data plane: each shard *speculatively plans* round `r+1`
+    /// on its worker right after committing round `r` (overlapping peers'
+    /// decodes and the coordinator barrier), with frontier-growth
+    /// mispredicts repaired by planning only the appended tail. Pairs with
+    /// wrapping generators in [`crate::lm::AsyncLm`] at the job-building
+    /// layer so decode sleeps are actually served off-thread. Scheduling
+    /// only: per-problem results are byte-identical with it on or off
+    /// (pinned by `tests/serve_determinism.rs`).
+    pub async_decode: bool,
 }
 
 impl Default for ServeOptions {
@@ -230,6 +239,7 @@ impl Default for ServeOptions {
             pipeline: false,
             prefix_share: false,
             pin_cores: false,
+            async_decode: false,
         }
     }
 }
@@ -255,6 +265,11 @@ impl ServeOptions {
 
     pub fn core_pinned(mut self, pin_cores: bool) -> Self {
         self.pin_cores = pin_cores;
+        self
+    }
+
+    pub fn async_decoded(mut self, async_decode: bool) -> Self {
+        self.async_decode = async_decode;
         self
     }
 }
@@ -356,6 +371,25 @@ pub struct ShardStats {
     pub total_blocks: usize,
     /// Σ of this shard's modeled batch latencies (its busy time).
     pub busy_seconds: f64,
+    /// Speculative round plans that were used as-is — the frontier did not
+    /// grow between staging and the next plan dispatch.
+    pub spec_plan_hits: u64,
+    /// Speculative round plans whose frontier grew (resumes, migrations,
+    /// admissions landed after staging): the staged entries were kept and
+    /// only the appended tail was planned.
+    pub spec_plan_misses: u64,
+    /// Payload-arena bytes that actually arrived over the block-transport
+    /// plane (cross-shard arena copies the import decision chose).
+    pub transferred_kv_bytes: u64,
+    /// Payload-arena bytes rebuilt locally on resume — the recompute side
+    /// of the reconciliation: `transferred + recomputed` covers every byte
+    /// a resume rematerialized.
+    pub recomputed_kv_bytes: u64,
+    /// Worker that first-touch faulted this shard's payload arena from its
+    /// pinned core (`None`: pinning off or inline single-shard scheduler).
+    pub arena_touch_worker: Option<usize>,
+    /// Arena bytes faulted in by that first touch.
+    pub arena_touch_bytes: u64,
 }
 
 /// Result of a [`serve`] run.
@@ -429,6 +463,18 @@ pub struct ServeReport {
     pub migration_transfers: u64,
     pub migration_recomputes: u64,
     pub migration_cold: u64,
+    /// Whether the true-async data plane was on
+    /// ([`ServeOptions::async_decode`]).
+    pub async_decode: bool,
+    /// Speculative round plans used as-is vs repaired (Σ over shards); both
+    /// zero when `async_decode` is off.
+    pub spec_plan_hits: u64,
+    pub spec_plan_misses: u64,
+    /// Payload-arena bytes moved by the block-transport plane vs rebuilt
+    /// locally on resume (Σ over shards) — the executed-transfer
+    /// reconciliation next to the modeled `imported_kv_tokens`.
+    pub transferred_kv_bytes: u64,
+    pub recomputed_kv_bytes: u64,
     /// Global scheduler rounds executed.
     pub rounds: u64,
     /// Σ over rounds of the fleet-wide allocated blocks after the round —
@@ -533,6 +579,11 @@ where
                 })
                 .collect(),
         );
+        if opts.async_decode {
+            for shard in set.iter_mut() {
+                shard.speculate = true;
+            }
+        }
         // N persistent workers, spawned once for the whole serve call and
         // driven by RoundPlan messages (a single shard runs its rounds
         // inline — there is nothing to overlap with).
@@ -627,9 +678,25 @@ where
             // 1. per-shard resume pass, serial in shard index order (cheap:
             //    cache bookkeeping only, no generator calls); with the hub
             //    on, spans published by peers are importable — each resume
-            //    is billed min(block transfer, recompute prefill)
-            for shard in set.iter_mut() {
-                round_bills[shard.index] = shard.resume_pass(hub.as_ref(), perf, model);
+            //    is billed min(block transfer, recompute prefill), and a
+            //    chosen transfer *executes*: the owning peer's payload
+            //    blocks are copied into this shard's arena. Same-round
+            //    transfers queue on the shared link (deterministic shard
+            //    order), so a congested interconnect prices later imports
+            //    back toward recompute.
+            let mut link_queued_bytes = 0.0f64;
+            for i in 0..n_shards {
+                let mut shard = set.take(i);
+                let peers: Vec<Option<&RadixCache>> =
+                    (0..n_shards).map(|j| set.peek(j).map(|s| s.engine.cache())).collect();
+                round_bills[i] = shard.resume_pass(
+                    hub.as_ref(),
+                    &peers,
+                    perf,
+                    model,
+                    &mut link_queued_bytes,
+                );
+                set.put(i, shard);
             }
 
             // 2. cross-shard migration: a session whose resume failed
@@ -687,7 +754,13 @@ where
                     dst_shard.stats.migrations_in += 1;
                     let import =
                         Some(ImportSource::Peer { cache: src_shard.engine.cache() });
-                    match dst_shard.try_resume_slot(&mut slot, import, perf, model) {
+                    match dst_shard.try_resume_slot(
+                        &mut slot,
+                        import,
+                        perf,
+                        model,
+                        &mut link_queued_bytes,
+                    ) {
                         Some(bill) => {
                             if bill.transfer_tokens > 0 {
                                 dst_shard.stats.migration_transfers += 1;
@@ -830,7 +903,10 @@ where
                 progressed = true;
             }
             let total_resident: usize = set.iter().map(|s| s.resident()).sum();
-            if total_resident == 0 && queue.is_empty() {
+            // A staged speculative plan can hold finished-session outcomes
+            // not yet delivered — one more plan round drains it.
+            let has_staged = set.iter().any(|s| s.staged.is_some());
+            if total_resident == 0 && queue.is_empty() && !has_staged {
                 break;
             }
             max_concurrent = max_concurrent.max(total_resident);
@@ -929,6 +1005,12 @@ where
         let migration_recomputes: u64 =
             set.iter().map(|s| s.stats.migration_recomputes).sum();
         let migration_cold: u64 = set.iter().map(|s| s.stats.migration_cold).sum();
+        let spec_plan_hits: u64 = set.iter().map(|s| s.stats.spec_plan_hits).sum();
+        let spec_plan_misses: u64 = set.iter().map(|s| s.stats.spec_plan_misses).sum();
+        let transferred_kv_bytes: u64 =
+            set.iter().map(|s| s.stats.transferred_kv_bytes).sum();
+        let recomputed_kv_bytes: u64 =
+            set.iter().map(|s| s.stats.recomputed_kv_bytes).sum();
         ServeReport {
             outcomes: outcomes
                 .into_iter()
@@ -960,6 +1042,11 @@ where
             migration_transfers,
             migration_recomputes,
             migration_cold,
+            async_decode: opts.async_decode,
+            spec_plan_hits,
+            spec_plan_misses,
+            transferred_kv_bytes,
+            recomputed_kv_bytes,
             rounds,
             sum_round_used_blocks,
             shard_stats: set.into_inner().into_iter().map(|s| s.stats).collect(),

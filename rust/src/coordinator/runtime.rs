@@ -39,6 +39,7 @@ use super::{BatchRecord, ShardStats};
 use crate::engine::batch::{BatchEngine, ExpandRequest, ImportSource};
 use crate::engine::perfmodel::{BatchStats, PerfModel};
 use crate::kvcache::prefixhub::PrefixHub;
+use crate::kvcache::RadixCache;
 use crate::lm::StepGenerator;
 use crate::reward::RewardModel;
 use crate::search::driver::{SearchOutcome, SearchSession};
@@ -120,6 +121,18 @@ pub(crate) struct Shard<G, R, P> {
     /// session owns. The admission router uses this (hub on or off) to
     /// know the shard's evictable surplus is safe to trim for admission.
     pub(crate) lazy_closed: u64,
+    /// Speculatively plan round *r + 1* at the end of round *r*'s execute
+    /// (on the worker thread, overlapping peers' decodes and the
+    /// coordinator's barrier work) instead of waiting for the next plan
+    /// dispatch. On by [`super::ServeOptions::async_decode`].
+    pub(crate) speculate: bool,
+    /// The staged speculative plan, if any. Valid for exactly the sessions
+    /// that were running when it was built: commit is the only session
+    /// mutation and it precedes staging, so a staged entry can never go
+    /// stale — the only *mispredict* is frontier growth (resumes,
+    /// migrations, admissions landing before the next plan), which
+    /// [`Shard::plan_round`] repairs by planning just the new tail.
+    pub(crate) staged: Option<PlannedRound>,
     pub(crate) stats: ShardStats,
 }
 
@@ -189,6 +202,8 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
             prefix_share,
             retired_prompts: Vec::new(),
             lazy_closed: 0,
+            speculate: false,
+            staged: None,
             stats,
         }
     }
@@ -219,6 +234,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
         import: Option<ImportSource<'_>>,
         perf: &PerfModel,
         model: &ModelProfile,
+        link_queued_bytes: &mut f64,
     ) -> Option<ResumeBill> {
         for attempt in 0..2 {
             match slot.session.try_resume_imported(&mut self.engine, import) {
@@ -229,21 +245,45 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
                         transfer_tokens: 0,
                         import_decided: stats.imported_tokens > 0,
                     };
+                    let mut copied = 0usize;
                     if stats.imported_tokens > 0 {
-                        let d = perf.import_choice(
+                        // Same-round transfers share the interconnect:
+                        // earlier queued bytes (deterministic shard order)
+                        // delay this one, and a congested link can flip the
+                        // decision back to recompute.
+                        let d = perf.import_choice_contended(
                             stats.imported_tokens,
                             self.engine.block_size(),
                             model,
+                            *link_queued_bytes,
                         );
                         if d.use_transfer() {
                             bill.transfer_tokens = stats.imported_tokens;
                             bill.recompute_tokens -= stats.imported_tokens;
                             self.stats.import_transfers += 1;
                             self.stats.imported_kv_tokens += stats.imported_tokens as u64;
+                            *link_queued_bytes += perf.link_bytes(
+                                stats.imported_tokens,
+                                self.engine.block_size(),
+                                model,
+                            );
+                            // Execute the transfer: copy the payload words
+                            // out of the source arena. Spans whose source
+                            // vanished since costing keep their locally
+                            // recomputed words — the fallback is free
+                            // because insert always materializes first.
+                            if let Some(src) = import {
+                                copied = self.engine.commit_pending_imports(src);
+                            }
                         } else {
                             self.stats.import_recomputes += 1;
+                            self.engine.discard_pending_imports();
                         }
                     }
+                    let word = std::mem::size_of::<u64>();
+                    let rebuilt = stats.recomputed_tokens.saturating_sub(copied);
+                    self.stats.transferred_kv_bytes += (copied * word) as u64;
+                    self.stats.recomputed_kv_bytes += (rebuilt * word) as u64;
                     return Some(bill);
                 }
                 Err(p) => {
@@ -262,12 +302,16 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
     /// the round's resume bill; a failed attempt bumps that session's
     /// `stalled` counter (the migration trigger), a success clears it.
     /// With the prefix hub on, spans a peer shard published are importable
-    /// instead of recomputed.
+    /// instead of recomputed; `peers` maps shard index → that shard's cache
+    /// so a transfer decision can actually copy the blocks (a `None` slot is
+    /// unreachable this round and falls back to recompute at copy time).
     pub(crate) fn resume_pass(
         &mut self,
         hub: Option<&PrefixHub>,
+        peers: &[Option<&RadixCache>],
         perf: &PerfModel,
         model: &ModelProfile,
+        link_queued_bytes: &mut f64,
     ) -> ResumeBill {
         let mut pending = std::mem::take(&mut self.suspended);
         pending.sort_by_key(|s| s.seq);
@@ -276,9 +320,12 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
             // self.suspended doubles as the still-suspended list: attempt
             // resumes only while it is empty (strict FIFO)
             let resumed = if self.suspended.is_empty() {
-                let import =
-                    hub.map(|hub| ImportSource::Hub { hub, local_shard: self.index });
-                match self.try_resume_slot(&mut slot, import, perf, model) {
+                let import = hub.map(|hub| ImportSource::Hub {
+                    hub,
+                    local_shard: self.index,
+                    peers,
+                });
+                match self.try_resume_slot(&mut slot, import, perf, model, link_queued_bytes) {
                     Some(b) => {
                         bill.add(b);
                         true
@@ -308,11 +355,59 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
     /// *allocates* KV: everything the execute phase needs is in the
     /// returned [`RoundPlan`]'s plain data.
     pub(crate) fn plan_round(&mut self, bill: ResumeBill) -> PlannedRound {
+        if let Some(mut staged) = self.staged.take() {
+            let m = staged.plan.expands.len();
+            debug_assert!(
+                m <= self.running.len(),
+                "speculative plan on shard {} covers slots that vanished",
+                self.index
+            );
+            staged.plan.bill = bill;
+            if self.running.len() == m {
+                // Prediction held: between staging and now the frontier
+                // only could have grown, and it didn't. The staged plan is
+                // the round plan, with the (unknown-at-staging-time) resume
+                // bill patched in.
+                self.stats.spec_plan_hits += 1;
+                return staged;
+            }
+            // Mispredict: resumes / migrations / admissions appended slots
+            // after staging. The staged entries are still exact for the
+            // first `m` slots (commit is the only session mutation), so
+            // only the new tail is planned — never a double `next_requests`
+            // on an already-planned session.
+            self.stats.spec_plan_misses += 1;
+            let tail = self.running.split_off(m);
+            let (active, expands, finished, progressed) = self.plan_slots(tail);
+            self.running.extend(active);
+            staged.plan.expands.extend(expands);
+            staged.finished.extend(finished);
+            staged.progressed |= progressed;
+            return staged;
+        }
+        let slots = std::mem::take(&mut self.running);
+        let (active, expands, finished, progressed) = self.plan_slots(slots);
+        self.running = active;
+        PlannedRound {
+            plan: RoundPlan { shard: self.index, expands, bill },
+            finished,
+            progressed,
+        }
+    }
+
+    /// The per-slot half of [`Shard::plan_round`]: drain `slots`, finishing
+    /// sessions with no work left and planning an expand batch for the
+    /// rest. Factored out so a speculative mispredict can plan just the
+    /// newly appended tail.
+    fn plan_slots(
+        &mut self,
+        slots: Vec<Slot<G, R, P>>,
+    ) -> (Vec<Slot<G, R, P>>, Vec<Vec<ExpandRequest>>, Vec<(usize, SearchOutcome)>, bool) {
         let mut finished: Vec<(usize, SearchOutcome)> = Vec::new();
         let mut progressed = false;
         let mut active: Vec<Slot<G, R, P>> = Vec::new();
         let mut expands: Vec<Vec<ExpandRequest>> = Vec::new();
-        for mut slot in self.running.drain(..) {
+        for mut slot in slots {
             if slot.session.has_pending() {
                 // deferred or preempted mid-commit: recommit only
                 active.push(slot);
@@ -342,12 +437,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
                 expands.push(requests);
             }
         }
-        self.running = active;
-        PlannedRound {
-            plan: RoundPlan { shard: self.index, expands, bill },
-            finished,
-            progressed,
-        }
+        (active, expands, finished, progressed)
     }
 
     /// Phase 2 (worker thread): the only phase that touches the generator.
@@ -506,6 +596,11 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
     }
 
     /// Phases 2 + 3 back to back — what a worker runs per [`RoundPlan`].
+    /// With speculation on, the worker then immediately plans the *next*
+    /// round from the post-commit frontier before handing the shard back —
+    /// that planning (frontier pruning, policy allocation) overlaps peers'
+    /// decodes and the coordinator's barrier work instead of serializing
+    /// behind them.
     pub(crate) fn run_round(
         &mut self,
         plan: RoundPlan,
@@ -514,7 +609,17 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
         pipeline: bool,
     ) -> RoundResult {
         let injected = self.decode(&plan);
-        self.commit_round(perf, model, plan.bill, injected, pipeline)
+        let result = self.commit_round(perf, model, plan.bill, injected, pipeline);
+        if self.speculate {
+            debug_assert!(self.staged.is_none(), "staged plan survived a round");
+            let staged = self.plan_round(ResumeBill::default());
+            // Stage only real content: an all-empty stage would keep the
+            // shard "busy" forever without ever making progress.
+            if !staged.plan.expands.is_empty() || !staged.finished.is_empty() {
+                self.staged = Some(staged);
+            }
+        }
+        result
     }
 }
 
@@ -537,6 +642,12 @@ impl<G, R, P> ShardSet<G, R, P> {
 
     pub(crate) fn get(&self, i: usize) -> &Shard<G, R, P> {
         self.slots[i].as_ref().expect("shard is out with its worker")
+    }
+
+    /// Like [`ShardSet::get`] but tolerant of a taken slot — the resume
+    /// pass peeks every *other* shard's cache while one shard is out.
+    pub(crate) fn peek(&self, i: usize) -> Option<&Shard<G, R, P>> {
+        self.slots[i].as_ref()
     }
 
     pub(crate) fn get_mut(&mut self, i: usize) -> &mut Shard<G, R, P> {
@@ -655,13 +766,29 @@ where
                 };
                 let _ = pin_tx.send((index, pinned));
                 drop(pin_tx);
+                // NUMA-aware first touch: with pinning on, the first time
+                // this worker holds its shard it faults the whole payload
+                // arena in *from the pinned core*, so the kernel's
+                // first-touch policy places the arena's pages on this
+                // core's memory node before any round traffic hits them.
+                let mut faulted = false;
+                let first_touch = |shard: &mut Shard<G, R, P>, faulted: &mut bool| {
+                    if pin_cores && !*faulted {
+                        *faulted = true;
+                        let bytes = shard.engine.fault_in_arena();
+                        shard.stats.arena_touch_worker = Some(index);
+                        shard.stats.arena_touch_bytes = bytes as u64;
+                    }
+                };
                 while let Ok(msg) = rx.recv() {
                     let reply = match msg {
                         RoundMsg::Plan { mut shard, bill } => {
+                            first_touch(&mut shard, &mut faulted);
                             let planned = shard.plan_round(bill);
                             RoundReply::Planned { shard, planned }
                         }
                         RoundMsg::Execute { mut shard, plan } => {
+                            first_touch(&mut shard, &mut faulted);
                             let result = shard.run_round(plan, perf, model, pipeline);
                             RoundReply::Executed { shard, result }
                         }
@@ -731,7 +858,7 @@ where
     debug_assert_eq!(round_bills.len(), set.len());
     let n = set.len();
     let busy = |set: &ShardSet<G, R, P>, i: usize| {
-        !set.get(i).running.is_empty() || round_bills[i].any()
+        !set.get(i).running.is_empty() || round_bills[i].any() || set.get(i).staged.is_some()
     };
     let mut planned: Vec<Option<PlannedRound>> = (0..n).map(|_| None).collect();
     match pool {

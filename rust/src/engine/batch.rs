@@ -141,8 +141,12 @@ pub struct ResumeStats {
 pub enum ImportSource<'a> {
     /// The coordinator's global prefix directory: spans published by peer
     /// shards at the last round barrier. Entries owned by `local_shard`
-    /// itself are ignored (importing from yourself is a no-op).
-    Hub { hub: &'a PrefixHub, local_shard: usize },
+    /// itself are ignored (importing from yourself is a no-op). `peers`
+    /// maps shard index → that shard's cache, for the transport plane's
+    /// decision-gated block copy (`None` slots — including the local
+    /// shard's own — are unreachable this round and fall back to
+    /// recompute).
+    Hub { hub: &'a PrefixHub, local_shard: usize, peers: &'a [Option<&'a RadixCache>] },
     /// A specific peer's cache, probed directly with the read-only
     /// `peek_prefix` walk — the migration path, where the source shard is
     /// known and its warm (unpinned, not-yet-evicted) copy of the migrant's
@@ -150,18 +154,51 @@ pub enum ImportSource<'a> {
     Peer { cache: &'a RadixCache },
 }
 
-impl ImportSource<'_> {
+impl<'a> ImportSource<'a> {
     /// Tokens of `seq`'s prefix the import source holds (whole-block
     /// granularity for the hub; token granularity for a direct peer probe).
     fn available(&self, seq: &[u32]) -> usize {
         match self {
-            ImportSource::Hub { hub, local_shard } => hub
+            ImportSource::Hub { hub, local_shard, .. } => hub
                 .lookup(seq)
                 .filter(|m| m.shard != *local_shard)
                 .map_or(0, |m| m.tokens),
             ImportSource::Peer { cache } => cache.peek_prefix(seq),
         }
     }
+
+    /// The peer arena a committed transfer reads from, if reachable this
+    /// round: the hub resolves the owning shard and looks it up in `peers`;
+    /// a direct peer probe *is* the source.
+    fn source_cache(&self, seq: &[u32]) -> Option<&'a RadixCache> {
+        match self {
+            ImportSource::Hub { hub, local_shard, peers } => {
+                let m = hub.lookup(seq).filter(|m| m.shard != *local_shard)?;
+                peers.get(m.shard).copied().flatten()
+            }
+            ImportSource::Peer { cache } => Some(cache),
+        }
+    }
+}
+
+/// One importable span [`BatchEngine::try_resume_with`] recorded for the
+/// transport plane: where the words would land locally, and which source
+/// range they cover. The insert has *already* hash-filled the span (the
+/// recompute data path); the scheduler's `min(transfer, recompute)` choice
+/// then either executes the copy ([`BatchEngine::commit_pending_imports`] —
+/// bit-identical by construction, see [`crate::kvcache::payload_word`]) or
+/// drops the record ([`BatchEngine::discard_pending_imports`]).
+#[derive(Clone, Debug)]
+pub struct PendingImport {
+    /// The full re-inserted sequence whose prefix the source holds.
+    pub seq: Vec<u32>,
+    /// Tokens already resident locally; the imported range starts here.
+    pub start: usize,
+    /// Importable token count (`seq[start..start + len]`).
+    pub len: usize,
+    /// Destination node (the insert's fresh suffix child) in the local
+    /// cache; the range lands at its slot 0.
+    pub node: NodeIdx,
 }
 
 /// Shared batched engine: radix cache + token-id mint + batch telemetry.
@@ -192,6 +229,11 @@ pub struct BatchEngine {
     pub tokens_recomputed: u64,
     /// LRU evictions run to relieve reservation pressure.
     pub pressure_evictions: u64,
+    /// Importable spans recorded by the last [`BatchEngine::try_resume_with`],
+    /// awaiting the scheduler's transfer-vs-recompute decision
+    /// ([`BatchEngine::commit_pending_imports`] /
+    /// [`BatchEngine::discard_pending_imports`]).
+    pending_imports: Vec<PendingImport>,
 }
 
 impl BatchEngine {
@@ -240,6 +282,7 @@ impl BatchEngine {
             resumes: 0,
             tokens_recomputed: 0,
             pressure_evictions: 0,
+            pending_imports: Vec::new(),
         }
     }
 
@@ -660,6 +703,7 @@ impl BatchEngine {
         self.try_reserve(need)?;
         self.cache.release_reservation(need);
         let mut stats = ResumeStats::default();
+        self.pending_imports.clear();
         // The portion of one insert's recomputed suffix a peer could have
         // shipped instead: the peer's prefix coverage beyond what was
         // already resident locally, capped by what this insert actually
@@ -678,7 +722,16 @@ impl BatchEngine {
         let out = self.cache.insert(&ledger.prompt_ids);
         stats.recomputed_tokens += out.new_tokens;
         stats.retained_tokens += out.shared_tokens;
-        stats.imported_tokens += importable(&import, &ledger.prompt_ids, &out);
+        let n = importable(&import, &ledger.prompt_ids, &out);
+        stats.imported_tokens += n;
+        if n > 0 {
+            self.pending_imports.push(PendingImport {
+                seq: ledger.prompt_ids.clone(),
+                start: out.shared_tokens,
+                len: n,
+                node: out.node,
+            });
+        }
         self.cache.lock(out.node);
         ledger.prompt_node = Some(out.node);
         let leaves = std::mem::take(&mut ledger.suspended_leaves);
@@ -686,7 +739,16 @@ impl BatchEngine {
             let out = self.cache.insert(seq);
             stats.recomputed_tokens += out.new_tokens;
             stats.retained_tokens += out.shared_tokens;
-            stats.imported_tokens += importable(&import, seq, &out);
+            let n = importable(&import, seq, &out);
+            stats.imported_tokens += n;
+            if n > 0 {
+                self.pending_imports.push(PendingImport {
+                    seq: seq.clone(),
+                    start: out.shared_tokens,
+                    len: n,
+                    node: out.node,
+                });
+            }
             self.cache.lock(out.node);
             ledger.locked.insert(leaf, out.node);
         }
@@ -695,6 +757,38 @@ impl BatchEngine {
         self.tokens_recomputed += stats.recomputed_tokens as u64;
         self.resumes += 1;
         Ok(stats)
+    }
+
+    /// Execute the decision-gated block copy for the importable spans the
+    /// last [`BatchEngine::try_resume_with`] recorded: read each span's
+    /// payload words from the source arena and land them in the local one —
+    /// the transport plane's actual data movement, bit-identical to the
+    /// hash-fill the insert already performed (asserted in debug builds via
+    /// [`crate::kvcache::RadixCache::write_node_payload`]). Returns tokens
+    /// actually copied; spans whose source evicted them since the sizing
+    /// probe (or whose owning shard is unreachable this round) copy nothing
+    /// and stay on the already-materialized recompute words.
+    pub fn commit_pending_imports(&mut self, src: ImportSource<'_>) -> usize {
+        let pending = std::mem::take(&mut self.pending_imports);
+        let mut copied = 0usize;
+        for p in pending {
+            let Some(cache) = src.source_cache(&p.seq) else { continue };
+            let Some(words) = cache.read_prefix_payload(&p.seq, p.start, p.len) else {
+                continue;
+            };
+            self.cache.write_node_payload(p.node, 0, &words);
+            copied += p.len;
+        }
+        copied
+    }
+
+    /// Drop the last resume's importable-span records: the scheduler priced
+    /// the transfer and chose recompute, whose words the insert already
+    /// materialized locally. Returns tokens whose copy was skipped.
+    pub fn discard_pending_imports(&mut self) -> usize {
+        let dropped = self.pending_imports.iter().map(|p| p.len).sum();
+        self.pending_imports.clear();
+        dropped
     }
 
     /// Close a problem but keep its *prompt* KV cached: decode branches are
@@ -771,6 +865,14 @@ impl BatchEngine {
 
     pub fn cache(&self) -> &RadixCache {
         &self.cache
+    }
+
+    /// Touch every payload word of this engine's block arena from the
+    /// calling thread (see [`RadixCache::fault_in_arena`]) and return the
+    /// arena footprint in bytes. The serve workers call this from their
+    /// pinned cores so first-touch page placement lands NUMA-local.
+    pub fn fault_in_arena(&mut self) -> usize {
+        self.cache.fault_in_arena()
     }
 
     pub fn check_invariants(&self) -> Result<(), String> {
@@ -1046,6 +1148,12 @@ mod tests {
             "the warm source covers the full recomputed span"
         );
         assert_eq!(dst.live_kv(&ledger), 52);
+        // transfer chosen: the transport plane moves the actual words —
+        // and they are bit-identical to the local hash-fill (debug-asserted
+        // inside write_node_payload)
+        let copied = dst.commit_pending_imports(ImportSource::Peer { cache: src.cache() });
+        assert_eq!(copied, 52, "every importable token must ship");
+        assert_eq!(dst.commit_pending_imports(ImportSource::Peer { cache: src.cache() }), 0);
         dst.close(&mut ledger);
         dst.check_invariants().unwrap();
         src.check_invariants().unwrap();
@@ -1069,7 +1177,7 @@ mod tests {
             .try_resume_with(
                 &mut ledger,
                 &tree,
-                Some(ImportSource::Hub { hub: &hub, local_shard: 3 }),
+                Some(ImportSource::Hub { hub: &hub, local_shard: 3, peers: &[] }),
             )
             .unwrap();
         assert_eq!(stats.recomputed_tokens, 32);
@@ -1081,13 +1189,56 @@ mod tests {
             .try_resume_with(
                 &mut ledger,
                 &tree,
-                Some(ImportSource::Hub { hub: &hub, local_shard: 1 }),
+                Some(ImportSource::Hub { hub: &hub, local_shard: 1, peers: &[] }),
             )
             .unwrap();
         assert_eq!(stats.imported_tokens, 32);
         assert!(stats.imported_tokens <= stats.recomputed_tokens);
         eng.close(&mut ledger);
         eng.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hub_transport_copies_from_the_owning_peer_or_falls_back() {
+        use crate::kvcache::prefixhub::PrefixHub;
+        // shard 3 holds the span; shard 1 resumes cold and imports via hub
+        let mut owner = BatchEngine::for_shard(1 << 16, 16, 3, 4);
+        let prompt_ids: Vec<u32> = (0..32).map(|t| 700_000 + t).collect();
+        let _owner_ledger = owner.register_with_prompt(prompt_ids.clone());
+        let mut eng = BatchEngine::for_shard(1 << 16, 16, 1, 4);
+        let mut tree = SearchTree::new();
+        tree.init_root(32);
+        let mut ledger = eng.register_with_prompt(prompt_ids.clone());
+        eng.suspend(&mut ledger);
+        eng.relieve_pressure(usize::MAX); // cold resume
+        let mut hub = PrefixHub::new(16);
+        hub.begin_round();
+        hub.publish(3, &prompt_ids, 32);
+        let peers: Vec<Option<&crate::kvcache::RadixCache>> =
+            vec![None, None, None, Some(owner.cache())];
+        let src = ImportSource::Hub { hub: &hub, local_shard: 1, peers: &peers };
+        let stats = eng.try_resume_with(&mut ledger, &tree, Some(src)).unwrap();
+        assert_eq!(stats.imported_tokens, 32);
+        let copied = eng.commit_pending_imports(src);
+        assert_eq!(copied, 32, "the owning peer's arena must ship the span");
+        // an unreachable owner (no peer slot) copies nothing — the local
+        // hash-fill words already materialized, so this is a safe fallback
+        eng.suspend(&mut ledger);
+        eng.relieve_pressure(usize::MAX);
+        let dark = ImportSource::Hub { hub: &hub, local_shard: 1, peers: &[] };
+        let stats = eng.try_resume_with(&mut ledger, &tree, Some(dark)).unwrap();
+        assert_eq!(stats.imported_tokens, 32, "costing signal is peer-blind");
+        assert_eq!(eng.commit_pending_imports(dark), 0);
+        // and a recompute decision just drops the records
+        eng.suspend(&mut ledger);
+        eng.relieve_pressure(usize::MAX);
+        let stats = eng.try_resume_with(&mut ledger, &tree, Some(src)).unwrap();
+        assert_eq!(stats.imported_tokens, 32);
+        assert_eq!(eng.discard_pending_imports(), 32);
+        assert_eq!(eng.commit_pending_imports(src), 0, "discard clears the queue");
+        eng.close(&mut ledger);
+        eng.check_invariants().unwrap();
+        owner.check_invariants().unwrap();
     }
 
     #[test]

@@ -203,15 +203,41 @@ impl PerfModel {
         block_size: usize,
         model: &ModelProfile,
     ) -> TransferDecision {
+        self.import_choice_contended(tokens, block_size, model, 0.0)
+    }
+
+    /// [`PerfModel::import_choice`] with link *contention*: `queued_bytes`
+    /// is the paged KV volume that earlier transfers in the same round have
+    /// already committed to the shared interconnect. This transfer's bytes
+    /// queue behind them — the link is one shared resource per round, not a
+    /// fresh point-to-point wire per import — so a late import in a
+    /// transfer-heavy round sees a slower effective link and may flip to
+    /// recompute. The recompute side is contention-free (local HBM).
+    /// `queued_bytes == 0.0` reduces exactly to the uncontended price.
+    pub fn import_choice_contended(
+        &self,
+        tokens: usize,
+        block_size: usize,
+        model: &ModelProfile,
+        queued_bytes: f64,
+    ) -> TransferDecision {
         if tokens == 0 {
             return TransferDecision::default();
         }
         let bs = block_size.max(1) as f64;
         let paged = (tokens as f64 / bs).ceil() * bs;
         let kv_bytes = paged * model.kv_bytes_per_token as f64;
-        let transfer_seconds = kv_bytes / self.hw.link_bw + kv_bytes / self.hw.mem_bw;
+        let transfer_seconds =
+            (queued_bytes + kv_bytes) / self.hw.link_bw + kv_bytes / self.hw.mem_bw;
         let (recompute_seconds, _) = self.prefill_cost(tokens, block_size, model);
         TransferDecision { transfer_seconds, recompute_seconds }
+    }
+
+    /// Paged KV bytes a `tokens`-long span occupies on the wire — the
+    /// volume a chosen transfer adds to the round's shared-link queue.
+    pub fn link_bytes(&self, tokens: usize, block_size: usize, model: &ModelProfile) -> f64 {
+        let bs = block_size.max(1) as f64;
+        (tokens as f64 / bs).ceil() * bs * model.kv_bytes_per_token as f64
     }
 
     /// Estimate the wall-clock of one problem's search on this setup.
@@ -650,6 +676,29 @@ mod tests {
         assert_eq!(d.chosen_seconds(), d.recompute_seconds);
         // nothing to import, nothing to charge
         assert_eq!(pm.import_choice(0, 16, &LLEMMA_34B_SIM), TransferDecision::default());
+    }
+
+    #[test]
+    fn link_contention_queues_transfers_and_can_flip_the_choice() {
+        let pm = PerfModel::new(H100_NVL, true, 1);
+        // zero queue reduces exactly to the uncontended price
+        assert_eq!(
+            pm.import_choice_contended(2_000, 16, &LLEMMA_34B_SIM, 0.0),
+            pm.import_choice(2_000, 16, &LLEMMA_34B_SIM)
+        );
+        // queued bytes slow only the transfer side, monotonically
+        let free = pm.import_choice_contended(2_000, 16, &LLEMMA_34B_SIM, 0.0);
+        let busy = pm.import_choice_contended(2_000, 16, &LLEMMA_34B_SIM, 1.0e9);
+        assert!(busy.transfer_seconds > free.transfer_seconds);
+        assert_eq!(busy.recompute_seconds, free.recompute_seconds);
+        // enough queued traffic flips an otherwise-winning transfer to
+        // recompute — the same span, same link, different round pressure
+        assert!(free.use_transfer());
+        let jammed = pm.import_choice_contended(2_000, 16, &LLEMMA_34B_SIM, 1.0e12);
+        assert!(!jammed.use_transfer(), "{jammed:?}");
+        // the wire volume a chosen transfer enqueues is the paged span
+        let bytes = pm.link_bytes(33, 16, &LLEMMA_34B_SIM);
+        assert_eq!(bytes, 48.0 * LLEMMA_34B_SIM.kv_bytes_per_token as f64);
     }
 
     #[test]

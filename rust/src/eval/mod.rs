@@ -7,7 +7,7 @@
 use crate::coordinator::{ServeJob, ServeOptions, ServeReport};
 use crate::embed::HashEmbedder;
 use crate::engine::{PerfModel, DEFAULT_KV_CAPACITY, H100_NVL};
-use crate::lm::SynthLm;
+use crate::lm::{AsyncLm, SynthLm};
 use crate::reward::OraclePrm;
 use crate::search::policy::{BeamPolicy, DvtsPolicy, EtsPolicy, RebasePolicy, SearchPolicy};
 use crate::search::{SearchOutcome, SearchParams};
@@ -297,7 +297,7 @@ fn serve_problem_set(
     let problems = ProblemSet::generate(&cfg.spec, cfg.n_problems, cfg.seed);
     let params = SearchParams { width: cfg.width, max_steps: cfg.max_steps };
     let mut truths = Vec::with_capacity(problems.problems.len());
-    let jobs: Vec<ServeJob<SynthLm, OraclePrm, Box<dyn SearchPolicy + Send>>> = problems
+    let parts: Vec<(SynthLm, OraclePrm, Box<dyn SearchPolicy + Send>)> = problems
         .problems
         .into_iter()
         .enumerate()
@@ -309,10 +309,26 @@ fn serve_problem_set(
             if let Some(k) = distinct_prompts {
                 lm = lm.with_prompt_ids(pool_prompt_ids(&cfg.spec, i % k));
             }
-            ServeJob { lm, prm, policy: make_policy(&cfg.policy, cfg.width) }
+            (lm, prm, make_policy(&cfg.policy, cfg.width))
         })
         .collect();
-    let serve = crate::coordinator::serve(jobs, &params, opts, perf, &cfg.spec.model);
+    // The async data plane swaps only the generator type: each job's
+    // decodes are served on its own completion worker ([`AsyncLm`]).
+    // Sampling streams are untouched, so per-problem results stay
+    // byte-identical (pinned by `tests/serve_determinism.rs`).
+    let serve = if opts.async_decode {
+        let jobs: Vec<_> = parts
+            .into_iter()
+            .map(|(lm, prm, policy)| ServeJob { lm: AsyncLm::new(lm), prm, policy })
+            .collect();
+        crate::coordinator::serve(jobs, &params, opts, perf, &cfg.spec.model)
+    } else {
+        let jobs: Vec<_> = parts
+            .into_iter()
+            .map(|(lm, prm, policy)| ServeJob { lm, prm, policy })
+            .collect();
+        crate::coordinator::serve(jobs, &params, opts, perf, &cfg.spec.model)
+    };
     let results = serve
         .outcomes
         .iter()

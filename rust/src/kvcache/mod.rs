@@ -189,12 +189,34 @@ impl std::fmt::Display for KvPressure {
     }
 }
 
-/// Fixed-size block allocator: a free list of physical KV block ids.
+/// One payload word per token slot. Stands in for the model executor's
+/// per-token KV page contents: a keyed hash of the token value, so two
+/// arenas that hold the same token independently hold the same word — which
+/// is exactly what makes a cross-shard block *copy* bit-identical to a
+/// local recompute by construction (the transport plane's invariant).
+/// Position-independent on purpose: [`RadixCache::split`] re-pages a node's
+/// tokens into fresh blocks, so a word keyed on its slot would not survive
+/// a split.
+#[inline]
+pub fn payload_word(token: u32) -> u64 {
+    // splitmix64 finalizer over the token value
+    let mut z = (token as u64).wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Fixed-size block allocator: a free list of physical KV block ids, plus
+/// the backing payload arena.
 ///
-/// Only *accounting* lives here (payloads live with the model executor), but
-/// block identity is tracked for real so double-frees and budget overruns
-/// are structurally impossible: a block is either on the free list or owned
-/// by exactly one radix node's span.
+/// Accounting is tracked for real so double-frees and budget overruns are
+/// structurally impossible: a block is either on the free list or owned by
+/// exactly one radix node's span. Since the transport plane landed, the
+/// allocator also owns a real per-shard *arena* — one [`payload_word`] per
+/// token slot — so cross-shard imports have actual bytes to move and NUMA
+/// first-touch has actual pages to fault in. The arena is `vec![0; ..]`
+/// (calloc-backed): pages stay virtual until written or explicitly
+/// [`BlockAllocator::fault_in`]-touched.
 #[derive(Clone, Debug)]
 pub struct BlockAllocator {
     block_size: usize,
@@ -205,6 +227,10 @@ pub struct BlockAllocator {
     /// deliberately ignores this: the single-threaded commit path releases
     /// its reservation immediately before drawing the blocks it covers.
     reserved: usize,
+    /// Payload arena: `total_blocks * block_size` words, one per token
+    /// slot. Token `j` of a span lives at `blocks[j / block_size]`, slot
+    /// `j % block_size`.
+    payload: Vec<u64>,
 }
 
 impl BlockAllocator {
@@ -215,7 +241,60 @@ impl BlockAllocator {
             total_blocks,
             free: (0..total_blocks).rev().collect(),
             reserved: 0,
+            payload: vec![0u64; total_blocks * block_size],
         }
+    }
+
+    /// Write the payload words for `tokens` into `blocks` (the span that
+    /// holds them), starting at the span's first slot. This is the
+    /// "recompute" data path: every committed token materializes its word
+    /// locally. The transport plane's copy path must land the same words
+    /// (see [`payload_word`]).
+    pub fn write_span(&mut self, blocks: &[BlockId], tokens: &[u32]) {
+        debug_assert!(blocks.len() * self.block_size >= tokens.len(), "span too short");
+        for (j, &t) in tokens.iter().enumerate() {
+            self.payload[blocks[j / self.block_size] * self.block_size + j % self.block_size] =
+                payload_word(t);
+        }
+    }
+
+    /// Read the payload words backing the first `len` token slots of
+    /// `blocks`, in slot order — the source side of a block transfer.
+    pub fn read_span(&self, blocks: &[BlockId], len: usize) -> Vec<u64> {
+        debug_assert!(blocks.len() * self.block_size >= len, "span too short");
+        (0..len)
+            .map(|j| self.payload[blocks[j / self.block_size] * self.block_size + j % self.block_size])
+            .collect()
+    }
+
+    /// Write pre-read payload `words` into the token slots of `blocks`
+    /// starting at slot `offset` — the destination side of a block
+    /// transfer. Slots before `offset` are untouched.
+    pub fn write_words(&mut self, blocks: &[BlockId], offset: usize, words: &[u64]) {
+        debug_assert!(
+            blocks.len() * self.block_size >= offset + words.len(),
+            "span too short"
+        );
+        for (i, &w) in words.iter().enumerate() {
+            let j = offset + i;
+            self.payload[blocks[j / self.block_size] * self.block_size + j % self.block_size] = w;
+        }
+    }
+
+    /// Touch every word of the payload arena so its pages are faulted in by
+    /// the *calling* thread (NUMA first-touch: pages land on the caller's
+    /// node). Returns the arena size in bytes. Volatile reads so the loop
+    /// cannot be optimized away.
+    pub fn fault_in(&mut self) -> usize {
+        for w in self.payload.iter_mut() {
+            // volatile write-back of the same value: forces the page fault,
+            // changes no contents, and cannot be optimized away
+            unsafe {
+                let p = w as *mut u64;
+                p.write_volatile(p.read_volatile());
+            }
+        }
+        self.payload.len() * std::mem::size_of::<u64>()
     }
 
     pub fn block_size(&self) -> usize {
@@ -534,6 +613,68 @@ impl RadixCache {
         self.prefix_walk(tokens, |_| {}).0
     }
 
+    /// Read the payload words backing tokens `start..start + len` of the
+    /// cached prefix `tokens` — the *source* side of a cross-shard block
+    /// transfer. Read-only (no LRU clock), like [`RadixCache::peek_prefix`].
+    /// Returns `None` when the cache does not hold the full range (the
+    /// owner may have evicted it since the hub snapshot).
+    pub fn read_prefix_payload(
+        &self,
+        tokens: &[u32],
+        start: usize,
+        len: usize,
+    ) -> Option<Vec<u64>> {
+        if len == 0 {
+            return Some(Vec::new());
+        }
+        let mut path: Vec<NodeIdx> = Vec::new();
+        let (matched, _) = self.prefix_walk(tokens, |idx| path.push(idx));
+        if matched < start + len {
+            return None;
+        }
+        let mut out = Vec::with_capacity(len);
+        let mut base = 0usize; // token offset of the current node's first slot
+        for idx in path {
+            let klen = self.nodes[idx].key.len();
+            let lo = start.max(base);
+            let hi = (start + len).min(base + klen);
+            if lo < hi {
+                let words = self.allocator.read_span(&self.nodes[idx].blocks, klen);
+                out.extend_from_slice(&words[lo - base..hi - base]);
+            }
+            base += klen;
+            if base >= start + len {
+                break;
+            }
+        }
+        debug_assert_eq!(out.len(), len);
+        Some(out)
+    }
+
+    /// Write pre-read payload `words` into the blocks of `node` starting at
+    /// token slot `offset` — the *destination* side of a block transfer.
+    /// The transported words must be bit-identical to what a local
+    /// recompute would have written ([`payload_word`] keys on token value
+    /// alone), asserted in debug builds.
+    pub fn write_node_payload(&mut self, node: NodeIdx, offset: usize, words: &[u64]) {
+        debug_assert!(
+            words
+                .iter()
+                .enumerate()
+                .all(|(i, &w)| w == payload_word(self.nodes[node].key[offset + i])),
+            "transported payload diverges from local recompute"
+        );
+        let blocks = std::mem::take(&mut self.nodes[node].blocks);
+        self.allocator.write_words(&blocks, offset, words);
+        self.nodes[node].blocks = blocks;
+    }
+
+    /// Fault in the backing payload arena from the calling thread (NUMA
+    /// first-touch). Returns the arena size in bytes.
+    pub fn fault_in_arena(&mut self) -> usize {
+        self.allocator.fault_in()
+    }
+
     /// Longest cached prefix of `tokens`: (matched token count, end node).
     /// Touches LRU clocks along the path.
     pub fn match_prefix(&mut self, tokens: &[u32]) -> (usize, NodeIdx) {
@@ -563,6 +704,7 @@ impl RadixCache {
                 None => {
                     // Append the remaining tokens as a fresh child.
                     let span = self.alloc_span(tokens.len() - pos);
+                    self.allocator.write_span(&span, &tokens[pos..]);
                     let node = RNode {
                         key: tokens[pos..].to_vec(),
                         parent: Some(cur),
@@ -625,6 +767,9 @@ impl RadixCache {
         self.allocator.release_span(old_span);
         let upper_span = self.alloc_span(at);
         let lower_span = self.alloc_span(lower_key.len());
+        // re-page the payload words along with the accounting
+        self.allocator.write_span(&upper_span, &upper_key);
+        self.allocator.write_span(&lower_span, &lower_key);
         let upper = RNode {
             key: upper_key,
             parent: Some(parent),
@@ -934,6 +1079,58 @@ mod tests {
         assert_eq!(m, 5);
         let (m, _) = c.match_prefix(&[1, 2, 3]);
         assert_eq!(m, 3);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn payload_arena_holds_token_keyed_words_across_splits() {
+        let mut c = RadixCache::with_block_size(1 << 12, 4);
+        let a: Vec<u32> = (10..30).collect();
+        c.insert(&a);
+        let want: Vec<u64> = a.iter().map(|&t| payload_word(t)).collect();
+        assert_eq!(c.read_prefix_payload(&a, 0, 20).unwrap(), want);
+        // a diverging insert splits mid-node and re-pages both halves; the
+        // words must survive the re-page because they key on token value
+        let mut b = a[..7].to_vec();
+        b.extend(900..910);
+        c.insert(&b);
+        assert_eq!(c.read_prefix_payload(&a, 0, 20).unwrap(), want);
+        assert_eq!(
+            c.read_prefix_payload(&b, 7, 10).unwrap(),
+            (900..910).map(|t| payload_word(t)).collect::<Vec<_>>()
+        );
+        // interior sub-ranges read the same words the full read sees
+        assert_eq!(c.read_prefix_payload(&a, 5, 9).unwrap(), want[5..14]);
+        // a range past the cached span is refused, not fabricated
+        let mut longer = a.clone();
+        longer.push(31);
+        assert!(c.read_prefix_payload(&longer, 0, 21).is_none());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn transported_words_match_a_local_recompute_bit_for_bit() {
+        // two shared-nothing arenas: src recomputes, dst imports the copy
+        let mut src = RadixCache::with_block_size(1 << 12, 4);
+        let mut dst = RadixCache::with_block_size(1 << 12, 4);
+        let seq: Vec<u32> = (500..532).collect();
+        src.insert(&seq);
+        let out = dst.insert(&seq);
+        let words = src.read_prefix_payload(&seq, 0, 32).unwrap();
+        // the write asserts copy ≡ recompute in debug builds
+        dst.write_node_payload(out.node, 0, &words);
+        assert_eq!(dst.read_prefix_payload(&seq, 0, 32).unwrap(), words);
+    }
+
+    #[test]
+    fn fault_in_reports_the_arena_footprint_and_changes_nothing() {
+        let mut c = RadixCache::with_block_size(1 << 10, 16);
+        let seq: Vec<u32> = (0..40).collect();
+        c.insert(&seq);
+        let before = c.read_prefix_payload(&seq, 0, 40).unwrap();
+        let bytes = c.fault_in_arena();
+        assert_eq!(bytes, c.total_blocks() * 16 * std::mem::size_of::<u64>());
+        assert_eq!(c.read_prefix_payload(&seq, 0, 40).unwrap(), before);
         c.check_invariants().unwrap();
     }
 

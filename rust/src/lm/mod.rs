@@ -7,6 +7,10 @@
 //! * [`crate::engine::pjrt_lm::PjrtLm`] — the real tiny transformer executed
 //!   through the AOT artifacts via PJRT (throughput / end-to-end proof).
 
+pub mod async_lm;
+
+pub use async_lm::AsyncLm;
+
 use crate::tree::{NodeId, SearchTree, StepInfo};
 use crate::util::rng::Rng;
 use crate::workload::{extend_path_id, Problem};
@@ -79,14 +83,26 @@ pub trait StepGenerator {
     /// Phase 2: wait for a submitted batch and return its per-request
     /// continuations (request order preserved). The blanket adapter only
     /// understands [`PendingBatch::Ready`]; a backend that issues tickets
-    /// must override this to redeem them.
+    /// must override [`StepGenerator::try_poll_batch`] to redeem them.
+    ///
+    /// This convenience wrapper panics on the typed error path — callers
+    /// that can degrade gracefully (worker threads that should not die on a
+    /// misrouted handle) call `try_poll_batch` directly.
     fn poll_batch(&mut self, batch: PendingBatch) -> Vec<Vec<StepInfo>> {
+        self.try_poll_batch(batch).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible phase 2: like [`StepGenerator::poll_batch`], but a handle
+    /// this generator cannot redeem (a ticket crossed between generators, a
+    /// dead completion worker) surfaces as a typed [`crate::util::error`]
+    /// instead of a panic.
+    fn try_poll_batch(&mut self, batch: PendingBatch) -> crate::util::error::Result<Vec<Vec<StepInfo>>> {
         match batch {
-            PendingBatch::Ready(results) => results,
-            PendingBatch::Ticket(id) => panic!(
+            PendingBatch::Ready(results) => Ok(results),
+            PendingBatch::Ticket(id) => Err(crate::err!(
                 "poll_batch: ticket {id} polled on a generator that never \
                  issues tickets (handle crossed generators?)"
-            ),
+            )),
         }
     }
 
@@ -136,6 +152,10 @@ impl<G: StepGenerator + ?Sized> StepGenerator for Box<G> {
         (**self).poll_batch(batch)
     }
 
+    fn try_poll_batch(&mut self, batch: PendingBatch) -> crate::util::error::Result<Vec<Vec<StepInfo>>> {
+        (**self).try_poll_batch(batch)
+    }
+
     fn decode_overhead_seconds(&self) -> f64 {
         (**self).decode_overhead_seconds()
     }
@@ -168,6 +188,10 @@ impl<G: StepGenerator + ?Sized> StepGenerator for &mut G {
 
     fn poll_batch(&mut self, batch: PendingBatch) -> Vec<Vec<StepInfo>> {
         (**self).poll_batch(batch)
+    }
+
+    fn try_poll_batch(&mut self, batch: PendingBatch) -> crate::util::error::Result<Vec<Vec<StepInfo>>> {
+        (**self).try_poll_batch(batch)
     }
 
     fn decode_overhead_seconds(&self) -> f64 {
@@ -333,6 +357,10 @@ impl<G: StepGenerator> StepGenerator for InjectedLatency<G> {
         self.inner.poll_batch(batch)
     }
 
+    fn try_poll_batch(&mut self, batch: PendingBatch) -> crate::util::error::Result<Vec<Vec<StepInfo>>> {
+        self.inner.try_poll_batch(batch)
+    }
+
     fn decode_overhead_seconds(&self) -> f64 {
         self.seconds_per_round + self.inner.decode_overhead_seconds()
     }
@@ -423,6 +451,19 @@ mod tests {
     fn sync_adapter_rejects_foreign_tickets() {
         let mut lm = make();
         let _ = lm.poll_batch(PendingBatch::Ticket(7));
+    }
+
+    #[test]
+    fn try_poll_surfaces_foreign_tickets_as_typed_errors() {
+        // The fallible surface degrades gracefully where poll_batch panics:
+        // the error carries the same diagnosis and the generator survives.
+        let mut lm = make();
+        let err = lm.try_poll_batch(PendingBatch::Ticket(7)).unwrap_err();
+        assert!(err.0.contains("never issues tickets"), "{err}");
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(lm.prompt_tokens());
+        let handle = lm.submit_batch(&tree, &[(root, 2)]);
+        assert_eq!(lm.poll_batch(handle).len(), 1);
     }
 
     #[test]

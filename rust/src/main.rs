@@ -30,8 +30,8 @@ USAGE:
   ets serve [--dataset D] [--model M] [--policy P] [--width N]
             [--problems K] [--concurrency C] [--capacity TOKENS]
             [--block-size TOKENS] [--shards N] [--pipeline]
-            [--prefix-share] [--pin-cores] [--seed S] [--json FILE]
-            [--pjrt] [--requests K] [--artifacts DIR]
+            [--prefix-share] [--pin-cores] [--async-decode] [--seed S]
+            [--json FILE] [--pjrt] [--requests K] [--artifacts DIR]
   ets info  [--artifacts DIR]
 
 `--capacity` makes the KV budget *hard*: the scheduler gates admission on
@@ -56,7 +56,15 @@ value.
 core i mod num_cores), so the thread that owns a shard's radix cache and
 block-allocator arena stays put. Placement only — results are
 byte-identical with it on or off. `--pin-cores=0` forces it off,
-overriding a `serve.pin_cores` config value.
+overriding a `serve.pin_cores` config value. With `--async-decode` on,
+`--pin-cores` also first-touch faults each shard's payload arena from its
+pinned worker, so NUMA page placement follows the pin.
+`--async-decode` turns on the true-async data plane: each problem's
+decodes are served on an off-thread completion queue (AsyncLm), and each
+shard speculatively plans round r+1 while round r's results drain.
+Scheduling only — per-problem results are byte-identical with it on or
+off. `--async-decode=0` forces it off, overriding a `serve.async_decode`
+config value.
 
 POLICIES: rebase | beam-<k> | beam-sqrt | dvts-<k> | dvts-sqrt |
           ets[:<lambda_b>] | ets-kv[:<lambda_b>]
@@ -238,6 +246,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     || cfg_doc.usize_or("serve.pin_cores", 0) != 0
             }
         },
+        // same on/off grammar as --pipeline
+        async_decode: match args.get("async-decode") {
+            Some(v) => v != "0" && v != "false",
+            None => {
+                args.flag("async-decode")
+                    || cfg_doc.bool_or("serve.async_decode", false)
+                    || cfg_doc.usize_or("serve.async_decode", 0) != 0
+            }
+        },
     };
     if opts.capacity_tokens == 0 {
         bail!("--capacity must be a positive token budget");
@@ -341,6 +358,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             r.serve.migration_cold,
         );
     }
+    if r.serve.async_decode {
+        println!(
+            "  async data plane: spec plans {} hits / {} misses, {} B transported / {} B recomputed arena payload",
+            r.serve.spec_plan_hits,
+            r.serve.spec_plan_misses,
+            r.serve.transferred_kv_bytes,
+            r.serve.recomputed_kv_bytes,
+        );
+    }
     if r.serve.kv_pressure_events() > 0 {
         println!(
             "  memory pressure: {} preemptions, {} resumes ({} tokens recomputed), {} admission-blocked rounds, {} deferred commits",
@@ -370,6 +396,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("pipeline", Json::num(if r.serve.pipeline { 1.0 } else { 0.0 })),
             ("prefix_share", Json::num(if r.serve.prefix_share { 1.0 } else { 0.0 })),
             ("pin_cores", Json::num(if opts.pin_cores { 1.0 } else { 0.0 })),
+            ("async_decode", Json::num(if r.serve.async_decode { 1.0 } else { 0.0 })),
+            ("spec_plan_hits", Json::num(r.serve.spec_plan_hits as f64)),
+            ("spec_plan_misses", Json::num(r.serve.spec_plan_misses as f64)),
+            ("transferred_kv_bytes", Json::num(r.serve.transferred_kv_bytes as f64)),
+            ("recomputed_kv_bytes", Json::num(r.serve.recomputed_kv_bytes as f64)),
             (
                 "worker_cores",
                 Json::Arr(

@@ -424,6 +424,148 @@ fn core_pinning_is_placement_only() {
 }
 
 #[test]
+fn async_decode_is_invisible() {
+    // The true-async data plane (off-thread decode completion via AsyncLm +
+    // speculative round planning + executed block transport) is pure
+    // scheduling: shards ∈ {1, 4} × async {off, on} must fold to
+    // byte-identical per-problem results, at ample capacity and under a
+    // tight budget that forces preemption, resume, and migration.
+    let cfg = cfg(PolicySpec::Rebase);
+    let base = fingerprint(&evaluate_with_workers(&cfg, 2));
+    for shards in [1usize, 4] {
+        for async_decode in [false, true] {
+            let opts = ServeOptions {
+                concurrency: 8,
+                capacity_tokens: DEFAULT_KV_CAPACITY * shards,
+                shards,
+                ..Default::default()
+            }
+            .async_decoded(async_decode);
+            let perf = PerfModel::new(H100_NVL, true, 8);
+            let served = evaluate_serve_with(&cfg, &opts, &perf);
+            assert_eq!(
+                base,
+                fingerprint(&served.report),
+                "shards={shards} async-decode={async_decode} changed eval results"
+            );
+            assert_eq!(served.serve.async_decode, async_decode);
+            if !async_decode {
+                assert_eq!(served.serve.spec_plan_hits, 0, "speculation must stay off");
+                assert_eq!(served.serve.spec_plan_misses, 0);
+            } else {
+                assert!(
+                    served.serve.spec_plan_hits > 0,
+                    "an async run of many rounds must reuse staged plans"
+                );
+            }
+        }
+    }
+    // tight: per-shard budgets near one working set (preempt/resume/migrate
+    // churn keeps appending slots between staging and the next plan)
+    let mut cfg = cfg;
+    cfg.width = 24;
+    cfg.n_problems = 12;
+    let perf = PerfModel::new(H100_NVL, true, 12);
+    let uncapped = evaluate_serve_with(&cfg, &ServeOptions::with_concurrency(12), &perf);
+    let tight_base = fingerprint(&uncapped.report);
+    let solo_peak = uncapped
+        .serve
+        .outcomes
+        .iter()
+        .map(|o| o.peak_kv_tokens())
+        .max()
+        .unwrap() as usize;
+    let global_budget = 4 * (solo_peak + 4096);
+    for shards in [1usize, 4] {
+        for async_decode in [false, true] {
+            let opts = ServeOptions {
+                concurrency: 12,
+                capacity_tokens: global_budget,
+                block_size: 16,
+                shards,
+                ..Default::default()
+            }
+            .async_decoded(async_decode);
+            let capped = evaluate_serve_with(&cfg, &opts, &perf);
+            assert_eq!(
+                tight_base,
+                fingerprint(&capped.report),
+                "shards={shards} async-decode={async_decode} under a tight \
+                 budget changed eval results"
+            );
+            assert!(capped.serve.peak_used_blocks <= capped.serve.total_blocks);
+        }
+    }
+}
+
+#[test]
+fn speculative_planning_repairs_mispredicts_without_changing_results() {
+    // Frontier growth between staging and the next plan (admissions landing
+    // mid-run via continuous batching, resumes after preemption) is the
+    // speculative planner's mispredict case: the staged entries are kept
+    // and only the appended tail is planned. A run with more problems than
+    // concurrency must therefore record BOTH hits (quiet rounds) and misses
+    // (admission rounds) — and stay byte-identical to the sync run.
+    let mut cfg = cfg(PolicySpec::Rebase);
+    cfg.n_problems = 12;
+    let perf = PerfModel::new(H100_NVL, true, 4);
+    let opts = |async_decode: bool| {
+        ServeOptions {
+            concurrency: 4, // < n_problems: finished slots refill mid-flight
+            shards: 2,
+            capacity_tokens: DEFAULT_KV_CAPACITY * 2,
+            ..Default::default()
+        }
+        .async_decoded(async_decode)
+    };
+    let sync = evaluate_serve_with(&cfg, &opts(false), &perf);
+    let spec = evaluate_serve_with(&cfg, &opts(true), &perf);
+    assert_eq!(
+        fingerprint(&sync.report),
+        fingerprint(&spec.report),
+        "speculative planning changed eval results"
+    );
+    assert!(
+        spec.serve.spec_plan_hits > 0,
+        "quiet rounds must reuse their staged plan (hits {}, misses {})",
+        spec.serve.spec_plan_hits,
+        spec.serve.spec_plan_misses
+    );
+    assert!(
+        spec.serve.spec_plan_misses > 0,
+        "mid-run admissions must force staged-plan repairs (hits {}, misses {})",
+        spec.serve.spec_plan_hits,
+        spec.serve.spec_plan_misses
+    );
+    // per-shard counters fold to the report totals
+    let hits: u64 = spec.serve.shard_stats.iter().map(|s| s.spec_plan_hits).sum();
+    let misses: u64 = spec.serve.shard_stats.iter().map(|s| s.spec_plan_misses).sum();
+    assert_eq!(hits, spec.serve.spec_plan_hits);
+    assert_eq!(misses, spec.serve.spec_plan_misses);
+}
+
+#[test]
+fn repeated_async_serves_are_stable_and_leak_free() {
+    // AsyncLm joins its completion worker on drop, so back-to-back async
+    // serves must neither accumulate state nor wobble: three runs in a row,
+    // all byte-identical.
+    let cfg = cfg(PolicySpec::Rebase);
+    let perf = PerfModel::new(H100_NVL, true, 8);
+    let opts = ServeOptions {
+        concurrency: 8,
+        shards: 2,
+        capacity_tokens: DEFAULT_KV_CAPACITY * 2,
+        ..Default::default()
+    }
+    .async_decoded(true);
+    let first = fingerprint(&evaluate_serve_with(&cfg, &opts, &perf).report);
+    for run in 1..3 {
+        let again = fingerprint(&evaluate_serve_with(&cfg, &opts, &perf).report);
+        assert_eq!(first, again, "async serve run {run} diverged from run 0");
+    }
+}
+
+#[test]
 fn shard_and_pipeline_matrix_is_invisible_under_pressure_and_tight_shards_migrate() {
     // Fat working sets (width 24) so a per-shard budget sized to one peak
     // working set puts a 3-resident shard under sustained pressure.
