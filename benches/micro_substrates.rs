@@ -15,7 +15,8 @@
 use ets::cluster::agglomerative;
 use ets::ilp::select::{solve_tree, Candidate, SelectionProblem};
 use ets::ilp::simplex::{solve, Lp, LpOutcome};
-use ets::kvcache::RadixCache;
+use ets::kvcache::coldtier::SpillArena;
+use ets::kvcache::{payload_word, RadixCache};
 use ets::metrics::Table;
 use ets::search::sampling::rebase_allocate;
 use ets::util::json::Json;
@@ -746,6 +747,62 @@ fn main() {
                 reference: old,
             });
         }
+    }
+
+    // (5) Cold-tier spill/restore: a demote → restore roundtrip through the
+    // host-DRAM SpillArena (block-copy in, block-copy out) vs regenerating
+    // the payload words from scratch — the data-plane alternative the
+    // demote-instead-of-destroy ladder exists to avoid. The restored words
+    // must be bit-identical to regeneration (the tier's whole correctness
+    // contract) before either side is timed.
+    {
+        let n_spans = 64usize;
+        let len = 2048usize;
+        let spans: Vec<Vec<u32>> = (0..n_spans)
+            .map(|i| (0..len).map(|t| ((i * 131 + t * 7) % 50_021) as u32).collect())
+            .collect();
+        let payloads: Vec<Vec<u64>> = spans
+            .iter()
+            .map(|s| s.iter().map(|&t| payload_word(t)).collect())
+            .collect();
+        let mut arena = SpillArena::new(n_spans * len, 16);
+        for (s, w) in spans.iter().zip(&payloads) {
+            assert!(arena.admit(s, 0, w), "ample arena must admit every span");
+            assert_eq!(arena.probe_back(s, 0), 0, "admitted span must cover fully");
+        }
+        arena.check_invariants().expect("spill arena invariants");
+        for (s, w) in spans.iter().zip(&payloads) {
+            assert_eq!(
+                arena.restore(s, 0).as_deref(),
+                Some(w.as_slice()),
+                "restored words must be bit-identical to regeneration"
+            );
+        }
+        let new = bench(20, || {
+            let mut arena = SpillArena::new(n_spans * len, 16);
+            for (s, w) in spans.iter().zip(&payloads) {
+                arena.admit(s, 0, w);
+            }
+            let mut acc = 0u64;
+            for s in &spans {
+                acc ^= arena.restore(s, 0).expect("admitted above")[len - 1];
+            }
+            std::hint::black_box(acc);
+        });
+        let old = bench(20, || {
+            let mut acc = 0u64;
+            for s in &spans {
+                let words: Vec<u64> = s.iter().map(|&t| payload_word(t)).collect();
+                acc ^= words[len - 1];
+            }
+            std::hint::black_box(acc);
+        });
+        cases.push(CompareCase {
+            name: "kv spill/restore roundtrip (cold-tier copy vs payload regen)",
+            size: format!("{n_spans} spans × {len} tok"),
+            new,
+            reference: old,
+        });
     }
 
     let mut cmp = Table::new(

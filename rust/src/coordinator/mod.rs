@@ -187,6 +187,18 @@ pub struct ServeOptions {
     /// Hard global KV budget in tokens; each shard owns an equal partition
     /// (`capacity_tokens / shards`), rounded up to whole blocks.
     pub capacity_tokens: usize,
+    /// Host-DRAM cold-tier budget in tokens (a *second* hard budget under
+    /// the hot one), partitioned per shard like `capacity_tokens`. With it
+    /// nonzero, eviction *demotes* unpinned spans into the shard's
+    /// [`crate::kvcache::coldtier::SpillArena`] instead of destroying them,
+    /// and resumes may restore demoted payload over the modeled PCIe lane
+    /// when that is priced below recompute
+    /// ([`crate::engine::PerfModel::tier_choice`]). True destruction
+    /// happens only when both tiers are full. 0 (the default) keeps the
+    /// evict-to-nothing ladder. Purely a costing/placement feature —
+    /// results are byte-identical with the tier on or off (pinned by
+    /// `tests/serve_determinism.rs`).
+    pub cold_capacity_tokens: usize,
     /// Tokens per KV block (paged-allocator page size).
     pub block_size: usize,
     /// Shard-per-core engines: `shards` persistent workers, each owning a
@@ -234,6 +246,7 @@ impl Default for ServeOptions {
         Self {
             concurrency: 8,
             capacity_tokens: DEFAULT_KV_CAPACITY,
+            cold_capacity_tokens: 0,
             block_size: DEFAULT_BLOCK_SIZE,
             shards: 1,
             pipeline: false,
@@ -272,6 +285,11 @@ impl ServeOptions {
         self.async_decode = async_decode;
         self
     }
+
+    pub fn cold_tiered(mut self, cold_capacity_tokens: usize) -> Self {
+        self.cold_capacity_tokens = cold_capacity_tokens;
+        self
+    }
 }
 
 /// Telemetry of one engine round on one shard: the merged expansion batch of
@@ -304,6 +322,10 @@ pub struct BatchRecord {
     /// (the `min(transfer, recompute)` import decision chose the copy) —
     /// charged over the interconnect instead of as recompute prefill.
     pub transfer_kv_tokens: usize,
+    /// Tokens whose KV came back from the host-DRAM cold tier this round
+    /// (the `tier_choice` decision chose the PCIe restore) — charged over
+    /// the host link instead of as recompute prefill.
+    pub restored_kv_tokens: usize,
     /// Blocks allocated in this shard's cache after the round — per-shard
     /// occupancy telemetry. (The duplicate-prompt sweeps' headline number,
     /// [`ServeReport::mean_used_blocks`], is summed coordinator-side per
@@ -382,9 +404,30 @@ pub struct ShardStats {
     /// plane (cross-shard arena copies the import decision chose).
     pub transferred_kv_bytes: u64,
     /// Payload-arena bytes rebuilt locally on resume — the recompute side
-    /// of the reconciliation: `transferred + recomputed` covers every byte
-    /// a resume rematerialized.
+    /// of the reconciliation: `transferred + restored + recomputed` covers
+    /// every byte a resume rematerialized.
     pub recomputed_kv_bytes: u64,
+    /// Tokens eviction demoted into this shard's host-DRAM cold tier over
+    /// the run (monotone arena counter, snapshotted before the teardown
+    /// flush so the final drain does not count). 0 with the tier off.
+    pub demoted_kv_tokens: u64,
+    /// KV tokens billed as cold-tier PCIe restores (the `tier_choice`
+    /// decision chose the copy over recompute).
+    pub restored_kv_tokens: u64,
+    /// Payload-arena bytes that actually arrived from the cold tier — the
+    /// executed-restore reconciliation next to the modeled
+    /// `restored_kv_tokens`.
+    pub restored_kv_bytes: u64,
+    /// Resumes whose cold-tier decision chose the restore…
+    pub cold_restores: u64,
+    /// …vs recomputed anyway (a demoted span existed but the prefill was
+    /// modeled cheaper, e.g. under a congested PCIe lane).
+    pub cold_recomputes: u64,
+    /// Tokens truly destroyed at the cold tier: demoted spans dropped
+    /// because the second budget overflowed (or a span outsized it).
+    pub cold_dropped_kv_tokens: u64,
+    /// High-water mark of the cold arena's occupancy, in blocks.
+    pub peak_cold_used_blocks: u64,
     /// Worker that first-touch faulted this shard's payload arena from its
     /// pinned core (`None`: pinning off or inline single-shard scheduler).
     pub arena_touch_worker: Option<usize>,
@@ -448,10 +491,14 @@ pub struct ServeReport {
     /// Hub-consistency audit, accumulated over barriers: entries of the
     /// previous snapshot still fully resident on their owner…
     pub hub_live_entries: u64,
-    /// …and entries the owner evicted mid-round (accounted, never lost).
-    /// `hub_published == hub_live_entries + hub_evicted_entries` whenever a
-    /// final audit ran for every snapshot.
+    /// …entries the owner evicted mid-round (accounted, never lost).
+    /// `hub_published == hub_live_entries + hub_evicted_entries +
+    /// hub_demoted_entries` whenever a final audit ran for every snapshot.
     pub hub_evicted_entries: u64,
+    /// …and entries evicted from the hot tier but still reconstructible
+    /// from the owner's host-DRAM cold tier (hot prefix + demoted spans
+    /// cover the whole fingerprinted span). Always 0 with the tier off.
+    pub hub_demoted_entries: u64,
     /// KV tokens imported as cross-shard block transfers (Σ over shards).
     pub imported_kv_tokens: u64,
     /// Import decisions that chose the transfer vs the recompute prefill.
@@ -475,6 +522,19 @@ pub struct ServeReport {
     /// reconciliation next to the modeled `imported_kv_tokens`.
     pub transferred_kv_bytes: u64,
     pub recomputed_kv_bytes: u64,
+    /// Cold-tier (host-DRAM spill) telemetry, Σ over shards: tokens
+    /// demoted by eviction, tokens billed as PCIe restores, the bytes
+    /// those restores actually copied, the per-resume decision counts, and
+    /// tokens truly destroyed when the second budget overflowed. All 0
+    /// with [`ServeOptions::cold_capacity_tokens`] = 0.
+    pub demoted_kv_tokens: u64,
+    pub restored_kv_tokens: u64,
+    pub restored_kv_bytes: u64,
+    pub cold_restores: u64,
+    pub cold_recomputes: u64,
+    pub cold_dropped_kv_tokens: u64,
+    /// Cold-tier budget the run was scheduled with (global tokens).
+    pub cold_capacity_tokens: usize,
     /// Global scheduler rounds executed.
     pub rounds: u64,
     /// Σ over rounds of the fleet-wide allocated blocks after the round —
@@ -564,6 +624,13 @@ where
     let concurrency = opts.concurrency.max(1);
     let n_shards = opts.shards.max(1);
     let per_shard_capacity = (opts.capacity_tokens / n_shards).max(opts.block_size);
+    // the cold tier's second budget partitions the same way; 0 keeps the
+    // evict-to-nothing ladder on every shard
+    let per_shard_cold = if opts.cold_capacity_tokens == 0 {
+        0
+    } else {
+        (opts.cold_capacity_tokens / n_shards).max(opts.block_size)
+    };
     let n = jobs.len();
     std::thread::scope(|scope| {
         let mut set: ShardSet<G, R, P> = ShardSet::new(
@@ -575,6 +642,7 @@ where
                         per_shard_capacity,
                         opts.block_size,
                         opts.prefix_share,
+                        per_shard_cold,
                     )
                 })
                 .collect(),
@@ -619,6 +687,7 @@ where
         let mut hub_published = 0u64;
         let mut hub_live_entries = 0u64;
         let mut hub_evicted_entries = 0u64;
+        let mut hub_demoted_entries = 0u64;
         let mut rounds = 0u64;
         let mut sum_round_used_blocks = 0u64;
         // The global prefix hub: rebuilt once per round at the barrier
@@ -644,10 +713,13 @@ where
             //    perturbs any cache's LRU order; everything later in the
             //    round reads this one fixed, versioned snapshot.
             if let Some(hub) = hub.as_mut() {
-                let audit =
-                    hub.audit(|s, span| set.get(s).engine.cache().peek_prefix(span));
+                let audit = hub.audit(
+                    |s, span| set.get(s).engine.cache().peek_prefix(span),
+                    |s, span, hot| set.get(s).engine.cache().cold_probe(span, hot) <= hot,
+                );
                 hub_live_entries += audit.live;
                 hub_evicted_entries += audit.evicted;
+                hub_demoted_entries += audit.demoted;
                 hub.begin_round();
                 for shard in set.iter_mut() {
                     for slot in shard.running.iter().chain(shard.suspended.iter()) {
@@ -659,6 +731,18 @@ where
                         let ids = slot.session.prompt_ids();
                         let cached = shard.engine.cache().peek_prefix(ids);
                         hub.publish(shard.index, ids, cached);
+                        // mid-tree step spans: fingerprint every committed
+                        // step extent (the leaf sequences), not just the
+                        // prompt — a hub import or cold-tier restore can
+                        // then satisfy *partial trajectories* of preempted
+                        // or duplicate work, where prompt-only entries stop
+                        // at the first step boundary
+                        for seq in slot.session.step_span_sequences() {
+                            if seq.len() > ids.len() {
+                                let cached = shard.engine.cache().peek_prefix(&seq);
+                                hub.publish(shard.index, &seq, cached);
+                            }
+                        }
                     }
                     // retired-but-warm prompts (lazy close): advertise what
                     // the cache still holds; prune spans LRU pressure has
@@ -687,6 +771,11 @@ where
             let mut link_queued_bytes = 0.0f64;
             for i in 0..n_shards {
                 let mut shard = set.take(i);
+                // fresh PCIe lane per shard per round: cold-tier spills and
+                // restores of *this* round's resume/migration passes queue
+                // on it (commit-phase spills are write-behind DMA and are
+                // not billed — they drain during the next round's decode)
+                shard.cold_lane_bytes = 0.0;
                 let peers: Vec<Option<&RadixCache>> =
                     (0..n_shards).map(|j| set.peek(j).map(|s| s.engine.cache())).collect();
                 round_bills[i] = shard.resume_pass(
@@ -970,17 +1059,31 @@ where
             }
         }
         // final hub audit: the last snapshot's fingerprints are classified
-        // too, so published == live + evicted holds over the whole run
+        // too, so published == live + evicted + demoted holds over the
+        // whole run
         if let Some(hub) = hub.as_ref() {
-            let audit = hub.audit(|s, span| set.get(s).engine.cache().peek_prefix(span));
+            let audit = hub.audit(
+                |s, span| set.get(s).engine.cache().peek_prefix(span),
+                |s, span, hot| set.get(s).engine.cache().cold_probe(span, hot) <= hot,
+            );
             hub_live_entries += audit.live;
             hub_evicted_entries += audit.evicted;
+            hub_demoted_entries += audit.demoted;
         }
         // retire the worker pool before folding the report (the enclosing
         // scope joins the exited workers)
         drop(pool);
 
         for shard in set.iter_mut() {
+            // snapshot the cold tier's monotone counters *before* the
+            // teardown flush below: the flush demotes every remaining warm
+            // span, which is drain traffic, not serving telemetry
+            if let Some(cold) = shard.engine.cache().cold() {
+                shard.stats.demoted_kv_tokens = cold.demoted_tokens();
+                shard.stats.cold_dropped_kv_tokens = cold.dropped_tokens();
+                shard.stats.peak_cold_used_blocks =
+                    shard.stats.peak_cold_used_blocks.max(cold.used_blocks() as u64);
+            }
             // flush warm KV orphaned by sessions that migrated away (lazy
             // suspend leaves it cached) so the all-pins-released invariant
             // is meaningful per shard
@@ -1011,6 +1114,14 @@ where
             set.iter().map(|s| s.stats.transferred_kv_bytes).sum();
         let recomputed_kv_bytes: u64 =
             set.iter().map(|s| s.stats.recomputed_kv_bytes).sum();
+        let demoted_kv_tokens: u64 = set.iter().map(|s| s.stats.demoted_kv_tokens).sum();
+        let restored_kv_tokens: u64 =
+            set.iter().map(|s| s.stats.restored_kv_tokens).sum();
+        let restored_kv_bytes: u64 = set.iter().map(|s| s.stats.restored_kv_bytes).sum();
+        let cold_restores: u64 = set.iter().map(|s| s.stats.cold_restores).sum();
+        let cold_recomputes: u64 = set.iter().map(|s| s.stats.cold_recomputes).sum();
+        let cold_dropped_kv_tokens: u64 =
+            set.iter().map(|s| s.stats.cold_dropped_kv_tokens).sum();
         ServeReport {
             outcomes: outcomes
                 .into_iter()
@@ -1036,6 +1147,7 @@ where
             hub_published,
             hub_live_entries,
             hub_evicted_entries,
+            hub_demoted_entries,
             imported_kv_tokens,
             import_transfers,
             import_recomputes,
@@ -1047,6 +1159,13 @@ where
             spec_plan_misses,
             transferred_kv_bytes,
             recomputed_kv_bytes,
+            demoted_kv_tokens,
+            restored_kv_tokens,
+            restored_kv_bytes,
+            cold_restores,
+            cold_recomputes,
+            cold_dropped_kv_tokens,
+            cold_capacity_tokens: opts.cold_capacity_tokens,
             rounds,
             sum_round_used_blocks,
             shard_stats: set.into_inner().into_iter().map(|s| s.stats).collect(),
@@ -1301,6 +1420,74 @@ mod tests {
         for o in &capped.outcomes {
             assert!(o.answer.is_some());
         }
+    }
+
+    #[test]
+    fn cold_tier_restores_instead_of_recomputing_without_changing_results() {
+        // The tight-capacity scenario again, with the host-DRAM spill tier
+        // attached: eviction demotes instead of destroying, resumes restore
+        // over the modeled PCIe lane — and every answer, every per-problem
+        // count, and even the pressure schedule stay byte-identical.
+        let params = SearchParams { width: 16, max_steps: 16 };
+        let perf = PerfModel::new(H100_NVL, true, 1);
+        let uncapped = serve(
+            jobs(6, 42),
+            &params,
+            &ServeOptions::with_concurrency(6),
+            &perf,
+            &LLEMMA_34B_SIM,
+        );
+        let solo_peak =
+            uncapped.outcomes.iter().map(|o| o.peak_kv_tokens()).max().unwrap() as usize;
+        let tight = ServeOptions {
+            concurrency: 6,
+            capacity_tokens: 2 * solo_peak + 4096,
+            block_size: 16,
+            ..Default::default()
+        };
+        let evict_only = serve(jobs(6, 42), &params, &tight, &perf, &LLEMMA_34B_SIM);
+        assert!(evict_only.preemptions > 0, "precondition: the tight budget must preempt");
+        assert_eq!(evict_only.demoted_kv_tokens, 0);
+        assert_eq!(evict_only.restored_kv_tokens, 0);
+        let tiered_opts = tight.clone().cold_tiered(64 * solo_peak);
+        let tiered = serve(jobs(6, 42), &params, &tiered_opts, &perf, &LLEMMA_34B_SIM);
+        assert_eq!(
+            fingerprints(&evict_only),
+            fingerprints(&tiered),
+            "the cold tier changed search results"
+        );
+        // demote-instead-of-destroy frees the same hot blocks in the same
+        // order, so the pressure schedule is untouched too
+        assert_eq!(evict_only.preemptions, tiered.preemptions);
+        assert_eq!(evict_only.resumes, tiered.resumes);
+        assert!(tiered.demoted_kv_tokens > 0, "evictions must demote with the tier on");
+        assert!(tiered.restored_kv_tokens > 0, "resumes must restore demoted spans");
+        assert!(tiered.cold_restores > 0);
+        assert!(tiered.restored_kv_bytes > 0, "chosen restores must copy real payload");
+        // restored tokens come exactly out of the recompute bill: the split
+        // is a costing choice, the total rematerialized span is fixed by
+        // the (identical) schedule
+        assert_eq!(
+            tiered.recompute_tokens + tiered.restored_kv_tokens,
+            evict_only.recompute_tokens,
+            "restore billing must conserve the total resume span"
+        );
+        // per-shard byte reconciliation: every rematerialized payload byte
+        // is either recomputed or restored (no cross-shard transfers
+        // without the hub)
+        for s in &tiered.shard_stats {
+            assert_eq!(s.transferred_kv_bytes, 0);
+            assert_eq!(
+                s.recomputed_kv_bytes + s.restored_kv_bytes,
+                evict_only.shard_stats[s.shard].recomputed_kv_bytes,
+                "shard {} byte reconciliation drifted",
+                s.shard
+            );
+        }
+        assert!(
+            tiered.batches.iter().any(|b| b.restored_kv_tokens > 0),
+            "restore billing must reach the round records"
+        );
     }
 
     #[test]

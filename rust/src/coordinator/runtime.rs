@@ -75,6 +75,11 @@ pub(crate) struct Slot<G, R, P> {
 pub(crate) struct ResumeBill {
     pub(crate) recompute_tokens: usize,
     pub(crate) transfer_tokens: usize,
+    /// Tokens whose payload came back from the host-DRAM cold tier over the
+    /// modeled PCIe link instead of being re-prefilled — the third costing
+    /// class next to recompute and cross-shard transfer. Like the others,
+    /// purely a costing split: the cache ends up identical either way.
+    pub(crate) restored_tokens: usize,
     /// Whether a `min(transfer, recompute)` decision actually ran — i.e.
     /// the import source held a non-empty span. A resume with nothing
     /// importable is billed plain recompute without any "choice" having
@@ -86,11 +91,12 @@ impl ResumeBill {
     pub(crate) fn add(&mut self, other: ResumeBill) {
         self.recompute_tokens += other.recompute_tokens;
         self.transfer_tokens += other.transfer_tokens;
+        self.restored_tokens += other.restored_tokens;
         self.import_decided |= other.import_decided;
     }
 
     pub(crate) fn any(&self) -> bool {
-        self.recompute_tokens > 0 || self.transfer_tokens > 0
+        self.recompute_tokens > 0 || self.transfer_tokens > 0 || self.restored_tokens > 0
     }
 }
 
@@ -133,6 +139,14 @@ pub(crate) struct Shard<G, R, P> {
     /// migrations, admissions landing before the next plan), which
     /// [`Shard::plan_round`] repairs by planning just the new tail.
     pub(crate) staged: Option<PlannedRound>,
+    /// Bytes queued on this shard's host↔device (PCIe) lane so far this
+    /// round — cold-tier spills and restores share it, so earlier traffic
+    /// (deterministic resume order) delays later restore decisions and can
+    /// flip them back to recompute, exactly like `link_queued_bytes` does
+    /// for the cross-shard interconnect. Per-shard, unlike the shared
+    /// NVLink lane: each GPU owns its own PCIe link. Reset by the
+    /// coordinator at the top of every round.
+    pub(crate) cold_lane_bytes: f64,
     pub(crate) stats: ShardStats,
 }
 
@@ -178,17 +192,24 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
         capacity_tokens: usize,
         block_size: usize,
         prefix_share: bool,
+        cold_capacity_tokens: usize,
     ) -> Self {
         // Disjoint minted-id residue classes per shard keep the "ids are
         // never reused" invariant fleet-wide, so a migrated session can
         // never falsely share cache with the target shard's unrelated
         // problems (see BatchEngine::for_shard).
-        let engine = BatchEngine::for_shard(
+        let mut engine = BatchEngine::for_shard(
             capacity_tokens,
             block_size,
             index as u32,
             n_shards as u32,
         );
+        if cold_capacity_tokens > 0 {
+            // third rung of the pressure ladder: eviction demotes into a
+            // host-DRAM spill arena instead of destroying, and resumes may
+            // restore from it over the modeled PCIe lane
+            engine.attach_cold_tier(cold_capacity_tokens);
+        }
         let stats = ShardStats {
             shard: index,
             total_blocks: engine.total_blocks(),
@@ -204,6 +225,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
             lazy_closed: 0,
             speculate: false,
             staged: None,
+            cold_lane_bytes: 0.0,
             stats,
         }
     }
@@ -212,6 +234,13 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
     /// deterministic load unit the admission router sorts by.
     pub(crate) fn resident(&self) -> usize {
         self.running.len() + self.suspended.len()
+    }
+
+    /// Monotone count of tokens this shard's evictions have demoted into
+    /// its cold tier so far (0 with the tier off). Deltas around a relieve
+    /// measure that relieve's spill traffic.
+    pub(crate) fn cold_demoted_tokens(&self) -> u64 {
+        self.engine.cache().cold().map_or(0, |c| c.demoted_tokens())
     }
 
     /// Σ policy-predicted KV blocks of the sessions resident here — the
@@ -243,9 +272,11 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
                     let mut bill = ResumeBill {
                         recompute_tokens: stats.recomputed_tokens,
                         transfer_tokens: 0,
+                        restored_tokens: 0,
                         import_decided: stats.imported_tokens > 0,
                     };
                     let mut copied = 0usize;
+                    let mut imported_transfer = false;
                     if stats.imported_tokens > 0 {
                         // Same-round transfers share the interconnect:
                         // earlier queued bytes (deterministic shard order)
@@ -258,6 +289,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
                             *link_queued_bytes,
                         );
                         if d.use_transfer() {
+                            imported_transfer = true;
                             bill.transfer_tokens = stats.imported_tokens;
                             bill.recompute_tokens -= stats.imported_tokens;
                             self.stats.import_transfers += 1;
@@ -280,15 +312,72 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
                             self.engine.discard_pending_imports();
                         }
                     }
+                    // Cold-tier rung: spans this shard itself demoted to
+                    // host DRAM earlier. Only when no cross-shard transfer
+                    // already covers the resume (the import span and the
+                    // demoted span overlap — they describe the same path),
+                    // and priced against recompute on this shard's PCIe
+                    // lane, shared with every spill and restore queued
+                    // earlier this round.
+                    let mut cold_copied = 0usize;
+                    let restorable = self.engine.restorable_tokens();
+                    if imported_transfer {
+                        self.engine.discard_pending_restores();
+                    } else if restorable > 0 {
+                        let d = perf.tier_choice(
+                            restorable,
+                            self.engine.block_size(),
+                            model,
+                            self.cold_lane_bytes,
+                        );
+                        if d.use_transfer() {
+                            bill.restored_tokens = restorable;
+                            bill.recompute_tokens -= restorable;
+                            self.stats.cold_restores += 1;
+                            self.stats.restored_kv_tokens += restorable as u64;
+                            self.cold_lane_bytes += perf.link_bytes(
+                                restorable,
+                                self.engine.block_size(),
+                                model,
+                            );
+                            // Execute the restore: splice the demoted spans'
+                            // words back over the locally recomputed ones
+                            // (bit-identical by construction — asserted at
+                            // the write site in debug builds). A span the
+                            // arena dropped since probing keeps its
+                            // recomputed words, same fallback as imports.
+                            cold_copied = self.engine.commit_pending_restores();
+                        } else {
+                            self.stats.cold_recomputes += 1;
+                            self.engine.discard_pending_restores();
+                        }
+                    }
                     let word = std::mem::size_of::<u64>();
-                    let rebuilt = stats.recomputed_tokens.saturating_sub(copied);
+                    let rebuilt =
+                        stats.recomputed_tokens.saturating_sub(copied + cold_copied);
                     self.stats.transferred_kv_bytes += (copied * word) as u64;
+                    self.stats.restored_kv_bytes += (cold_copied * word) as u64;
                     self.stats.recomputed_kv_bytes += (rebuilt * word) as u64;
                     return Some(bill);
                 }
                 Err(p) => {
-                    if attempt == 0 && self.engine.relieve(&p) > 0 {
-                        continue;
+                    if attempt == 0 {
+                        // The relieve may *demote* spans to the cold tier;
+                        // those spill bytes queue on the same PCIe lane the
+                        // round's restores contend for.
+                        let spilled_before = self.cold_demoted_tokens();
+                        if self.engine.relieve(&p) > 0 {
+                            let spilled =
+                                (self.cold_demoted_tokens() - spilled_before) as usize;
+                            if spilled > 0 {
+                                self.cold_lane_bytes += perf.link_bytes(
+                                    spilled,
+                                    self.engine.block_size(),
+                                    model,
+                                );
+                            }
+                            continue;
+                        }
                     }
                     break;
                 }
@@ -492,6 +581,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
             shard: self.index,
             recompute_tokens: bill.recompute_tokens,
             transfer_kv_tokens: bill.transfer_tokens,
+            restored_kv_tokens: bill.restored_tokens,
             ..Default::default()
         };
         let mut i = 0usize;
@@ -555,13 +645,23 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
             self.engine.used_blocks(),
             self.engine.total_blocks()
         );
+        // Cold-tier occupancy telemetry (monotone arena counters, so a
+        // plain snapshot is the running total; the serve teardown takes a
+        // final snapshot *before* its flush so the drain does not count).
+        if let Some(cold) = self.engine.cache().cold() {
+            self.stats.demoted_kv_tokens = cold.demoted_tokens();
+            self.stats.cold_dropped_kv_tokens = cold.dropped_tokens();
+            self.stats.peak_cold_used_blocks =
+                self.stats.peak_cold_used_blocks.max(cold.used_blocks() as u64);
+        }
         // A record exists when the round did costed work: commits, resume
-        // recompute or imported transfers, or backend decode time spent on
-        // steps whose commits all deferred under pressure (the device ran
-        // either way).
+        // recompute or imported transfers, cold-tier restores, or backend
+        // decode time spent on steps whose commits all deferred under
+        // pressure (the device ran either way).
         let record = if rec.problems > 0
             || rec.recompute_tokens > 0
             || rec.transfer_kv_tokens > 0
+            || rec.restored_kv_tokens > 0
             || injected_decode_seconds > 0.0
         {
             // decode reads only what the committed sessions pin; wave
@@ -579,6 +679,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
                 resident_kv_tokens: resident,
                 recompute_prefill_tokens: rec.recompute_tokens,
                 transfer_kv_tokens: rec.transfer_kv_tokens,
+                restored_kv_tokens: rec.restored_kv_tokens,
                 block_size: self.engine.block_size(),
                 injected_decode_seconds,
             };

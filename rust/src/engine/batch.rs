@@ -110,6 +110,22 @@ impl KvLedger {
         self.locked.len()
     }
 
+    /// Tree leaves ending this problem's committed step spans, in
+    /// deterministic order: the pinned leaves (sorted) while resident, the
+    /// suspend-remembered leaves otherwise. These are the sequence ends the
+    /// coordinator fingerprints into the prefix hub as *mid-tree step
+    /// spans*, so a hub import or cold-tier restore can satisfy partial
+    /// trajectories instead of only whole prompts.
+    pub fn span_leaves(&self) -> Vec<NodeId> {
+        if self.suspended_leaves.is_empty() {
+            let mut leaves: Vec<NodeId> = self.locked.keys().copied().collect();
+            leaves.sort_unstable();
+            leaves
+        } else {
+            self.suspended_leaves.clone()
+        }
+    }
+
     /// True between a suspend and the matching resume: nothing is pinned
     /// and the problem's KV may be evicted by others at any time.
     pub fn is_suspended(&self) -> bool {
@@ -201,6 +217,29 @@ pub struct PendingImport {
     pub node: NodeIdx,
 }
 
+/// One cold-tier-restorable span [`BatchEngine::try_resume_with`] recorded:
+/// the local [`crate::kvcache::coldtier::SpillArena`] holds the payload of
+/// `seq[start..]`, demoted there by an earlier eviction. Like
+/// [`PendingImport`], the insert has already hash-filled the span; the
+/// scheduler's `min(restore, recompute)` choice
+/// ([`crate::engine::PerfModel::tier_choice`]) either executes the copy
+/// ([`BatchEngine::commit_pending_restores`]) or drops the record
+/// ([`BatchEngine::discard_pending_restores`]).
+#[derive(Clone, Debug)]
+pub struct PendingRestore {
+    /// The full re-inserted sequence whose suffix the cold tier holds.
+    pub seq: Vec<u32>,
+    /// First token slot the restore covers (`seq[start..]`).
+    pub start: usize,
+    /// Restorable token count (`seq.len() - start`).
+    pub len: usize,
+    /// Destination node (the insert's fresh suffix child).
+    pub node: NodeIdx,
+    /// The node's first token slot in sequence coordinates (the insert's
+    /// `shared_tokens`); the restore lands at node slot `start - node_base`.
+    pub node_base: usize,
+}
+
 /// Shared batched engine: radix cache + token-id mint + batch telemetry.
 #[derive(Clone, Debug)]
 pub struct BatchEngine {
@@ -234,6 +273,10 @@ pub struct BatchEngine {
     /// ([`BatchEngine::commit_pending_imports`] /
     /// [`BatchEngine::discard_pending_imports`]).
     pending_imports: Vec<PendingImport>,
+    /// Cold-tier-restorable spans recorded by the last
+    /// [`BatchEngine::try_resume_with`], awaiting the scheduler's
+    /// restore-vs-recompute decision.
+    pending_restores: Vec<PendingRestore>,
 }
 
 impl BatchEngine {
@@ -283,7 +326,16 @@ impl BatchEngine {
             tokens_recomputed: 0,
             pressure_evictions: 0,
             pending_imports: Vec::new(),
+            pending_restores: Vec::new(),
         }
+    }
+
+    /// Attach a host-DRAM cold tier of `capacity_tokens` to this engine's
+    /// cache (see [`RadixCache::attach_cold_tier`]): pressure evictions
+    /// demote instead of destroy, and resumes record restorable spans for
+    /// the scheduler's tier decision.
+    pub fn attach_cold_tier(&mut self, capacity_tokens: usize) {
+        self.cache.attach_cold_tier(capacity_tokens);
     }
 
     fn mint_tokens(&mut self, n: usize) -> Vec<u32> {
@@ -704,6 +756,27 @@ impl BatchEngine {
         self.cache.release_reservation(need);
         let mut stats = ResumeStats::default();
         self.pending_imports.clear();
+        self.pending_restores.clear();
+        // The cold-tier-covered tail of one insert's recomputed suffix:
+        // clamped to the insert's own fresh child `[shared, len)`, so —
+        // like imports — no span is ever counted twice across inserts.
+        fn restorable(
+            cache: &RadixCache,
+            seq: &[u32],
+            out: &crate::kvcache::InsertOutcome,
+        ) -> Option<PendingRestore> {
+            if out.new_tokens == 0 {
+                return None;
+            }
+            let from = cache.cold_probe(seq, out.shared_tokens).max(out.shared_tokens);
+            (from < seq.len()).then(|| PendingRestore {
+                seq: seq.to_vec(),
+                start: from,
+                len: seq.len() - from,
+                node: out.node,
+                node_base: out.shared_tokens,
+            })
+        }
         // The portion of one insert's recomputed suffix a peer could have
         // shipped instead: the peer's prefix coverage beyond what was
         // already resident locally, capped by what this insert actually
@@ -732,6 +805,9 @@ impl BatchEngine {
                 node: out.node,
             });
         }
+        if let Some(r) = restorable(&self.cache, &ledger.prompt_ids, &out) {
+            self.pending_restores.push(r);
+        }
         self.cache.lock(out.node);
         ledger.prompt_node = Some(out.node);
         let leaves = std::mem::take(&mut ledger.suspended_leaves);
@@ -749,10 +825,14 @@ impl BatchEngine {
                     node: out.node,
                 });
             }
+            if let Some(r) = restorable(&self.cache, seq, &out) {
+                self.pending_restores.push(r);
+            }
             self.cache.lock(out.node);
             ledger.locked.insert(leaf, out.node);
         }
         debug_assert!(stats.imported_tokens <= stats.recomputed_tokens);
+        debug_assert!(self.restorable_tokens() <= stats.recomputed_tokens);
         self.tokens_admitted += stats.recomputed_tokens as u64;
         self.tokens_recomputed += stats.recomputed_tokens as u64;
         self.resumes += 1;
@@ -788,6 +868,40 @@ impl BatchEngine {
     pub fn discard_pending_imports(&mut self) -> usize {
         let dropped = self.pending_imports.iter().map(|p| p.len).sum();
         self.pending_imports.clear();
+        dropped
+    }
+
+    /// Tokens the last [`BatchEngine::try_resume_with`] found restorable
+    /// from the cold tier — the input to the scheduler's
+    /// [`crate::engine::PerfModel::tier_choice`] decision. Always `<=` the
+    /// resume's `recomputed_tokens` (each span is clamped to its insert's
+    /// fresh child).
+    pub fn restorable_tokens(&self) -> usize {
+        self.pending_restores.iter().map(|p| p.len).sum()
+    }
+
+    /// Execute the decision-gated cold-tier copies the last
+    /// [`BatchEngine::try_resume_with`] recorded: stitch each span's payload
+    /// words out of the local [`crate::kvcache::coldtier::SpillArena`] and
+    /// land them in the hot arena — bit-identical to the hash-fill the
+    /// insert already performed (debug-asserted at the write site). Returns
+    /// tokens actually copied; spans the arena's own LRU dropped since the
+    /// sizing probe copy nothing and stay on the recompute words.
+    pub fn commit_pending_restores(&mut self) -> usize {
+        let pending = std::mem::take(&mut self.pending_restores);
+        let mut copied = 0usize;
+        for p in pending {
+            copied += self.cache.restore_node_payload(p.node, &p.seq, p.start, p.node_base);
+        }
+        copied
+    }
+
+    /// Drop the last resume's restorable-span records: the scheduler priced
+    /// the PCIe restore and chose recompute, whose words the insert already
+    /// materialized locally. Returns tokens whose copy was skipped.
+    pub fn discard_pending_restores(&mut self) -> usize {
+        let dropped = self.pending_restores.iter().map(|p| p.len).sum();
+        self.pending_restores.clear();
         dropped
     }
 
@@ -1073,6 +1187,40 @@ mod tests {
         assert_eq!(eng.live_kv(&ledger), 75 + 12);
         eng.close(&mut ledger);
         assert_eq!(eng.live_tokens(), 0);
+    }
+
+    #[test]
+    fn evicted_working_sets_restore_from_the_cold_tier_on_resume() {
+        // Same pressure story as above, but with a cold tier attached:
+        // eviction demotes the suspended working set instead of destroying
+        // it, and the resume reports the whole span restorable over PCIe.
+        let mut eng = BatchEngine::with_block_size(1 << 16, 16);
+        eng.attach_cold_tier(1 << 16);
+        let mut tree = SearchTree::new();
+        let root = tree.init_root(30);
+        let mut ledger = eng.register(30);
+        let a = child(&mut tree, root, 20);
+        let b = child(&mut tree, root, 25);
+        eng.admit(&mut ledger, &mut tree, &[a, b]);
+        eng.suspend(&mut ledger);
+        assert!(eng.relieve_pressure(usize::MAX) > 0);
+        assert_eq!(eng.live_tokens(), 0);
+        let cold = eng.cache().cold().unwrap();
+        assert_eq!(cold.demoted_tokens(), 75, "every evicted token demoted");
+        assert!(cold.used_blocks() > 0);
+        // resume accounting is *identical* to the evict-only path — the
+        // cold tier changes cost, never what
+        let stats = eng.try_resume(&mut ledger, &tree).unwrap();
+        assert_eq!(stats.recomputed_tokens, 75);
+        assert_eq!(eng.restorable_tokens(), 75, "full working set restorable");
+        // restore chosen: stitched copies land bit-identically
+        // (debug-asserted inside write_node_payload)
+        let copied = eng.commit_pending_restores();
+        assert_eq!(copied, 75);
+        assert_eq!(eng.commit_pending_restores(), 0);
+        assert_eq!(eng.cache().cold().unwrap().restored_tokens(), 75);
+        eng.close(&mut ledger);
+        eng.check_invariants().unwrap();
     }
 
     #[test]

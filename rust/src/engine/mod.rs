@@ -14,5 +14,6 @@ pub use batch::{
     DEFAULT_KV_CAPACITY,
 };
 pub use perfmodel::{
-    BatchStats, Hardware, LatencyEstimate, PerfModel, RoundCost, TransferDecision, H100_NVL,
+    BatchStats, Hardware, LatencyEstimate, PerfModel, RoundCost, TransferDecision,
+    COLD_LINK_BW_DEFAULT, H100_NVL,
 };

@@ -43,6 +43,10 @@ pub const H100_NVL: Hardware = Hardware {
     link_bw: 0.9e12,
 };
 
+/// Default host link for the cold KV tier: a PCIe gen5 x16-class lane
+/// (~64 GB/s), the path a demoted span pays to come back from host DRAM.
+pub const COLD_LINK_BW_DEFAULT: f64 = 64.0e9;
+
 /// Performance-model configuration for one serving setup.
 #[derive(Clone, Debug)]
 pub struct PerfModel {
@@ -51,6 +55,11 @@ pub struct PerfModel {
     pub shared_kv: bool,
     /// Problems co-scheduled on the node (the paper's "parallel threads").
     pub threads: usize,
+    /// Host↔device link bandwidth for the cold KV tier, bytes/s (PCIe-class
+    /// — an order of magnitude under [`Hardware::link_bw`]): what a
+    /// demote-to-host spill or a cold-tier restore pays per byte instead of
+    /// a recompute prefill. Set via [`PerfModel::cold_linked`].
+    pub cold_link_bw: f64,
 }
 
 /// Latency estimate for one problem's search.
@@ -90,6 +99,13 @@ pub struct BatchStats {
     /// ([`Hardware::link_bw`]) plus the local HBM write, on the plan+commit
     /// side of the pipeline boundary.
     pub transfer_kv_tokens: usize,
+    /// Tokens whose KV was *restored* from the host-DRAM cold tier this
+    /// round instead of recomputed: eviction had demoted the span
+    /// (payload copied out, blocks freed) and the `min(restore, recompute)`
+    /// [`PerfModel::tier_choice`] decision chose the PCIe copy back.
+    /// Charged as paged KV bytes over [`PerfModel::cold_link_bw`] plus the
+    /// local HBM write, on the plan+commit side of the pipeline boundary.
+    pub restored_kv_tokens: usize,
     /// KV block size of the paged allocator, in tokens. Memory is charged
     /// per *block*, not per token: a partially filled page still moves and
     /// occupies the whole page. 0 is treated as 1 (token granularity).
@@ -173,7 +189,15 @@ impl TransferDecision {
 
 impl PerfModel {
     pub fn new(hw: Hardware, shared_kv: bool, threads: usize) -> Self {
-        Self { hw, shared_kv, threads: threads.max(1) }
+        Self { hw, shared_kv, threads: threads.max(1), cold_link_bw: COLD_LINK_BW_DEFAULT }
+    }
+
+    /// Override the cold-tier host link bandwidth (bytes/s) — the CLI's
+    /// `--cold-link-gbps` lands here. Costing only: the link speed moves the
+    /// restore-vs-recompute break-even, never any search result.
+    pub fn cold_linked(mut self, bytes_per_sec: f64) -> Self {
+        self.cold_link_bw = bytes_per_sec.max(1.0);
+        self
     }
 
     /// The recompute-prefill roofline for a `tokens`-long span: a
@@ -238,6 +262,35 @@ impl PerfModel {
     pub fn link_bytes(&self, tokens: usize, block_size: usize, model: &ModelProfile) -> f64 {
         let bs = block_size.max(1) as f64;
         (tokens as f64 / bs).ceil() * bs * model.kv_bytes_per_token as f64
+    }
+
+    /// Cost both ways to rematerialize a `tokens`-long KV span the *cold
+    /// tier* (host DRAM) holds: restore it over the PCIe-class host link
+    /// ([`PerfModel::cold_link_bw`], paged bytes + the local HBM write) vs
+    /// recompute the prefill locally — the same
+    /// [`PerfModel::prefill_cost`] formula every other decision folds
+    /// through, so the billed cost and the choice stay in lockstep.
+    ///
+    /// `queued_bytes` is the paged volume this round's earlier cold-lane
+    /// traffic — demote spills *and* chosen restores, which share the one
+    /// host link — has already committed to the lane; this restore queues
+    /// behind it, so a spill-heavy round prices later restores back toward
+    /// recompute. `queued_bytes == 0.0` is the uncontended price.
+    pub fn tier_choice(
+        &self,
+        tokens: usize,
+        block_size: usize,
+        model: &ModelProfile,
+        queued_bytes: f64,
+    ) -> TransferDecision {
+        if tokens == 0 {
+            return TransferDecision::default();
+        }
+        let kv_bytes = self.link_bytes(tokens, block_size, model);
+        let transfer_seconds =
+            (queued_bytes + kv_bytes) / self.cold_link_bw + kv_bytes / self.hw.mem_bw;
+        let (recompute_seconds, _) = self.prefill_cost(tokens, block_size, model);
+        TransferDecision { transfer_seconds, recompute_seconds }
     }
 
     /// Estimate the wall-clock of one problem's search on this setup.
@@ -336,6 +389,17 @@ impl PerfModel {
             cost.overhead_seconds +=
                 link_bytes / self.hw.link_bw + link_bytes / self.hw.mem_bw;
             cost.bytes_moved += link_bytes;
+        }
+        // plan + commit: KV restored from the host-DRAM cold tier — paged
+        // bytes over the PCIe-class host link, then written into HBM.
+        // Demote spills are *not* billed here: spilling is write-behind DMA
+        // overlapping compute, so demotions cost only the lane contention
+        // they add to the round's tier_choice decisions.
+        if b.restored_kv_tokens > 0 {
+            let cold_bytes = page(b.restored_kv_tokens) * kv_b;
+            cost.overhead_seconds +=
+                cold_bytes / self.cold_link_bw + cold_bytes / self.hw.mem_bw;
+            cost.bytes_moved += cold_bytes;
         }
         // plan + commit: paged KV writes of the round's new tokens
         if b.new_tokens > 0 {
@@ -656,6 +720,61 @@ mod tests {
         let d = pm.import_choice(4_000, 16, &LLEMMA_34B_SIM);
         let delta = ci.overhead_seconds - cp.overhead_seconds;
         assert!((delta - d.transfer_seconds).abs() < 1e-12, "{delta} vs {d:?}");
+    }
+
+    #[test]
+    fn restored_kv_lands_on_the_overhead_side() {
+        let pm = PerfModel::new(H100_NVL, true, 1);
+        let plain = BatchStats {
+            model_calls: 64,
+            new_tokens: 64 * 50,
+            read_kv_tokens: 30_000,
+            resident_kv_tokens: 30_000,
+            block_size: 16,
+            ..Default::default()
+        };
+        let restored = BatchStats { restored_kv_tokens: 4_000, ..plain.clone() };
+        let (cp, cr) = (
+            pm.round_cost(&plain, &LLEMMA_34B_SIM),
+            pm.round_cost(&restored, &LLEMMA_34B_SIM),
+        );
+        assert_eq!(cr.decode_seconds, cp.decode_seconds, "restores never touch decode");
+        assert!(cr.overhead_seconds > cp.overhead_seconds, "restores must cost");
+        assert!(cr.bytes_moved > cp.bytes_moved);
+        // the restore bill matches the tier_choice transfer estimate — the
+        // billed cost and the restore-vs-recompute decision stay in lockstep
+        let d = pm.tier_choice(4_000, 16, &LLEMMA_34B_SIM, 0.0);
+        let delta = cr.overhead_seconds - cp.overhead_seconds;
+        assert!((delta - d.transfer_seconds).abs() < 1e-12, "{delta} vs {d:?}");
+    }
+
+    #[test]
+    fn tier_choice_prefers_pcie_restore_but_flips_under_contention() {
+        let pm = PerfModel::new(H100_NVL, true, 1);
+        let d = pm.tier_choice(2_000, 16, &LLEMMA_34B_SIM, 0.0);
+        assert!(d.transfer_seconds > 0.0 && d.recompute_seconds > 0.0);
+        assert!(
+            d.use_transfer(),
+            "a PCIe-class restore must beat a weight-read-floored recompute \
+             prefill: {d:?}"
+        );
+        // the PCIe lane is slower than NVLink, so a restore costs more than
+        // the equivalent cross-shard import — but still beats recompute
+        let nv = pm.import_choice(2_000, 16, &LLEMMA_34B_SIM);
+        assert!(d.transfer_seconds > nv.transfer_seconds, "{d:?} vs {nv:?}");
+        assert_eq!(d.recompute_seconds, nv.recompute_seconds);
+        // spill/restore traffic queued on the lane earlier in the round
+        // slows only the restore side, and enough of it flips the choice
+        let busy = pm.tier_choice(2_000, 16, &LLEMMA_34B_SIM, 1.0e9);
+        assert!(busy.transfer_seconds > d.transfer_seconds);
+        assert_eq!(busy.recompute_seconds, d.recompute_seconds);
+        let jammed = pm.tier_choice(2_000, 16, &LLEMMA_34B_SIM, 1.0e12);
+        assert!(!jammed.use_transfer(), "{jammed:?}");
+        // a commodity cold link (1 GB/s) makes recompute cheaper outright
+        let slow = PerfModel::new(H100_NVL, true, 1).cold_linked(1.0e9);
+        assert!(!slow.tier_choice(2_000, 16, &LLEMMA_34B_SIM, 0.0).use_transfer());
+        // nothing to restore, nothing to charge
+        assert_eq!(pm.tier_choice(0, 16, &LLEMMA_34B_SIM, 0.0), TransferDecision::default());
     }
 
     #[test]

@@ -1,0 +1,526 @@
+//! Host-DRAM cold tier for the paged KV cache: a per-shard [`SpillArena`]
+//! that eviction *demotes* spans into instead of destroying them, so a
+//! later resume can restore the payload over a modeled PCIe link instead of
+//! paying a recompute prefill.
+//!
+//! Spans are keyed by the **full root-path token sequence** they terminate:
+//! a demoted radix leaf covering path tokens `[start, end)` is stored under
+//! fingerprints of `tokens[..end]`. Because the eviction cascade removes
+//! leaves bottom-up, the spans of one trajectory *tile* its path — the leaf
+//! span ends where the trajectory ends, its parent's span ends where the
+//! leaf's starts — and a backward walk ([`SpillArena::probe_back`]) stitches
+//! them into one contiguous restorable suffix. Each span is additionally
+//! indexed at every whole-block boundary it covers, so probes at block
+//! granularity (the prefix hub's audit, trajectories re-split at different
+//! node extents) resolve *into* a span, not only at its end.
+//!
+//! The arena is the pressure ladder's **third rung**: evict-to-cold before
+//! evict-to-nothing. Its capacity (in the same block units as the hot
+//! allocator) is a second hard budget — admitting past it drops the arena's
+//! own LRU spans, and only *that* is true destruction. The arena keeps its
+//! **own LRU clock**, never the cache's: demotions and restores must not
+//! perturb the hot tier's eviction order, or cold-tier {on,off} would stop
+//! being result-identical.
+//!
+//! Payload words move through the same `read_span`/`write_words` surface as
+//! the PR 7 transport plane, so a restore is bit-identical to the local
+//! hash-fill recompute by construction (asserted in debug builds at the
+//! write site, [`crate::kvcache::RadixCache::write_node_payload`]).
+
+use std::collections::{BTreeSet, HashMap};
+
+/// FNV-1a over a token sequence — the span fingerprint (same chaining as
+/// the prefix hub's block fingerprints). Collisions are survivable (the
+/// arena exact-compares token sequences behind the hash); the map is never
+/// *iterated* for decisions, so `HashMap` order cannot leak into behavior.
+fn seq_hash(tokens: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        h = (h ^ t as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// One demoted span: the payload words of path tokens `[start, end)` of the
+/// trajectory `tokens[..end]` (where `end == tokens.len()`).
+#[derive(Clone, Debug)]
+struct SpillSpan {
+    /// Full root-path token sequence up to and including this span.
+    tokens: Vec<u32>,
+    /// First token slot the payload covers (`tokens[start..]` ↔ `words`).
+    start: usize,
+    /// Payload words for `tokens[start..]`, exactly `end - start` of them.
+    words: Vec<u64>,
+    /// Arena-local LRU clock value of the last admit/restore touch.
+    last_access: u64,
+}
+
+impl SpillSpan {
+    fn blocks(&self, block_size: usize) -> usize {
+        self.words.len().div_ceil(block_size)
+    }
+}
+
+/// Host-DRAM spill arena: demoted-span store with a hard block budget and
+/// its own LRU. See the module docs for the tiling/keying scheme.
+#[derive(Clone, Debug, Default)]
+pub struct SpillArena {
+    block_size: usize,
+    /// Hard budget, in hot-tier block units.
+    capacity_blocks: usize,
+    /// Σ blocks held by live spans — maintained incrementally and asserted
+    /// against a full rescan in [`SpillArena::check_invariants`], same
+    /// discipline as the hot tier's `evictable_block_count`.
+    used_blocks: usize,
+    /// Arena-local LRU clock (never the cache's — see module docs).
+    clock: u64,
+    /// Span slots; `None` slots are on `free`.
+    spans: Vec<Option<SpillSpan>>,
+    free: Vec<usize>,
+    /// Fingerprint of `tokens[..k]` → span slots holding slot `k - 1`, for
+    /// every probe point `k` of each span: its exact end, plus every
+    /// whole-block boundary inside `(start, end)`. A `Vec` per bucket for
+    /// hash collisions *and* genuinely-shared prefixes of diverging
+    /// trajectories; lookups exact-compare tokens behind the hash.
+    index: HashMap<u64, Vec<usize>>,
+    /// Live spans keyed by `(last_access, slot)`; first element is the LRU
+    /// drop victim when the budget overflows.
+    lru: BTreeSet<(u64, usize)>,
+    /// Tokens ever demoted into the arena (Σ over admit events).
+    demoted_tokens: u64,
+    /// Tokens ever restored out of the arena (Σ over restore events).
+    restored_tokens: u64,
+    /// Tokens truly destroyed: dropped at admit (oversized span) or by the
+    /// arena's own LRU when the second budget overflows.
+    dropped_tokens: u64,
+}
+
+impl SpillArena {
+    /// Arena with a `ceil(capacity_tokens / block_size)`-block hard budget.
+    pub fn new(capacity_tokens: usize, block_size: usize) -> Self {
+        let bs = block_size.max(1);
+        Self {
+            block_size: bs,
+            capacity_blocks: capacity_tokens.div_ceil(bs),
+            ..Self::default()
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity_blocks
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.used_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.capacity_blocks - self.used_blocks
+    }
+
+    /// Live demoted spans currently held.
+    pub fn live_spans(&self) -> usize {
+        self.lru.len()
+    }
+
+    /// Tokens ever demoted into the arena (monotone counter).
+    pub fn demoted_tokens(&self) -> u64 {
+        self.demoted_tokens
+    }
+
+    /// Tokens ever restored out of the arena (monotone counter).
+    pub fn restored_tokens(&self) -> u64 {
+        self.restored_tokens
+    }
+
+    /// Tokens truly destroyed (both tiers full, or span > whole budget).
+    pub fn dropped_tokens(&self) -> u64 {
+        self.dropped_tokens
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn touch(&mut self, slot: usize) {
+        let now = self.tick();
+        let s = self.spans[slot].as_mut().expect("touch of a freed slot");
+        self.lru.remove(&(s.last_access, slot));
+        s.last_access = now;
+        self.lru.insert((now, slot));
+    }
+
+    /// The index keys of a span over `tokens` starting at `start`: the
+    /// running fingerprint at its exact end and at every whole-block
+    /// boundary strictly inside `(start, end)`.
+    fn span_keys(&self, tokens: &[u32], start: usize) -> Vec<u64> {
+        let end = tokens.len();
+        let mut keys = Vec::new();
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for (i, &t) in tokens.iter().enumerate() {
+            h = (h ^ t as u64).wrapping_mul(0x100_0000_01b3);
+            let k = i + 1;
+            if k > start && (k == end || k % self.block_size == 0) {
+                keys.push(h);
+            }
+        }
+        keys
+    }
+
+    /// A live span that *contains* probe point `tokens.len()`: its
+    /// trajectory starts with `tokens` and its payload begins before the
+    /// probe point. Bucket order is deterministic (insertion-ordered by the
+    /// deterministic admit sequence), and any hit is sound — shared
+    /// prefixes of diverging trajectories hold identical payload words by
+    /// [`crate::kvcache::payload_word`] construction.
+    fn find(&self, tokens: &[u32]) -> Option<usize> {
+        let slots = self.index.get(&seq_hash(tokens))?;
+        slots.iter().copied().find(|&i| {
+            self.spans[i].as_ref().is_some_and(|s| {
+                s.start < tokens.len()
+                    && s.tokens.len() >= tokens.len()
+                    && s.tokens[..tokens.len()] == *tokens
+            })
+        })
+    }
+
+    /// Destroy span `slot` (LRU overflow or replace-by-wider).
+    fn drop_span(&mut self, slot: usize) {
+        let s = self.spans[slot].take().expect("dropping a freed slot");
+        self.lru.remove(&(s.last_access, slot));
+        self.used_blocks -= s.blocks(self.block_size);
+        self.dropped_tokens += s.words.len() as u64;
+        for h in self.span_keys(&s.tokens, s.start) {
+            if let Some(slots) = self.index.get_mut(&h) {
+                slots.retain(|&i| i != slot);
+                if slots.is_empty() {
+                    self.index.remove(&h);
+                }
+            }
+        }
+        self.free.push(slot);
+    }
+
+    /// Drop LRU spans until `blocks` more fit under the budget.
+    fn make_room(&mut self, blocks: usize) {
+        while self.used_blocks + blocks > self.capacity_blocks {
+            let Some(&(_, slot)) = self.lru.iter().next() else { break };
+            self.drop_span(slot);
+        }
+    }
+
+    /// Demote the payload of path tokens `[start, end)` of trajectory
+    /// `tokens` (`end == tokens.len()`, `words.len() == end - start`) into
+    /// the arena. Returns whether the span is (still) held: an oversized
+    /// span — bigger than the whole budget — is dropped outright, and a
+    /// span some held span already covers is merely LRU-touched (payload
+    /// agreement debug-asserted). Counts toward
+    /// [`SpillArena::demoted_tokens`] either way — the demotion *happened*;
+    /// what the arena keeps is a capacity question.
+    pub fn admit(&mut self, tokens: &[u32], start: usize, words: &[u64]) -> bool {
+        debug_assert_eq!(
+            tokens.len() - start,
+            words.len(),
+            "span payload must cover tokens[start..]"
+        );
+        if words.is_empty() {
+            return false;
+        }
+        self.demoted_tokens += words.len() as u64;
+        let blocks = words.len().div_ceil(self.block_size);
+        if blocks > self.capacity_blocks {
+            self.dropped_tokens += words.len() as u64;
+            return false;
+        }
+        if let Some(slot) = self.find(tokens) {
+            let s = self.spans[slot].as_ref().expect("find returned a live slot");
+            if s.start <= start {
+                // a held span already covers everything this one would add
+                debug_assert_eq!(
+                    &s.words[start - s.start..tokens.len() - s.start],
+                    words,
+                    "re-demoted span diverges from the held payload"
+                );
+                self.touch(slot);
+                return true;
+            }
+            if s.tokens.len() == tokens.len() {
+                // same trajectory, strictly narrower: replace with ours
+                self.drop_span(slot);
+            }
+            // else: a longer trajectory overlapping ours partially — both
+            // stay (ours adds the `[start, s.start)` words it lacks)
+        }
+        self.make_room(blocks);
+        let now = self.tick();
+        let span = SpillSpan {
+            tokens: tokens.to_vec(),
+            start,
+            words: words.to_vec(),
+            last_access: now,
+        };
+        let keys = self.span_keys(tokens, start);
+        let slot = if let Some(slot) = self.free.pop() {
+            self.spans[slot] = Some(span);
+            slot
+        } else {
+            self.spans.push(Some(span));
+            self.spans.len() - 1
+        };
+        for h in keys {
+            self.index.entry(h).or_default().push(slot);
+        }
+        self.lru.insert((now, slot));
+        self.used_blocks += blocks;
+        true
+    }
+
+    /// Read-only backward probe: the earliest slot `m` such that the arena
+    /// contiguously covers `tokens[m..]` (stitching tiled spans), walking no
+    /// further once coverage reaches `start`. Returns `tokens.len()` when
+    /// the arena holds nothing ending at (or containing) this trajectory's
+    /// end. Touches no LRU clock — sizing probes must not perturb drop
+    /// order.
+    pub fn probe_back(&self, tokens: &[u32], start: usize) -> usize {
+        let mut end = tokens.len();
+        while end > start {
+            let Some(slot) = self.find(&tokens[..end]) else { break };
+            end = self.spans[slot].as_ref().expect("live slot").start;
+        }
+        end
+    }
+
+    /// Restore the payload words of `tokens[from..]`, stitched from the
+    /// tiled spans the backward walk traverses. `None` when coverage is
+    /// incomplete (a span was dropped since the probe) — the caller stays
+    /// on its already-materialized recompute words. LRU-touches every span
+    /// read; counts toward [`SpillArena::restored_tokens`].
+    pub fn restore(&mut self, tokens: &[u32], from: usize) -> Option<Vec<u64>> {
+        let end = tokens.len();
+        if from >= end {
+            return Some(Vec::new());
+        }
+        // Collect (slot, lo, hi) segments back to front, then splice.
+        let mut segs: Vec<(usize, usize, usize)> = Vec::new();
+        let mut cur = end;
+        while cur > from {
+            let slot = self.find(&tokens[..cur])?;
+            let s = self.spans[slot].as_ref().expect("live slot");
+            segs.push((slot, s.start.max(from), cur));
+            cur = s.start;
+        }
+        let mut out = Vec::with_capacity(end - from);
+        for &(slot, lo, hi) in segs.iter().rev() {
+            let s = self.spans[slot].as_ref().expect("live slot");
+            out.extend_from_slice(&s.words[lo - s.start..hi - s.start]);
+        }
+        debug_assert_eq!(out.len(), end - from);
+        for &(slot, _, _) in &segs {
+            self.touch(slot);
+        }
+        self.restored_tokens += (end - from) as u64;
+        Some(out)
+    }
+
+    /// Check internal invariants (tests / debug): incremental counters vs
+    /// full rescan, LRU/index/slot agreement — the same lockstep discipline
+    /// as the hot tier's evictable set.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut block_sum = 0usize;
+        let mut expect_lru: BTreeSet<(u64, usize)> = BTreeSet::new();
+        for (i, slot) in self.spans.iter().enumerate() {
+            let Some(s) = slot else {
+                if !self.free.contains(&i) {
+                    return Err(format!("freed slot {i} missing from free list"));
+                }
+                continue;
+            };
+            if s.words.len() != s.tokens.len() - s.start {
+                return Err(format!("slot {i}: words/tokens length mismatch"));
+            }
+            if s.words.is_empty() {
+                return Err(format!("slot {i}: empty span"));
+            }
+            block_sum += s.blocks(self.block_size);
+            expect_lru.insert((s.last_access, i));
+            for h in self.span_keys(&s.tokens, s.start) {
+                if !self.index.get(&h).is_some_and(|v| v.contains(&i)) {
+                    return Err(format!("slot {i} unreachable through the index"));
+                }
+            }
+        }
+        if block_sum != self.used_blocks {
+            return Err(format!(
+                "cold block counter drift: sum {block_sum} != counter {}",
+                self.used_blocks
+            ));
+        }
+        if self.used_blocks > self.capacity_blocks {
+            return Err("cold block budget exceeded".into());
+        }
+        if expect_lru != self.lru {
+            return Err(format!(
+                "cold LRU drift: expect {expect_lru:?} got {:?}",
+                self.lru
+            ));
+        }
+        for (h, slots) in &self.index {
+            if slots.is_empty() {
+                return Err(format!("empty index bucket {h:#x}"));
+            }
+            for &i in slots {
+                let Some(s) = self.spans.get(i).and_then(|s| s.as_ref()) else {
+                    return Err(format!("index bucket {h:#x} points at freed slot {i}"));
+                };
+                if !self.span_keys(&s.tokens, s.start).contains(h) {
+                    return Err(format!("slot {i} filed under a foreign fingerprint"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::payload_word;
+
+    fn words_of(tokens: &[u32]) -> Vec<u64> {
+        tokens.iter().map(|&t| payload_word(t)).collect()
+    }
+
+    #[test]
+    fn admit_probe_restore_roundtrip() {
+        let mut a = SpillArena::new(1 << 12, 16);
+        let seq: Vec<u32> = (100..164).collect();
+        assert!(a.admit(&seq, 0, &words_of(&seq)));
+        assert_eq!(a.probe_back(&seq, 0), 0);
+        let got = a.restore(&seq, 0).unwrap();
+        assert_eq!(got, words_of(&seq));
+        assert_eq!(a.demoted_tokens(), 64);
+        assert_eq!(a.restored_tokens(), 64);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tiled_spans_stitch_into_one_contiguous_suffix() {
+        // eviction order demotes the leaf first, then its parent: the leaf
+        // span [40, 64) lands before the parent span [0, 40)
+        let mut a = SpillArena::new(1 << 12, 16);
+        let seq: Vec<u32> = (0..64).collect();
+        assert!(a.admit(&seq, 40, &words_of(&seq[40..])));
+        // leaf alone: coverage stops at 40
+        assert_eq!(a.probe_back(&seq, 0), 40);
+        assert!(a.admit(&seq[..40], 0, &words_of(&seq[..40])));
+        // parent + leaf tile the whole path
+        assert_eq!(a.probe_back(&seq, 0), 0);
+        assert_eq!(a.restore(&seq, 0).unwrap(), words_of(&seq));
+        // a mid-path restore slices both spans correctly
+        assert_eq!(a.restore(&seq, 30).unwrap(), words_of(&seq[30..]));
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn probe_stops_at_start_floor() {
+        let mut a = SpillArena::new(1 << 12, 16);
+        let seq: Vec<u32> = (0..64).collect();
+        assert!(a.admit(&seq, 40, &words_of(&seq[40..])));
+        assert!(a.admit(&seq[..40], 0, &words_of(&seq[..40])));
+        // caller already holds [0, 48): the walk stops after the first span
+        assert_eq!(a.probe_back(&seq, 48), 40);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn block_boundary_probes_resolve_into_a_span() {
+        // the hub audit probes block-aligned *prefixes* of a published
+        // span; those must resolve into a containing span, not just at
+        // exact span ends
+        let mut a = SpillArena::new(1 << 12, 4);
+        let seq: Vec<u32> = (500..524).collect(); // 24 tokens, 6 blocks
+        assert!(a.admit(&seq, 0, &words_of(&seq)));
+        // block-aligned prefix probes land inside the span
+        assert_eq!(a.probe_back(&seq[..8], 0), 0);
+        assert_eq!(a.probe_back(&seq[..20], 0), 0);
+        // and restores of those prefixes slice the span's words
+        assert_eq!(a.restore(&seq[..8], 0).unwrap(), words_of(&seq[..8]));
+        // a non-aligned interior probe point is not indexed
+        assert_eq!(a.probe_back(&seq[..7], 0), 7);
+        // a diverging trajectory misses despite the shared prefix length
+        let other: Vec<u32> = (900..908).collect();
+        assert_eq!(a.probe_back(&other, 0), 8);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn second_budget_drops_lru_spans() {
+        // 4-block budget at block_size 16 = 64 tokens
+        let mut a = SpillArena::new(64, 16);
+        let s1: Vec<u32> = (0..32).collect();
+        let s2: Vec<u32> = (1000..1032).collect();
+        let s3: Vec<u32> = (2000..2032).collect();
+        assert!(a.admit(&s1, 0, &words_of(&s1)));
+        assert!(a.admit(&s2, 0, &words_of(&s2)));
+        assert_eq!(a.used_blocks(), 4);
+        // third span overflows the budget: s1 (LRU) is truly destroyed
+        assert!(a.admit(&s3, 0, &words_of(&s3)));
+        assert_eq!(a.used_blocks(), 4);
+        assert_eq!(a.probe_back(&s1, 0), s1.len());
+        assert_eq!(a.probe_back(&s2, 0), 0);
+        assert_eq!(a.probe_back(&s3, 0), 0);
+        assert_eq!(a.dropped_tokens(), 32);
+        // a restore MRU-touches s2, so the next overflow victim is s3
+        let s4: Vec<u32> = (3000..3032).collect();
+        a.restore(&s2, 0).unwrap();
+        assert!(a.admit(&s4, 0, &words_of(&s4)));
+        assert_eq!(a.probe_back(&s3, 0), s3.len());
+        assert_eq!(a.probe_back(&s2, 0), 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oversized_span_is_dropped_outright() {
+        let mut a = SpillArena::new(32, 16);
+        let seq: Vec<u32> = (0..64).collect();
+        assert!(!a.admit(&seq, 0, &words_of(&seq)));
+        assert_eq!(a.used_blocks(), 0);
+        assert_eq!(a.demoted_tokens(), 64);
+        assert_eq!(a.dropped_tokens(), 64);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn re_demotion_replaces_with_the_wider_span() {
+        let mut a = SpillArena::new(1 << 12, 16);
+        let seq: Vec<u32> = (0..64).collect();
+        assert!(a.admit(&seq, 40, &words_of(&seq[40..])));
+        // same trajectory, wider coverage: replaces the narrow span
+        assert!(a.admit(&seq, 16, &words_of(&seq[16..])));
+        assert_eq!(a.probe_back(&seq, 0), 16);
+        assert_eq!(a.live_spans(), 1);
+        // narrower re-demotion of the same trajectory only touches
+        assert!(a.admit(&seq, 40, &words_of(&seq[40..])));
+        assert_eq!(a.probe_back(&seq, 0), 16);
+        assert_eq!(a.live_spans(), 1);
+        // a prefix already inside the held span dedups to a touch too
+        assert!(a.admit(&seq[..48], 32, &words_of(&seq[32..48])));
+        assert_eq!(a.live_spans(), 1);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn restore_of_partial_coverage_returns_none() {
+        let mut a = SpillArena::new(1 << 12, 16);
+        let seq: Vec<u32> = (0..64).collect();
+        assert!(a.admit(&seq, 40, &words_of(&seq[40..])));
+        assert!(a.restore(&seq, 0).is_none());
+        assert_eq!(a.restore(&seq, 40).unwrap(), words_of(&seq[40..]));
+        a.check_invariants().unwrap();
+    }
+}

@@ -30,8 +30,10 @@
 //! instead of chasing a per-node `HashMap` — and removing a node recycles
 //! its span through a size-classed free list instead of reallocating.
 
+pub mod coldtier;
 pub mod prefixhub;
 
+use coldtier::SpillArena;
 use std::collections::{BTreeSet, HashSet};
 
 /// Flat, sorted edge store shared by every node of one [`RadixCache`].
@@ -401,6 +403,10 @@ pub struct RadixCache {
     /// Σ blocks held by members of `evictable` — kept in lockstep so
     /// pressure signals don't re-scan the set (O(1) instead of O(n)).
     evictable_block_count: usize,
+    /// Host-DRAM cold tier, when attached: eviction demotes spans here
+    /// instead of destroying them, and resumes restore from here instead of
+    /// recomputing. `None` = the PR 2 evict-to-nothing ladder.
+    cold: Option<SpillArena>,
 }
 
 impl RadixCache {
@@ -433,7 +439,22 @@ impl RadixCache {
             allocator: BlockAllocator::new(total_blocks, bs),
             evictable: BTreeSet::new(),
             evictable_block_count: 0,
+            cold: None,
         }
+    }
+
+    /// Attach a host-DRAM cold tier of `capacity_tokens` (same block units
+    /// as the hot allocator). From here on, [`RadixCache::evict`] /
+    /// [`RadixCache::evict_unpinned`] *demote* spans into it instead of
+    /// destroying them; [`RadixCache::release_branch`] still destroys
+    /// (pruned trajectories are dead data no resume will ever ask for).
+    pub fn attach_cold_tier(&mut self, capacity_tokens: usize) {
+        self.cold = Some(SpillArena::new(capacity_tokens, self.allocator.block_size()));
+    }
+
+    /// The attached cold tier, if any (telemetry / tests).
+    pub fn cold(&self) -> Option<&SpillArena> {
+        self.cold.as_ref()
     }
 
     pub fn live_tokens(&self) -> usize {
@@ -675,6 +696,41 @@ impl RadixCache {
         self.allocator.fault_in()
     }
 
+    /// Read-only cold-tier probe: the earliest slot `m` such that the cold
+    /// tier contiguously covers `tokens[m..]`, walking no further once
+    /// coverage reaches `start`. `tokens.len()` when there is no cold tier
+    /// or it holds nothing ending at this trajectory. Like
+    /// [`RadixCache::peek_prefix`], perturbs no LRU state — neither tier's.
+    pub fn cold_probe(&self, tokens: &[u32], start: usize) -> usize {
+        match &self.cold {
+            Some(cold) => cold.probe_back(tokens, start),
+            None => tokens.len(),
+        }
+    }
+
+    /// Execute a cold-tier restore: copy the payload words of
+    /// `seq[from..]` out of the [`SpillArena`] into `node`'s blocks, where
+    /// `node` is an insert's fresh suffix child covering `seq[node_base..]`.
+    /// The restore-vs-recompute *decision* already happened upstream
+    /// ([`crate::engine::PerfModel::tier_choice`]); this is the data plane,
+    /// bit-identical to the hash-fill the insert already performed
+    /// (debug-asserted in [`RadixCache::write_node_payload`]). Returns
+    /// tokens actually copied — 0 when the arena dropped the span since the
+    /// sizing probe, leaving the recompute words in place.
+    pub fn restore_node_payload(
+        &mut self,
+        node: NodeIdx,
+        seq: &[u32],
+        from: usize,
+        node_base: usize,
+    ) -> usize {
+        debug_assert!(from >= node_base, "restore range must land inside the node");
+        let Some(cold) = self.cold.as_mut() else { return 0 };
+        let Some(words) = cold.restore(seq, from) else { return 0 };
+        self.write_node_payload(node, from - node_base, &words);
+        words.len()
+    }
+
     /// Longest cached prefix of `tokens`: (matched token count, end node).
     /// Touches LRU clocks along the path.
     pub fn match_prefix(&mut self, tokens: &[u32]) -> (usize, NodeIdx) {
@@ -818,6 +874,24 @@ impl RadixCache {
         }
     }
 
+    /// The full token sequence along the path root..=`node` — the
+    /// trajectory a demoted span is fingerprinted under. Only called on the
+    /// demote path (parent links are intact until [`RadixCache::remove_leaf`]
+    /// finishes, so the walk is always sound there).
+    fn path_token_vec(&self, node: NodeIdx) -> Vec<u32> {
+        let mut rev_nodes: Vec<NodeIdx> = Vec::new();
+        let mut cur = Some(node);
+        while let Some(idx) = cur {
+            rev_nodes.push(idx);
+            cur = self.nodes[idx].parent;
+        }
+        let mut out = Vec::with_capacity(self.path_tokens(node));
+        for idx in rev_nodes.into_iter().rev() {
+            out.extend_from_slice(&self.nodes[idx].key);
+        }
+        out
+    }
+
     /// Tokens stored along the path root..=`node` — the sequence length a
     /// cached sequence end represents.
     pub fn path_tokens(&self, node: NodeIdx) -> usize {
@@ -875,7 +949,10 @@ impl RadixCache {
                 break;
             }
             let parent = n.parent;
-            freed += self.remove_leaf(idx);
+            // demote: false — a released branch is a pruned/retired
+            // trajectory no resume will ever re-insert; spilling it would
+            // only dilute the cold tier's budget
+            freed += self.remove_leaf(idx, false);
             cur = parent;
         }
         freed
@@ -891,7 +968,7 @@ impl RadixCache {
         // cascade up automatically
         loop {
             let Some(&(_, idx)) = self.evictable.iter().next() else { break };
-            freed += self.remove_leaf(idx);
+            freed += self.remove_leaf(idx, true);
         }
         freed
     }
@@ -904,14 +981,27 @@ impl RadixCache {
         let mut freed = 0usize;
         while freed < target_tokens {
             let Some(&(_, idx)) = self.evictable.iter().next() else { break };
-            freed += self.remove_leaf(idx);
+            freed += self.remove_leaf(idx, true);
         }
         freed
     }
 
-    fn remove_leaf(&mut self, idx: NodeIdx) -> usize {
+    /// Remove a childless unpinned leaf, releasing its blocks. With
+    /// `demote` set and a cold tier attached, the span's payload words are
+    /// copied into the [`SpillArena`] first — demote-instead-of-destroy,
+    /// the pressure ladder's third rung. The HBM blocks are freed in the
+    /// *identical* order either way, and the arena keeps its own LRU clock,
+    /// so cold-tier {on,off} cannot diverge in anything but cost/telemetry.
+    fn remove_leaf(&mut self, idx: NodeIdx, demote: bool) -> usize {
         debug_assert!(self.nodes[idx].edges.is_empty());
         debug_assert_eq!(self.nodes[idx].refcount, 0, "removing a pinned leaf");
+        if demote && self.cold.is_some() {
+            let path = self.path_token_vec(idx);
+            let klen = self.nodes[idx].key.len();
+            let words = self.allocator.read_span(&self.nodes[idx].blocks, klen);
+            let cold = self.cold.as_mut().expect("checked above");
+            cold.admit(&path, path.len() - klen, &words);
+        }
         let parent = self.nodes[idx].parent.expect("removing root");
         let first = self.nodes[idx].key[0];
         self.del_edge(parent, first);
@@ -1022,6 +1112,9 @@ impl RadixCache {
                 "evictable block counter drift: sum {expect_blocks} != counter {}",
                 self.evictable_block_count
             ));
+        }
+        if let Some(cold) = &self.cold {
+            cold.check_invariants()?;
         }
         Ok(())
     }
@@ -1796,6 +1889,117 @@ mod tests {
             crate::prop_check!(a == b, "final drain freed {a} vs model {b}");
             crate::prop_check!(real.live_tokens() == 0, "final drain left tokens");
             real.check_invariants().map_err(|e| e)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn write_words_read_span_roundtrip_partial_tail_blocks() {
+        // Span lengths deliberately NOT multiples of block_size: the last
+        // block is partially occupied and the transfer surface must neither
+        // read past the span nor clobber slots beyond it.
+        for bs in [1usize, 3, 7, 16] {
+            let mut a = BlockAllocator::new(64, bs);
+            for len in [1usize, bs.max(2) - 1, bs + 1, 3 * bs - 1, 3 * bs + 1] {
+                let tokens: Vec<u32> = (0..len as u32).map(|t| 7 * t + 13).collect();
+                let words: Vec<u64> = tokens.iter().map(|&t| payload_word(t)).collect();
+                let blocks = a.alloc(a.blocks_for(len)).unwrap();
+                // recompute path then full read-back
+                a.write_span(&blocks, &tokens);
+                assert_eq!(a.read_span(&blocks, len), words, "bs {bs} len {len}");
+                // transfer path: land the same words through write_words
+                a.write_words(&blocks, 0, &words);
+                assert_eq!(a.read_span(&blocks, len), words, "bs {bs} len {len}");
+                // offset write covering only the (partial) tail
+                let off = len / 2;
+                a.write_words(&blocks, off, &words[off..]);
+                assert_eq!(a.read_span(&blocks, len), words, "bs {bs} len {len} off {off}");
+                // partial read stops mid-block
+                assert_eq!(a.read_span(&blocks, off), words[..off], "bs {bs} len {len}");
+                a.release_span(blocks);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_demote_restore_match_prefix_agrees_with_never_evicting_reference() {
+        // Tiered cache under explicit eviction pressure (demoting into the
+        // cold tier) vs a reference cache that never evicts, driven
+        // op-for-op: after every demote→re-insert→restore cycle the tiered
+        // cache must hold the same prefix lengths and the same payload
+        // words as the reference. `write_node_payload` additionally
+        // debug-asserts every restored word against the local recompute.
+        property(60, |rng: &mut Rng| {
+            let bs = 1 + rng.index(8);
+            let mut tiered = RadixCache::with_block_size(1 << 20, bs);
+            tiered.attach_cold_tier(1 << 20);
+            let mut reference = RadixCache::with_block_size(1 << 20, bs);
+            let mut inserted: Vec<Vec<u32>> = vec![];
+            for _ in 0..(1 + rng.index(20)) {
+                let len = 1 + rng.index(10);
+                // mostly extend existing sequences so eviction cascades
+                // demote tiled mid-tree spans, not just whole trajectories
+                let seq: Vec<u32> = if !inserted.is_empty() && rng.chance(0.6) {
+                    let base = &inserted[rng.index(inserted.len())];
+                    let cut = rng.index(base.len() + 1);
+                    let mut s = base[..cut].to_vec();
+                    for _ in 0..len {
+                        s.push(rng.below(4) as u32);
+                    }
+                    s
+                } else {
+                    (0..len).map(|_| rng.below(4) as u32).collect()
+                };
+                tiered.insert(&seq);
+                reference.insert(&seq);
+                inserted.push(seq);
+                if rng.chance(0.5) {
+                    // pressure: demote some LRU branches into the cold tier
+                    tiered.evict(1 + rng.index(20));
+                }
+                tiered.check_invariants().map_err(|e| e)?;
+                // resume one sequence: re-insert, restore the cold-covered
+                // suffix, and compare against the reference
+                let s = inserted[rng.index(inserted.len())].clone();
+                let resident = tiered.peek_prefix(&s);
+                let out = tiered.insert(&s);
+                crate::prop_check!(
+                    out.shared_tokens == resident,
+                    "insert shared {} != peek {resident}",
+                    out.shared_tokens
+                );
+                if out.new_tokens > 0 {
+                    let m = tiered.cold_probe(&s, out.shared_tokens);
+                    let from = m.max(out.shared_tokens);
+                    let restored =
+                        tiered.restore_node_payload(out.node, &s, from, out.shared_tokens);
+                    crate::prop_check!(
+                        restored == s.len() - from,
+                        "probe promised [{from}, {}) but restored {restored}",
+                        s.len()
+                    );
+                }
+                reference.insert(&s);
+                let (mt, _) = tiered.match_prefix(&s);
+                let (mr, _) = reference.match_prefix(&s);
+                crate::prop_check!(
+                    mt == s.len() && mr == s.len(),
+                    "re-inserted prefix incomplete: tiered {mt} reference {mr} of {}",
+                    s.len()
+                );
+                let wt = tiered
+                    .read_prefix_payload(&s, 0, s.len())
+                    .ok_or_else(|| "tiered payload missing".to_string())?;
+                let wr = reference
+                    .read_prefix_payload(&s, 0, s.len())
+                    .ok_or_else(|| "reference payload missing".to_string())?;
+                crate::prop_check!(
+                    wt == wr,
+                    "tiered payload diverges from never-evicting reference"
+                );
+                tiered.check_invariants().map_err(|e| e)?;
+                reference.check_invariants().map_err(|e| e)?;
+            }
             Ok(())
         });
     }

@@ -105,6 +105,11 @@ pub struct HubAudit {
     pub live: u64,
     /// Entries the owner evicted since publication (accounted, not lost).
     pub evicted: u64,
+    /// Entries evicted from the owner's hot tier but still reconstructible
+    /// from its host-DRAM cold tier (hot prefix + demoted suffix cover the
+    /// whole span) — accounted separately so hub accounting reconciles once
+    /// spans can live below HBM.
+    pub demoted: u64,
 }
 
 /// Versioned read-only directory of committed-prefix fingerprints.
@@ -221,14 +226,24 @@ impl PrefixHub {
 
     /// Consistency audit of the current snapshot: `resolve(shard, span)`
     /// returns how many tokens of `span` the owner's cache still holds
-    /// (the coordinator passes the read-only `peek_prefix`). Every entry is
-    /// classified live (fully resident) or evicted — published fingerprints
-    /// can go stale mid-round, never missing.
-    pub fn audit(&self, mut resolve: impl FnMut(usize, &[u32]) -> usize) -> HubAudit {
+    /// (the coordinator passes the read-only `peek_prefix`), and
+    /// `cold_resolve(shard, span, hot)` whether the owner's cold tier
+    /// contiguously covers the rest of the span beyond the `hot` resident
+    /// tokens (the read-only `cold_probe` walk). Every entry is classified
+    /// live (fully hot), demoted (hot + cold still cover it), or evicted —
+    /// published fingerprints can go stale mid-round, never missing.
+    pub fn audit(
+        &self,
+        mut resolve: impl FnMut(usize, &[u32]) -> usize,
+        mut cold_resolve: impl FnMut(usize, &[u32], usize) -> bool,
+    ) -> HubAudit {
         let mut out = HubAudit::default();
         for e in self.entries.values() {
-            if resolve(e.shard, e.prefix()) >= e.covered {
+            let hot = resolve(e.shard, e.prefix());
+            if hot >= e.covered {
                 out.live += 1;
+            } else if cold_resolve(e.shard, e.prefix(), hot) {
+                out.demoted += 1;
             } else {
                 out.evicted += 1;
             }
@@ -326,13 +341,57 @@ mod tests {
         let mut hub = PrefixHub::new(4);
         hub.begin_round();
         hub.publish(0, &s, cache.peek_prefix(&s));
-        let audit = hub.audit(|_, span| cache.peek_prefix(span));
-        assert_eq!(audit, HubAudit { live: 2, evicted: 0 });
-        // the owner evicts mid-round: the next audit accounts the loss
+        let audit = hub.audit(|_, span| cache.peek_prefix(span), |_, _, _| false);
+        assert_eq!(audit, HubAudit { live: 2, evicted: 0, demoted: 0 });
+        // the owner evicts mid-round (no cold tier): the next audit
+        // accounts the loss as evicted
         cache.evict(usize::MAX);
-        let audit = hub.audit(|_, span| cache.peek_prefix(span));
+        let audit = hub.audit(
+            |_, span| cache.peek_prefix(span),
+            |_, span, hot| cache.cold_probe(span, hot) <= hot,
+        );
         assert_eq!(audit.live, 0);
         assert_eq!(audit.evicted, 2);
+        assert_eq!(audit.demoted, 0);
+    }
+
+    #[test]
+    fn audit_classifies_demoted_spans_and_identity_reconciles() {
+        // With a cold tier attached, a mid-round eviction demotes instead
+        // of destroying: the audit must classify those entries Demoted and
+        // the published == live + evicted + demoted identity must hold
+        // through every tier transition.
+        let mut cache = RadixCache::with_block_size(1 << 12, 4);
+        cache.attach_cold_tier(1 << 12);
+        let s = seq(40, 8);
+        cache.insert(&s);
+        let mut hub = PrefixHub::new(4);
+        hub.begin_round();
+        hub.publish(0, &s, cache.peek_prefix(&s));
+        let identity = |a: HubAudit| a.live + a.evicted + a.demoted;
+        let audit = hub.audit(
+            |_, span| cache.peek_prefix(span),
+            |_, span, hot| cache.cold_probe(span, hot) <= hot,
+        );
+        assert_eq!(audit, HubAudit { live: 2, evicted: 0, demoted: 0 });
+        assert_eq!(identity(audit), hub.published());
+        // demote-instead-of-destroy: both entries are reconstructible
+        cache.evict(usize::MAX);
+        let audit = hub.audit(
+            |_, span| cache.peek_prefix(span),
+            |_, span, hot| cache.cold_probe(span, hot) <= hot,
+        );
+        assert_eq!(audit, HubAudit { live: 0, evicted: 0, demoted: 2 });
+        assert_eq!(identity(audit), hub.published());
+        // a sequence the cold tier never saw stays evicted
+        let t = seq(900, 8);
+        hub.publish(0, &t, 8);
+        let audit = hub.audit(
+            |_, span| cache.peek_prefix(span),
+            |_, span, hot| cache.cold_probe(span, hot) <= hot,
+        );
+        assert_eq!(audit, HubAudit { live: 0, evicted: 2, demoted: 2 });
+        assert_eq!(identity(audit), hub.published());
     }
 
     #[test]

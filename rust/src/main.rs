@@ -11,7 +11,7 @@
 //! CLI flags taking precedence.
 
 use ets::coordinator::ServeOptions;
-use ets::engine::{PerfModel, H100_NVL};
+use ets::engine::{PerfModel, COLD_LINK_BW_DEFAULT, H100_NVL};
 use ets::eval::{evaluate_serve_with, evaluate_with_workers, EvalConfig, PolicySpec};
 use ets::util::argparse::{Args, Spec};
 use ets::util::error::{Error, Result};
@@ -29,8 +29,9 @@ USAGE:
             [--problems K] [--seed S] [--workers W] [--json FILE]
   ets serve [--dataset D] [--model M] [--policy P] [--width N]
             [--problems K] [--concurrency C] [--capacity TOKENS]
-            [--block-size TOKENS] [--shards N] [--pipeline]
-            [--prefix-share] [--pin-cores] [--async-decode] [--seed S]
+            [--block-size TOKENS] [--shards N] [--cold-capacity TOKENS]
+            [--cold-link-gbps GB] [--pipeline] [--prefix-share]
+            [--pin-cores] [--async-decode] [--seed S]
             [--json FILE] [--pjrt] [--requests K] [--artifacts DIR]
   ets info  [--artifacts DIR]
 
@@ -41,6 +42,15 @@ free-block watermarks and preempts/resumes sessions under pressure
 persistent workers, with deterministic least-loaded admission and
 cross-shard migration of stuck sessions; results are identical for every
 shard count at a fixed seed.
+`--cold-capacity` adds a host-DRAM spill tier under the paged allocator:
+eviction under pressure *demotes* unpinned KV spans to host memory instead
+of destroying them, and resumes restore demoted spans over a modeled PCIe
+link when that beats recompute. The cold budget is a second hard limit
+(split across shards); spans are truly dropped only when both tiers are
+full. Demotion/restore move real payload words, so results stay
+byte-identical with the tier on or off. `--cold-link-gbps` sets the
+modeled host link bandwidth (default 64 GB/s ≈ PCIe gen5 x16); same-round
+spills and restores queue on the same per-shard lane.
 `--pipeline` costs each round as max(decode, plan+commit) — shard k+1's
 decode overlapping shard k's commit — instead of their sum; results are
 byte-identical with it on or off. `--pipeline=0` forces lockstep,
@@ -75,7 +85,7 @@ fn main() {
     let spec = Spec::new(&[
         "dataset", "model", "policy", "width", "problems", "seed", "workers",
         "json", "config", "requests", "lambda-b", "artifacts", "concurrency",
-        "capacity", "block-size", "shards",
+        "capacity", "block-size", "shards", "cold-capacity", "cold-link-gbps",
     ]);
     let args = match spec.parse(std::env::args()) {
         Ok(a) => a,
@@ -216,6 +226,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shards: args
             .get_usize("shards", cfg_doc.usize_or("serve.shards", defaults.shards))
             .map_err(Error::msg)?,
+        cold_capacity_tokens: args
+            .get_usize(
+                "cold-capacity",
+                cfg_doc.usize_or("serve.cold_capacity", defaults.cold_capacity_tokens),
+            )
+            .map_err(Error::msg)?,
         // bare `--pipeline` turns it on; `--pipeline=0|false` forces it off
         // (overriding a `serve.pipeline` config value, like every other
         // serve option the CLI takes precedence). The config accepts both
@@ -262,7 +278,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if opts.shards == 0 {
         bail!("--shards must be at least 1");
     }
-    let perf = PerfModel::new(H100_NVL, true, concurrency);
+    let cold_link_gbps = args
+        .get_f64(
+            "cold-link-gbps",
+            cfg_doc.f64_or("serve.cold_link_gbps", COLD_LINK_BW_DEFAULT / 1e9),
+        )
+        .map_err(Error::msg)?;
+    if cold_link_gbps <= 0.0 {
+        bail!("--cold-link-gbps must be a positive bandwidth");
+    }
+    let perf = PerfModel::new(H100_NVL, true, concurrency).cold_linked(cold_link_gbps * 1e9);
     let t0 = std::time::Instant::now();
     let r = evaluate_serve_with(&cfg, &opts, &perf);
     let wall = t0.elapsed();
@@ -339,11 +364,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if r.serve.prefix_share {
         println!(
-            "  prefix hub: {} hits ({:.0}% of admissions), {} fingerprints published ({} live / {} evicted at audit)",
+            "  prefix hub: {} hits ({:.0}% of admissions), {} fingerprints published ({} live / {} demoted / {} evicted at audit)",
             r.serve.hub_hits,
             100.0 * r.serve.hub_hit_rate(),
             r.serve.hub_published,
             r.serve.hub_live_entries,
+            r.serve.hub_demoted_entries,
             r.serve.hub_evicted_entries,
         );
     }
@@ -356,6 +382,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             r.serve.migration_transfers,
             r.serve.migration_recomputes,
             r.serve.migration_cold,
+        );
+    }
+    if r.serve.cold_capacity_tokens > 0 {
+        println!(
+            "  cold tier: {} tokens demoted to host DRAM, {} restored over PCIe ({} restores vs {} recomputes; {} tokens dropped at cold capacity)",
+            r.serve.demoted_kv_tokens,
+            r.serve.restored_kv_tokens,
+            r.serve.cold_restores,
+            r.serve.cold_recomputes,
+            r.serve.cold_dropped_kv_tokens,
         );
     }
     if r.serve.async_decode {
@@ -417,6 +453,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("hub_hits", Json::num(r.serve.hub_hits as f64)),
             ("hub_hit_rate", Json::num(r.serve.hub_hit_rate())),
             ("hub_published", Json::num(r.serve.hub_published as f64)),
+            ("hub_live_entries", Json::num(r.serve.hub_live_entries as f64)),
+            ("hub_demoted_entries", Json::num(r.serve.hub_demoted_entries as f64)),
+            ("hub_evicted_entries", Json::num(r.serve.hub_evicted_entries as f64)),
+            ("cold_capacity_tokens", Json::num(r.serve.cold_capacity_tokens as f64)),
+            ("demoted_kv_tokens", Json::num(r.serve.demoted_kv_tokens as f64)),
+            ("restored_kv_tokens", Json::num(r.serve.restored_kv_tokens as f64)),
+            ("restored_kv_bytes", Json::num(r.serve.restored_kv_bytes as f64)),
+            ("cold_restores", Json::num(r.serve.cold_restores as f64)),
+            ("cold_recomputes", Json::num(r.serve.cold_recomputes as f64)),
+            ("cold_dropped_kv_tokens", Json::num(r.serve.cold_dropped_kv_tokens as f64)),
             ("imported_kv_tokens", Json::num(r.serve.imported_kv_tokens as f64)),
             ("import_transfers", Json::num(r.serve.import_transfers as f64)),
             ("import_recomputes", Json::num(r.serve.import_recomputes as f64)),

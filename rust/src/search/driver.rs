@@ -434,6 +434,18 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
         self.ledger.prompt_ids()
     }
 
+    /// Full token sequences of this session's committed step-span ends
+    /// (pinned leaves while resident, suspended leaves otherwise) — what
+    /// the coordinator fingerprints into the prefix hub as mid-tree step
+    /// spans next to the prompt.
+    pub(crate) fn step_span_sequences(&self) -> Vec<Vec<u32>> {
+        self.ledger
+            .span_leaves()
+            .into_iter()
+            .map(|leaf| BatchEngine::sequence(&self.ledger, &self.tree, leaf))
+            .collect()
+    }
+
     /// Step-level invariant (debug builds): when every token id was minted
     /// by the engine, the cache's live-KV view must equal the sum of live
     /// tree step tokens exactly — the two accountings cannot drift.

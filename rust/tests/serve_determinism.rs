@@ -346,11 +346,12 @@ fn duplicate_prompts_hit_the_hub_and_shrink_resident_blocks() {
     assert!(on.serve.hub_hit_rate() > 0.0);
     assert!(on.serve.hub_published > 0);
     // hub consistency: every published fingerprint was resolvable at audit
-    // time — still live on its owner, or evicted-but-accounted
+    // time — still live on its owner, demoted to its cold tier, or
+    // evicted-but-accounted
     assert_eq!(
         on.serve.hub_published,
-        on.serve.hub_live_entries + on.serve.hub_evicted_entries,
-        "published fingerprints must all be audited live or evicted"
+        on.serve.hub_live_entries + on.serve.hub_demoted_entries + on.serve.hub_evicted_entries,
+        "published fingerprints must all be audited live, demoted, or evicted"
     );
     assert!(on.serve.hub_live_entries > 0, "resident prompts must audit live");
     // colocated duplicates deduplicate in the radix caches: strictly fewer
@@ -362,6 +363,108 @@ fn duplicate_prompts_hit_the_hub_and_shrink_resident_blocks() {
         off.serve.mean_used_blocks()
     );
     assert_eq!(off.serve.hub_hits, 0, "sharing off must never consult the hub");
+}
+
+#[test]
+fn cold_tier_matrix_is_invisible_under_ample_and_tight_capacity() {
+    // The host-DRAM spill tier is costing/telemetry only: demotion frees
+    // the same HBM blocks in the same order destruction would, restores
+    // copy bit-identical payload words back into blocks the resume already
+    // reserved, and the SpillArena keeps its own LRU clock — so shards ∈
+    // {1, 4} × cold {off, on} must fold to byte-identical per-problem
+    // results under ample AND tight capacity, and the tight cold cells
+    // must actually demote and restore.
+    let cfg = cfg(PolicySpec::Rebase);
+    let base = fingerprint(&evaluate_with_workers(&cfg, 2));
+    for shards in [1usize, 4] {
+        for cold in [0usize, 8 * DEFAULT_KV_CAPACITY] {
+            let opts = ServeOptions {
+                concurrency: 8,
+                capacity_tokens: DEFAULT_KV_CAPACITY * shards,
+                shards,
+                ..Default::default()
+            }
+            .cold_tiered(cold);
+            let perf = PerfModel::new(H100_NVL, true, 8);
+            let served = evaluate_serve_with(&cfg, &opts, &perf);
+            assert_eq!(
+                base,
+                fingerprint(&served.report),
+                "shards={shards} cold={cold} changed eval results"
+            );
+            // ample capacity: nothing evicts, so nothing can demote
+            assert_eq!(served.serve.demoted_kv_tokens, 0);
+            assert_eq!(served.serve.restored_kv_tokens, 0);
+        }
+    }
+    // tight: the migration-matrix budget shape, so evictions are plentiful
+    // — every cell stays byte-identical, and the cold cells must turn real
+    // evictions into demotions and at least one priced restore
+    let mut cfg = cfg;
+    cfg.width = 24;
+    cfg.n_problems = 12;
+    let perf = PerfModel::new(H100_NVL, true, 12);
+    let uncapped = evaluate_serve_with(&cfg, &ServeOptions::with_concurrency(12), &perf);
+    let tight_base = fingerprint(&uncapped.report);
+    let solo_peak = uncapped
+        .serve
+        .outcomes
+        .iter()
+        .map(|o| o.peak_kv_tokens())
+        .max()
+        .unwrap() as usize;
+    let global_budget = 4 * (solo_peak + 4096);
+    for shards in [1usize, 4] {
+        for cold in [0usize, 64 * solo_peak] {
+            let opts = ServeOptions {
+                concurrency: 12,
+                capacity_tokens: global_budget,
+                block_size: 16,
+                shards,
+                ..Default::default()
+            }
+            .cold_tiered(cold);
+            let capped = evaluate_serve_with(&cfg, &opts, &perf);
+            assert_eq!(
+                tight_base,
+                fingerprint(&capped.report),
+                "shards={shards} cold={cold} under a tight budget changed \
+                 eval results"
+            );
+            assert!(capped.serve.peak_used_blocks <= capped.serve.total_blocks);
+            assert_eq!(capped.serve.cold_capacity_tokens, cold);
+            if cold == 0 {
+                assert_eq!(capped.serve.demoted_kv_tokens, 0, "no tier, no demotion");
+                assert_eq!(capped.serve.restored_kv_tokens, 0);
+            } else {
+                assert!(
+                    capped.serve.demoted_kv_tokens > 0,
+                    "a tight budget with a cold tier must demote (shards={shards})"
+                );
+                assert!(
+                    capped.serve.restored_kv_tokens > 0,
+                    "demoted spans must restore over the modeled link \
+                     (shards={shards})"
+                );
+                // the restore bill reconciles: per-round records and
+                // per-shard ledgers both fold to the report total
+                let per_round: u64 = capped
+                    .serve
+                    .batches
+                    .iter()
+                    .map(|b| b.restored_kv_tokens as u64)
+                    .sum();
+                let per_shard: u64 = capped
+                    .serve
+                    .shard_stats
+                    .iter()
+                    .map(|s| s.restored_kv_tokens)
+                    .sum();
+                assert_eq!(per_round, capped.serve.restored_kv_tokens);
+                assert_eq!(per_shard, capped.serve.restored_kv_tokens);
+            }
+        }
+    }
 }
 
 #[test]
