@@ -1,0 +1,477 @@
+//! Compute-optimal adaptive budgeting: per-problem difficulty prediction
+//! with mid-flight width/KV reallocation.
+//!
+//! The [`BudgetController`] runs at the coordinator's round barrier (between
+//! admission and round planning, when every shard is resident) and reads
+//! *only committed round telemetry* — the
+//! [`DifficultySignals`](crate::search::driver::DifficultySignals) snapshot
+//! of each session's frontier. From that it scores difficulty and
+//! reallocates the serve's fixed block budget mid-flight: confidently easy
+//! sessions and hopeless ones (a collapsed, low-reward frontier that will
+//! burn decode slots to the step cap without converting) get their width
+//! shrunk, and the reclaimed KV blocks and decode slots are granted to
+//! contested sessions whose accuracy is actually budget-limited. That is the
+//! compute-optimal allocation of Snell et al.: marginal blocks flow to the
+//! sessions with the highest expected-accuracy return per modeled
+//! block-second.
+//!
+//! Determinism contract (the ROADMAP's sanctioned form): adaptive mode
+//! changes *what* is searched, so it is its own mode — but every decision
+//! here is a pure function of one session's committed telemetry at a fixed
+//! step index. Sessions are classified when the barrier observes
+//! `steps_taken == stage step`; since a round commits at most one step per
+//! session and a barrier precedes every round, every step count is observed
+//! at some barrier regardless of shard layout, pipelining, async decode, or
+//! capacity-induced stalls. Width overrides apply in session-step
+//! coordinates ([`SearchSession::set_width_override`]), after every
+//! allocation already planned at the decision step. Net: at a fixed seed,
+//! results and the decision log itself are byte-identical across shards
+//! {1,2,4} × pipeline × async-decode × prefix-share × ample/tight capacity
+//! — which the serve determinism suite asserts.
+//!
+//! [`SearchSession::set_width_override`]: crate::search::driver::SearchSession::set_width_override
+
+use crate::search::driver::DifficultySignals;
+use std::collections::BTreeMap;
+
+/// Controller thresholds and width factors. Defaults are calibrated against
+/// the synthetic workloads' reward model (see `difficulty_score`): open
+/// problems at depth 1 score ≈ 0.54, root-closed ones ≈ 0.62; by depth 3
+/// confidently-easy frontiers score below 0.50 and still-doomed ones above
+/// 0.65.
+#[derive(Clone, Debug)]
+pub struct BudgetConfig {
+    /// Stage A (early hopeless) runs when a session is first observed at
+    /// this committed step count.
+    pub stage_a_step: usize,
+    /// Stage B (easy / hard / late-hopeless) runs at this step count for
+    /// sessions stage A left open.
+    pub stage_b_step: usize,
+    /// Stage A: score at or above this means the frontier already looks
+    /// doomed — shrink to the floor immediately.
+    pub hopeless_cut_a: f64,
+    /// Stage B: score below this means confidently easy — the frontier
+    /// converged on high-reward steps, half the width converts just as well.
+    pub easy_cut: f64,
+    /// Stage B: score at or above this means still-doomed — floor it.
+    pub hopeless_cut_b: f64,
+    /// Width floor for shrunk sessions (keeps voting populated).
+    pub min_width: usize,
+}
+
+impl Default for BudgetConfig {
+    fn default() -> Self {
+        Self {
+            stage_a_step: 1,
+            stage_b_step: 3,
+            hopeless_cut_a: 0.60,
+            easy_cut: 0.50,
+            hopeless_cut_b: 0.65,
+            min_width: 2,
+        }
+    }
+}
+
+/// Which controller stage produced a decision.
+pub const STAGE_A: u8 = 1;
+pub const STAGE_B: u8 = 2;
+
+/// One controller evaluation, logged for telemetry and for the determinism
+/// suite (the sorted decision list must be identical across every serve
+/// configuration). `width_to == width_from` records a stage-A "still open"
+/// evaluation that changed nothing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BudgetDecision {
+    /// Serve job id of the session.
+    pub session: u64,
+    /// [`STAGE_A`] or [`STAGE_B`].
+    pub stage: u8,
+    /// Shard the session was resident on at decision time (placement
+    /// telemetry only — not part of the cross-configuration identity).
+    pub shard: usize,
+    /// The difficulty score that drove the decision.
+    pub score: f64,
+    /// Base width the target is expressed against.
+    pub width_from: usize,
+    /// New target width (applied as a delta in session-step coordinates).
+    pub width_to: usize,
+    /// Predicted KV blocks moved by this decision: reclaimed when
+    /// `width_to < width_from`, granted when larger, 0 for a no-op.
+    pub blocks: usize,
+}
+
+impl BudgetDecision {
+    /// The schedule-invariant identity of this decision — everything except
+    /// the placement-dependent `shard`. Equal across serve configurations
+    /// at a fixed seed.
+    pub fn identity(&self) -> (u64, u8, u64, usize, usize, usize) {
+        (
+            self.session,
+            self.stage,
+            self.score.to_bits(),
+            self.width_from,
+            self.width_to,
+            self.blocks,
+        )
+    }
+}
+
+/// Difficulty in [0, 1] — a pure function of one session's committed round
+/// telemetry. Higher is harder:
+///
+/// * `1 − reward_mean` (weight 0.7): the PRM's own verdict on the frontier.
+///   On the synthetic workloads the oracle PRM separates alive from doomed
+///   frontiers by ≈ 0.14 at depth 1, growing with the margin ramp.
+/// * contestedness (weight 0.15): frontier reward spread, saturating at
+///   0.6 — a wide spread means the search is still deciding between
+///   live alternatives, i.e. marginal width still buys information.
+/// * `1 − diversity` (weight 0.15): distinct semantic clusters over
+///   frontier size. A collapsed frontier (all paraphrases of one step)
+///   converts no extra width into new information.
+///
+/// The entropy signal rides along in [`DifficultySignals`] for telemetry
+/// but does not enter the score: normalized softmax entropy at the REBASE
+/// temperature is near-degenerate with spread on small frontiers.
+pub fn difficulty_score(sig: &DifficultySignals) -> f64 {
+    let contest = (sig.reward_spread.min(0.6)) / 0.6;
+    let diversity = if sig.frontier == 0 {
+        0.0
+    } else {
+        sig.sem_clusters as f64 / sig.frontier as f64
+    };
+    let raw = 0.7 * (1.0 - sig.reward_mean) + 0.15 * contest + 0.15 * (1.0 - diversity);
+    raw.clamp(0.0, 1.0)
+}
+
+/// Predicted whole-serve KV footprint of a session, in blocks: the prompt's
+/// blocks plus the retained-leaf working set. This is the one formula shared
+/// by hub admission routing and the budget controller — `retention` is
+/// either the policy's static [`kv_retention`] heuristic (round 0) or the
+/// fleet's online-calibrated ratio.
+///
+/// [`kv_retention`]: crate::search::policy::SearchPolicy::kv_retention
+pub fn predicted_footprint_blocks(prompt_blocks: usize, width: usize, retention: f64) -> usize {
+    prompt_blocks + leaf_blocks(width, retention)
+}
+
+/// The working-set half of [`predicted_footprint_blocks`]: blocks predicted
+/// for `width` trajectories at a retained fraction `retention`.
+pub fn leaf_blocks(width: usize, retention: f64) -> usize {
+    (width as f64 * retention).ceil() as usize
+}
+
+/// Blocks moved by a width reallocation under a given retention curve:
+/// `(blocks, is_shrink)`.
+pub fn reallocation_blocks(
+    width_from: usize,
+    ret_from: f64,
+    width_to: usize,
+    ret_to: f64,
+) -> (usize, bool) {
+    let from = leaf_blocks(width_from, ret_from);
+    let to = leaf_blocks(width_to, ret_to);
+    if to < from {
+        (from - to, true)
+    } else {
+        (to - from, false)
+    }
+}
+
+/// Per-session controller progress: stage A ran and left the session open,
+/// or a final decision was issued (each stage runs at most once).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Progress {
+    PassedA,
+    Decided,
+}
+
+/// The deterministic per-serve budget controller. One instance lives for
+/// the whole serve; [`BudgetController::classify`] is called for every
+/// resident or suspended session at every round barrier.
+#[derive(Debug, Default)]
+pub struct BudgetController {
+    cfg: BudgetConfig,
+    progress: BTreeMap<u64, Progress>,
+    decisions: Vec<BudgetDecision>,
+}
+
+impl BudgetController {
+    pub fn new(cfg: BudgetConfig) -> Self {
+        Self { cfg, progress: BTreeMap::new(), decisions: Vec::new() }
+    }
+
+    /// Every evaluation issued so far, in issue order.
+    pub fn decisions(&self) -> &[BudgetDecision] {
+        &self.decisions
+    }
+
+    pub fn into_decisions(self) -> Vec<BudgetDecision> {
+        self.decisions
+    }
+
+    /// Width floor for shrunk sessions: a quarter of the base width, never
+    /// below `min_width`.
+    pub fn floor_width(&self, base_width: usize) -> usize {
+        (base_width / 4).max(self.cfg.min_width)
+    }
+
+    /// Evaluate one session at a round barrier. Returns the new target
+    /// width together with the session step the override applies from
+    /// (`observed step + 1` — strictly after every allocation already
+    /// planned at the decision step), or `None` when nothing changes.
+    ///
+    /// Decisions are only issued while actionable: an override from step
+    /// `k + 1` needs an allocation with `steps_taken >= k + 1`, i.e.
+    /// `k + 2 <= max_steps`. Sessions past that point are left alone — this
+    /// is also what keeps the decision log identical between sync and async
+    /// schedules, where a session finishing exactly at the cap is harvested
+    /// on different sides of the barrier.
+    pub fn classify(
+        &mut self,
+        session: u64,
+        shard: usize,
+        base_width: usize,
+        max_steps: usize,
+        sig: &DifficultySignals,
+    ) -> Option<(usize, usize)> {
+        if sig.steps_taken + 2 > max_steps || sig.frontier == 0 {
+            return None;
+        }
+        let state = self.progress.get(&session).copied();
+        let (stage, score) = if sig.steps_taken == self.cfg.stage_a_step && state.is_none() {
+            (STAGE_A, difficulty_score(sig))
+        } else if sig.steps_taken == self.cfg.stage_b_step && state == Some(Progress::PassedA) {
+            (STAGE_B, difficulty_score(sig))
+        } else {
+            return None;
+        };
+        let target = if stage == STAGE_A {
+            if score >= self.cfg.hopeless_cut_a {
+                self.floor_width(base_width)
+            } else {
+                base_width // still open: logged, nothing applied
+            }
+        } else if score < self.cfg.easy_cut {
+            (base_width / 2).max(self.cfg.min_width)
+        } else if score < self.cfg.hopeless_cut_b {
+            (base_width + base_width / 2).min(base_width * 2)
+        } else {
+            self.floor_width(base_width)
+        };
+        let decided = target != base_width;
+        self.progress.insert(
+            session,
+            if stage == STAGE_B || decided { Progress::Decided } else { Progress::PassedA },
+        );
+        self.decisions.push(BudgetDecision {
+            session,
+            stage,
+            shard,
+            score,
+            width_from: base_width,
+            width_to: target,
+            blocks: 0, // the coordinator fills this from the retention curve
+        });
+        if decided {
+            Some((sig.steps_taken + 1, target))
+        } else {
+            None
+        }
+    }
+
+    /// Attach the block cost to the most recent decision (the coordinator
+    /// computes it from the session's retention curve, which the controller
+    /// does not hold).
+    pub fn bill_last(&mut self, blocks: usize) {
+        if let Some(d) = self.decisions.last_mut() {
+            d.blocks = blocks;
+        }
+    }
+}
+
+/// Online `kv_retention` calibration: observed retained-leaves / width
+/// ratios per policy name, folded into admission's predicted footprint once
+/// real telemetry exists (the static heuristic seeds round 0). Keyed by
+/// [`SearchPolicy::name`](crate::search::policy::SearchPolicy::name), so
+/// every session running the same policy shares one estimate — the fleet
+/// learns, not the problem.
+#[derive(Debug, Default)]
+pub struct RetentionCalibration {
+    /// policy name → (Σ retained span leaves, Σ live width) over samples.
+    samples: BTreeMap<String, (u64, u64)>,
+}
+
+impl RetentionCalibration {
+    /// Fold one committed-barrier observation of a session: how many step
+    /// span leaves its ledger actually retains against its live width.
+    pub fn observe(&mut self, policy: &str, retained_leaves: usize, width: usize) {
+        if width == 0 {
+            return;
+        }
+        let e = self.samples.entry(policy.to_string()).or_insert((0, 0));
+        e.0 += retained_leaves as u64;
+        e.1 += width as u64;
+    }
+
+    /// Calibrated retention for a policy, or `fallback` (the static
+    /// heuristic) before any observation. Clamped to [0.05, 1.0]: a ratio
+    /// of 0 would predict a zero working set and over-admit.
+    pub fn retention_or(&self, policy: &str, fallback: f64) -> f64 {
+        match self.samples.get(policy) {
+            Some(&(retained, width)) if width > 0 => {
+                (retained as f64 / width as f64).clamp(0.05, 1.0)
+            }
+            _ => fallback,
+        }
+    }
+
+    /// (Σ retained, Σ width) telemetry for reporting.
+    pub fn totals(&self) -> (u64, u64) {
+        self.samples.values().fold((0, 0), |(r, w), &(sr, sw)| (r + sr, w + sw))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::HashEmbedder;
+    use crate::search::policy::{EtsPolicy, SearchPolicy};
+
+    fn sig(
+        steps: usize,
+        frontier: usize,
+        mean: f64,
+        spread: f64,
+        clusters: usize,
+    ) -> DifficultySignals {
+        DifficultySignals {
+            steps_taken: steps,
+            frontier,
+            reward_mean: mean,
+            reward_spread: spread,
+            entropy: 0.5,
+            sem_clusters: clusters,
+        }
+    }
+
+    #[test]
+    fn score_is_a_pure_function_of_committed_telemetry() {
+        // Same snapshot → bit-identical score, no matter how many times or
+        // in what order it is evaluated (the determinism suite leans on
+        // this: scores must agree across shard layouts and schedules).
+        let a = sig(1, 16, 0.57, 0.11, 9);
+        let b = a.clone();
+        assert_eq!(difficulty_score(&a).to_bits(), difficulty_score(&b).to_bits());
+        // ...and the entropy channel is telemetry-only: it must not move
+        // the score.
+        let mut c = a.clone();
+        c.entropy = 0.0;
+        assert_eq!(difficulty_score(&a).to_bits(), difficulty_score(&c).to_bits());
+    }
+
+    #[test]
+    fn score_orders_easy_below_contested_below_hopeless() {
+        // Shapes taken from the synthetic workloads' reward model: an easy
+        // frontier is high-reward and converged, a contested one mid-reward
+        // with live spread, a doomed one low-reward and collapsed.
+        let easy = difficulty_score(&sig(3, 12, 0.78, 0.05, 10));
+        let contested = difficulty_score(&sig(3, 14, 0.45, 0.35, 7));
+        let hopeless = difficulty_score(&sig(3, 14, 0.22, 0.05, 2));
+        assert!(easy < contested, "{easy} vs {contested}");
+        assert!(contested < hopeless, "{contested} vs {hopeless}");
+        assert!(easy < 0.50, "easy frontier must clear the easy cut: {easy}");
+        assert!(hopeless > 0.65, "doomed frontier must clear the hopeless cut: {hopeless}");
+        for s in [easy, contested, hopeless] {
+            assert!((0.0..=1.0).contains(&s));
+        }
+    }
+
+    #[test]
+    fn footprint_helper_matches_old_inline_admission_formula() {
+        // The helper replaced the inline expression at the admission site:
+        //   engine.blocks_for(prompt)
+        //       + (width as f64 * policy.kv_retention(width)).ceil() as usize
+        // Pin them equal over a grid (prompt blocks × width) for a policy
+        // with a non-trivial retention curve.
+        let pol = EtsPolicy::new(1.5, 1.0, HashEmbedder::default());
+        for prompt_blocks in [0usize, 1, 7, 130] {
+            for width in [1usize, 2, 16, 64, 257] {
+                let old = prompt_blocks
+                    + (width as f64 * pol.kv_retention(width)).ceil() as usize;
+                let new = predicted_footprint_blocks(
+                    prompt_blocks,
+                    width,
+                    pol.kv_retention(width),
+                );
+                assert_eq!(old, new, "prompt {prompt_blocks} width {width}");
+            }
+        }
+    }
+
+    #[test]
+    fn controller_maps_scores_to_width_targets() {
+        let mut c = BudgetController::new(BudgetConfig::default());
+        let base = 16;
+        let steps = 24;
+        // session 1: hopeless at stage A → floored immediately, from step 2
+        let d = c.classify(1, 0, base, steps, &sig(1, 14, 0.30, 0.08, 3));
+        assert_eq!(d, Some((2, 4)));
+        // session 2: open at stage A (no-op logged), easy at stage B → half
+        assert_eq!(c.classify(2, 0, base, steps, &sig(1, 16, 0.60, 0.12, 9)), None);
+        assert_eq!(c.classify(2, 0, base, steps, &sig(3, 12, 0.78, 0.05, 10)), Some((4, 8)));
+        // session 3: open at A, contested at B → granted 1.5×
+        assert_eq!(c.classify(3, 1, base, steps, &sig(1, 16, 0.60, 0.12, 9)), None);
+        assert_eq!(c.classify(3, 1, base, steps, &sig(3, 14, 0.45, 0.35, 7)), Some((4, 24)));
+        // decided sessions are never re-evaluated
+        assert_eq!(c.classify(1, 0, base, steps, &sig(3, 14, 0.45, 0.35, 7)), None);
+        assert_eq!(c.classify(2, 0, base, steps, &sig(3, 14, 0.45, 0.35, 7)), None);
+        // near the step cap nothing is actionable (and nothing is logged)
+        let n = c.decisions().len();
+        assert_eq!(c.classify(9, 0, base, 3, &sig(2, 14, 0.30, 0.08, 3)), None);
+        assert_eq!(c.decisions().len(), n);
+        // the log kept every evaluation, including stage-A no-ops
+        let stages: Vec<(u64, u8, usize)> = c
+            .decisions()
+            .iter()
+            .map(|d| (d.session, d.stage, d.width_to))
+            .collect();
+        let expect = vec![
+            (1, STAGE_A, 4),
+            (2, STAGE_A, 16),
+            (2, STAGE_B, 8),
+            (3, STAGE_A, 16),
+            (3, STAGE_B, 24),
+        ];
+        assert_eq!(stages, expect);
+    }
+
+    #[test]
+    fn reallocation_blocks_are_symmetric_and_ceil_consistent() {
+        let pol = EtsPolicy::new(1.5, 1.0, HashEmbedder::default());
+        let (r16, r8) = (pol.kv_retention(16), pol.kv_retention(8));
+        let (shrunk, is_shrink) = reallocation_blocks(16, r16, 8, r8);
+        let (grown, is_grow_shrink) = reallocation_blocks(8, r8, 16, r16);
+        assert!(is_shrink && !is_grow_shrink);
+        assert_eq!(shrunk, grown, "shrink and regrow must move the same blocks");
+        assert_eq!(shrunk, leaf_blocks(16, r16) - leaf_blocks(8, r8));
+        assert_eq!(reallocation_blocks(16, r16, 16, r16), (0, false));
+    }
+
+    #[test]
+    fn calibration_seeds_with_fallback_then_tracks_observations() {
+        let mut cal = RetentionCalibration::default();
+        assert_eq!(cal.retention_or("ets", 0.4), 0.4, "round 0 uses the static heuristic");
+        cal.observe("ets", 6, 16);
+        cal.observe("ets", 10, 16);
+        let got = cal.retention_or("ets", 0.4);
+        assert!((got - 0.5).abs() < 1e-12, "16/32 observed: {got}");
+        // other policies keep their own curve
+        assert_eq!(cal.retention_or("rebase", 1.0), 1.0);
+        cal.observe("rebase", 16, 16);
+        assert_eq!(cal.retention_or("rebase", 0.3), 1.0);
+        // degenerate observations clamp away from zero
+        cal.observe("beam", 0, 16);
+        assert_eq!(cal.retention_or("beam", 1.0), 0.05);
+        assert_eq!(cal.totals(), (32 + 16, 48 + 16));
+    }
+}

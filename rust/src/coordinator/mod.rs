@@ -85,6 +85,7 @@
 //! shards ∈ {1, 2, 4} × pipeline {on, off} under both ample and tight
 //! capacity).
 
+pub mod budget;
 pub(crate) mod runtime;
 
 use crate::engine::batch::{ImportSource, DEFAULT_KV_CAPACITY};
@@ -239,6 +240,18 @@ pub struct ServeOptions {
     /// only: per-problem results are byte-identical with it on or off
     /// (pinned by `tests/serve_determinism.rs`).
     pub async_decode: bool,
+    /// Compute-optimal adaptive budgeting ([`budget`]): a deterministic
+    /// controller at the round barrier scores each session's difficulty
+    /// from committed telemetry and reallocates width/KV mid-flight —
+    /// easy and hopeless sessions shrink, contested ones get the reclaimed
+    /// blocks — and admission's predicted-footprint routing switches to the
+    /// online-calibrated `kv_retention` once real samples exist. Adaptive
+    /// mode changes *what* is searched (its own mode, not
+    /// results-invariant against `false`), but at a fixed seed its results
+    /// are byte-identical across shards × pipeline × async-decode ×
+    /// prefix-share × ample/tight capacity (pinned by
+    /// `tests/serve_determinism.rs`).
+    pub adaptive_budget: bool,
 }
 
 impl Default for ServeOptions {
@@ -253,6 +266,7 @@ impl Default for ServeOptions {
             prefix_share: false,
             pin_cores: false,
             async_decode: false,
+            adaptive_budget: false,
         }
     }
 }
@@ -288,6 +302,11 @@ impl ServeOptions {
 
     pub fn cold_tiered(mut self, cold_capacity_tokens: usize) -> Self {
         self.cold_capacity_tokens = cold_capacity_tokens;
+        self
+    }
+
+    pub fn adaptive_budgeted(mut self, adaptive_budget: bool) -> Self {
+        self.adaptive_budget = adaptive_budget;
         self
     }
 }
@@ -433,6 +452,22 @@ pub struct ShardStats {
     pub arena_touch_worker: Option<usize>,
     /// Arena bytes faulted in by that first touch.
     pub arena_touch_bytes: u64,
+    /// Adaptive-budget controller decisions that shrank a session resident
+    /// here (easy or hopeless difficulty). 0 with the controller off.
+    pub width_shrinks: u64,
+    /// …and that granted extra width to a contested session resident here.
+    pub width_grants: u64,
+    /// Predicted KV blocks those shrinks reclaimed from this shard's
+    /// sessions. Reconciles exactly against the controller's decision log
+    /// grouped by shard (pinned by `tests/serve_determinism.rs`).
+    pub reclaimed_kv_blocks: u64,
+    /// Predicted KV blocks granted to this shard's contested sessions.
+    pub granted_kv_blocks: u64,
+    /// Online `kv_retention` calibration samples taken on this shard:
+    /// Σ retained step-span leaves and Σ live width at the controller
+    /// barrier. Their ratio is the shard's observed retention.
+    pub retention_retained_leaves: u64,
+    pub retention_width_samples: u64,
 }
 
 /// Result of a [`serve`] run.
@@ -535,6 +570,27 @@ pub struct ServeReport {
     pub cold_dropped_kv_tokens: u64,
     /// Cold-tier budget the run was scheduled with (global tokens).
     pub cold_capacity_tokens: usize,
+    /// Whether the adaptive budget controller was on
+    /// ([`ServeOptions::adaptive_budget`]).
+    pub adaptive_budget: bool,
+    /// Controller decisions that shrank / grew a session's width (Σ over
+    /// shards); all four zero with the controller off.
+    pub width_shrinks: u64,
+    pub width_grants: u64,
+    /// Predicted KV blocks the shrinks reclaimed and the grants handed out
+    /// (Σ over shards).
+    pub reclaimed_kv_blocks: u64,
+    pub granted_kv_blocks: u64,
+    /// The controller's full evaluation log, in issue order: per-session
+    /// width trajectories (base → target), difficulty scores, and the
+    /// blocks each reallocation moved. Sorted by
+    /// [`budget::BudgetDecision::identity`] it is byte-identical across
+    /// serve configurations at a fixed seed.
+    pub budget_decisions: Vec<budget::BudgetDecision>,
+    /// Online `kv_retention` calibration totals (Σ over shards): retained
+    /// step-span leaves and live width observed at controller barriers.
+    pub retention_retained_leaves: u64,
+    pub retention_width_samples: u64,
     /// Global scheduler rounds executed.
     pub rounds: u64,
     /// Σ over rounds of the fleet-wide allocated blocks after the round —
@@ -582,6 +638,19 @@ impl ServeReport {
         } else {
             self.sum_round_used_blocks as f64 / self.rounds as f64
         }
+    }
+
+    /// Modeled block-seconds of the run: Σ over executed shard rounds of
+    /// allocated blocks × modeled round seconds
+    /// ([`crate::engine::perfmodel::block_seconds`]). The denominator of
+    /// the adaptive budget controller's accuracy-per-block-second objective
+    /// — shrinking an easy session's width lowers this without touching its
+    /// answer, which is exactly the trade the adaptive bench pins.
+    pub fn modeled_block_seconds(&self) -> f64 {
+        self.batches
+            .iter()
+            .map(|b| crate::engine::perfmodel::block_seconds(b.used_blocks, b.seconds))
+            .sum()
     }
 }
 
@@ -694,6 +763,12 @@ where
         // below, read-only everywhere else.
         let mut hub: Option<PrefixHub> =
             opts.prefix_share.then(|| PrefixHub::new(opts.block_size));
+        // The adaptive budget controller (one per serve) and the online
+        // kv_retention calibration it feeds: both live at the round
+        // barrier and read only committed telemetry.
+        let mut budgeter: Option<budget::BudgetController> =
+            opts.adaptive_budget.then(budget::BudgetController::default);
+        let mut calibration = budget::RetentionCalibration::default();
         // Livelock guard: rounds that neither commit, finish, nor admit make
         // no real progress (a resume or migration alone does not count —
         // resume → preempt can thrash); several in a row means the per-shard
@@ -965,10 +1040,21 @@ where
                 let (id, job) = queue.pop_front().expect("front checked above");
                 // predicted footprint: prompt blocks + the policy's
                 // retained-frontier estimate (one block per retained
-                // trajectory) — a routing unit, never a reservation
-                let predicted_blocks = set.get(target).engine.blocks_for(prompt)
-                    + (params.width as f64 * job.policy.kv_retention(params.width)).ceil()
-                        as usize;
+                // trajectory) — a routing unit, never a reservation. The
+                // policy's static kv_retention heuristic seeds the
+                // estimate; in adaptive mode the fleet's own observed
+                // retained/width ratio replaces it once samples exist.
+                let static_retention = job.policy.kv_retention(params.width);
+                let retention = if opts.adaptive_budget {
+                    calibration.retention_or(job.policy.name(), static_retention)
+                } else {
+                    static_retention
+                };
+                let predicted_blocks = budget::predicted_footprint_blocks(
+                    set.get(target).engine.blocks_for(prompt),
+                    params.width,
+                    retention,
+                );
                 let session = SearchSession::new(
                     &mut set.get_mut(target).engine,
                     job.lm,
@@ -999,6 +1085,64 @@ where
                 break;
             }
             max_concurrent = max_concurrent.max(total_resident);
+
+            // 3.5 adaptive budget controller barrier: with every shard
+            //     resident (admission done, nothing planned yet), classify
+            //     each session from its committed difficulty telemetry and
+            //     reallocate width mid-flight. Decisions are pure per-
+            //     session functions at fixed step indices and overrides
+            //     apply in session-step coordinates, so neither shard
+            //     layout, pipelining, async decode, nor capacity pressure
+            //     can change what gets decided — only *where* the freed
+            //     blocks happen to live. The same sweep feeds the online
+            //     kv_retention calibration that admission routing reads.
+            if let Some(ctl) = budgeter.as_mut() {
+                for i in 0..n_shards {
+                    let Shard { running, suspended, stats, .. } = set.get_mut(i);
+                    for slot in running.iter_mut().chain(suspended.iter_mut()) {
+                        let Some(sig) = slot.session.difficulty_signals() else {
+                            continue;
+                        };
+                        // calibration sample: what this session actually
+                        // retains against its live width, right now
+                        let retained = slot.session.ledger().retained_leaves();
+                        let live_width = slot.session.width();
+                        calibration.observe(slot.session.policy.name(), retained, live_width);
+                        stats.retention_retained_leaves += retained as u64;
+                        stats.retention_width_samples += live_width as u64;
+                        let base = slot.session.base_width();
+                        let Some((from_step, target)) = ctl.classify(
+                            slot.id as u64,
+                            i,
+                            base,
+                            slot.session.max_steps(),
+                            &sig,
+                        ) else {
+                            continue;
+                        };
+                        let (blocks, is_shrink) = budget::reallocation_blocks(
+                            base,
+                            slot.session.policy.kv_retention(base),
+                            target,
+                            slot.session.policy.kv_retention(target),
+                        );
+                        ctl.bill_last(blocks);
+                        slot.session.set_width_override(from_step, target);
+                        // keep the router's load estimate honest about the
+                        // session's new predicted working set
+                        if is_shrink {
+                            slot.predicted_blocks =
+                                slot.predicted_blocks.saturating_sub(blocks);
+                            stats.width_shrinks += 1;
+                            stats.reclaimed_kv_blocks += blocks as u64;
+                        } else {
+                            slot.predicted_blocks += blocks;
+                            stats.width_grants += 1;
+                            stats.granted_kv_blocks += blocks as u64;
+                        }
+                    }
+                }
+            }
 
             // 4. plan every busy shard's round on its worker (frontier
             //    pruning + policy allocation + expand-request build — no
@@ -1122,6 +1266,18 @@ where
         let cold_recomputes: u64 = set.iter().map(|s| s.stats.cold_recomputes).sum();
         let cold_dropped_kv_tokens: u64 =
             set.iter().map(|s| s.stats.cold_dropped_kv_tokens).sum();
+        let width_shrinks: u64 = set.iter().map(|s| s.stats.width_shrinks).sum();
+        let width_grants: u64 = set.iter().map(|s| s.stats.width_grants).sum();
+        let reclaimed_kv_blocks: u64 =
+            set.iter().map(|s| s.stats.reclaimed_kv_blocks).sum();
+        let granted_kv_blocks: u64 =
+            set.iter().map(|s| s.stats.granted_kv_blocks).sum();
+        let retention_retained_leaves: u64 =
+            set.iter().map(|s| s.stats.retention_retained_leaves).sum();
+        let retention_width_samples: u64 =
+            set.iter().map(|s| s.stats.retention_width_samples).sum();
+        let budget_decisions =
+            budgeter.map(|c| c.into_decisions()).unwrap_or_default();
         ServeReport {
             outcomes: outcomes
                 .into_iter()
@@ -1166,6 +1322,14 @@ where
             cold_recomputes,
             cold_dropped_kv_tokens,
             cold_capacity_tokens: opts.cold_capacity_tokens,
+            adaptive_budget: opts.adaptive_budget,
+            width_shrinks,
+            width_grants,
+            reclaimed_kv_blocks,
+            granted_kv_blocks,
+            budget_decisions,
+            retention_retained_leaves,
+            retention_width_samples,
             rounds,
             sum_round_used_blocks,
             shard_stats: set.into_inner().into_iter().map(|s| s.stats).collect(),

@@ -503,6 +503,11 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
                 expands.push(Vec::new());
                 continue;
             }
+            // This is where a pending budget-controller width override
+            // lands: next_requests applies it in session-step coordinates
+            // (steps_taken >= from_step) before the policy allocates, so a
+            // lockstep plan, a speculative async plan, and a repair-tail
+            // plan all resolve the same committed step to the same width.
             let requests = slot.session.next_requests(&mut self.engine);
             if requests.is_empty() {
                 // real-surface-id sessions finish with a *lazy* close (KV

@@ -110,6 +110,19 @@ impl KvLedger {
         self.locked.len()
     }
 
+    /// Step-span leaves this problem currently retains — the pinned leaves
+    /// while resident, the suspend-remembered ones otherwise. This is the
+    /// numerator of the serve scheduler's online `kv_retention`
+    /// calibration: observed retained-leaves over live width replaces the
+    /// policy's static retention heuristic once real telemetry exists.
+    pub fn retained_leaves(&self) -> usize {
+        if self.suspended_leaves.is_empty() {
+            self.locked.len()
+        } else {
+            self.suspended_leaves.len()
+        }
+    }
+
     /// Tree leaves ending this problem's committed step spans, in
     /// deterministic order: the pinned leaves (sorted) while resident, the
     /// suspend-remembered leaves otherwise. These are the sequence ends the

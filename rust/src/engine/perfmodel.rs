@@ -162,6 +162,16 @@ impl RoundCost {
     }
 }
 
+/// Block-seconds of one serve round: the round's modeled wall-clock
+/// weighted by the KV blocks resident while it ran. Summed over a serve
+/// this is the denominator of the adaptive budget controller's objective —
+/// expected accuracy per modeled block-second — and the unit the
+/// adaptive-budget bench holds fixed when comparing against the static
+/// baseline.
+pub fn block_seconds(used_blocks: usize, seconds: f64) -> f64 {
+    used_blocks as f64 * seconds
+}
+
 /// The two modeled ways to rebuild an evicted-or-absent KV span that a peer
 /// shard still holds, costed by [`PerfModel::import_choice`]: copy the
 /// blocks over the interconnect, or recompute the prefill locally. The serve

@@ -288,6 +288,81 @@ pub fn evaluate_serve_duplicate_prompts(
     serve_problem_set(cfg, opts, perf, Some(distinct_prompts.max(1)))
 }
 
+/// [`evaluate_serve_with`] over a **mixed-difficulty workload**: the
+/// problems of `cfg` (its dataset is the *hard* profile) interleaved with
+/// `n_easy` problems drawn from the `easy` dataset profile under the same
+/// model, all served through one coordinator call at one global KV budget.
+/// This is the workload where `--adaptive-budget` pays: easy sessions are
+/// recognized early and donate width/KV blocks to the hard tail. Per-problem
+/// sampling is independent of the serve configuration, so the folded report
+/// is identical across shard counts / capacities at a fixed seed (the
+/// adaptive determinism tests pin this).
+///
+/// `cfg.max_steps` must cover the deeper of the two datasets.
+pub fn evaluate_serve_mixed(
+    cfg: &EvalConfig,
+    easy: &WorkloadSpec,
+    n_easy: usize,
+    opts: &ServeOptions,
+    perf: &PerfModel,
+) -> ServeEvalReport {
+    let hard = ProblemSet::generate(&cfg.spec, cfg.n_problems, cfg.seed).problems;
+    let mut soft = ProblemSet::generate(easy, n_easy, cfg.seed ^ 0x517E_AD00).problems;
+    for (i, p) in soft.iter_mut().enumerate() {
+        // re-key so per-job seeds (lm/prm xor cfg.seed with the id) never
+        // collide with the hard set's
+        p.id = (cfg.n_problems + i) as u64;
+    }
+    // deterministic interleave: hard/easy alternate in admission order
+    let mut problems = Vec::with_capacity(hard.len() + soft.len());
+    let (mut h, mut s) = (hard.into_iter(), soft.into_iter());
+    loop {
+        match (h.next(), s.next()) {
+            (None, None) => break,
+            (a, b) => {
+                problems.extend(a);
+                problems.extend(b);
+            }
+        }
+    }
+    let params = SearchParams { width: cfg.width, max_steps: cfg.max_steps };
+    let mut truths = Vec::with_capacity(problems.len());
+    let parts: Vec<(SynthLm, OraclePrm, Box<dyn SearchPolicy + Send>)> = problems
+        .into_iter()
+        .map(|p| {
+            truths.push(p.answer);
+            let id = p.id;
+            let prm = OraclePrm::for_profile(&cfg.spec.model, cfg.seed ^ 0xBEEF ^ id);
+            let lm = SynthLm::new(p, cfg.seed ^ id);
+            (lm, prm, make_policy(&cfg.policy, cfg.width))
+        })
+        .collect();
+    let serve = if opts.async_decode {
+        let jobs: Vec<_> = parts
+            .into_iter()
+            .map(|(lm, prm, policy)| ServeJob { lm: AsyncLm::new(lm), prm, policy })
+            .collect();
+        crate::coordinator::serve(jobs, &params, opts, perf, &cfg.spec.model)
+    } else {
+        let jobs: Vec<_> = parts
+            .into_iter()
+            .map(|(lm, prm, policy)| ServeJob { lm, prm, policy })
+            .collect();
+        crate::coordinator::serve(jobs, &params, opts, perf, &cfg.spec.model)
+    };
+    let results = serve
+        .outcomes
+        .iter()
+        .zip(&truths)
+        .map(|(out, &truth)| summarize(out, truth))
+        .collect();
+    let mut total_cfg = cfg.clone();
+    total_cfg.n_problems = cfg.n_problems + n_easy;
+    let mut report = fold_report(&total_cfg, results);
+    report.dataset = format!("mixed({}+{})", cfg.spec.dataset.name, easy.dataset.name);
+    ServeEvalReport { report, serve }
+}
+
 fn serve_problem_set(
     cfg: &EvalConfig,
     opts: &ServeOptions,

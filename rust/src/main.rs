@@ -31,7 +31,7 @@ USAGE:
             [--problems K] [--concurrency C] [--capacity TOKENS]
             [--block-size TOKENS] [--shards N] [--cold-capacity TOKENS]
             [--cold-link-gbps GB] [--pipeline] [--prefix-share]
-            [--pin-cores] [--async-decode] [--seed S]
+            [--pin-cores] [--async-decode] [--adaptive-budget] [--seed S]
             [--json FILE] [--pjrt] [--requests K] [--artifacts DIR]
   ets info  [--artifacts DIR]
 
@@ -75,6 +75,17 @@ shard speculatively plans round r+1 while round r's results drain.
 Scheduling only — per-problem results are byte-identical with it on or
 off. `--async-decode=0` forces it off, overriding a `serve.async_decode`
 config value.
+`--adaptive-budget` turns on the compute-optimal budget controller: at
+each round barrier the coordinator scores every session's difficulty from
+committed telemetry (round-1 reward spread, frontier entropy, semantic
+cluster count), shrinks the width of easy/hopeless sessions mid-flight,
+and grants the reclaimed KV blocks to contested ones; admission also
+switches from the static per-policy kv-retention heuristic to an online
+calibration of observed retained-leaves/width ratios. Adaptive mode is
+its own serving mode (results differ from the baseline), but at a fixed
+seed its results are byte-identical across shard counts, capacities, and
+every scheduling flag. `--adaptive-budget=0` forces it off, overriding a
+`serve.adaptive_budget` config value.
 
 POLICIES: rebase | beam-<k> | beam-sqrt | dvts-<k> | dvts-sqrt |
           ets[:<lambda_b>] | ets-kv[:<lambda_b>]
@@ -271,6 +282,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     || cfg_doc.usize_or("serve.async_decode", 0) != 0
             }
         },
+        // same on/off grammar as --pipeline
+        adaptive_budget: match args.get("adaptive-budget") {
+            Some(v) => v != "0" && v != "false",
+            None => {
+                args.flag("adaptive-budget")
+                    || cfg_doc.bool_or("serve.adaptive_budget", false)
+                    || cfg_doc.usize_or("serve.adaptive_budget", 0) != 0
+            }
+        },
     };
     if opts.capacity_tokens == 0 {
         bail!("--capacity must be a positive token budget");
@@ -403,6 +423,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             r.serve.recomputed_kv_bytes,
         );
     }
+    if r.serve.adaptive_budget {
+        println!(
+            "  adaptive budget: {} width shrinks / {} grants, {} blocks reclaimed / {} granted, {} decisions, {:.1} block-seconds",
+            r.serve.width_shrinks,
+            r.serve.width_grants,
+            r.serve.reclaimed_kv_blocks,
+            r.serve.granted_kv_blocks,
+            r.serve.budget_decisions.len(),
+            r.serve.modeled_block_seconds(),
+        );
+    }
     if r.serve.kv_pressure_events() > 0 {
         println!(
             "  memory pressure: {} preemptions, {} resumes ({} tokens recomputed), {} admission-blocked rounds, {} deferred commits",
@@ -437,6 +468,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("spec_plan_misses", Json::num(r.serve.spec_plan_misses as f64)),
             ("transferred_kv_bytes", Json::num(r.serve.transferred_kv_bytes as f64)),
             ("recomputed_kv_bytes", Json::num(r.serve.recomputed_kv_bytes as f64)),
+            (
+                "adaptive_budget",
+                Json::num(if r.serve.adaptive_budget { 1.0 } else { 0.0 }),
+            ),
+            ("width_shrinks", Json::num(r.serve.width_shrinks as f64)),
+            ("width_grants", Json::num(r.serve.width_grants as f64)),
+            ("reclaimed_kv_blocks", Json::num(r.serve.reclaimed_kv_blocks as f64)),
+            ("granted_kv_blocks", Json::num(r.serve.granted_kv_blocks as f64)),
+            ("budget_decisions", Json::num(r.serve.budget_decisions.len() as f64)),
+            ("modeled_block_seconds", Json::num(r.serve.modeled_block_seconds())),
             (
                 "worker_cores",
                 Json::Arr(

@@ -31,6 +31,29 @@ use crate::search::policy::SearchPolicy;
 use crate::search::voting::{weighted_majority, Completion};
 use crate::tree::{NodeId, SearchTree, StepInfo};
 
+/// Committed-telemetry snapshot of one session's search state, read at a
+/// round barrier by the adaptive budget controller
+/// ([`crate::coordinator::budget`]). Every field is derived purely from the
+/// tree's committed frontier — nothing here depends on scheduling, shard
+/// placement, or capacity, which is what makes controller decisions
+/// byte-identical across serve configurations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DifficultySignals {
+    /// Committed steps when the snapshot was taken.
+    pub steps_taken: usize,
+    /// Frontier size (live, non-terminal leaves).
+    pub frontier: usize,
+    /// Mean PRM reward over the frontier.
+    pub reward_mean: f64,
+    /// Max − min PRM reward over the frontier (contestedness).
+    pub reward_spread: f64,
+    /// Normalized softmax entropy of frontier rewards at the REBASE
+    /// temperature (T = 0.2); in [0, 1], 0 for a single-leaf frontier.
+    pub entropy: f64,
+    /// Distinct semantic cluster ids over the frontier.
+    pub sem_clusters: usize,
+}
+
 /// Per-search-step efficiency record.
 #[derive(Clone, Debug, Default)]
 pub struct StepMetrics {
@@ -142,6 +165,12 @@ pub struct SearchSession<G, R, P> {
     pending: Option<PendingStep>,
     suspended: bool,
     recompute_tokens: u64,
+    /// Pending width reallocation from the adaptive budget controller:
+    /// `(from_step, delta)` applies `delta` to the live width at the first
+    /// allocation with `steps_taken >= from_step`. Stored as a *delta*
+    /// against the base width so terminal-completion decrements that land
+    /// between decision and application are preserved.
+    width_override: Option<(usize, isize)>,
 }
 
 impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
@@ -171,6 +200,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
             pending: None,
             suspended: false,
             recompute_tokens: 0,
+            width_override: None,
         }
     }
 
@@ -207,6 +237,88 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
         self.recompute_tokens
     }
 
+    /// Committed steps so far (round barrier coordinate).
+    pub fn steps_taken(&self) -> usize {
+        self.steps_taken
+    }
+
+    /// The configured initial width N (denominator of budget decisions).
+    pub fn base_width(&self) -> usize {
+        self.params.width
+    }
+
+    /// Live width right now (shrinks as trajectories complete).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Configured step cap for this search.
+    pub fn max_steps(&self) -> usize {
+        self.params.max_steps
+    }
+
+    /// Schedule a width reallocation: at the first allocation with
+    /// `steps_taken >= from_step`, shift the live width by
+    /// `target − base_width` (clamped to >= 1). Delta form, so terminal
+    /// completions that retire width between the barrier decision and its
+    /// application keep their decrement. Overwrites any earlier pending
+    /// override (the controller issues at most one).
+    pub fn set_width_override(&mut self, from_step: usize, target: usize) {
+        let delta = target as isize - self.params.width as isize;
+        self.width_override = Some((from_step, delta));
+    }
+
+    /// Snapshot the committed difficulty telemetry for the budget
+    /// controller. `None` before the first commit or once the frontier is
+    /// empty — there is nothing actionable to score. Pure function of the
+    /// committed tree: reads only frontier rewards and semantic ids, in
+    /// frontier order, so the same committed state yields bit-identical
+    /// floats on every shard layout and schedule.
+    pub fn difficulty_signals(&self) -> Option<DifficultySignals> {
+        if self.steps_taken == 0 || self.frontier.is_empty() {
+            return None;
+        }
+        let rewards: Vec<f64> =
+            self.frontier.iter().map(|&n| self.tree.get(n).reward).collect();
+        let n = rewards.len();
+        let sum: f64 = rewards.iter().sum();
+        let reward_mean = sum / n as f64;
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &r in &rewards {
+            lo = lo.min(r);
+            hi = hi.max(r);
+        }
+        let entropy = if n <= 1 {
+            0.0
+        } else {
+            // Softmax at the REBASE temperature over frontier rewards,
+            // max-subtracted for stability, normalized by ln(n).
+            const TEMP: f64 = 0.2;
+            let z: f64 = rewards.iter().map(|&r| ((r - hi) / TEMP).exp()).sum();
+            let mut h = 0.0;
+            for &r in &rewards {
+                let p = ((r - hi) / TEMP).exp() / z;
+                if p > 0.0 {
+                    h -= p * p.ln();
+                }
+            }
+            h / (n as f64).ln()
+        };
+        let mut sems: Vec<u64> =
+            self.frontier.iter().map(|&n| self.tree.get(n).step.sem).collect();
+        sems.sort_unstable();
+        sems.dedup();
+        Some(DifficultySignals {
+            steps_taken: self.steps_taken,
+            frontier: n,
+            reward_mean,
+            reward_spread: hi - lo,
+            entropy,
+            sem_clusters: sems.len(),
+        })
+    }
+
     /// The next step's expansion batch. Prunes retired trajectories (policy
     /// drops, prior completions) from the tree *and* releases their KV in
     /// the engine's cache. Empty when the search is over.
@@ -223,6 +335,18 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> SearchSession<G, R, P> {
             || self.frontier.is_empty()
         {
             return Vec::new();
+        }
+        // Apply a pending budget-controller reallocation. This runs in
+        // session-step coordinates (`steps_taken >= from_step`), not wall
+        // time: whether the allocation happens in a lockstep plan, a
+        // speculative async plan, or after a deferred commit, the same
+        // committed step count triggers the same width — which is what
+        // keeps adaptive mode byte-identical across serve schedules.
+        if let Some((from, delta)) = self.width_override {
+            if self.steps_taken >= from {
+                self.width_override = None;
+                self.width = (self.width as isize + delta).max(1) as usize;
+            }
         }
         let alloc = self.policy.allocate(&self.tree, &self.frontier, self.width);
         debug_assert!(!alloc.is_empty(), "policy returned empty allocation");

@@ -35,6 +35,13 @@ pub trait SearchPolicy {
     /// load estimate, not a reservation: it never gates capacity, only
     /// breaks routing ties, so a misestimate costs placement quality —
     /// never correctness. Default: 1.0 (REBASE keeps everything).
+    ///
+    /// This static heuristic is also the *seed* of the serve scheduler's
+    /// online calibration
+    /// ([`crate::coordinator::budget::RetentionCalibration`]): under
+    /// `--adaptive-budget` the fleet replaces it with the observed
+    /// retained-leaves/width ratio per policy name once committed
+    /// telemetry exists, and routes admissions by the calibrated value.
     fn kv_retention(&self, _width: usize) -> f64 {
         1.0
     }

@@ -1,16 +1,20 @@
 //! Fixed-width vectorized kernels for the host-side hot loops (embed
 //! cosine/distance, Lance–Williams cluster merges, simplex pivots).
 //!
-//! Every kernel has two implementations — a runtime-dispatched AVX path
-//! (`std::arch` intrinsics behind `is_x86_feature_detected!`) and a scalar
-//! fallback — that are **bit-identical by construction**:
+//! Every kernel has arch-dispatched vector implementations — an AVX path
+//! (`std::arch` intrinsics behind `is_x86_feature_detected!`), a NEON path
+//! on aarch64 (ASIMD is architecturally mandatory there, so no runtime
+//! probe) — and a scalar fallback, all **bit-identical by construction**:
 //!
 //! * Reductions use a fixed 8-lane blocked accumulation: element `i` always
-//!   lands in lane `i % 8`, and the lanes collapse through the same pairwise
-//!   tree (`l[i] + l[i+4]`, then `+2`, then `+1`) in both paths. f64 adds are
-//!   deterministic for a fixed association order, so SIMD-on and SIMD-off
-//!   produce the same bytes. No FMA anywhere: the scalar path's separate
-//!   mul-then-add rounding must match `_mm256_mul_pd` + `_mm256_add_pd`.
+//!   lands in lane `i % 8` (two 4-lane f64 registers on AVX, four 2-lane
+//!   registers on NEON — the lane *indexing* is identical), and the lanes
+//!   collapse through the same pairwise tree (`l[i] + l[i+4]`, then `+2`,
+//!   then `+1`) in every path. f64 adds are deterministic for a fixed
+//!   association order, so SIMD-on and SIMD-off produce the same bytes. No
+//!   FMA anywhere: the scalar path's separate mul-then-add rounding must
+//!   match `_mm256_mul_pd` + `_mm256_add_pd` (and `vmulq_f64` +
+//!   `vaddq_f64`).
 //! * Element-wise kernels (merge arithmetic, pivot row updates) perform the
 //!   identical per-element operation sequence; lane width cannot reassociate
 //!   anything.
@@ -49,8 +53,8 @@ fn have_avx() -> bool {
     *DETECTED.get_or_init(|| is_x86_feature_detected!("avx"))
 }
 
-/// Whether the vectorized paths are active (AVX present and not killed by
-/// `ETS_NO_SIMD` / [`force_scalar`]).
+/// Whether the vectorized paths are active (AVX / NEON present and not
+/// killed by `ETS_NO_SIMD` / [`force_scalar`]).
 pub fn simd_active() -> bool {
     env_init();
     if FORCE_SCALAR.load(Ordering::Relaxed) {
@@ -60,7 +64,12 @@ pub fn simd_active() -> bool {
     {
         have_avx()
     }
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON (ASIMD) is architecturally mandatory on aarch64 — no probe.
+        true
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
     {
         false
     }
@@ -88,6 +97,12 @@ pub fn dot_norms(a: &[f32], b: &[f32]) -> (f64, f64, f64) {
     if simd_active() {
         // SAFETY: AVX availability checked by `simd_active`.
         return unsafe { avx::dot_norms(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd_active() {
+        // SAFETY: NEON is baseline on aarch64; the gate is only the kill
+        // switch (`ETS_NO_SIMD` / `force_scalar`).
+        return unsafe { neon::dot_norms(a, b) };
     }
     dot_norms_scalar(a, b)
 }
@@ -125,6 +140,11 @@ pub fn sum_sq(a: &[f32]) -> f64 {
         // SAFETY: AVX availability checked by `simd_active`.
         return unsafe { avx::sum_sq(a) };
     }
+    #[cfg(target_arch = "aarch64")]
+    if simd_active() {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::sum_sq(a) };
+    }
     sum_sq_scalar(a)
 }
 
@@ -159,6 +179,12 @@ pub fn div_scalar_f32(xs: &mut [f32], d: f32) {
         unsafe { avx::div_scalar_f32(xs, d) };
         return;
     }
+    #[cfg(target_arch = "aarch64")]
+    if simd_active() {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::div_scalar_f32(xs, d) };
+        return;
+    }
     for x in xs.iter_mut() {
         *x /= d;
     }
@@ -172,6 +198,12 @@ pub fn lw_merge(acc: &mut [f64], other: &[f64], na: f64, nb: f64) {
     if simd_active() {
         // SAFETY: AVX availability checked by `simd_active`.
         unsafe { avx::lw_merge(acc, other, na, nb) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd_active() {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::lw_merge(acc, other, na, nb) };
         return;
     }
     let den = na + nb;
@@ -188,6 +220,12 @@ pub fn scale(xs: &mut [f64], factor: f64) {
         unsafe { avx::scale(xs, factor) };
         return;
     }
+    #[cfg(target_arch = "aarch64")]
+    if simd_active() {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::scale(xs, factor) };
+        return;
+    }
     for x in xs.iter_mut() {
         *x *= factor;
     }
@@ -202,6 +240,12 @@ pub fn sub_scaled(dst: &mut [f64], src: &[f64], factor: f64) {
         unsafe { avx::sub_scaled(dst, src, factor) };
         return;
     }
+    #[cfg(target_arch = "aarch64")]
+    if simd_active() {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::sub_scaled(dst, src, factor) };
+        return;
+    }
     for (d, &s) in dst.iter_mut().zip(src) {
         *d -= factor * s;
     }
@@ -214,6 +258,12 @@ pub fn add_assign(dst: &mut [f64], src: &[f64]) {
     if simd_active() {
         // SAFETY: AVX availability checked by `simd_active`.
         unsafe { avx::add_assign(dst, src) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd_active() {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::add_assign(dst, src) };
         return;
     }
     for (d, &s) in dst.iter_mut().zip(src) {
@@ -379,6 +429,179 @@ mod avx {
             let s = _mm256_loadu_pd(src.as_ptr().add(i));
             _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_add_pd(d, s));
             i += 4;
+        }
+        for l in full..dst.len() {
+            dst[l] += src[l];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON implementations (aarch64)
+// ---------------------------------------------------------------------------
+//
+// Same lane discipline as the AVX module, different register geometry: the
+// 8-lane f64 accumulator block is four 2-lane `float64x2_t` registers, with
+// register `j` holding lanes `2j` and `2j+1`. Element `i` therefore still
+// lands in lane `i % 8`, the arrays spill in lane order, and `reduce8`
+// collapses them through the shared pairwise tree — bit-identical to both
+// the scalar and the AVX paths. `vmulq_f64` + `vaddq_f64` are separate
+// rounding steps (no `vfmaq_f64` anywhere), matching the scalar
+// mul-then-add.
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::reduce8;
+    use std::arch::aarch64::*;
+
+    /// Widen 4 f32 lanes to two f64 pairs (lanes 0..2, 2..4).
+    #[inline]
+    unsafe fn widen(v: float32x4_t) -> (float64x2_t, float64x2_t) {
+        (vcvt_f64_f32(vget_low_f32(v)), vcvt_f64_f32(vget_high_f32(v)))
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_norms(a: &[f32], b: &[f32]) -> (f64, f64, f64) {
+        let zero = vdupq_n_f64(0.0);
+        let mut dotv = [zero; 4];
+        let mut nav = [zero; 4];
+        let mut nbv = [zero; 4];
+        let full = a.len() / 8 * 8;
+        let mut i = 0;
+        while i < full {
+            let (a01, a23) = widen(vld1q_f32(a.as_ptr().add(i)));
+            let (a45, a67) = widen(vld1q_f32(a.as_ptr().add(i + 4)));
+            let (b01, b23) = widen(vld1q_f32(b.as_ptr().add(i)));
+            let (b45, b67) = widen(vld1q_f32(b.as_ptr().add(i + 4)));
+            let av = [a01, a23, a45, a67];
+            let bv = [b01, b23, b45, b67];
+            for j in 0..4 {
+                dotv[j] = vaddq_f64(dotv[j], vmulq_f64(av[j], bv[j]));
+                nav[j] = vaddq_f64(nav[j], vmulq_f64(av[j], av[j]));
+                nbv[j] = vaddq_f64(nbv[j], vmulq_f64(bv[j], bv[j]));
+            }
+            i += 8;
+        }
+        let mut dot = [0.0f64; 8];
+        let mut na = [0.0f64; 8];
+        let mut nb = [0.0f64; 8];
+        for j in 0..4 {
+            vst1q_f64(dot.as_mut_ptr().add(2 * j), dotv[j]);
+            vst1q_f64(na.as_mut_ptr().add(2 * j), nav[j]);
+            vst1q_f64(nb.as_mut_ptr().add(2 * j), nbv[j]);
+        }
+        // tail elements land in lanes 0..rem, exactly as in the scalar path
+        for l in 0..a.len() - full {
+            let x = a[full + l] as f64;
+            let y = b[full + l] as f64;
+            dot[l] += x * y;
+            na[l] += x * x;
+            nb[l] += y * y;
+        }
+        (reduce8(dot), reduce8(na), reduce8(nb))
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sum_sq(a: &[f32]) -> f64 {
+        let zero = vdupq_n_f64(0.0);
+        let mut accv = [zero; 4];
+        let full = a.len() / 8 * 8;
+        let mut i = 0;
+        while i < full {
+            let (a01, a23) = widen(vld1q_f32(a.as_ptr().add(i)));
+            let (a45, a67) = widen(vld1q_f32(a.as_ptr().add(i + 4)));
+            let av = [a01, a23, a45, a67];
+            for j in 0..4 {
+                accv[j] = vaddq_f64(accv[j], vmulq_f64(av[j], av[j]));
+            }
+            i += 8;
+        }
+        let mut acc = [0.0f64; 8];
+        for j in 0..4 {
+            vst1q_f64(acc.as_mut_ptr().add(2 * j), accv[j]);
+        }
+        for l in 0..a.len() - full {
+            let x = a[full + l] as f64;
+            acc[l] += x * x;
+        }
+        reduce8(acc)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn div_scalar_f32(xs: &mut [f32], d: f32) {
+        let dv = vdupq_n_f32(d);
+        let full = xs.len() / 4 * 4;
+        let mut i = 0;
+        while i < full {
+            let v = vld1q_f32(xs.as_ptr().add(i));
+            vst1q_f32(xs.as_mut_ptr().add(i), vdivq_f32(v, dv));
+            i += 4;
+        }
+        for x in &mut xs[full..] {
+            *x /= d;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn lw_merge(acc: &mut [f64], other: &[f64], na: f64, nb: f64) {
+        let vna = vdupq_n_f64(na);
+        let vnb = vdupq_n_f64(nb);
+        let vden = vdupq_n_f64(na + nb);
+        let full = acc.len() / 2 * 2;
+        let mut i = 0;
+        while i < full {
+            let x = vld1q_f64(acc.as_ptr().add(i));
+            let o = vld1q_f64(other.as_ptr().add(i));
+            let num = vaddq_f64(vmulq_f64(vna, x), vmulq_f64(vnb, o));
+            vst1q_f64(acc.as_mut_ptr().add(i), vdivq_f64(num, vden));
+            i += 2;
+        }
+        let den = na + nb;
+        for l in full..acc.len() {
+            acc[l] = (na * acc[l] + nb * other[l]) / den;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale(xs: &mut [f64], factor: f64) {
+        let f = vdupq_n_f64(factor);
+        let full = xs.len() / 2 * 2;
+        let mut i = 0;
+        while i < full {
+            let v = vld1q_f64(xs.as_ptr().add(i));
+            vst1q_f64(xs.as_mut_ptr().add(i), vmulq_f64(v, f));
+            i += 2;
+        }
+        for x in &mut xs[full..] {
+            *x *= factor;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sub_scaled(dst: &mut [f64], src: &[f64], factor: f64) {
+        let f = vdupq_n_f64(factor);
+        let full = dst.len() / 2 * 2;
+        let mut i = 0;
+        while i < full {
+            let d = vld1q_f64(dst.as_ptr().add(i));
+            let s = vld1q_f64(src.as_ptr().add(i));
+            vst1q_f64(dst.as_mut_ptr().add(i), vsubq_f64(d, vmulq_f64(f, s)));
+            i += 2;
+        }
+        for l in full..dst.len() {
+            dst[l] -= factor * src[l];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn add_assign(dst: &mut [f64], src: &[f64]) {
+        let full = dst.len() / 2 * 2;
+        let mut i = 0;
+        while i < full {
+            let d = vld1q_f64(dst.as_ptr().add(i));
+            let s = vld1q_f64(src.as_ptr().add(i));
+            vst1q_f64(dst.as_mut_ptr().add(i), vaddq_f64(d, s));
+            i += 2;
         }
         for l in full..dst.len() {
             dst[l] += src[l];

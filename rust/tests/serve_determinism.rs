@@ -668,6 +668,207 @@ fn repeated_async_serves_are_stable_and_leak_free() {
     }
 }
 
+/// Sorted schedule-invariant identities of a serve's controller decisions.
+fn decision_identities(
+    serve: &ets::coordinator::ServeReport,
+) -> Vec<(u64, u8, u64, usize, usize, usize)> {
+    let mut ids: Vec<_> = serve.budget_decisions.iter().map(|d| d.identity()).collect();
+    ids.sort_unstable();
+    ids
+}
+
+/// Per-shard reclaimed/granted block counters must reconcile with the
+/// decision log grouped by shard, and fold to the report totals.
+fn reconcile_budget(serve: &ets::coordinator::ServeReport) {
+    let mut reclaimed = vec![0u64; serve.shards];
+    let mut granted = vec![0u64; serve.shards];
+    let mut moves = 0u64;
+    for d in &serve.budget_decisions {
+        if d.width_to != d.width_from {
+            moves += 1;
+        }
+        if d.width_to < d.width_from {
+            reclaimed[d.shard] += d.blocks as u64;
+        } else {
+            granted[d.shard] += d.blocks as u64;
+        }
+    }
+    for st in &serve.shard_stats {
+        assert_eq!(
+            st.reclaimed_kv_blocks, reclaimed[st.shard],
+            "shard {} reclaimed blocks do not reconcile with its decisions",
+            st.shard
+        );
+        assert_eq!(
+            st.granted_kv_blocks, granted[st.shard],
+            "shard {} granted blocks do not reconcile with its decisions",
+            st.shard
+        );
+    }
+    assert_eq!(serve.reclaimed_kv_blocks, reclaimed.iter().sum::<u64>());
+    assert_eq!(serve.granted_kv_blocks, granted.iter().sum::<u64>());
+    assert_eq!(
+        serve.width_shrinks + serve.width_grants,
+        moves,
+        "every applied decision must be counted exactly once"
+    );
+}
+
+#[test]
+fn adaptive_budget_matrix_is_deterministic_across_shards_and_modes() {
+    // Adaptive mode is its own serving mode (the controller changes *what*
+    // is searched), so its cells are compared among themselves: shards ∈
+    // {1, 2, 4} × pipeline × prefix-share × async-decode must fold to
+    // byte-identical per-problem results AND a byte-identical controller
+    // decision log (scores are pure functions of committed per-session
+    // telemetry at fixed step indices — placement can only move the
+    // `shard` field, which the identity excludes).
+    let cfg = cfg(PolicySpec::Ets { lambda_b: 1.5, lambda_d: 1.0 });
+    let run = |shards: usize, pipeline: bool, share: bool, async_decode: bool| {
+        let opts = ServeOptions {
+            concurrency: 8,
+            capacity_tokens: DEFAULT_KV_CAPACITY * shards,
+            shards,
+            pipeline,
+            prefix_share: share,
+            ..Default::default()
+        }
+        .async_decoded(async_decode)
+        .adaptive_budgeted(true);
+        let perf = PerfModel::new(H100_NVL, true, 8);
+        evaluate_serve_with(&cfg, &opts, &perf)
+    };
+    let base = run(1, false, false, false);
+    let base_fp = fingerprint(&base.report);
+    let base_ids = decision_identities(&base.serve);
+    assert!(base.serve.adaptive_budget);
+    assert!(
+        base.serve.width_shrinks + base.serve.width_grants >= 1,
+        "the synthetic mixed-difficulty set must trigger at least one \
+         reallocation (decisions: {:?})",
+        base.serve.budget_decisions
+    );
+    reconcile_budget(&base.serve);
+    for shards in [1usize, 2, 4] {
+        for (pipeline, share, async_decode) in [
+            (false, false, false),
+            (true, false, false),
+            (false, true, false),
+            (false, false, true),
+            (true, true, true),
+        ] {
+            let r = run(shards, pipeline, share, async_decode);
+            assert_eq!(
+                base_fp,
+                fingerprint(&r.report),
+                "adaptive shards={shards} pipeline={pipeline} share={share} \
+                 async={async_decode} changed results"
+            );
+            assert_eq!(
+                base_ids,
+                decision_identities(&r.serve),
+                "adaptive shards={shards} pipeline={pipeline} share={share} \
+                 async={async_decode} changed the decision log"
+            );
+            reconcile_budget(&r.serve);
+        }
+    }
+    // off-mode is bit-for-bit the pre-controller serve: no decisions, no
+    // reallocation telemetry, no calibration folded into admission
+    let perf = PerfModel::new(H100_NVL, true, 8);
+    let off = evaluate_serve_with(&cfg, &ServeOptions::with_concurrency(8), &perf);
+    assert!(!off.serve.adaptive_budget);
+    assert!(off.serve.budget_decisions.is_empty());
+    assert_eq!(off.serve.width_shrinks + off.serve.width_grants, 0);
+    assert_eq!(off.serve.reclaimed_kv_blocks + off.serve.granted_kv_blocks, 0);
+}
+
+#[test]
+fn adaptive_budget_is_capacity_invariant_and_reallocates_under_pressure() {
+    // The controller reads only committed telemetry, so a hard KV budget
+    // tight enough to gate admission and preempt sessions must leave both
+    // the per-problem results and the decision log byte-identical to the
+    // ample adaptive run — pressure may reorder *scheduling*, never
+    // *decisions*.
+    let cfg = cfg(PolicySpec::Ets { lambda_b: 1.5, lambda_d: 1.0 });
+    let perf = PerfModel::new(H100_NVL, true, 8);
+    let ample = evaluate_serve_with(
+        &cfg,
+        &ServeOptions::with_concurrency(8).adaptive_budgeted(true),
+        &perf,
+    );
+    let base_fp = fingerprint(&ample.report);
+    let base_ids = decision_identities(&ample.serve);
+    let solo_peak = ample
+        .serve
+        .outcomes
+        .iter()
+        .map(|o| o.peak_kv_tokens())
+        .max()
+        .unwrap() as usize;
+    let tight_tokens = 2 * solo_peak + 4096;
+    assert!(
+        ample.serve.peak_resident_kv_tokens > tight_tokens,
+        "precondition: ample adaptive peak {} must oversubscribe the tight \
+         budget {}",
+        ample.serve.peak_resident_kv_tokens,
+        tight_tokens
+    );
+    let capped = evaluate_serve_with(
+        &cfg,
+        &ServeOptions {
+            concurrency: 8,
+            capacity_tokens: tight_tokens,
+            block_size: 16,
+            ..Default::default()
+        }
+        .adaptive_budgeted(true),
+        &perf,
+    );
+    assert_eq!(
+        base_fp,
+        fingerprint(&capped.report),
+        "a tight capacity changed adaptive search results"
+    );
+    assert_eq!(
+        base_ids,
+        decision_identities(&capped.serve),
+        "a tight capacity changed the adaptive decision log"
+    );
+    assert!(
+        capped.serve.kv_pressure_events() > 0,
+        "tight adaptive budget produced no pressure events"
+    );
+    assert!(capped.serve.peak_used_blocks <= capped.serve.total_blocks);
+    reconcile_budget(&capped.serve);
+    // sharded tight cells: the migration-matrix budget shape — identical
+    // results and decisions again, with per-shard reconciliation
+    let global_budget = 4 * (solo_peak + 4096);
+    for shards in [2usize, 4] {
+        let opts = ServeOptions {
+            concurrency: 8,
+            capacity_tokens: global_budget,
+            block_size: 16,
+            shards,
+            ..Default::default()
+        }
+        .adaptive_budgeted(true);
+        let r = evaluate_serve_with(&cfg, &opts, &perf);
+        assert_eq!(
+            base_fp,
+            fingerprint(&r.report),
+            "tight adaptive shards={shards} changed results"
+        );
+        assert_eq!(
+            base_ids,
+            decision_identities(&r.serve),
+            "tight adaptive shards={shards} changed the decision log"
+        );
+        assert!(r.serve.peak_used_blocks <= r.serve.total_blocks);
+        reconcile_budget(&r.serve);
+    }
+}
+
 #[test]
 fn shard_and_pipeline_matrix_is_invisible_under_pressure_and_tight_shards_migrate() {
     // Fat working sets (width 24) so a per-shard budget sized to one peak
