@@ -13,6 +13,9 @@
 //! (`-` for stdout); CI uses it for the scalar/SIMD identity smoke.
 
 use ets::cluster::agglomerative;
+use ets::coordinator::ServeOptions;
+use ets::engine::{PerfModel, H100_NVL};
+use ets::eval::{evaluate_serve_with, EvalConfig, PolicySpec};
 use ets::ilp::select::{solve_tree, Candidate, SelectionProblem};
 use ets::ilp::simplex::{solve, Lp, LpOutcome};
 use ets::kvcache::coldtier::SpillArena;
@@ -23,6 +26,7 @@ use ets::util::json::Json;
 use ets::util::rng::Rng;
 use ets::util::simd;
 use ets::util::stats::cosine;
+use ets::workload::{WorkloadSpec, LLEMMA_34B_SIM, SYNTH_MATH500};
 use std::collections::{BTreeSet, HashMap};
 use std::time::Duration;
 
@@ -802,6 +806,74 @@ fn main() {
             size: format!("{n_spans} spans × {len} tok"),
             new,
             reference: old,
+        });
+    }
+
+    // (6) Trace recording overhead: the identical serve run with the
+    // two-track recorder on vs off. Tracing is a fixed handful of
+    // ring-buffer pushes per round plus one per lifecycle edge, into
+    // preallocated buffers — the <5% assert keeps "tracing is cheap enough
+    // to leave on" an enforced property rather than a hope.
+    {
+        let cfg = EvalConfig {
+            spec: WorkloadSpec::new(&SYNTH_MATH500, &LLEMMA_34B_SIM),
+            policy: PolicySpec::Ets { lambda_b: 1.5, lambda_d: 1.0 },
+            width: 16,
+            n_problems: 8,
+            seed: 20260730,
+            max_steps: SYNTH_MATH500.n_steps + 6,
+        };
+        let perf = PerfModel::new(H100_NVL, true, 8);
+        let on = ServeOptions::with_concurrency(8).traced(true);
+        let off = ServeOptions::with_concurrency(8);
+        // tracing must be read-only before it is worth timing (the
+        // determinism suite pins the full contract; this is a spot check)
+        let traced_run = evaluate_serve_with(&cfg, &on, &perf);
+        let plain_run = evaluate_serve_with(&cfg, &off, &perf);
+        assert_eq!(
+            traced_run.report.n_correct,
+            plain_run.report.n_correct,
+            "tracing changed serve results"
+        );
+        let events = traced_run.serve.trace.as_ref().map_or(0, |t| t.exec.len() + t.modeled.len());
+        assert!(events > 0, "traced serve must record events");
+        // min-of-3 means: these serve runs are short, so a single mean is
+        // noise-prone on shared runners
+        let best = |opts: &ServeOptions| {
+            (0..3)
+                .map(|_| {
+                    bench(8, || {
+                        std::hint::black_box(evaluate_serve_with(&cfg, opts, &perf));
+                    })
+                })
+                .min()
+                .unwrap()
+        };
+        let traced = best(&on);
+        let untraced = best(&off);
+        let overhead = traced.as_secs_f64() / untraced.as_secs_f64() - 1.0;
+        assert!(
+            overhead < 0.05,
+            "trace recording overhead {:.1}% exceeds 5% (on {traced:?} vs off {untraced:?})",
+            overhead * 100.0
+        );
+        if json_path.is_some() {
+            let doc = Json::obj(vec![
+                ("bench", Json::str("micro_substrates/trace_overhead")),
+                ("events", Json::num(events as f64)),
+                ("traced_ns", Json::num(traced.as_nanos() as f64)),
+                ("untraced_ns", Json::num(untraced.as_nanos() as f64)),
+                ("overhead_frac", Json::num(overhead)),
+            ]);
+            std::fs::write("BENCH_obs.json", doc.to_string_compact() + "\n")
+                .expect("write BENCH_obs.json");
+            println!("wrote BENCH_obs.json");
+        }
+        cases.push(CompareCase {
+            name: "serve round + lifecycle tracing (recorder on vs off)",
+            size: format!("8 problems × width 16, {events} events"),
+            new: traced,
+            reference: untraced,
         });
     }
 

@@ -93,6 +93,8 @@ use crate::engine::perfmodel::PerfModel;
 use crate::kvcache::prefixhub::PrefixHub;
 use crate::kvcache::{RadixCache, DEFAULT_BLOCK_SIZE};
 use crate::lm::StepGenerator;
+use crate::obs::hist::ServeLatency;
+use crate::obs::trace::{modeled_track, to_us, CoordTracer, ServeTrace, TraceBuf, TraceEvent};
 use crate::reward::RewardModel;
 use crate::search::driver::{SearchOutcome, SearchParams, SearchSession};
 use crate::search::policy::SearchPolicy;
@@ -252,6 +254,20 @@ pub struct ServeOptions {
     /// prefix-share × ample/tight capacity (pinned by
     /// `tests/serve_determinism.rs`).
     pub adaptive_budget: bool,
+    /// Two-track serve tracing ([`crate::obs::trace`]): per-shard
+    /// ring-buffer lifecycle/phase recording merged at round barriers, a
+    /// modeled session track rebuilt from committed outcomes at teardown,
+    /// and the trace payload on [`ServeReport::trace`]. Strictly read-only
+    /// over scheduling state — results AND decision logs are byte-identical
+    /// with it on or off (pinned by `tests/serve_determinism.rs`). Off by
+    /// default (`serve --trace-out` turns it on).
+    pub trace: bool,
+    /// Per-request TTFT/TPOT/completion and per-phase round-duration
+    /// histograms ([`crate::obs::hist`]) folded into
+    /// [`ServeReport::latency`]. On by default (cheap: a few fixed-size
+    /// counter arrays); the off switch exists so the determinism suite can
+    /// prove observability on ≡ off in both directions.
+    pub latency_hists: bool,
 }
 
 impl Default for ServeOptions {
@@ -267,6 +283,8 @@ impl Default for ServeOptions {
             pin_cores: false,
             async_decode: false,
             adaptive_budget: false,
+            trace: false,
+            latency_hists: true,
         }
     }
 }
@@ -307,6 +325,16 @@ impl ServeOptions {
 
     pub fn adaptive_budgeted(mut self, adaptive_budget: bool) -> Self {
         self.adaptive_budget = adaptive_budget;
+        self
+    }
+
+    pub fn traced(mut self, trace: bool) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    pub fn latency_histograms(mut self, latency_hists: bool) -> Self {
+        self.latency_hists = latency_hists;
         self
     }
 }
@@ -602,7 +630,19 @@ pub struct ServeReport {
     /// per worker when pinning was off, refused by the kernel, or the run
     /// used the inline single-shard scheduler (no worker threads).
     pub worker_cores: Vec<Option<usize>>,
+    /// Per-request TTFT/TPOT/completion and per-phase round-duration
+    /// histograms ([`ServeOptions::latency_hists`]; empty when off).
+    pub latency: crate::obs::hist::ServeLatency,
+    /// The two-track trace ([`ServeOptions::trace`]; `None` when off).
+    pub trace: Option<crate::obs::trace::ServeTrace>,
 }
+
+/// Schema version of the serve JSON dump (`serve --json` /
+/// `--metrics-out`), so bench-diff tooling can detect shape changes.
+/// History: 1 — everything before the observability PR (implicit,
+/// unversioned); 2 — adds `report_version` itself plus the
+/// p50/p90/p99 TTFT/TPOT/completion latency fields.
+pub const REPORT_VERSION: u64 = 2;
 
 impl ServeReport {
     pub fn throughput_problems_per_sec(&self) -> f64 {
@@ -774,10 +814,31 @@ where
         // resume → preempt can thrash); several in a row means the per-shard
         // budget is below one working set.
         let mut stalled_rounds = 0u32;
+        // Observability plane ([`crate::obs`]) — strictly read-only over
+        // scheduling state. The tracer collects coordinator-side lifecycle
+        // events and drains each shard's preallocated ring at the round
+        // barrier (shard-index order → deterministic merged stream); the
+        // latency table stamps per-request admission/commit times on the
+        // global modeled clock for the TTFT/TPOT/completion histograms.
+        let trace_t0 = std::time::Instant::now();
+        let mut tracer: Option<CoordTracer> = opts.trace.then(|| CoordTracer::new(n_shards, trace_t0));
+        if opts.trace {
+            for shard in set.iter_mut() {
+                shard.trace = Some(TraceBuf::new(TraceBuf::DEFAULT_CAPACITY, trace_t0));
+            }
+        }
+        let mut last_demoted: Vec<u64> = vec![0; n_shards];
+        let mut timings: Vec<ReqTiming> = vec![ReqTiming::default(); n];
+        let mut lat = ServeLatency::default();
 
         loop {
             let mut progressed = false;
             let mut round_bills = vec![ResumeBill::default(); n_shards];
+            // both exec-track timestamps of this round land at its start on
+            // the global modeled clock (modeled time only advances at the
+            // barrier below)
+            let round_start_us = to_us(modeled_seconds);
+            let mut phase_wall = tracer.as_ref().map(|t| t.wall_us());
 
             // 0. prefix-hub barrier: this is the deterministic merge point
             //    between rounds — first audit the previous snapshot (every
@@ -833,6 +894,7 @@ where
                 }
                 hub_published += hub.published();
             }
+            phase_mark(&mut tracer, &mut phase_wall, "hub_rebuild");
 
             // 1. per-shard resume pass, serial in shard index order (cheap:
             //    cache bookkeeping only, no generator calls); with the hub
@@ -862,6 +924,7 @@ where
                 );
                 set.put(i, shard);
             }
+            phase_mark(&mut tracer, &mut phase_wall, "resume_pass");
 
             // 2. cross-shard migration: a session whose resume failed
             //    MIGRATION_PATIENCE times in a row (sustained pressure) is
@@ -906,6 +969,7 @@ where
                         continue; // genuinely no shard can host it — retry locally
                     };
                     let mut slot = set.get_mut(src).suspended.remove(0);
+                    let migrant_id = slot.id;
                     slot.stalled = 0; // fresh patience on the new shard
                     set.get_mut(src).stats.migrations_out += 1;
                     // The migration cost model: the source shard's cache is
@@ -940,8 +1004,17 @@ where
                         None => dst_shard.suspended.push(slot),
                     }
                     migrations += 1;
+                    if let Some(t) = tracer.as_mut() {
+                        t.push(
+                            TraceEvent::instant("migrated", 1 + dst, 2, round_start_us)
+                                .arg("job", migrant_id as f64)
+                                .arg("src", src as f64)
+                                .arg("dst", dst as f64),
+                        );
+                    }
                 }
             }
+            phase_mark(&mut tracer, &mut phase_wall, "migration");
 
             // 3. deterministic global admission. Prompt-affinity first: a
             //    request whose prompt has a published prefix in the hub is
@@ -1076,7 +1149,16 @@ where
                 }
                 admit_seq += 1;
                 progressed = true;
+                timings[id].admit_t = modeled_seconds;
+                if let Some(t) = tracer.as_mut() {
+                    t.push(
+                        TraceEvent::instant("admitted", 1 + target, 2, round_start_us)
+                            .arg("job", id as f64)
+                            .arg("via_hub", if via_hub { 1.0 } else { 0.0 }),
+                    );
+                }
             }
+            phase_mark(&mut tracer, &mut phase_wall, "admission");
             let total_resident: usize = set.iter().map(|s| s.resident()).sum();
             // A staged speculative plan can hold finished-session outcomes
             // not yet delivered — one more plan round drains it.
@@ -1140,9 +1222,19 @@ where
                             stats.width_grants += 1;
                             stats.granted_kv_blocks += blocks as u64;
                         }
+                        if let Some(t) = tracer.as_mut() {
+                            let name = if is_shrink { "width_shrink" } else { "width_grant" };
+                            t.push(
+                                TraceEvent::instant(name, 1 + i, 2, round_start_us)
+                                    .arg("job", slot.id as f64)
+                                    .arg("target_width", target as f64)
+                                    .arg("blocks", blocks as f64),
+                            );
+                        }
                     }
                 }
             }
+            phase_mark(&mut tracer, &mut phase_wall, "budget_checkpoint");
 
             // 4. plan every busy shard's round on its worker (frontier
             //    pruning + policy allocation + expand-request build — no
@@ -1150,36 +1242,88 @@ where
             //    coordinator merges the plans and finished outcomes
             let planned = runtime::plan_rounds(&mut set, pool.as_ref(), &round_bills);
             let mut plans: Vec<Option<runtime::RoundPlan>> = Vec::with_capacity(n_shards);
-            for p in planned {
+            for (shard_idx, p) in planned.into_iter().enumerate() {
                 let Some(p) = p else {
                     plans.push(None);
                     continue;
                 };
                 for (id, outcome) in p.finished {
+                    // close the request's lifecycle: latency folds on the
+                    // global modeled clock (admission → first/last commit,
+                    // stamped at the barriers below), trace instant on the
+                    // finishing shard's timeline
+                    if opts.latency_hists {
+                        let t = timings[id];
+                        if t.steps_seen > 0 {
+                            let after_first = outcome
+                                .total_new_tokens()
+                                .saturating_sub(outcome.steps.first().map_or(0, |s| s.new_tokens as u64));
+                            lat.ttft.record_seconds(t.first_t - t.admit_t);
+                            lat.completion.record_seconds(t.last_t - t.admit_t);
+                            lat.tpot.record_seconds(
+                                (t.last_t - t.first_t) / after_first.max(1) as f64,
+                            );
+                        }
+                    }
+                    if let Some(tr) = tracer.as_mut() {
+                        tr.push(
+                            TraceEvent::instant("finished", 1 + shard_idx, 2, round_start_us)
+                                .arg("job", id as f64)
+                                .arg("steps", outcome.steps.len() as f64)
+                                .arg("answered", if outcome.answer.is_some() { 1.0 } else { 0.0 }),
+                        );
+                    }
                     outcomes[id] = Some(outcome);
                 }
                 progressed |= p.progressed;
                 plans.push(Some(p.plan));
             }
+            phase_mark(&mut tracer, &mut phase_wall, "plan");
 
             // 5. decode + commit on the persistent workers (inline for a
             //    single shard); results come back in pre-sized per-shard
             //    slots, in index order — the round barrier
             let results =
                 runtime::execute_round(&mut set, pool.as_ref(), plans, perf, model, opts.pipeline);
+            phase_mark(&mut tracer, &mut phase_wall, "decode_commit");
 
             // 6. merge the round: telemetry and the round's modeled cost —
             //    its slowest shard (shards are parallel replicas)
             let mut round_seconds = 0.0f64;
             let mut round_step_problems = 0usize;
+            let mut round_had_record = false;
             for result in results.into_iter().flatten() {
                 progressed |= result.progressed;
                 deferred_commits += result.deferred_commits;
                 if let Some(rec) = result.record {
                     round_seconds = round_seconds.max(rec.seconds);
                     round_step_problems += rec.problems;
+                    round_had_record = true;
+                    if opts.latency_hists {
+                        lat.round_decode.record_seconds(rec.decode_seconds);
+                        lat.round_overhead.record_seconds(rec.overhead_seconds);
+                    }
+                    if let Some(t) = tracer.as_mut() {
+                        // modeled phase spans of this shard's round: decode
+                        // on lane 0, plan+commit on lane 1, both from the
+                        // round's start — overlapping lanes are exactly how
+                        // the pipelined `max(decode, overhead)` fold looks
+                        t.push(
+                            TraceEvent::span("decode", 1 + rec.shard, 0, round_start_us, to_us(rec.decode_seconds))
+                                .arg("model_calls", rec.model_calls as f64)
+                                .arg("new_tokens", rec.new_tokens as f64),
+                        );
+                        t.push(
+                            TraceEvent::span("plan_commit", 1 + rec.shard, 1, round_start_us, to_us(rec.overhead_seconds))
+                                .arg("problems", rec.problems as f64)
+                                .arg("recompute_tokens", rec.recompute_tokens as f64),
+                        );
+                    }
                     batches.push(rec);
                 }
+            }
+            if opts.latency_hists && round_had_record {
+                lat.round_seconds.record_seconds(round_seconds);
             }
             modeled_seconds += round_seconds;
             peak_step_concurrency = peak_step_concurrency.max(round_step_problems);
@@ -1187,6 +1331,42 @@ where
             rounds += 1;
             sum_round_used_blocks +=
                 set.iter().map(|s| s.engine.used_blocks() as u64).sum::<u64>();
+            // round barrier, observability half: stamp per-request commit
+            // times on the freshly advanced global modeled clock, drain the
+            // shard rings in index order, and emit cold-tier demotion deltas
+            if opts.latency_hists {
+                for shard in set.iter() {
+                    for slot in &shard.running {
+                        let t = &mut timings[slot.id];
+                        let steps = slot.session.steps_taken();
+                        if steps > t.steps_seen {
+                            if t.steps_seen == 0 {
+                                t.first_t = modeled_seconds;
+                            }
+                            t.last_t = modeled_seconds;
+                            t.steps_seen = steps;
+                        }
+                    }
+                }
+            }
+            if let Some(t) = tracer.as_mut() {
+                for i in 0..n_shards {
+                    let demoted = set.get(i).cold_demoted_tokens();
+                    if demoted > last_demoted[i] {
+                        t.push(
+                            TraceEvent::instant("demoted", 1 + i, 2, round_start_us)
+                                .arg("tokens", (demoted - last_demoted[i]) as f64),
+                        );
+                        last_demoted[i] = demoted;
+                    }
+                }
+                for shard in set.iter_mut() {
+                    if let Some(buf) = shard.trace.as_mut() {
+                        t.drain_shard(buf, round_start_us);
+                    }
+                }
+            }
+            phase_mark(&mut tracer, &mut phase_wall, "barrier");
 
             if progressed {
                 stalled_rounds = 0;
@@ -1239,6 +1419,25 @@ where
                 shard.index
             );
         }
+        // Seal the trace: drain any straggler ring events (the final
+        // partial iteration runs no worker phases, so these are normally
+        // empty), then rebuild the modeled track from the committed
+        // outcomes — a pure fold, byte-identical across scheduling modes.
+        let trace_payload: Option<ServeTrace> = tracer.map(|mut t| {
+            let end_us = to_us(modeled_seconds);
+            let mut dropped = 0u64;
+            for shard in set.iter_mut() {
+                if let Some(buf) = shard.trace.as_mut() {
+                    t.drain_shard(buf, end_us);
+                    dropped += buf.dropped();
+                }
+            }
+            ServeTrace {
+                modeled: modeled_track(&outcomes, perf, model),
+                exec: t.events,
+                dropped,
+            }
+        });
         let preemptions: u64 = set.iter().map(|s| s.stats.preemptions).sum();
         let resumes: u64 = set.iter().map(|s| s.stats.resumes).sum();
         let recompute_tokens: u64 = set.iter().map(|s| s.stats.recompute_tokens).sum();
@@ -1334,8 +1533,31 @@ where
             sum_round_used_blocks,
             shard_stats: set.into_inner().into_iter().map(|s| s.stats).collect(),
             worker_cores,
+            latency: lat,
+            trace: trace_payload,
         }
     })
+}
+
+/// Close the previous coordinator phase span on the wall-clock trace
+/// process and open the next (no-ops with tracing off). Wall readings are
+/// diagnostic only — they never touch a modeled timestamp.
+fn phase_mark(tracer: &mut Option<CoordTracer>, wall: &mut Option<u64>, name: &'static str) {
+    if let (Some(t), Some(w)) = (tracer.as_mut(), *wall) {
+        t.wall_phase(name, w);
+        *wall = Some(t.wall_us());
+    }
+}
+
+/// Per-request lifecycle timestamps on the global modeled scheduler clock,
+/// feeding the TTFT/TPOT/completion histograms. `steps_seen == 0` means no
+/// step has committed yet (`first_t`/`last_t` are unset).
+#[derive(Clone, Copy, Debug, Default)]
+struct ReqTiming {
+    admit_t: f64,
+    first_t: f64,
+    last_t: f64,
+    steps_seen: usize,
 }
 
 /// Aggregated coordinator statistics.

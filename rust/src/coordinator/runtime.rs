@@ -37,6 +37,7 @@
 
 use super::{BatchRecord, ShardStats};
 use crate::engine::batch::{BatchEngine, ExpandRequest, ImportSource};
+use crate::obs::trace::{TraceBuf, TraceEvent};
 use crate::engine::perfmodel::{BatchStats, PerfModel};
 use crate::kvcache::prefixhub::PrefixHub;
 use crate::kvcache::RadixCache;
@@ -148,6 +149,13 @@ pub(crate) struct Shard<G, R, P> {
     /// coordinator at the top of every round.
     pub(crate) cold_lane_bytes: f64,
     pub(crate) stats: ShardStats,
+    /// Preallocated trace ring ([`super::ServeOptions::trace`]): lifecycle
+    /// events recorded on the owning worker thread, drained by the
+    /// coordinator at the round barrier in shard-index order. Worker events
+    /// carry a zero modeled timestamp — the drain restamps them onto the
+    /// global modeled clock — plus the wall-clock diagnostic arg. `None`
+    /// (tracing off) makes every hook a no-op.
+    pub(crate) trace: Option<TraceBuf>,
 }
 
 /// The serializable plan → decode/commit boundary: one shard round's expand
@@ -227,6 +235,7 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
             staged: None,
             cold_lane_bytes: 0.0,
             stats,
+            trace: None,
         }
     }
 
@@ -358,6 +367,15 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
                     self.stats.transferred_kv_bytes += (copied * word) as u64;
                     self.stats.restored_kv_bytes += (cold_copied * word) as u64;
                     self.stats.recomputed_kv_bytes += (rebuilt * word) as u64;
+                    if let Some(buf) = self.trace.as_mut() {
+                        buf.push(
+                            TraceEvent::instant("resumed", 1 + self.index, 2, 0)
+                                .arg("job", slot.id as f64)
+                                .arg("recompute_tokens", bill.recompute_tokens as f64)
+                                .arg("transfer_tokens", bill.transfer_tokens as f64)
+                                .arg("restored_tokens", bill.restored_tokens as f64),
+                        );
+                    }
                     return Some(bill);
                 }
                 Err(p) => {
@@ -458,6 +476,9 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
                 // the round plan, with the (unknown-at-staging-time) resume
                 // bill patched in.
                 self.stats.spec_plan_hits += 1;
+                if let Some(buf) = self.trace.as_mut() {
+                    buf.push(TraceEvent::instant("spec_plan_hit", 1 + self.index, 2, 0));
+                }
                 return staged;
             }
             // Mispredict: resumes / migrations / admissions appended slots
@@ -466,6 +487,9 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
             // only the new tail is planned — never a double `next_requests`
             // on an already-planned session.
             self.stats.spec_plan_misses += 1;
+            if let Some(buf) = self.trace.as_mut() {
+                buf.push(TraceEvent::instant("spec_plan_miss", 1 + self.index, 2, 0));
+            }
             let tail = self.running.split_off(m);
             let (active, expands, finished, progressed) = self.plan_slots(tail);
             self.running.extend(active);
@@ -609,6 +633,12 @@ impl<G: StepGenerator, R: RewardModel, P: SearchPolicy> Shard<G, R, P> {
                             victim.session.suspend(&mut self.engine);
                             self.stats.preemptions += 1;
                             rec.preemptions += 1;
+                            if let Some(buf) = self.trace.as_mut() {
+                                buf.push(
+                                    TraceEvent::instant("preempted", 1 + self.index, 2, 0)
+                                        .arg("job", victim.id as f64),
+                                );
+                            }
                             self.suspended.push(victim);
                             continue;
                         }

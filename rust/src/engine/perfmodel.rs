@@ -15,7 +15,7 @@
 //!   * if the KV working set exceeds free HBM, the batch fragments into
 //!     waves, each re-reading the weights — the second Fig. 2 effect.
 
-use crate::search::SearchOutcome;
+use crate::search::{SearchOutcome, StepMetrics};
 use crate::workload::ModelProfile;
 
 /// Serving hardware description.
@@ -312,38 +312,55 @@ impl PerfModel {
         let mut total_s = 0.0;
         let mut bytes = 0.0;
         let mut extra_waves = 0u64;
-        let threads = self.threads as f64;
         for step in &outcome.steps {
-            if step.model_calls == 0 {
-                continue;
-            }
-            let batch = step.model_calls as f64;
-            // average decode iterations to emit this step's tokens
-            let iters = (step.new_tokens as f64 / batch).max(1.0);
-            // KV working set for this step (per problem), bytes
-            let kv_unique = step.live_kv_tokens as f64 * model.kv_bytes_per_token as f64;
-            let kv_dup = step.unshared_kv_tokens as f64 * model.kv_bytes_per_token as f64;
-            let kv_read = if self.shared_kv { kv_unique } else { kv_dup };
-            // resident set on the node: co-scheduled problems each hold
-            // their (allocated = duplicated unless shared) KV
-            let resident = threads * (if self.shared_kv { kv_unique } else { kv_dup });
-            let free = (self.hw.mem_cap - model.weight_bytes as f64).max(1.0);
-            let waves = (resident / free).ceil().max(1.0);
-            extra_waves += (waves as u64).saturating_sub(1) * step.new_tokens as u64
-                / step.model_calls.max(1) as u64;
-            // per decode iteration: weights once per wave (amortized over
-            // all co-scheduled sequences), KV of *this* problem read once
-            let weight_read = model.weight_bytes as f64 * waves / threads;
-            let bytes_per_iter = weight_read + kv_read;
-            let mem_s = bytes_per_iter / self.hw.mem_bw;
-            // compute: 2 * params * batch tokens (params ≈ weight_bytes / 2
-            // for bf16)
-            let flops = model.weight_bytes as f64 * batch;
-            let comp_s = flops / self.hw.peak_flops;
-            total_s += iters * mem_s.max(comp_s);
-            bytes += iters * bytes_per_iter;
+            let e = self.step_latency(step, model);
+            total_s += e.seconds;
+            bytes += e.bytes_moved;
+            extra_waves += e.extra_waves;
         }
         LatencyEstimate { seconds: total_s, bytes_moved: bytes, extra_waves }
+    }
+
+    /// Roofline cost of a single committed search step — the per-step body
+    /// of [`PerfModel::latency`], exposed so the trace layer
+    /// ([`crate::obs::trace`]) can fold a session's committed steps into its
+    /// session-local modeled timeline. Depends only on the step's committed
+    /// telemetry and this model's configuration, never on scheduling — which
+    /// is what makes the modeled trace track byte-identical across shard
+    /// counts and pipeline/async modes.
+    pub fn step_latency(&self, step: &StepMetrics, model: &ModelProfile) -> LatencyEstimate {
+        if step.model_calls == 0 {
+            return LatencyEstimate::default();
+        }
+        let threads = self.threads as f64;
+        let batch = step.model_calls as f64;
+        // average decode iterations to emit this step's tokens
+        let iters = (step.new_tokens as f64 / batch).max(1.0);
+        // KV working set for this step (per problem), bytes
+        let kv_unique = step.live_kv_tokens as f64 * model.kv_bytes_per_token as f64;
+        let kv_dup = step.unshared_kv_tokens as f64 * model.kv_bytes_per_token as f64;
+        let kv_read = if self.shared_kv { kv_unique } else { kv_dup };
+        // resident set on the node: co-scheduled problems each hold
+        // their (allocated = duplicated unless shared) KV
+        let resident = threads * (if self.shared_kv { kv_unique } else { kv_dup });
+        let free = (self.hw.mem_cap - model.weight_bytes as f64).max(1.0);
+        let waves = (resident / free).ceil().max(1.0);
+        let extra_waves = (waves as u64).saturating_sub(1) * step.new_tokens as u64
+            / step.model_calls.max(1) as u64;
+        // per decode iteration: weights once per wave (amortized over
+        // all co-scheduled sequences), KV of *this* problem read once
+        let weight_read = model.weight_bytes as f64 * waves / threads;
+        let bytes_per_iter = weight_read + kv_read;
+        let mem_s = bytes_per_iter / self.hw.mem_bw;
+        // compute: 2 * params * batch tokens (params ≈ weight_bytes / 2
+        // for bf16)
+        let flops = model.weight_bytes as f64 * batch;
+        let comp_s = flops / self.hw.peak_flops;
+        LatencyEstimate {
+            seconds: iters * mem_s.max(comp_s),
+            bytes_moved: iters * bytes_per_iter,
+            extra_waves,
+        }
     }
 
     /// Wall-clock of one *merged* engine batch, lockstep (phases run back

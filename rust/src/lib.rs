@@ -28,6 +28,7 @@ pub mod ilp;
 pub mod kvcache;
 pub mod lm;
 pub mod metrics;
+pub mod obs;
 pub mod reward;
 pub mod search;
 pub mod tree;

@@ -10,7 +10,7 @@
 //! Global options can also come from a TOML config (`--config path`), with
 //! CLI flags taking precedence.
 
-use ets::coordinator::ServeOptions;
+use ets::coordinator::{ServeOptions, REPORT_VERSION};
 use ets::engine::{PerfModel, COLD_LINK_BW_DEFAULT, H100_NVL};
 use ets::eval::{evaluate_serve_with, evaluate_with_workers, EvalConfig, PolicySpec};
 use ets::util::argparse::{Args, Spec};
@@ -32,7 +32,8 @@ USAGE:
             [--block-size TOKENS] [--shards N] [--cold-capacity TOKENS]
             [--cold-link-gbps GB] [--pipeline] [--prefix-share]
             [--pin-cores] [--async-decode] [--adaptive-budget] [--seed S]
-            [--json FILE] [--pjrt] [--requests K] [--artifacts DIR]
+            [--json FILE] [--trace-out FILE] [--metrics-out FILE]
+            [--pjrt] [--requests K] [--artifacts DIR]
   ets info  [--artifacts DIR]
 
 `--capacity` makes the KV budget *hard*: the scheduler gates admission on
@@ -86,6 +87,16 @@ its own serving mode (results differ from the baseline), but at a fixed
 seed its results are byte-identical across shard counts, capacities, and
 every scheduling flag. `--adaptive-budget=0` forces it off, overriding a
 `serve.adaptive_budget` config value.
+`--trace-out FILE` turns on the two-track serve trace and writes it as
+Chrome trace-event JSON (open in https://ui.perfetto.dev or
+chrome://tracing). The modeled session track (pid 0) is byte-identical
+across shard counts and pipeline/async modes; the executed per-shard
+tracks carry the global scheduler clock with wall-clock diagnostics in
+args. Tracing is read-only: results and decision logs are identical with
+it on or off.
+`--metrics-out FILE` writes a Prometheus-style text exposition of the
+run's counters, gauges, and latency summaries (TTFT/TPOT/completion and
+per-phase round durations as p50/p90/p99 quantiles, microseconds).
 
 POLICIES: rebase | beam-<k> | beam-sqrt | dvts-<k> | dvts-sqrt |
           ets[:<lambda_b>] | ets-kv[:<lambda_b>]
@@ -97,6 +108,7 @@ fn main() {
         "dataset", "model", "policy", "width", "problems", "seed", "workers",
         "json", "config", "requests", "lambda-b", "artifacts", "concurrency",
         "capacity", "block-size", "shards", "cold-capacity", "cold-link-gbps",
+        "trace-out", "metrics-out",
     ]);
     let args = match spec.parse(std::env::args()) {
         Ok(a) => a,
@@ -291,6 +303,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     || cfg_doc.usize_or("serve.adaptive_budget", 0) != 0
             }
         },
+        // read-only observability: asking for a trace file is what turns
+        // the recorder on (it is never worth paying for unobserved)
+        trace: args.get("trace-out").is_some(),
+        latency_hists: defaults.latency_hists,
     };
     if opts.capacity_tokens == 0 {
         bail!("--capacity must be a positive token budget");
@@ -450,8 +466,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
         r.serve.throughput_problems_per_sec(),
         wall
     );
+    let lat = &r.serve.latency;
+    if !lat.completion.is_empty() {
+        println!(
+            "  request latency (modeled): ttft p50/p99 {:.1}/{:.1} ms  tpot p50/p99 {:.3}/{:.3} ms  completion p50/p99 {:.1}/{:.1} ms",
+            lat.ttft.p50() as f64 / 1e3,
+            lat.ttft.p99() as f64 / 1e3,
+            lat.tpot.p50() as f64 / 1e3,
+            lat.tpot.p99() as f64 / 1e3,
+            lat.completion.p50() as f64 / 1e3,
+            lat.completion.p99() as f64 / 1e3,
+        );
+    }
+    if let Some(path) = args.get("trace-out") {
+        let trace = r.serve.trace.as_ref().expect("--trace-out enables tracing");
+        std::fs::write(path, trace.chrome_json(r.serve.shards).to_string_compact())?;
+        println!(
+            "wrote {path} ({} modeled + {} exec events, {} dropped) — open in https://ui.perfetto.dev",
+            trace.modeled.len(),
+            trace.exec.len(),
+            trace.dropped
+        );
+        let audit = ets::obs::audit::reconcile(&r.serve).expect("traced run");
+        if audit.ok() {
+            println!("  trace/ledger audit: PASS ({} lines reconciled)", audit.lines.len());
+        } else {
+            // the trace file was already written — it is the evidence
+            eprintln!("{}", audit.render());
+            bail!("trace/ledger audit failed ({} mismatches)", audit.mismatches().len());
+        }
+    }
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, ets::obs::report::prometheus_exposition(&r.serve))?;
+        println!("wrote {path}");
+    }
     if let Some(path) = args.get("json") {
         let j = Json::obj(vec![
+            ("report_version", Json::num(REPORT_VERSION as f64)),
             ("policy", Json::str(&r.report.policy)),
             ("dataset", Json::str(&r.report.dataset)),
             ("width", Json::num(cfg.width as f64)),
@@ -528,6 +579,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
             (
                 "peak_step_concurrency",
                 Json::num(r.serve.peak_step_concurrency as f64),
+            ),
+            // report_version 2: modeled-latency percentiles (microseconds)
+            ("ttft_p50_us", Json::num(lat.ttft.p50() as f64)),
+            ("ttft_p90_us", Json::num(lat.ttft.p90() as f64)),
+            ("ttft_p99_us", Json::num(lat.ttft.p99() as f64)),
+            ("tpot_p50_us", Json::num(lat.tpot.p50() as f64)),
+            ("tpot_p90_us", Json::num(lat.tpot.p90() as f64)),
+            ("tpot_p99_us", Json::num(lat.tpot.p99() as f64)),
+            ("completion_p50_us", Json::num(lat.completion.p50() as f64)),
+            ("completion_p90_us", Json::num(lat.completion.p90() as f64)),
+            ("completion_p99_us", Json::num(lat.completion.p99() as f64)),
+            ("latency", lat.to_json()),
+            (
+                "trace_events",
+                Json::num(r.serve.trace.as_ref().map_or(0, |t| t.exec.len()) as f64),
             ),
         ]);
         std::fs::write(path, j.to_string_compact())?;

@@ -1,140 +1,5 @@
-//! Reporting helpers: aligned text tables (the benches print paper-style
-//! rows) and JSON result dumps.
+//! Legacy reporting home — the `Table`/format helpers moved to
+//! [`crate::obs::report`] when the `obs` subsystem landed. Re-exported here
+//! so existing callers (benches, `main.rs`) keep compiling unchanged.
 
-use crate::util::json::Json;
-
-/// A simple aligned text table.
-#[derive(Clone, Debug, Default)]
-pub struct Table {
-    pub title: String,
-    pub header: Vec<String>,
-    pub rows: Vec<Vec<String>>,
-}
-
-impl Table {
-    pub fn new(title: &str, header: &[&str]) -> Self {
-        Self {
-            title: title.to_string(),
-            header: header.iter().map(|s| s.to_string()).collect(),
-            rows: vec![],
-        }
-    }
-
-    pub fn row(&mut self, cells: Vec<String>) {
-        assert_eq!(cells.len(), self.header.len(), "row arity");
-        self.rows.push(cells);
-    }
-
-    /// Render with per-column width = max cell width.
-    pub fn render(&self) -> String {
-        let ncol = self.header.len();
-        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
-        for row in &self.rows {
-            for c in 0..ncol {
-                widths[c] = widths[c].max(row[c].chars().count());
-            }
-        }
-        let mut out = String::new();
-        out.push_str(&format!("== {} ==\n", self.title));
-        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
-            cells
-                .iter()
-                .enumerate()
-                .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
-                .collect::<Vec<_>>()
-                .join("  ")
-        };
-        out.push_str(&fmt_row(&self.header, &widths));
-        out.push('\n');
-        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
-        out.push('\n');
-        for row in &self.rows {
-            out.push_str(&fmt_row(row, &widths));
-            out.push('\n');
-        }
-        out
-    }
-
-    /// Dump as JSON (list of objects keyed by header).
-    pub fn to_json(&self) -> Json {
-        Json::arr(self.rows.iter().map(|row| {
-            Json::Obj(
-                self.header
-                    .iter()
-                    .zip(row)
-                    .map(|(h, c)| (h.clone(), Json::Str(c.clone())))
-                    .collect(),
-            )
-        }))
-    }
-
-    /// Print and append the JSON form to `target/bench_results.jsonl`.
-    pub fn emit(&self) {
-        println!("{}", self.render());
-        let line = Json::obj(vec![
-            ("title", Json::str(&self.title)),
-            ("rows", self.to_json()),
-        ])
-        .to_string_compact();
-        let _ = std::fs::create_dir_all("target");
-        use std::io::Write;
-        if let Ok(mut f) = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open("target/bench_results.jsonl")
-        {
-            let _ = writeln!(f, "{line}");
-        }
-    }
-}
-
-/// Format a ratio like "1.8x" (0 → "-").
-pub fn ratio(base: f64, x: f64) -> String {
-    if x > 0.0 && base > 0.0 {
-        format!("{:.2}x", base / x)
-    } else {
-        "-".into()
-    }
-}
-
-/// Format a percentage.
-pub fn pct(x: f64) -> String {
-    format!("{:.1}", 100.0 * x)
-}
-
-/// Format a duration in seconds as milliseconds ("12.3ms").
-pub fn ms(seconds: f64) -> String {
-    format!("{:.1}ms", 1e3 * seconds)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn table_renders_aligned() {
-        let mut t = Table::new("demo", &["a", "long-header", "c"]);
-        t.row(vec!["1".into(), "2".into(), "3".into()]);
-        t.row(vec!["100".into(), "x".into(), "yyy".into()]);
-        let r = t.render();
-        assert!(r.contains("demo"));
-        let lines: Vec<&str> = r.lines().collect();
-        assert_eq!(lines.len(), 5);
-        assert_eq!(lines[3].len(), lines[4].len());
-    }
-
-    #[test]
-    #[should_panic(expected = "row arity")]
-    fn arity_checked() {
-        let mut t = Table::new("x", &["a", "b"]);
-        t.row(vec!["1".into()]);
-    }
-
-    #[test]
-    fn helpers() {
-        assert_eq!(ratio(180.0, 100.0), "1.80x");
-        assert_eq!(ratio(1.0, 0.0), "-");
-        assert_eq!(pct(0.525), "52.5");
-        assert_eq!(ms(0.0123), "12.3ms");
-    }
-}
+pub use crate::obs::report::{ms, pct, ratio, Table};

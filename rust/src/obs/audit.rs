@@ -1,0 +1,159 @@
+//! Trace ↔ ledger self-audit: the trace must provably tell the same story
+//! as the aggregate counters the serve loop has always kept.
+//!
+//! Every lifecycle event the exec track records (admission, preemption,
+//! resume, migration, spec-plan repair, width override, cold-tier
+//! demotion/restore) has a pre-existing counter on
+//! [`ServeReport`]/`ShardStats` incremented by independent code. Counting
+//! the events and diffing against the counters catches a whole class of
+//! observability bugs — dropped ring events, double-recorded spans, a phase
+//! wired to the wrong hook — without trusting either side.
+
+use crate::coordinator::ServeReport;
+use crate::util::json::Json;
+
+/// One reconciliation line: the event-derived count vs the ledger counter.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AuditLine {
+    pub name: &'static str,
+    /// Count (or token/block sum) derived from trace events.
+    pub traced: u64,
+    /// The pre-existing aggregate counter.
+    pub ledger: u64,
+}
+
+impl AuditLine {
+    pub fn ok(&self) -> bool {
+        self.traced == self.ledger
+    }
+}
+
+/// The full reconciliation of one traced serve run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Audit {
+    pub lines: Vec<AuditLine>,
+    /// Events dropped by full ring buffers — any drop voids the audit.
+    pub dropped_events: u64,
+}
+
+impl Audit {
+    pub fn ok(&self) -> bool {
+        self.dropped_events == 0 && self.lines.iter().all(AuditLine::ok)
+    }
+
+    /// Lines that failed reconciliation (empty when [`Audit::ok`]).
+    pub fn mismatches(&self) -> Vec<&AuditLine> {
+        self.lines.iter().filter(|l| !l.ok()).collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("== trace/ledger audit ==\n");
+        for l in &self.lines {
+            out.push_str(&format!(
+                "{:<28} trace={:<10} ledger={:<10} {}\n",
+                l.name,
+                l.traced,
+                l.ledger,
+                if l.ok() { "ok" } else { "MISMATCH" }
+            ));
+        }
+        out.push_str(&format!(
+            "dropped_events={} => audit {}\n",
+            self.dropped_events,
+            if self.ok() { "PASS" } else { "FAIL" }
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            ("dropped_events", Json::num(self.dropped_events as f64)),
+            (
+                "lines",
+                Json::arr(self.lines.iter().map(|l| {
+                    Json::obj(vec![
+                        ("name", Json::str(l.name)),
+                        ("trace", Json::num(l.traced as f64)),
+                        ("ledger", Json::num(l.ledger as f64)),
+                        ("ok", Json::Bool(l.ok())),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Reconcile a traced [`ServeReport`]'s event stream against its aggregate
+/// counters. Returns `None` when the run was not traced (nothing to audit).
+pub fn reconcile(report: &ServeReport) -> Option<Audit> {
+    let trace = report.trace.as_ref()?;
+    let count = |name: &str| trace.count(name);
+    let count_where = |name: &str, key: &str| {
+        trace
+            .exec
+            .iter()
+            .filter(|e| e.name == name && e.get(key).is_some_and(|v| v > 0.0))
+            .count() as u64
+    };
+    let sum = |name: &str, key: &str| trace.sum_arg(name, key).round() as u64;
+    let n = report.outcomes.len() as u64;
+    let lines = vec![
+        AuditLine { name: "admitted", traced: count("admitted"), ledger: n },
+        AuditLine { name: "finished", traced: count("finished"), ledger: n },
+        AuditLine { name: "preempted", traced: count("preempted"), ledger: report.preemptions },
+        AuditLine { name: "resumed", traced: count("resumed"), ledger: report.resumes },
+        AuditLine {
+            name: "resume_transfers",
+            traced: count_where("resumed", "transfer_tokens"),
+            ledger: report.import_transfers,
+        },
+        AuditLine {
+            name: "cold_restores",
+            traced: count_where("resumed", "restored_tokens"),
+            ledger: report.cold_restores,
+        },
+        AuditLine {
+            name: "restored_kv_tokens",
+            traced: sum("resumed", "restored_tokens"),
+            ledger: report.restored_kv_tokens,
+        },
+        AuditLine { name: "migrated", traced: count("migrated"), ledger: report.migrations },
+        AuditLine {
+            name: "spec_plan_hits",
+            traced: count("spec_plan_hit"),
+            ledger: report.spec_plan_hits,
+        },
+        AuditLine {
+            name: "spec_plan_misses",
+            traced: count("spec_plan_miss"),
+            ledger: report.spec_plan_misses,
+        },
+        AuditLine {
+            name: "width_shrinks",
+            traced: count("width_shrink"),
+            ledger: report.width_shrinks,
+        },
+        AuditLine {
+            name: "width_grants",
+            traced: count("width_grant"),
+            ledger: report.width_grants,
+        },
+        AuditLine {
+            name: "reclaimed_kv_blocks",
+            traced: sum("width_shrink", "blocks"),
+            ledger: report.reclaimed_kv_blocks,
+        },
+        AuditLine {
+            name: "granted_kv_blocks",
+            traced: sum("width_grant", "blocks"),
+            ledger: report.granted_kv_blocks,
+        },
+        AuditLine {
+            name: "demoted_kv_tokens",
+            traced: sum("demoted", "tokens"),
+            ledger: report.demoted_kv_tokens,
+        },
+    ];
+    Some(Audit { lines, dropped_events: trace.dropped })
+}

@@ -1,0 +1,355 @@
+//! HDR-style log-bucketed histogram with exact merge associativity.
+//!
+//! Fixed-size (no allocation after construction), integer-only: values are
+//! `u64` (the serve path records modeled **microseconds**). Buckets follow
+//! the classic HDR layout — a power-of-two major bucket split into
+//! `2^SUB_BITS` linear sub-buckets — so relative bucket error is bounded by
+//! `2^-SUB_BITS` everywhere while the whole table stays under 2 KB of
+//! counters. Merging is element-wise `u64` addition, which makes any merge
+//! order of per-shard histograms yield byte-identical counts (and therefore
+//! identical quantiles) — the property the determinism suite pins.
+
+use crate::util::json::Json;
+
+/// Sub-bucket resolution: each power-of-two range splits into `2^SUB_BITS`
+/// linear buckets (relative error ≤ 1/32 ≈ 3.1%).
+pub const SUB_BITS: u32 = 5;
+const SUB: usize = 1 << SUB_BITS;
+/// Bucket count: one `SUB`-wide row for values `< SUB` (mapped 1:1), plus
+/// one `SUB`-wide row per exponent `SUB_BITS..=63`.
+pub const BUCKETS: usize = SUB * (64 - SUB_BITS as usize + 1);
+
+/// Map a value to its bucket index. Exact for `v < 32`; above that the
+/// bucket holds `[lower, lower + 2^(e-5))` where `e = floor(log2 v)`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let e = 63 - v.leading_zeros(); // e >= SUB_BITS
+        let row = (e - SUB_BITS + 1) as usize;
+        let sub = ((v >> (e - SUB_BITS)) as usize) & (SUB - 1);
+        (row << SUB_BITS) + sub
+    }
+}
+
+/// Inclusive lower bound of a bucket (the value `quantile` reports).
+#[inline]
+pub fn bucket_lower(index: usize) -> u64 {
+    let row = index >> SUB_BITS;
+    let sub = (index & (SUB - 1)) as u64;
+    if row == 0 {
+        sub
+    } else {
+        let e = row as u32 + SUB_BITS - 1;
+        (SUB as u64 + sub) << (e - SUB_BITS)
+    }
+}
+
+/// A fixed-size log-bucketed histogram of `u64` samples.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; BUCKETS], total: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.counts[bucket_index(v)] += n;
+        self.total += n;
+        self.sum += v as u128 * n as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record a duration in seconds as whole microseconds (the serve path's
+    /// unit for modeled time).
+    pub fn record_seconds(&mut self, seconds: f64) {
+        self.record(crate::obs::trace::to_us(seconds));
+    }
+
+    /// Element-wise add — exactly associative and commutative, so any merge
+    /// order of per-shard histograms yields identical quantiles.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Value at quantile `q` in `[0, 1]`: the lower bound of the bucket
+    /// holding the `ceil(q·total)`-th sample (0 for an empty histogram).
+    /// Deterministic and monotone in `q`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // clamp the first/last buckets to observed extremes so
+                // singleton histograms report the exact sample
+                return bucket_lower(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&self) -> u64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Compact JSON summary (counts elided; quantiles + moments).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.total as f64)),
+            ("mean_us", Json::num(self.mean())),
+            ("min_us", Json::num(self.min() as f64)),
+            ("max_us", Json::num(self.max as f64)),
+            ("p50_us", Json::num(self.p50() as f64)),
+            ("p90_us", Json::num(self.p90() as f64)),
+            ("p99_us", Json::num(self.p99() as f64)),
+        ])
+    }
+}
+
+/// The serve loop's latency histograms, carried on
+/// [`crate::coordinator::ServeReport`]. Per-request metrics are in
+/// **modeled time on the global scheduler clock** (they describe the
+/// schedule, so they legitimately vary across shard counts and
+/// pipeline/async modes — they are *not* identity surfaces); per-phase
+/// round metrics come from each round's [`crate::engine::RoundCost`] split.
+/// All values are recorded in whole microseconds.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServeLatency {
+    /// Time-to-first-token: admission → first committed step.
+    pub ttft: Histogram,
+    /// Time-per-output-token after the first committed step.
+    pub tpot: Histogram,
+    /// Completion latency: admission → last committed step.
+    pub completion: Histogram,
+    /// Per shard-round decode-phase seconds.
+    pub round_decode: Histogram,
+    /// Per shard-round plan + commit seconds.
+    pub round_overhead: Histogram,
+    /// Per global round modeled seconds (the slowest shard).
+    pub round_seconds: Histogram,
+}
+
+impl ServeLatency {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ttft", self.ttft.to_json()),
+            ("tpot", self.tpot.to_json()),
+            ("completion", self.completion.to_json()),
+            ("round_decode", self.round_decode.to_json()),
+            ("round_overhead", self.round_overhead.to_json()),
+            ("round_seconds", self.round_seconds.to_json()),
+        ])
+    }
+
+    /// The named request-level histograms (the Prometheus exposition and
+    /// the JSON percentile dump iterate these).
+    pub fn request_metrics(&self) -> [(&'static str, &Histogram); 3] {
+        [("ttft", &self.ttft), ("tpot", &self.tpot), ("completion", &self.completion)]
+    }
+
+    pub fn phase_metrics(&self) -> [(&'static str, &Histogram); 3] {
+        [
+            ("round_decode", &self.round_decode),
+            ("round_overhead", &self.round_overhead),
+            ("round_seconds", &self.round_seconds),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_check;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn small_values_map_exactly() {
+        for v in 0..32u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_lower(v as usize), v);
+        }
+    }
+
+    #[test]
+    fn power_of_two_edges_start_new_rows() {
+        // every 2^e for e >= 5 is the first sub-bucket of its row, and the
+        // value just below it lands in the previous row's last sub-bucket
+        for e in SUB_BITS..64 {
+            let v = 1u64 << e;
+            let i = bucket_index(v);
+            assert_eq!(i & (SUB - 1), 0, "2^{e} must open a row");
+            assert_eq!(bucket_lower(i), v, "row lower bound is 2^{e}");
+            assert_eq!(bucket_index(v - 1), i - 1, "2^{e}-1 ends prior row");
+        }
+        // the top value fits in the table
+        assert!(bucket_index(u64::MAX) < BUCKETS);
+    }
+
+    #[test]
+    fn bucket_bounds_bracket_the_value() {
+        for &v in &[0u64, 1, 31, 32, 33, 63, 64, 100, 1 << 20, u64::MAX] {
+            let i = bucket_index(v);
+            let lo = bucket_lower(i);
+            assert!(lo <= v, "lower {lo} > value {v}");
+            if i + 1 < BUCKETS {
+                assert!(bucket_lower(i + 1) > v, "value {v} beyond bucket {i}");
+            }
+            // relative bucket error bounded by 2^-SUB_BITS
+            assert!((v - lo) as f64 <= v as f64 / SUB as f64 + 1.0);
+        }
+    }
+
+    #[test]
+    fn singleton_reports_exact_extremes() {
+        let mut h = Histogram::new();
+        h.record(777);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), 777);
+        assert_eq!(h.max(), 777);
+        assert_eq!(h.p50(), 777);
+        assert_eq!(h.p99(), 777);
+    }
+
+    #[test]
+    fn empty_is_all_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    fn sample(rng: &mut crate::util::rng::Rng, n: usize) -> Vec<u64> {
+        (0..n).map(|_| rng.next_u64() >> (rng.next_u64() % 60)).collect()
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        property(64, |rng| {
+            let parts: Vec<Vec<u64>> =
+                (0..4).map(|_| sample(rng, (rng.next_u64() % 40) as usize)).collect();
+            let hists: Vec<Histogram> = parts
+                .iter()
+                .map(|p| {
+                    let mut h = Histogram::new();
+                    for &v in p {
+                        h.record(v);
+                    }
+                    h
+                })
+                .collect();
+            // left fold
+            let mut left = Histogram::new();
+            for h in &hists {
+                left.merge(h);
+            }
+            // reversed order
+            let mut rev = Histogram::new();
+            for h in hists.iter().rev() {
+                rev.merge(h);
+            }
+            // pairwise tree: (0+1) + (2+3)
+            let mut a = hists[0].clone();
+            a.merge(&hists[1]);
+            let mut b = hists[2].clone();
+            b.merge(&hists[3]);
+            a.merge(&b);
+            prop_check!(left == rev, "merge order changed the histogram");
+            prop_check!(left == a, "merge shape changed the histogram");
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                prop_check!(
+                    left.quantile(q) == rev.quantile(q) && left.quantile(q) == a.quantile(q),
+                    "quantiles diverged across merge orders"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bracketed() {
+        property(64, |rng| {
+            let mut h = Histogram::new();
+            for v in sample(rng, 1 + (rng.next_u64() % 200) as usize) {
+                h.record(v);
+            }
+            let mut prev = 0u64;
+            for i in 0..=20 {
+                let q = i as f64 / 20.0;
+                let v = h.quantile(q);
+                prop_check!(v >= prev, "quantile not monotone");
+                prop_check!(v >= h.min() && v <= h.max(), "quantile outside range");
+                prev = v;
+            }
+            Ok(())
+        });
+    }
+}

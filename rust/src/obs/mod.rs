@@ -1,0 +1,30 @@
+//! Deterministic serve observability: two-track tracing, log-bucketed
+//! latency histograms, and exportable per-request lifecycle telemetry.
+//!
+//! Three pillars, all zero-crate and provably invisible to results:
+//!
+//! * [`trace`] — a preallocated per-shard ring-buffer span/event recorder
+//!   wired through [`crate::coordinator::serve`]'s phases and session
+//!   lifecycle, emitted as Chrome trace-event JSON (Perfetto-viewable).
+//!   Events live on **two tracks**: a *modeled* track derived purely from
+//!   committed search state (byte-identical across shard counts and
+//!   pipeline/async modes) and an *executed* track carrying the global
+//!   scheduler clock plus wall-clock diagnostics (excluded from identity).
+//! * [`hist`] — HDR-style log-bucketed fixed-size histograms with exact
+//!   merge associativity, feeding per-request TTFT/TPOT/completion latency
+//!   and per-phase round durations into `ServeReport` as p50/p90/p99.
+//! * [`audit`] — reconciles trace event counts against the pre-existing
+//!   aggregate counters (preemptions, migrations, spec-plan hits/misses,
+//!   demotions/restores, budget shrinks/grants) so the trace provably tells
+//!   the same story as the ledgers.
+//!
+//! [`report`] (text tables, JSON dumps, Prometheus exposition) moved here
+//! from the old `metrics` module.
+
+pub mod audit;
+pub mod hist;
+pub mod report;
+pub mod trace;
+
+pub use hist::{Histogram, ServeLatency};
+pub use trace::{modeled_track, CoordTracer, ServeTrace, TraceBuf, TraceEvent};

@@ -1,0 +1,215 @@
+//! Reporting helpers: aligned text tables (the benches print paper-style
+//! rows), JSON result dumps, and the Prometheus-style text exposition of a
+//! serve run's counters and histograms (`serve --metrics-out`).
+//!
+//! This is the single reporting home; the old `metrics` module re-exports
+//! from here.
+
+use crate::coordinator::ServeReport;
+use crate::obs::hist::Histogram;
+use crate::util::json::Json;
+
+/// A simple aligned text table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column width = max cell width.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Dump as JSON (list of objects keyed by header).
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.rows.iter().map(|row| {
+            Json::Obj(
+                self.header
+                    .iter()
+                    .zip(row)
+                    .map(|(h, c)| (h.clone(), Json::Str(c.clone())))
+                    .collect(),
+            )
+        }))
+    }
+
+    /// Print and append the JSON form to `target/bench_results.jsonl`.
+    pub fn emit(&self) {
+        println!("{}", self.render());
+        let line = Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            ("rows", self.to_json()),
+        ])
+        .to_string_compact();
+        let _ = std::fs::create_dir_all("target");
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open("target/bench_results.jsonl")
+        {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+}
+
+/// Prometheus-style text exposition of a serve run: every aggregate
+/// counter/gauge on [`ServeReport`], plus the latency histograms as
+/// summaries with p50/p90/p99 quantiles. Written by
+/// `ets serve --metrics-out`; no external crates, just the stable text
+/// format scrape pipelines understand.
+pub fn prometheus_exposition(report: &ServeReport) -> String {
+    let mut out = String::with_capacity(4096);
+    let mut counter = |name: &str, help: &str, v: f64| {
+        out.push_str(&format!("# HELP ets_{name} {help}\n# TYPE ets_{name} counter\nets_{name} {v}\n"));
+    };
+    counter("serve_problems", "Problems served to completion", report.outcomes.len() as f64);
+    counter("serve_rounds", "Global scheduler rounds executed", report.rounds as f64);
+    counter("serve_preemptions", "Sessions preempted under memory pressure", report.preemptions as f64);
+    counter("serve_resumes", "Sessions resumed after preemption", report.resumes as f64);
+    counter("serve_recompute_tokens", "Tokens re-prefilled by resumes", report.recompute_tokens as f64);
+    counter("serve_migrations", "Suspended sessions moved across shards", report.migrations as f64);
+    counter("serve_admission_blocked_rounds", "Rounds with admission blocked by watermarks", report.admission_blocked_rounds as f64);
+    counter("serve_deferred_commits", "Step commits deferred under pressure", report.deferred_commits as f64);
+    counter("serve_hub_hits", "Admissions routed by prompt affinity", report.hub_hits as f64);
+    counter("serve_hub_published", "Prefix fingerprints published at barriers", report.hub_published as f64);
+    counter("serve_imported_kv_tokens", "KV tokens imported as cross-shard transfers", report.imported_kv_tokens as f64);
+    counter("serve_import_transfers", "Import decisions that chose the transfer", report.import_transfers as f64);
+    counter("serve_import_recomputes", "Import decisions that chose the recompute", report.import_recomputes as f64);
+    counter("serve_spec_plan_hits", "Speculative round plans used as-is", report.spec_plan_hits as f64);
+    counter("serve_spec_plan_misses", "Speculative round plans repaired", report.spec_plan_misses as f64);
+    counter("serve_transferred_kv_bytes", "Payload bytes moved by the transport plane", report.transferred_kv_bytes as f64);
+    counter("serve_recomputed_kv_bytes", "Payload bytes rebuilt locally on resume", report.recomputed_kv_bytes as f64);
+    counter("serve_demoted_kv_tokens", "Tokens demoted into the cold tier", report.demoted_kv_tokens as f64);
+    counter("serve_restored_kv_tokens", "Tokens restored from the cold tier", report.restored_kv_tokens as f64);
+    counter("serve_cold_restores", "Resumes whose tier choice restored", report.cold_restores as f64);
+    counter("serve_cold_recomputes", "Resumes whose tier choice recomputed", report.cold_recomputes as f64);
+    counter("serve_width_shrinks", "Adaptive-budget width shrinks", report.width_shrinks as f64);
+    counter("serve_width_grants", "Adaptive-budget width grants", report.width_grants as f64);
+    counter("serve_reclaimed_kv_blocks", "Predicted KV blocks reclaimed by shrinks", report.reclaimed_kv_blocks as f64);
+    counter("serve_granted_kv_blocks", "Predicted KV blocks granted to contested sessions", report.granted_kv_blocks as f64);
+    let mut gauge = |name: &str, help: &str, v: f64| {
+        out.push_str(&format!("# HELP ets_{name} {help}\n# TYPE ets_{name} gauge\nets_{name} {v}\n"));
+    };
+    gauge("serve_modeled_seconds", "Modeled serving time of the run", report.modeled_seconds);
+    gauge("serve_shards", "Shard count the run was scheduled with", report.shards as f64);
+    gauge("serve_total_blocks", "Hard global KV block budget", report.total_blocks as f64);
+    gauge("serve_peak_used_blocks", "Sum of per-shard block high-water marks", report.peak_used_blocks as f64);
+    gauge("serve_peak_resident_kv_tokens", "High-water mark of summed shard caches", report.peak_resident_kv_tokens as f64);
+    gauge("serve_max_concurrent", "Most problems simultaneously admitted", report.max_concurrent as f64);
+    gauge("serve_throughput_problems_per_sec", "Completed problems per modeled second", report.throughput_problems_per_sec());
+    let mut summary = |name: &str, help: &str, h: &Histogram| {
+        out.push_str(&format!("# HELP ets_{name}_us {help}\n# TYPE ets_{name}_us summary\n"));
+        for (q, v) in [(0.5, h.p50()), (0.9, h.p90()), (0.99, h.p99())] {
+            out.push_str(&format!("ets_{name}_us{{quantile=\"{q}\"}} {v}\n"));
+        }
+        out.push_str(&format!("ets_{name}_us_sum {}\nets_{name}_us_count {}\n", h.mean() * h.count() as f64, h.count()));
+    };
+    summary("ttft", "Modeled time-to-first-token (microseconds)", &report.latency.ttft);
+    summary("tpot", "Modeled time-per-output-token after the first step", &report.latency.tpot);
+    summary("completion", "Modeled admission-to-completion latency", &report.latency.completion);
+    summary("round_decode", "Modeled decode-phase seconds per shard round", &report.latency.round_decode);
+    summary("round_overhead", "Modeled plan+commit seconds per shard round", &report.latency.round_overhead);
+    summary("round_seconds", "Modeled seconds per global round (slowest shard)", &report.latency.round_seconds);
+    if let Some(trace) = &report.trace {
+        let mut c2 = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!("# HELP ets_{name} {help}\n# TYPE ets_{name} counter\nets_{name} {v}\n"));
+        };
+        c2("trace_events", "Exec-track trace events recorded", trace.exec.len() as f64);
+        c2("trace_modeled_events", "Modeled-track trace events", trace.modeled.len() as f64);
+        c2("trace_dropped_events", "Events dropped by full ring buffers", trace.dropped as f64);
+    }
+    out
+}
+
+/// Format a ratio like "1.8x" (0 → "-").
+pub fn ratio(base: f64, x: f64) -> String {
+    if x > 0.0 && base > 0.0 {
+        format!("{:.2}x", base / x)
+    } else {
+        "-".into()
+    }
+}
+
+/// Format a percentage.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+/// Format a duration in seconds as milliseconds ("12.3ms").
+pub fn ms(seconds: f64) -> String {
+    format!("{:.1}ms", 1e3 * seconds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "long-header", "c"]);
+        t.row(vec!["1".into(), "2".into(), "3".into()]);
+        t.row(vec!["100".into(), "x".into(), "yyy".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 5);
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(ratio(180.0, 100.0), "1.80x");
+        assert_eq!(ratio(1.0, 0.0), "-");
+        assert_eq!(pct(0.525), "52.5");
+        assert_eq!(ms(0.0123), "12.3ms");
+    }
+}

@@ -1,0 +1,398 @@
+//! Two-track serve tracing: a preallocated per-shard ring-buffer recorder
+//! plus a Chrome trace-event JSON emitter (open the file in Perfetto or
+//! `chrome://tracing`).
+//!
+//! **The two-track timestamp rule.** Every serve quantity is either
+//! *modeled* (derived from `PerfModel` folds over committed search state —
+//! part of the determinism contract) or *executed* (real host behaviour —
+//! diagnostic only). The trace keeps the two on separate tracks:
+//!
+//! * **Modeled track** (`pid 0`, cat `"modeled"`): one timeline per
+//!   session, rebuilt at the end of a serve purely from each session's
+//!   committed [`StepMetrics`] folded through
+//!   [`PerfModel::step_latency`] — a session-local clock that knows nothing
+//!   about scheduling. Because scheduling changes *when/where/cost* but
+//!   never *what*, this track is **byte-identical across shard counts,
+//!   pipeline, and async-decode modes** (the determinism suite pins it).
+//! * **Executed track** (`pid 1+shard`, cat `"exec"`): per-shard phase
+//!   spans and scheduler lifecycle events (admission, suspension, resume,
+//!   migration, demotion/restore, width overrides, spec-plan repair),
+//!   stamped on the *global* modeled scheduler clock (Σ per-round max over
+//!   shards) with wall-clock diagnostics in `args.wall_us`. This track
+//!   legitimately differs across scheduling modes and is excluded from
+//!   identity.
+//!
+//! Recording is allocation-free on the hot path: each shard owns a
+//! [`TraceBuf`] ring of preallocated capacity; overflow drops the newest
+//! event (counted, never reallocating). Buffers drain at the round barrier
+//! in shard-index order, so the merged event stream is deterministic for a
+//! fixed configuration.
+
+use crate::engine::PerfModel;
+use crate::search::{SearchOutcome, StepMetrics};
+use crate::util::json::Json;
+use crate::workload::ModelProfile;
+use std::time::Instant;
+
+/// Convert modeled seconds to whole microseconds (the Chrome trace unit and
+/// the histogram unit). Saturating, deterministic.
+#[inline]
+pub fn to_us(seconds: f64) -> u64 {
+    let us = (seconds * 1e6).round();
+    if us <= 0.0 {
+        0
+    } else if us >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        us as u64
+    }
+}
+
+/// One trace event in (a subset of) the Chrome trace-event model:
+/// `ph == 'X'` is a duration span, `ph == 'i'` an instant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    /// `"modeled"` for the identity-bearing track, `"exec"` otherwise.
+    pub cat: &'static str,
+    pub ph: char,
+    /// Chrome process id: 0 = sessions (modeled), 1+shard = executed.
+    pub pid: usize,
+    /// Chrome thread id: job id on the modeled track, lane on exec.
+    pub tid: usize,
+    /// Timestamp in microseconds on the track's modeled clock.
+    pub ts_us: u64,
+    /// Span duration (0 for instants).
+    pub dur_us: u64,
+    /// Numeric payload (token counts, ids, `wall_us` diagnostics, ...).
+    pub args: Vec<(&'static str, f64)>,
+}
+
+impl TraceEvent {
+    pub fn span(name: &'static str, pid: usize, tid: usize, ts_us: u64, dur_us: u64) -> Self {
+        Self { name, cat: "exec", ph: 'X', pid, tid, ts_us, dur_us, args: vec![] }
+    }
+
+    pub fn instant(name: &'static str, pid: usize, tid: usize, ts_us: u64) -> Self {
+        Self { name, cat: "exec", ph: 'i', pid, tid, ts_us, dur_us: 0, args: vec![] }
+    }
+
+    pub fn arg(mut self, key: &'static str, v: f64) -> Self {
+        self.args.push((key, v));
+        self
+    }
+
+    /// Look up a numeric arg by key.
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.args.iter().find(|(k, _)| *k == key).map(|(_, v)| *v)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(self.name)),
+            ("cat", Json::str(self.cat)),
+            ("ph", Json::Str(self.ph.to_string())),
+            ("pid", Json::num(self.pid as f64)),
+            ("tid", Json::num(self.tid as f64)),
+            ("ts", Json::num(self.ts_us as f64)),
+        ];
+        if self.ph == 'X' {
+            fields.push(("dur", Json::num(self.dur_us as f64)));
+        }
+        if self.ph == 'i' {
+            // instant scope: thread
+            fields.push(("s", Json::str("t")));
+        }
+        if !self.args.is_empty() {
+            fields.push((
+                "args",
+                Json::Obj(
+                    self.args.iter().map(|(k, v)| (k.to_string(), Json::num(*v))).collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Preallocated per-shard ring buffer of trace events. `push` never
+/// allocates once constructed: past capacity the *newest* event is dropped
+/// (and counted) so the retained prefix stays deterministic.
+#[derive(Debug)]
+pub struct TraceBuf {
+    events: Vec<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+    /// Serve-start instant: wall-clock diagnostics are microseconds since
+    /// this origin. Wall readings ride in `args` and never in `ts_us`.
+    t0: Instant,
+}
+
+impl TraceBuf {
+    /// Default per-shard capacity between barrier drains.
+    pub const DEFAULT_CAPACITY: usize = 4096;
+
+    pub fn new(cap: usize, t0: Instant) -> Self {
+        Self { events: Vec::with_capacity(cap), cap, dropped: 0, t0 }
+    }
+
+    /// Microseconds of wall clock since the serve started (diagnostic).
+    pub fn wall_us(&self) -> u64 {
+        self.t0.elapsed().as_micros().min(u64::MAX as u128) as u64
+    }
+
+    /// Record an event, stamping the wall-clock diagnostic arg. Drops the
+    /// event (counted) when the ring is full.
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() < self.cap {
+            let wall = self.wall_us();
+            self.events.push(ev.arg("wall_us", wall as f64));
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Drain into `out` (round-barrier merge), retaining the ring's
+    /// allocation for the next round.
+    pub fn drain_into(&mut self, out: &mut Vec<TraceEvent>) {
+        out.extend(self.events.drain(..));
+    }
+}
+
+/// The merged trace of one serve run, carried on
+/// [`crate::coordinator::ServeReport`] when tracing is enabled.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeTrace {
+    /// Identity-bearing modeled track (session-local clocks, pid 0).
+    pub modeled: Vec<TraceEvent>,
+    /// Executed/diagnostic track (global scheduler clock + wall args).
+    pub exec: Vec<TraceEvent>,
+    /// Events dropped by full ring buffers (0 in every shipped config).
+    pub dropped: u64,
+}
+
+impl ServeTrace {
+    /// Count exec-track events by name (the audit's trace side).
+    pub fn count(&self, name: &str) -> u64 {
+        self.exec.iter().filter(|e| e.name == name).count() as u64
+    }
+
+    /// Sum an arg over exec-track events of one name (token reconciliation).
+    pub fn sum_arg(&self, name: &str, key: &str) -> f64 {
+        self.exec
+            .iter()
+            .filter(|e| e.name == name)
+            .filter_map(|e| e.get(key))
+            .sum()
+    }
+
+    /// Emit the full two-track Chrome trace-event JSON document.
+    pub fn chrome_json(&self, n_shards: usize) -> Json {
+        let mut events: Vec<Json> = Vec::with_capacity(self.modeled.len() + self.exec.len() + 8);
+        // process-name metadata rows so Perfetto labels the tracks
+        let name_meta = |pid: usize, label: &str| {
+            Json::obj(vec![
+                ("name", Json::str("process_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(pid as f64)),
+                ("tid", Json::num(0.0)),
+                (
+                    "args",
+                    Json::obj(vec![("name", Json::str(label))]),
+                ),
+            ])
+        };
+        events.push(name_meta(0, "sessions (modeled)"));
+        for s in 0..n_shards {
+            events.push(name_meta(1 + s, &format!("shard {s} (exec)")));
+        }
+        events.push(name_meta(1 + n_shards, "coordinator (wall)"));
+        events.extend(self.modeled.iter().map(TraceEvent::to_json));
+        events.extend(self.exec.iter().map(TraceEvent::to_json));
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            ("dropped_events", Json::num(self.dropped as f64)),
+        ])
+    }
+
+    /// Serialize only the modeled track — the byte-identity surface the
+    /// determinism suite and CI compare across scheduling modes.
+    pub fn modeled_json(&self) -> String {
+        Json::Arr(self.modeled.iter().map(TraceEvent::to_json).collect()).to_string_compact()
+    }
+}
+
+/// Coordinator-side trace recorder: owns the merged exec-track event list
+/// and the serve-start wall origin. Worker-shard events arrive through
+/// [`CoordTracer::drain_shard`] at the round barrier in shard-index order;
+/// coordinator phase spans land on the dedicated "coordinator (wall)"
+/// Chrome process (`pid 1 + n_shards`) with wall-clock timestamps, clearly
+/// segregated from the modeled-clock shard timelines.
+#[derive(Debug)]
+pub struct CoordTracer {
+    pub events: Vec<TraceEvent>,
+    n_shards: usize,
+    t0: Instant,
+}
+
+impl CoordTracer {
+    pub fn new(n_shards: usize, t0: Instant) -> Self {
+        Self { events: Vec::new(), n_shards, t0 }
+    }
+
+    pub fn t0(&self) -> Instant {
+        self.t0
+    }
+
+    /// Microseconds of wall clock since the serve started.
+    pub fn wall_us(&self) -> u64 {
+        self.t0.elapsed().as_micros().min(u64::MAX as u128) as u64
+    }
+
+    /// Record a coordinator-side event, stamping the wall diagnostic.
+    pub fn push(&mut self, ev: TraceEvent) {
+        let w = self.wall_us();
+        self.events.push(ev.arg("wall_us", w as f64));
+    }
+
+    /// Record a coordinator phase span on the wall-clock process: the span
+    /// runs from `started_us` (a prior [`CoordTracer::wall_us`] reading) to
+    /// now. Both endpoints are wall clock — this process never mixes
+    /// modeled timestamps.
+    pub fn wall_phase(&mut self, name: &'static str, started_us: u64) {
+        let now = self.wall_us();
+        self.events.push(TraceEvent::span(
+            name,
+            1 + self.n_shards,
+            0,
+            started_us,
+            now.saturating_sub(started_us),
+        ));
+    }
+
+    /// Round-barrier merge: move one shard ring's events into the merged
+    /// stream, restamping each onto the global modeled clock at `ts_us`
+    /// (the round's start — worker threads do not know the global clock;
+    /// their wall readings ride along in `args.wall_us`).
+    pub fn drain_shard(&mut self, buf: &mut TraceBuf, ts_us: u64) {
+        let start = self.events.len();
+        buf.drain_into(&mut self.events);
+        for ev in &mut self.events[start..] {
+            ev.ts_us = ts_us;
+        }
+    }
+}
+
+/// Build the modeled track from finished outcomes: one session-local
+/// timeline per job, in job-id order. Pure function of committed search
+/// state and the perf model — byte-identical across every scheduling mode
+/// that preserves results (which is all of them).
+pub fn modeled_track(
+    outcomes: &[Option<SearchOutcome>],
+    perf: &PerfModel,
+    model: &ModelProfile,
+) -> Vec<TraceEvent> {
+    let mut events = Vec::new();
+    for (id, outcome) in outcomes.iter().enumerate() {
+        let Some(o) = outcome else { continue };
+        let mut t = 0u64;
+        events.push(
+            TraceEvent { cat: "modeled", ..TraceEvent::instant("admitted", 0, id, 0) }
+                .arg("job", id as f64),
+        );
+        for (i, step) in o.steps.iter().enumerate() {
+            let dur = to_us(perf.step_latency(step, model).seconds);
+            events.push(
+                TraceEvent { cat: "modeled", ..TraceEvent::span("step", 0, id, t, dur) }
+                    .arg("index", i as f64)
+                    .arg("new_tokens", step.new_tokens as f64)
+                    .arg("model_calls", step.model_calls as f64)
+                    .arg("live_kv_tokens", step.live_kv_tokens as f64),
+            );
+            t = t.saturating_add(dur);
+        }
+        events.push(
+            TraceEvent { cat: "modeled", ..TraceEvent::instant("finished", 0, id, t) }
+                .arg("job", id as f64)
+                .arg("steps", o.steps.len() as f64)
+                .arg("answered", if o.answer.is_some() { 1.0 } else { 0.0 }),
+        );
+    }
+    events
+}
+
+/// Session-local modeled completion seconds of one outcome — the fold the
+/// modeled track uses, exposed for spot checks.
+pub fn session_seconds(o: &SearchOutcome, perf: &PerfModel, model: &ModelProfile) -> f64 {
+    o.steps.iter().map(|s: &StepMetrics| perf.step_latency(s, model).seconds).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_buffer_drops_newest_and_counts() {
+        let mut buf = TraceBuf::new(2, Instant::now());
+        for i in 0..5 {
+            buf.push(TraceEvent::instant("e", 1, 0, i));
+        }
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf.dropped(), 3);
+        let mut out = vec![];
+        buf.drain_into(&mut out);
+        assert_eq!(out.len(), 2);
+        assert!(buf.is_empty());
+        // retained prefix is the oldest events, each stamped with wall_us
+        assert_eq!(out[0].ts_us, 0);
+        assert_eq!(out[1].ts_us, 1);
+        assert!(out[0].get("wall_us").is_some());
+        // ring reuses its allocation after a drain
+        buf.push(TraceEvent::instant("e", 1, 0, 9));
+        assert_eq!(buf.len(), 1);
+    }
+
+    #[test]
+    fn chrome_json_parses_and_labels_tracks() {
+        let trace = ServeTrace {
+            modeled: vec![TraceEvent {
+                cat: "modeled",
+                ..TraceEvent::span("step", 0, 3, 10, 5)
+            }],
+            exec: vec![TraceEvent::instant("preempted", 1, 0, 42).arg("job", 7.0)],
+            dropped: 0,
+        };
+        let doc = trace.chrome_json(2);
+        let text = doc.to_string_compact();
+        let parsed = Json::parse(&text).expect("chrome trace JSON must parse");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // 4 metadata rows (sessions, 2 shards, coordinator) + 2 events
+        assert_eq!(events.len(), 6);
+        assert!(text.contains("sessions (modeled)"));
+        assert!(text.contains("shard 1 (exec)"));
+        assert!(text.contains("coordinator (wall)"));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"ph\":\"i\""));
+    }
+
+    #[test]
+    fn to_us_saturates() {
+        assert_eq!(to_us(-1.0), 0);
+        assert_eq!(to_us(0.0), 0);
+        assert_eq!(to_us(1.5e-6), 2);
+        assert_eq!(to_us(f64::MAX), u64::MAX);
+    }
+}

@@ -870,6 +870,159 @@ fn adaptive_budget_is_capacity_invariant_and_reallocates_under_pressure() {
 }
 
 #[test]
+fn trace_is_read_only() {
+    // The observability plane must be provably invisible: tracing and the
+    // latency histograms on or off may not move a single result byte OR a
+    // single controller decision. Adaptive mode is on so the decision log
+    // exists as a second identity surface beyond the per-problem results.
+    let cfg = cfg(PolicySpec::Ets { lambda_b: 1.5, lambda_d: 1.0 });
+    let perf = PerfModel::new(H100_NVL, true, 8);
+    let run = |trace: bool, hists: bool| {
+        let opts = ServeOptions {
+            concurrency: 8,
+            capacity_tokens: DEFAULT_KV_CAPACITY * 2,
+            shards: 2,
+            ..Default::default()
+        }
+        .adaptive_budgeted(true)
+        .traced(trace)
+        .latency_histograms(hists);
+        evaluate_serve_with(&cfg, &opts, &perf)
+    };
+    let bare = run(false, false);
+    let plain = run(false, true);
+    let traced = run(true, true);
+    let base_fp = fingerprint(&bare.report);
+    let base_ids = decision_identities(&bare.serve);
+    for (name, r) in [("histograms", &plain), ("tracing + histograms", &traced)] {
+        assert_eq!(base_fp, fingerprint(&r.report), "{name} changed search results");
+        assert_eq!(
+            base_ids,
+            decision_identities(&r.serve),
+            "{name} changed the controller decision log"
+        );
+    }
+    // the switches actually switch
+    assert!(bare.serve.trace.is_none() && plain.serve.trace.is_none());
+    assert!(bare.serve.latency.completion.is_empty());
+    assert_eq!(plain.serve.latency.completion.count(), cfg.n_problems as u64);
+    assert_eq!(plain.serve.latency.ttft.count(), cfg.n_problems as u64);
+    assert_eq!(plain.serve.latency.tpot.count(), cfg.n_problems as u64);
+    // modeled-time request latencies are schedule facts, not wall noise:
+    // recording them twice yields the same histograms bit for bit
+    assert_eq!(plain.serve.latency, run(false, true).serve.latency);
+    assert_eq!(traced.serve.latency, plain.serve.latency);
+    let trace = traced.serve.trace.as_ref().expect("traced run carries a trace");
+    assert_eq!(trace.dropped, 0, "default ring capacity must not drop events");
+    assert_eq!(trace.count("admitted"), cfg.n_problems as u64);
+    assert_eq!(trace.count("finished"), cfg.n_problems as u64);
+    assert!(!trace.modeled.is_empty(), "modeled track must carry the sessions");
+    // and the run's whole event stream reconciles against the ledgers
+    let audit = ets::obs::audit::reconcile(&traced.serve).expect("traced");
+    assert!(audit.ok(), "trace/ledger audit failed:\n{}", audit.render());
+}
+
+#[test]
+fn modeled_trace_track_is_byte_identical_across_scheduling_modes() {
+    // The identity-bearing half of the trace: the modeled session track is
+    // a pure fold of committed outcomes through the perf model, so shards ∈
+    // {1, 4} × pipeline × async-decode must serialize it byte-identically —
+    // while the executed track legitimately differs (it describes the
+    // schedule). This is the trace-level restatement of the repo's
+    // determinism contract: scheduling changes when/where/cost, never what.
+    let cfg = cfg(PolicySpec::Rebase);
+    let perf = PerfModel::new(H100_NVL, true, 8);
+    let mut baseline: Option<String> = None;
+    for shards in [1usize, 4] {
+        for pipeline in [false, true] {
+            for async_decode in [false, true] {
+                let opts = ServeOptions {
+                    concurrency: 8,
+                    capacity_tokens: DEFAULT_KV_CAPACITY * shards,
+                    shards,
+                    pipeline,
+                    ..Default::default()
+                }
+                .async_decoded(async_decode)
+                .traced(true);
+                let served = evaluate_serve_with(&cfg, &opts, &perf);
+                let trace = served.serve.trace.as_ref().expect("traced run");
+                assert_eq!(trace.dropped, 0);
+                let modeled = trace.modeled_json();
+                assert!(modeled.len() > 2, "modeled track must not be empty");
+                match &baseline {
+                    None => baseline = Some(modeled),
+                    Some(b) => assert_eq!(
+                        b,
+                        &modeled,
+                        "shards={shards} pipeline={pipeline} async={async_decode} \
+                         changed the modeled trace track"
+                    ),
+                }
+                // the full Chrome document parses and labels every track
+                let doc = trace.chrome_json(served.serve.shards).to_string_compact();
+                let parsed =
+                    ets::util::json::Json::parse(&doc).expect("chrome trace JSON parses");
+                let events = parsed
+                    .get("traceEvents")
+                    .and_then(|e| e.as_arr())
+                    .expect("traceEvents array");
+                assert!(events.len() >= trace.modeled.len() + trace.exec.len());
+            }
+        }
+    }
+}
+
+#[test]
+fn trace_audit_reconciles_every_lifecycle_event_under_tight_capacity() {
+    // The adversarial audit cell: the proven migration-forcing budget shape
+    // with the scheduling-only subsystems stacked on — preemption/resume
+    // churn, cross-shard migration, hub imports, cold-tier demotions and
+    // restores, speculative planning — must produce an event stream whose
+    // per-name counts and token/block sums all reconcile against the
+    // aggregate ledgers kept by independent code. (The adaptive width
+    // events are audited by `trace_is_read_only` above, whose cells run
+    // the controller.)
+    let mut cfg = cfg(PolicySpec::Rebase);
+    cfg.width = 24;
+    cfg.n_problems = 12;
+    let perf = PerfModel::new(H100_NVL, true, 12);
+    let uncapped = evaluate_serve_with(&cfg, &ServeOptions::with_concurrency(12), &perf);
+    let solo_peak = uncapped
+        .serve
+        .outcomes
+        .iter()
+        .map(|o| o.peak_kv_tokens())
+        .max()
+        .unwrap() as usize;
+    let opts = ServeOptions {
+        concurrency: 12,
+        capacity_tokens: 4 * (solo_peak + 4096),
+        block_size: 16,
+        shards: 4,
+        prefix_share: true,
+        ..Default::default()
+    }
+    .cold_tiered(64 * solo_peak)
+    .async_decoded(true)
+    .traced(true);
+    let capped = evaluate_serve_with(&cfg, &opts, &perf);
+    let trace = capped.serve.trace.as_ref().expect("traced run");
+    // the cell actually exercised the lifecycle machinery it audits
+    assert!(capped.serve.preemptions > 0, "tight budget must preempt");
+    assert!(capped.serve.migrations > 0, "tight 4-shard runs must migrate");
+    assert!(trace.count("preempted") > 0);
+    assert!(trace.count("resumed") > 0);
+    assert!(trace.count("migrated") > 0);
+    let audit = ets::obs::audit::reconcile(&capped.serve).expect("traced");
+    assert_eq!(audit.lines.len(), 15, "every lifecycle ledger gets an audit line");
+    assert!(audit.ok(), "trace/ledger audit failed:\n{}", audit.render());
+    // the audit is not vacuous: several lines carry non-zero counts
+    let nonzero = audit.lines.iter().filter(|l| l.ledger > 0).count();
+    assert!(nonzero >= 5, "expected a busy audit, got:\n{}", audit.render());
+}
+
+#[test]
 fn shard_and_pipeline_matrix_is_invisible_under_pressure_and_tight_shards_migrate() {
     // Fat working sets (width 24) so a per-shard budget sized to one peak
     // working set puts a 3-resident shard under sustained pressure.
